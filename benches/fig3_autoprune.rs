@@ -1,0 +1,69 @@
+//! Fig 3 — the auto-pruning binary-search traces.
+//!
+//! Reproduces: "(a) Jet-DNN and (b) ResNet9, with binary search direction
+//! shown.  The blue arrow indicates an accuracy loss > user threshold;
+//! red denotes the optimal pruning rate."  α_p = β_p = 2%.
+//!
+//! Prints the per-step (rate, accuracy, direction) series and writes
+//! bench_out/fig3_<model>.csv.
+
+use metaml::bench_support::{artifacts_dir, bench_models, bench_out, fast_mode};
+use metaml::flow::Session;
+use metaml::prune::{autoprune, AutopruneConfig};
+use metaml::report::{CsvWriter, Table};
+use metaml::train::Trainer;
+
+fn main() -> metaml::Result<()> {
+    let session = Session::open(&artifacts_dir())?;
+    // paper pairs: Jet-DNN on Zynq 7020, ResNet9 on U250
+    for model in bench_models(&["jet_dnn", "resnet9_mini"]) {
+        run(&session, &model)?;
+    }
+    Ok(())
+}
+
+fn run(session: &Session, model: &str) -> metaml::Result<()> {
+    println!("== Fig 3: auto-pruning binary search on {model} (α_p=β_p=2%) ==");
+    let (mut state, exec, data) =
+        metaml::bench_support::trained_base(session, model, 1.0, 1301)?;
+    let trainer = Trainer::new(&session.runtime, &exec, &data);
+
+    let cfg = AutopruneConfig {
+        train_epochs: if fast_mode() { 1 } else { 2 },
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let trace = autoprune(&trainer, &mut state, &cfg)?;
+
+    let mut table = Table::new(&["step", "rate %", "accuracy %", "Δacc %", "direction", "verdict"]);
+    let mut csv = CsvWriter::new(&["step", "rate", "accuracy", "accepted", "direction"]);
+    for p in &trace.probes {
+        table.row(&[
+            format!("s{}", p.step),
+            format!("{:.2}", 100.0 * p.rate),
+            format!("{:.2}", 100.0 * p.accuracy),
+            format!("{:+.2}", 100.0 * (p.accuracy - trace.base_accuracy)),
+            if p.direction > 0 { "increase ↑".into() } else { "decrease ↓ (loss > α_p)".into() },
+            if p.accepted { "accepted".into() } else { "rejected".into() },
+        ]);
+        csv.row_f64(&[
+            p.step as f64,
+            p.rate,
+            p.accuracy,
+            p.accepted as u8 as f64,
+            p.direction as f64,
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "optimal pruning rate: {:.2}% (accuracy {:.2}%, base {:.2}%), {} steps, {:.1}s\n\
+         paper shape: 1 + log2(1/β_p) ≈ 7 steps; optimum marked red in Fig 3\n",
+        100.0 * trace.best_rate,
+        100.0 * trace.best_accuracy,
+        100.0 * trace.base_accuracy,
+        trace.probes.len(),
+        t0.elapsed().as_secs_f64(),
+    );
+    csv.save(bench_out().join(format!("fig3_{model}.csv")))?;
+    Ok(())
+}

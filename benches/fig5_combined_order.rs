@@ -1,0 +1,121 @@
+//! Fig 5 — combining O-tasks, and why order matters.
+//!
+//! Reproduces: "(a) Jet-DNN accuracy and pruning rates with scaling then
+//! pruning" — the optimal pruning rate drops vs pruning alone because the
+//! preceding scaling removed redundancy (paper: 84.4% vs 93.8%); and
+//! "(b) Jet-DNN accuracy and layer size with pruning then scaling" — one
+//! scaling step after pruning costs visible accuracy (paper: 0.7% drop).
+//!
+//! Writes bench_out/fig5a.csv and bench_out/fig5b.csv.
+
+use metaml::bench_support::{artifacts_dir, bench_out, fast_mode};
+use metaml::flow::Session;
+use metaml::prune::{autoprune, AutopruneConfig};
+use metaml::report::{CsvWriter, Table};
+use metaml::scale::{scale_search, ScaleConfig};
+use metaml::train::Trainer;
+
+fn main() -> metaml::Result<()> {
+    let session = Session::open(&artifacts_dir())?;
+    let prune_cfg = AutopruneConfig {
+        train_epochs: if fast_mode() { 1 } else { 2 },
+        ..Default::default()
+    };
+
+    // ---- reference: pruning alone -------------------------------------
+    let (mut solo, exec, data) =
+        metaml::bench_support::trained_base(&session, "jet_dnn", 1.0, 1501)?;
+    let trainer = Trainer::new(&session.runtime, &exec, &data);
+    let solo_trace = autoprune(&trainer, &mut solo, &prune_cfg)?;
+
+    // ---- Fig 5(a): scaling THEN pruning --------------------------------
+    println!("== Fig 5(a): scaling -> pruning on Jet-DNN ==");
+    let (base, exec, data) =
+        metaml::bench_support::trained_base(&session, "jet_dnn", 1.0, 1502)?;
+    let trainer = Trainer::new(&session.runtime, &exec, &data);
+    let base_acc = trainer.evaluate(&base)?.accuracy;
+    let scfg = ScaleConfig {
+        train_epochs: if fast_mode() { 2 } else { 4 },
+        ..Default::default()
+    };
+    let (strace, mut scaled_state, new_scale) =
+        scale_search(&session, "jet_dnn", 1.0, base_acc, &scfg)?;
+    let sexec = session.executable(
+        &session.manifest.variant("jet_dnn", new_scale)?.tag,
+    )?;
+    let strainer = Trainer::new(&session.runtime, &sexec, &data);
+    let strace2 = autoprune(&strainer, &mut scaled_state, &prune_cfg)?;
+
+    let mut table = Table::new(&["step", "rate %", "accuracy %", "verdict"]);
+    let mut csv = CsvWriter::new(&["step", "rate", "accuracy", "accepted"]);
+    for p in &strace2.probes {
+        table.row(&[
+            format!("s{}", p.step),
+            format!("{:.2}", 100.0 * p.rate),
+            format!("{:.2}", 100.0 * p.accuracy),
+            if p.accepted { "accepted".into() } else { "rejected".into() },
+        ]);
+        csv.row_f64(&[p.step as f64, p.rate, p.accuracy, p.accepted as u8 as f64]);
+    }
+    println!("{}", table.render());
+    println!(
+        "scaling chose scale {:.3} ({} trials); optimal pruning rate after\n\
+         scaling: {:.1}%  vs  {:.1}% with pruning alone\n\
+         paper shape: combined rate (84.4%) < solo rate (93.8%) because the\n\
+         scaling step already removed redundancy.\n",
+        new_scale,
+        strace.probes.len(),
+        100.0 * strace2.best_rate,
+        100.0 * solo_trace.best_rate,
+    );
+    csv.save(bench_out().join("fig5a.csv"))?;
+
+    // ---- Fig 5(b): pruning THEN scaling --------------------------------
+    println!("== Fig 5(b): pruning -> scaling on Jet-DNN ==");
+    // `solo` already holds the pruned model at the solo-optimal rate;
+    // scaled candidates inherit the pruned structure
+    let pruned_acc = solo_trace.best_accuracy;
+    let bcfg = ScaleConfig {
+        inherit_pruning_rate: solo_trace.best_rate,
+        ..scfg.clone()
+    };
+    let (btrace, _, bscale) =
+        scale_search(&session, "jet_dnn", 1.0, pruned_acc, &bcfg)?;
+    let mut table_b = Table::new(&["trial", "scale", "params", "accuracy %", "Δacc %", "verdict"]);
+    let mut csv_b = CsvWriter::new(&["trial", "scale", "params", "accuracy", "accepted"]);
+    for p in &btrace.probes {
+        table_b.row(&[
+            p.trial.to_string(),
+            format!("{:.3}", p.scale),
+            p.params.to_string(),
+            format!("{:.2}", 100.0 * p.accuracy),
+            format!("{:+.2}", 100.0 * (p.accuracy - pruned_acc)),
+            if p.accepted { "accepted".into() } else { "rejected (loss > α_s)".into() },
+        ]);
+        csv_b.row_f64(&[
+            p.trial as f64,
+            p.scale,
+            p.params as f64,
+            p.accuracy,
+            p.accepted as u8 as f64,
+        ]);
+    }
+    println!("{}", table_b.render());
+    let first_drop = btrace
+        .probes
+        .first()
+        .map(|p| 100.0 * (pruned_acc - p.accuracy))
+        .unwrap_or(0.0);
+    println!(
+        "pruning first reached {:.1}% rate (acc {:.2}%); scaling after it\n\
+         settled at scale {:.3}; first scaling step changed accuracy by {:.2}%\n\
+         paper shape: scaling a pruned model costs accuracy (0.7% in the\n\
+         paper) because redundancy is already gone.\n",
+        100.0 * solo_trace.best_rate,
+        100.0 * pruned_acc,
+        bscale,
+        first_drop,
+    );
+    csv_b.save(bench_out().join("fig5b.csv"))?;
+    Ok(())
+}

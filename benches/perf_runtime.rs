@@ -1,0 +1,141 @@
+//! §Perf — runtime microbenchmarks for the L3 hot path.
+//!
+//! Measures the pieces EXPERIMENTS.md §Perf tracks:
+//!   * artifact compile time (cold) and cache hit (warm);
+//!   * train-step dispatch latency + steps/s per model (the hot loop of
+//!     every O-task probe);
+//!   * eval throughput (samples/s);
+//!   * literal marshaling overhead (host→device→host round trip);
+//!   * flow-engine overhead (no-op task graph traversal).
+//!
+//! Writes bench_out/perf_runtime.csv.
+
+use std::time::Instant;
+
+use metaml::bench_support::{artifacts_dir, bench_models, bench_out};
+use metaml::flow::{Engine, FlowGraph, ParamSpec, PipeTask, Session, TaskCtx, TaskOutcome, TaskRegistry, TaskRole};
+use metaml::metamodel::MetaModel;
+use metaml::model::ModelState;
+use metaml::report::{CsvWriter, Table};
+use metaml::train::Trainer;
+
+struct NopTask;
+impl PipeTask for NopTask {
+    fn name(&self) -> &str {
+        "NOP"
+    }
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+    fn multiplicity(&self) -> (usize, usize) {
+        (0, 1)
+    }
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![]
+    }
+    fn run(&self, _ctx: &mut TaskCtx) -> metaml::Result<TaskOutcome> {
+        Ok(TaskOutcome::default())
+    }
+}
+
+fn main() -> metaml::Result<()> {
+    let session = Session::open(&artifacts_dir())?;
+    let mut csv = CsvWriter::new(&["metric", "model", "value", "unit"]);
+    let mut table = Table::new(&["metric", "model", "value"]);
+
+    // compile: cold vs warm
+    {
+        let t0 = Instant::now();
+        let _ = session.executable("jet_dnn_s1000")?;
+        let cold = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let _ = session.executable("jet_dnn_s1000")?;
+        let warm = t1.elapsed().as_secs_f64();
+        table.row_strs(&["compile cold", "jet_dnn", &format!("{:.3} s", cold)]);
+        table.row_strs(&["compile warm (cache)", "jet_dnn", &format!("{:.6} s", warm)]);
+        csv.row(&["compile_cold".into(), "jet_dnn".into(), format!("{cold}"), "s".into()]);
+        csv.row(&["compile_warm".into(), "jet_dnn".into(), format!("{warm}"), "s".into()]);
+    }
+
+    for model in bench_models(&["jet_dnn", "vgg7_mini", "resnet9_mini"]) {
+        let variant = session.manifest.variant(&model, 1.0)?.clone();
+        let exec = session.executable(&variant.tag)?;
+        let data = session.dataset(&model)?;
+        let trainer = Trainer::new(&session.runtime, &exec, &data);
+        let mut state = ModelState::init(&variant, 77);
+
+        // train-step latency (hot loop): time N steps through fit()
+        let steps = if model == "jet_dnn" { 128 } else { 16 };
+        let mut cfg = metaml::train::TrainConfig::for_model(&model);
+        cfg.epochs = 1;
+        // fit runs one epoch = n_train/batch steps; time it and normalize
+        let t0 = Instant::now();
+        trainer.fit(&mut state, &cfg)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let spe = data.spec.n_train / variant.train_batch;
+        let ms_per_step = 1000.0 * secs / spe as f64;
+        let samples_s = (spe * variant.train_batch) as f64 / secs;
+        table.row_strs(&[
+            "train step",
+            &model,
+            &format!("{:.1} ms/step ({:.0} samples/s)", ms_per_step, samples_s),
+        ]);
+        csv.row(&["train_step_ms".into(), model.clone(), format!("{ms_per_step}"), "ms".into()]);
+        csv.row(&["train_samples_s".into(), model.clone(), format!("{samples_s}"), "1/s".into()]);
+        let _ = steps;
+
+        // eval throughput
+        let t0 = Instant::now();
+        let eval = trainer.evaluate(&state)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let eps = eval.n as f64 / secs;
+        table.row_strs(&["eval", &model, &format!("{:.0} samples/s", eps)]);
+        csv.row(&["eval_samples_s".into(), model.clone(), format!("{eps}"), "1/s".into()]);
+    }
+
+    // literal marshaling: tensor -> literal -> tensor round trip
+    {
+        let t = metaml::runtime::HostTensor::ones(&[64, 1024]);
+        let n = 200;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let lit = t.to_literal()?;
+            let _ = metaml::runtime::HostTensor::from_literal(&lit)?;
+        }
+        let us = 1e6 * t0.elapsed().as_secs_f64() / n as f64;
+        table.row_strs(&["literal round-trip 256KB", "-", &format!("{:.1} µs", us)]);
+        csv.row(&["literal_roundtrip_us".into(), "-".into(), format!("{us}"), "us".into()]);
+    }
+
+    // flow-engine overhead: 64-node no-op chain
+    {
+        let mut registry = TaskRegistry::empty();
+        registry.register("NOP", || Box::new(NopTask));
+        let mut g = FlowGraph::new("nop-chain");
+        let mut prev = None;
+        for i in 0..64 {
+            let n = g.add_task(format!("n{i}"), "NOP");
+            if let Some(p) = prev {
+                let _ = p; // chain kept acyclic but disconnected: NOP is 0-input
+            }
+            prev = Some(n);
+        }
+        let engine = Engine::new(&session, &registry);
+        let mut meta = MetaModel::new();
+        let t0 = Instant::now();
+        engine.run(&g, &mut meta)?;
+        let us_per_task = 1e6 * t0.elapsed().as_secs_f64() / 64.0;
+        table.row_strs(&["engine overhead", "-", &format!("{:.1} µs/task", us_per_task)]);
+        csv.row(&["engine_overhead_us_task".into(), "-".into(), format!("{us_per_task}"), "us".into()]);
+    }
+
+    println!("== §Perf: runtime microbenchmarks ==");
+    println!("{}", table.render());
+    let stats = session.runtime.stats();
+    println!(
+        "runtime totals: {} compiles {:.2}s, {} executions {:.2}s",
+        stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+    csv.save(bench_out().join("perf_runtime.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Table I — the implemented pipe tasks: type, role, multiplicity,
+//! parameters.  Regenerated straight from the live task registry so the
+//! table can never drift from the code.
+
+use metaml::flow::TaskRegistry;
+
+fn main() {
+    println!("== Table I: implemented pipe tasks ==\n");
+    let registry = TaskRegistry::builtin();
+    print!("{}", registry.table());
+    println!(
+        "\nparameters match the paper's Table I (α_p/β_p for PRUNING, α_s +\n\
+         scale_auto/max_trials for SCALING, α_q for QUANTIZATION, precision/\n\
+         IOType/part/clock for HLS4ML, project_dir for VIVADO-HLS).\n\
+         KERAS-MODEL-GEN is 0-to-1 (source task); all others are 1-to-1."
+    );
+}

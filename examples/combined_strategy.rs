@@ -1,0 +1,51 @@
+//! Combined cross-stage strategy (paper Fig 2b): SCALING → PRUNING →
+//! HLS4ML → QUANTIZATION → VIVADO-HLS, and its reordered variant
+//! (Fig 2c).  Demonstrates the paper's key claim that O-task order
+//! matters: swapping the order is an edge-list change, nothing else.
+//!
+//!     cargo run --release --example combined_strategy
+
+use metaml::config::builtin_flow;
+use metaml::flow::{Engine, Session, TaskRegistry};
+use metaml::metamodel::{Abstraction, MetaModel};
+
+fn run(flow_name: &str, session: &Session, registry: &TaskRegistry) -> metaml::Result<()> {
+    let spec = builtin_flow(flow_name)?;
+    let mut meta = MetaModel::new();
+    spec.apply_cfg(&mut meta.cfg);
+    meta.cfg.set("model", "jet_dnn");
+    meta.cfg.set("quantize.tolerate_acc_loss", 0.01); // α_q = 1%
+
+    println!("=== flow {flow_name} ===");
+    Engine::new(session, registry).run(&spec.graph, &mut meta)?;
+
+    let rtl = meta.space.latest(Abstraction::Rtl).unwrap();
+    println!(
+        "{:<8} acc {:.2}%  scale {:.3}  prune {:.1}%  DSP {}  LUT {}  {} cyc = {:.0} ns  {:.3} W\n",
+        flow_name,
+        100.0 * rtl.metric("accuracy").unwrap_or(0.0),
+        rtl.metric("scale").unwrap_or(1.0),
+        100.0 * rtl.metric("pruning_rate").unwrap_or(0.0),
+        rtl.metric("dsp").unwrap_or(0.0) as u64,
+        rtl.metric("lut").unwrap_or(0.0) as u64,
+        rtl.metric("latency_cycles").unwrap_or(0.0) as u64,
+        rtl.metric("latency_ns").unwrap_or(0.0),
+        rtl.metric("power_w").unwrap_or(0.0),
+    );
+    Ok(())
+}
+
+fn main() -> metaml::Result<()> {
+    let artifacts =
+        std::env::var("METAML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let session = Session::open(&artifacts)?;
+    let registry = TaskRegistry::builtin();
+
+    // Fig 2(b): scaling → pruning → quantization
+    run("s_p_q", &session, &registry)?;
+    // Fig 2(c): different O-task order
+    run("p_s_q", &session, &registry)?;
+    // single-task reference
+    run("pruning", &session, &registry)?;
+    Ok(())
+}

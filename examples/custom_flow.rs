@@ -1,0 +1,137 @@
+//! Customizability demo: a user-defined O-task integrated into a flow.
+//!
+//! The paper: "users can develop their own tasks and integrate them into
+//! the design-flow."  Here we write WEIGHT-CLUSTER — an O-task that snaps
+//! surviving weights to a small codebook (power-of-two clustering), which
+//! lets the synthesizer fold multiplies into shifts — register it
+//! alongside the built-ins, and run PRUNING → WEIGHT-CLUSTER → HLS4ML →
+//! VIVADO-HLS.
+//!
+//!     cargo run --release --example custom_flow
+
+use metaml::error::Result;
+use metaml::flow::{
+    Engine, FlowGraph, ParamSpec, PipeTask, Session, TaskCtx, TaskOutcome,
+    TaskRegistry, TaskRole,
+};
+use metaml::metamodel::{Abstraction, MetaModel, ModelPayload};
+use metaml::train::Trainer;
+
+/// Snap each surviving weight to the nearest power of two (sign kept).
+/// A classic FPGA trick: shift-add replaces multiply.
+struct WeightClusterTask;
+
+impl PipeTask for WeightClusterTask {
+    fn name(&self) -> &str {
+        "WEIGHT-CLUSTER"
+    }
+
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+
+    fn multiplicity(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![ParamSpec {
+            name: "tolerate_acc_loss",
+            description: "accepted accuracy drop from clustering",
+            default: Some("0.02"),
+        }]
+    }
+
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome> {
+        let tolerance = ctx.cfg_f64("tolerate_acc_loss", 0.02);
+        let input = ctx
+            .meta
+            .space
+            .latest(Abstraction::Dnn)
+            .cloned()
+            .ok_or_else(|| metaml::Error::other("no DNN model"))?;
+        let mut state = input.dnn()?.clone();
+        let variant = ctx.session.manifest.get(&state.tag)?.clone();
+
+        let exec = ctx.session.executable(&variant.tag)?;
+        let data = ctx.session.dataset(&variant.model)?;
+        let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
+        let before = trainer.evaluate(&state)?;
+
+        // snap weights (not biases) to ±2^k
+        let mut snapped = 0usize;
+        for l in 0..state.n_weight_layers() {
+            let idx = state.weight_param_index(l);
+            let w = state.params[idx].as_f32_mut()?;
+            for v in w.iter_mut() {
+                if *v != 0.0 {
+                    let sign = v.signum();
+                    let k = v.abs().log2().round();
+                    *v = sign * 2f32.powf(k);
+                    snapped += 1;
+                }
+            }
+        }
+        let after = trainer.evaluate(&state)?;
+        ctx.log_metric("accuracy", after.accuracy);
+        ctx.log_metric("snapped_weights", snapped as f64);
+        ctx.log_message(format!(
+            "clustered {snapped} weights to powers of two: acc {:.4} -> {:.4}",
+            before.accuracy, after.accuracy
+        ));
+        if before.accuracy - after.accuracy > tolerance {
+            ctx.log_message("accuracy drop above tolerance; keeping input model");
+            return Ok(TaskOutcome::produced([input.id]));
+        }
+
+        let id = ctx.meta.space.store(
+            format!("{}_clustered", variant.tag),
+            ctx.instance.clone(),
+            Some(input.id),
+            ModelPayload::Dnn(state),
+        );
+        ctx.meta.space.set_metric(id, "accuracy", after.accuracy)?;
+        for key in ["pruning_rate", "scale"] {
+            if let Some(v) = input.metric(key) {
+                ctx.meta.space.set_metric(id, key, v)?;
+            }
+        }
+        Ok(TaskOutcome::produced([id]))
+    }
+}
+
+fn main() -> Result<()> {
+    let artifacts =
+        std::env::var("METAML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let session = Session::open(&artifacts)?;
+
+    // register the custom task next to the built-ins
+    let mut registry = TaskRegistry::builtin();
+    registry.register("WEIGHT-CLUSTER", || Box::new(WeightClusterTask));
+
+    let mut flow = FlowGraph::new("custom-cluster-flow");
+    let gen = flow.add_task("gen", "KERAS-MODEL-GEN");
+    let prune = flow.add_task("prune", "PRUNING");
+    let cluster = flow.add_task("cluster", "WEIGHT-CLUSTER");
+    let hls = flow.add_task("hls4ml", "HLS4ML");
+    let synth = flow.add_task("synth", "VIVADO-HLS");
+    flow.connect(gen, prune)?;
+    flow.connect(prune, cluster)?;
+    flow.connect(cluster, hls)?;
+    flow.connect(hls, synth)?;
+
+    let mut meta = MetaModel::new();
+    meta.log.echo = true;
+    meta.cfg.set("model", "jet_dnn");
+
+    Engine::new(&session, &registry).run(&flow, &mut meta)?;
+
+    let rtl = meta.space.latest(Abstraction::Rtl).unwrap();
+    println!(
+        "\ncustom flow result: acc {:.2}%  DSP {}  LUT {}",
+        100.0 * rtl.metric("accuracy").unwrap_or(0.0),
+        rtl.metric("dsp").unwrap_or(0.0) as u64,
+        rtl.metric("lut").unwrap_or(0.0) as u64,
+    );
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: build and run the paper's pruning design flow (Fig 2a)
+//! programmatically.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! The flow is KERAS-MODEL-GEN → PRUNING → HLS4ML → VIVADO-HLS: train the
+//! LHC jet tagger, auto-prune it by binary search, translate to an HLS
+//! C++ model and synthesize an RTL resource/latency report.
+
+use metaml::flow::{Engine, FlowGraph, Session, TaskRegistry};
+use metaml::metamodel::{Abstraction, MetaModel};
+
+fn main() -> metaml::Result<()> {
+    // 1. open the session: PJRT runtime + AOT artifacts (`make artifacts`)
+    let artifacts =
+        std::env::var("METAML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let session = Session::open(&artifacts)?;
+    let registry = TaskRegistry::builtin();
+
+    // 2. compose the design flow as a task graph (paper Fig 2a)
+    let mut flow = FlowGraph::new("quickstart-pruning");
+    let gen = flow.add_task("gen", "KERAS-MODEL-GEN");
+    let prune = flow.add_task("prune", "PRUNING");
+    let hls = flow.add_task("hls4ml", "HLS4ML");
+    let synth = flow.add_task("synth", "VIVADO-HLS");
+    flow.connect(gen, prune)?;
+    flow.connect(prune, hls)?;
+    flow.connect(hls, synth)?;
+
+    // 3. parameterize through the meta-model CFG (Table I parameters)
+    let mut meta = MetaModel::new();
+    meta.log.echo = true;
+    meta.cfg.set("model", "jet_dnn");
+    meta.cfg.set("prune.tolerate_acc_loss", 0.02); // α_p
+    meta.cfg.set("prune.pruning_rate_thresh", 0.02); // β_p
+    meta.cfg.set("hls4ml.FPGA_part_number", "vu9p");
+
+    // 4. execute
+    Engine::new(&session, &registry).run(&flow, &mut meta)?;
+
+    // 5. inspect the model space
+    let dnn = meta.space.latest(Abstraction::Dnn).unwrap();
+    let rtl = meta.space.latest(Abstraction::Rtl).unwrap();
+    println!(
+        "\npruned model: rate {:.1}%  accuracy {:.2}%",
+        100.0 * dnn.metric("pruning_rate").unwrap_or(0.0),
+        100.0 * dnn.metric("accuracy").unwrap_or(0.0),
+    );
+    println!("{}", metaml::synth::report::render(rtl.rtl()?));
+    Ok(())
+}

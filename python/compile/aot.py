@@ -1,0 +1,95 @@
+"""AOT exporter: lower every (model, scale, fn) to HLO text + manifest.
+
+HLO *text* (NOT ``lowered.compile().serialize()`` / proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Run from python/:  ``python -m compile.aot --out-dir ../artifacts``
+(make target ``artifacts`` does exactly this, and is a no-op when inputs are
+unchanged).  Python never runs after this point — the rust binary is
+self-contained given artifacts/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from . import models
+from .modeldef import ModelDef
+from .train import example_args, make_eval_step, make_train_step
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model_fn(model: ModelDef, fn: str) -> str:
+    step = make_train_step(model) if fn == "train" else make_eval_step(model)
+    specs = example_args(model, fn)
+    lowered = jax.jit(step).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def export_one(model: ModelDef, out_dir: str, verbose: bool = True) -> dict:
+    entry = model.manifest_entry()
+    for fn in ("train", "eval"):
+        t0 = time.time()
+        text = lower_model_fn(model, fn)
+        path = os.path.join(out_dir, entry["artifacts"][fn])
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(
+                f"  {entry['artifacts'][fn]}: {len(text) / 1e6:.2f} MB "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return entry
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models", default="all",
+        help="comma-separated model names or 'all'",
+    )
+    args = ap.parse_args(argv)
+
+    names = (
+        list(models.BUILDERS) if args.models == "all" else args.models.split(",")
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": MANIFEST_VERSION, "models": []}
+    for name in names:
+        for scale in models.SCALE_GRID[name]:
+            model = models.build(name, scale)
+            print(f"[aot] {model.tag}", flush=True)
+            manifest["models"].append(export_one(model, args.out_dir))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['models'])} model variants")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .masked_matmul import (  # noqa: F401
+    DISABLED_Q,
+    masked_matmul,
+    masked_matmul_vjp,
+    matmul,
+    matmul_vjp,
+    qmm,
+    qmm_masked,
+    qmm_plain,
+)
+from .fake_quant import fake_quant, fake_quant_raw  # noqa: F401

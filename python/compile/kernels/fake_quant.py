@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: ap_fixed<W,I> fake quantization.
+
+MetaML's QUANTIZATION O-task instruments ``ap_fixed<W, I>`` types into the
+HLS C++ kernel and evaluates accuracy through co-simulation.  Here the
+co-simulation *is* the AOT-compiled graph: this kernel emulates Vivado HLS
+``ap_fixed`` round-to-nearest / saturate semantics on the TPU-style datapath
+so the rust coordinator can probe any per-layer precision at runtime without
+re-lowering.
+
+The precision is a *runtime* operand ``q = (total_bits W, integer_bits I)``
+(f32[2]): scale = 2^(W-I) is computed in-kernel (exp2), so one AOT artifact
+serves every precision the search visits.  ``W == 0`` disables quantization
+(identity) — that is how un-quantized baseline flows run through the same
+executable.
+
+Gradient: straight-through estimator clipped to the representable range,
+matching QKeras' quantized_bits STE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fake_quant_kernel(x_ref, q_ref, o_ref):
+    x = x_ref[...]
+    w_bits = q_ref[0]
+    i_bits = q_ref[1]
+    frac = w_bits - i_bits
+    scale = jnp.exp2(frac)
+    # ap_fixed<W, I> (signed): representable range [-2^(I-1), 2^(I-1) - 2^-f].
+    hi = jnp.exp2(i_bits - 1.0) - 1.0 / scale
+    lo = -jnp.exp2(i_bits - 1.0)
+    q = jnp.clip(jnp.round(x * scale) / scale, lo, hi)
+    o_ref[...] = jnp.where(w_bits > 0.0, q, x)
+
+
+def fake_quant_raw(x: jax.Array, q: jax.Array) -> jax.Array:
+    """ap_fixed<W,I> round/saturate on a 2-D tensor; ``q = [W, I]`` (f32)."""
+    if x.ndim != 2:
+        raise ValueError(f"fake_quant expects 2-D input, got {x.shape}")
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, q)
+
+
+@jax.custom_vjp
+def fake_quant(x, q):
+    return fake_quant_raw(x, q)
+
+
+def _fq_fwd(x, q):
+    return fake_quant_raw(x, q), (x, q)
+
+
+def _fq_bwd(res, g):
+    x, q = res
+    # Straight-through inside the representable range, zero outside
+    # (QKeras quantized_bits STE), identity when quantization is disabled.
+    w_bits, i_bits = q[0], q[1]
+    hi = jnp.exp2(i_bits - 1.0)
+    enabled = w_bits > 0.0
+    inside = jnp.logical_or(jnp.abs(x) <= hi, jnp.logical_not(enabled))
+    return g * inside.astype(g.dtype), jnp.zeros_like(q)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)

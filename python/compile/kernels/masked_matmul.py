@@ -1,0 +1,264 @@
+"""L1 Pallas kernels: fused quantize+mask+matmul — MetaML's compute hot-spot.
+
+Every O-task probe (pruning fine-tune step, scaling trial, quantization
+evaluation) is dominated by pruning/quantization-aware matrix multiplies:
+
+    y = fq(x, q) @ (fq(w, q) * m)
+
+where ``m`` is a {0,1} magnitude-pruning mask and ``fq`` emulates Vivado
+HLS ``ap_fixed<W,I>`` round/saturate with *runtime* precision ``q = [W, I]``
+(W == 0 disables quantization, so one artifact serves every precision the
+search visits).
+
+The paper's FPGA hot path is the fully-unrolled MAC array emitted by HLS;
+the TPU rethink (DESIGN.md §Hardware-Adaptation) maps it onto the MXU:
+
+* quantization and masking are applied to the operand tiles *inside* the
+  kernel, in VMEM — the quantized/pruned weight never round-trips to HBM
+  (this fusion is also what makes interpret-mode execution tractable: one
+  pallas_call per matmul instead of separate quant + mask + matmul calls);
+* BlockSpecs tile (M, K) x (K, N) into MXU-friendly blocks (128x128
+  default, clamped to the problem) with K innermost so each (i, j) output
+  tile accumulates in a VMEM f32 scratch accumulator;
+* conv layers lower to the same kernel via im2col (TPU conv == MXU matmul).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the AOT
+artifact executes on the rust CPU client.  Real-TPU VMEM/MXU estimates
+live in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Tile selection is target-dependent:
+#
+# * Real TPU (compile-only target here): MXU_BLOCK — 128x128 tiles matching
+#   the systolic array, VMEM-bounded K-accumulation.  This is the BlockSpec
+#   schedule DESIGN.md §Perf analyzes (VMEM footprint, MXU utilization).
+# * CPU interpret mode (what the AOT artifacts run): every grid step costs
+#   ~1.3 ms of dynamic-slice loop machinery, so tiles are inflated until
+#   each hot matmul is a single block (measured 160 ms -> 0.6 ms for the
+#   conv1 im2col matmul; see EXPERIMENTS.md §Perf L1).  The kernel code is
+#   identical — only the block edges change.
+MXU_BLOCK = (128, 128, 128)
+INTERPRET_BLOCK = (16384, 16384, 16384)
+DEFAULT_BLOCK = INTERPRET_BLOCK
+
+DISABLED_Q = (0.0, 0.0)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _fq_tile(t, q_ref):
+    """ap_fixed<W,I> round/saturate of a VMEM tile; identity when W == 0."""
+    w_bits = q_ref[0, 0]
+    i_bits = q_ref[0, 1]
+    scale = jnp.exp2(w_bits - i_bits)
+    hi = jnp.exp2(i_bits - 1.0) - 1.0 / scale
+    lo = -jnp.exp2(i_bits - 1.0)
+    quant = jnp.clip(jnp.round(t * scale) / scale, lo, hi)
+    return jnp.where(w_bits > 0.0, quant, t)
+
+
+def _qmm_masked_kernel(x_ref, w_ref, m_ref, qa_ref, qb_ref, o_ref, acc_ref, *, n_k):
+    """Grid (i, j, k): o[i,j] += fq(x[i,k]) @ (fq(w[k,j]) * m[k,j])."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _fq_tile(x_ref[...], qa_ref)
+    b = _fq_tile(w_ref[...], qb_ref) * m_ref[...]
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _qmm_plain_kernel(x_ref, w_ref, qa_ref, qb_ref, o_ref, acc_ref, *, n_k):
+    """Unmasked variant (used by the dw backward pass)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _fq_tile(x_ref[...], qa_ref)
+    b = _fq_tile(w_ref[...], qb_ref)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, requested: int) -> int:
+    """Clamp a requested block edge to the (padded) problem size."""
+    return min(requested, max(_ceil_to(dim, 8), 8))
+
+
+def _as_q(q) -> jax.Array:
+    """Normalize a precision spec to the (1, 2) f32 operand layout."""
+    q = jnp.asarray(q, jnp.float32)
+    return q.reshape(1, 2)
+
+
+def _run(kernel, xw, kn_operands, qs, block):
+    """Launch a tiled kernel: ``xw`` = (M,K) operand, ``kn_operands`` =
+    (K,N) operands (weight [, mask]), ``qs`` = precision operands."""
+    x = xw
+    w = kn_operands[0]
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m_dim, k_dim = x.shape
+    _, n_dim = w.shape
+
+    bm = _pick_block(m_dim, block[0])
+    bn = _pick_block(n_dim, block[1])
+    bk = _pick_block(k_dim, block[2])
+    mp, kp, np_ = _ceil_to(m_dim, bm), _ceil_to(k_dim, bk), _ceil_to(n_dim, bn)
+
+    def pad(a, rows, cols):
+        if a.shape == (rows, cols):
+            return a
+        return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+    operands = [pad(x, mp, kp)]
+    operands += [pad(op, kp, np_) for op in kn_operands]
+    operands += [_as_q(q) for q in qs]
+
+    n_k = kp // bk
+    grid = (mp // bm, np_ // bn, n_k)
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))]
+    in_specs += [
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)) for _ in kn_operands
+    ]
+    # precision operands: one (1, 2) block broadcast to every grid step
+    in_specs += [pl.BlockSpec((1, 2), lambda i, j, k: (0, 0)) for _ in qs]
+
+    out = pl.pallas_call(
+        functools.partial(kernel, n_k=n_k),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        # f32 accumulator lives in VMEM for the whole (i, j) K-sweep.
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(*operands)
+    return out[:m_dim, :n_dim]
+
+
+# ---------------------------------------------------------------------------
+# raw kernel entry points
+# ---------------------------------------------------------------------------
+
+
+def qmm_masked(x, w, mask, qa, qb, *, block=DEFAULT_BLOCK):
+    """``fq(x, qa) @ (fq(w, qb) * mask)`` — the fused hot-spot kernel."""
+    return _run(_qmm_masked_kernel, x, [w, mask], [qa, qb], block)
+
+
+def qmm_plain(x, w, qa, qb, *, block=DEFAULT_BLOCK):
+    """``fq(x, qa) @ fq(w, qb)`` (no mask)."""
+    return _run(_qmm_plain_kernel, x, [w], [qa, qb], block)
+
+
+def matmul(x, w, *, block=DEFAULT_BLOCK):
+    """Plain tiled Pallas matmul (quantization disabled)."""
+    return qmm_plain(x, w, DISABLED_Q, DISABLED_Q, block=block)
+
+
+def masked_matmul(x, w, mask, *, block=DEFAULT_BLOCK):
+    """``x @ (w * mask)`` (quantization disabled)."""
+    return qmm_masked(x, w, mask, DISABLED_Q, DISABLED_Q, block=block)
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrapper (pallas_call has no VJP rule; backward re-uses the
+# same fused kernels so fwd AND bwd stay on the MXU path)
+# ---------------------------------------------------------------------------
+
+
+def _ste(t, q):
+    """Straight-through mask: 1 inside the representable range (or when
+    quantization is disabled), 0 where the forward pass saturated."""
+    q = jnp.asarray(q, jnp.float32).reshape(2)
+    w_bits, i_bits = q[0], q[1]
+    hi = jnp.exp2(i_bits - 1.0)
+    enabled = w_bits > 0.0
+    inside = jnp.logical_or(jnp.abs(t) <= hi, jnp.logical_not(enabled))
+    return inside.astype(t.dtype)
+
+
+@jax.custom_vjp
+def qmm(x, w, mask, q):
+    """Differentiable fused quantized+masked matmul with shared layer
+    precision ``q = [W, I]`` for activations and weights."""
+    return qmm_masked(x, w, mask, q, q)
+
+
+def _qmm_fwd(x, w, mask, q):
+    return qmm_masked(x, w, mask, q, q), (x, w, mask, q)
+
+
+def _qmm_bwd(res, g):
+    x, w, mask, q = res
+    # dx = (g @ (fq(w) * m)^T) * ste(x): quantize only the weight operand.
+    dx = qmm_masked(g, w.T, mask.T, DISABLED_Q, q) * _ste(x, q)
+    # dw = (fq(x)^T @ g) * m * ste(w): pruned weights stay dead, saturated
+    # weights get no gradient (QKeras quantized_bits STE semantics).
+    dw = qmm_plain(x.T, g, q, DISABLED_Q) * mask * _ste(w, q)
+    return dx, dw, jnp.zeros_like(mask), jnp.zeros_like(jnp.asarray(q, jnp.float32))
+
+
+qmm.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+@jax.custom_vjp
+def masked_matmul_vjp(x, w, mask):
+    return masked_matmul(x, w, mask)
+
+
+def _mmm_fwd(x, w, mask):
+    return masked_matmul(x, w, mask), (x, w, mask)
+
+
+def _mmm_bwd(res, g):
+    x, w, mask = res
+    dx = masked_matmul(g, w.T, mask.T)
+    dw = matmul(x.T, g) * mask
+    return dx, dw, jnp.zeros_like(mask)
+
+
+masked_matmul_vjp.defvjp(_mmm_fwd, _mmm_bwd)
+
+
+@jax.custom_vjp
+def matmul_vjp(x, w):
+    return matmul(x, w)
+
+
+def _mm_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _mm_bwd(res, g):
+    x, w = res
+    return matmul(g, w.T), matmul(x.T, g)
+
+
+matmul_vjp.defvjp(_mm_fwd, _mm_bwd)

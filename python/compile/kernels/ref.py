@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the build-time correctness contract: pytest (and hypothesis
+sweeps) assert the Pallas kernels match these to float tolerance across
+shapes, masks and precisions.  They contain NO pallas — plain jnp only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference for kernels.masked_matmul.matmul."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """Reference for kernels.masked_matmul.masked_matmul."""
+    return jnp.matmul(x, w * mask, preferred_element_type=jnp.float32)
+
+
+def fake_quant_ref(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Reference ap_fixed<W,I> round-to-nearest + saturate; q = [W, I]."""
+    w_bits, i_bits = q[0], q[1]
+    frac = w_bits - i_bits
+    scale = jnp.exp2(frac)
+    hi = jnp.exp2(i_bits - 1.0) - 1.0 / scale
+    lo = -jnp.exp2(i_bits - 1.0)
+    quantized = jnp.clip(jnp.round(x * scale) / scale, lo, hi)
+    return jnp.where(w_bits > 0.0, quantized, x)
+
+
+def qmm_ref(x: jax.Array, w: jax.Array, mask: jax.Array, q: jax.Array) -> jax.Array:
+    """Reference for kernels.masked_matmul.qmm (fused quant+mask+matmul)."""
+    return jnp.matmul(
+        fake_quant_ref(x, q),
+        fake_quant_ref(w, q) * mask,
+        preferred_element_type=jnp.float32,
+    )

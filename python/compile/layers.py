@@ -1,0 +1,119 @@
+"""L2 building blocks: quantization/pruning-aware layers on the L1 kernels.
+
+Every multiply in the model zoo routes through the single Pallas
+``masked_matmul`` kernel (conv via im2col — the TPU mapping of conv onto the
+MXU).  Quantization is runtime-controlled per layer through ``qcfg`` rows
+``[total_bits, int_bits]`` (W == 0 disables), pruning through {0,1} masks on
+the weight matrices.  See DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fake_quant, qmm
+
+
+def quantize(x2d: jax.Array, q: jax.Array) -> jax.Array:
+    """ap_fixed fake-quantize a 2-D tensor with runtime precision ``q``."""
+    return fake_quant(x2d, q)
+
+
+def quantize_nd(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Fake-quantize an arbitrary-rank tensor (kernel is 2-D)."""
+    flat = x.reshape(-1, x.shape[-1])
+    return fake_quant(flat, q).reshape(x.shape)
+
+
+def apply_activation(x: jax.Array, name: str) -> jax.Array:
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "linear":
+        return x
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def qdense(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mask: jax.Array,
+    q: jax.Array,
+    activation: str = "relu",
+) -> jax.Array:
+    """Quantized, pruned dense layer: act(fq(x) @ (fq(w) * mask) + b).
+
+    Matches the HLS dense block: inputs and weights are ap_fixed<W,I>,
+    the MAC accumulates wide (f32 here ~ the wide accumulator in HLS),
+    output re-quantized by the *next* layer's input quantization.  The
+    quantize+mask+matmul is ONE fused Pallas kernel (see kernels/).
+    """
+    y = qmm(x, w, mask, q) + b
+    return apply_activation(y, activation)
+
+
+def im2col(x: jax.Array, k: int) -> jax.Array:
+    """[B,H,W,C] -> [B*H*W, k*k*C] SAME-padded patches (stride 1)."""
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k, k),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches returns feature dim ordered as C*k*k
+    # (channel-major); weights are reshaped to match in qconv2d.
+    return patches.reshape(b * h * w, c * k * k)
+
+
+def qconv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mask: jax.Array,
+    q: jax.Array,
+    activation: str = "relu",
+) -> jax.Array:
+    """Quantized, pruned 3x3 SAME conv as im2col + masked matmul.
+
+    ``w``: [k, k, Cin, Cout] (HWIO); ``mask`` matches ``w``.  The matmul
+    operand is [Cin*k*k, Cout] to match conv_general_dilated_patches'
+    channel-major patch ordering.
+    """
+    bsz, h, wd, cin = x.shape
+    k = w.shape[0]
+    cout = w.shape[3]
+    cols = im2col(x, k)  # [B*H*W, Cin*k*k]
+    # HWIO -> (Cin, k, k, Cout) -> [Cin*k*k, Cout]
+    w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * k * k, cout)
+    m2 = jnp.transpose(mask, (2, 0, 1, 3)).reshape(cin * k * k, cout)
+    y = qmm(cols, w2, m2, q) + b
+    y = y.reshape(bsz, h, wd, cout)
+    return apply_activation(y, activation)
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 max pool, stride 2 (VALID)."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def flatten(x: jax.Array) -> jax.Array:
+    return x.reshape(x.shape[0], -1)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, n_classes: int):
+    """Mean CE loss + accuracy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=logits.dtype)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc

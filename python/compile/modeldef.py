@@ -1,0 +1,186 @@
+"""Model descriptors shared between the L2 graph builder and the manifest.
+
+A ``ModelDef`` is a declarative layer list with concrete shapes; it drives
+three consumers:
+
+1. the JAX forward builder (``forward``),
+2. the AOT manifest (param/mask/qcfg ordering the rust runtime relies on),
+3. the rust HLS4ML λ-task (layer dims → HLS IR → resource estimation).
+
+Parameter order convention (the rust side indexes by this):
+``[w0, b0, w1, b1, ...]`` over *weight layers* (dense/conv) in graph order;
+masks ``[m0 ... m_{L-1}]`` align 1:1 with the weight tensors; ``qcfg`` is
+``f32[L, 2]`` with row l = ``[total_bits, int_bits]`` for layer l.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def scale_dim(dim: int, scale: float, multiple: int = 4, floor: int = 4) -> int:
+    """Scale a hidden dimension, rounding to a hardware-friendly multiple."""
+    return max(floor, int(round(dim * scale / multiple)) * multiple)
+
+
+@dataclass
+class LayerSpec:
+    """One weight layer (dense or conv) or a structural op."""
+
+    kind: str  # dense | conv2d | maxpool2 | flatten | residual_begin | residual_add
+    activation: str = "linear"
+    in_dim: int = 0      # dense: fan-in; conv: Cin
+    out_dim: int = 0     # dense: fan-out; conv: Cout
+    kernel: int = 0      # conv only
+    h: int = 0           # conv only: input spatial dims
+    w: int = 0
+    param_w: int = -1    # index into the flat param list
+    param_b: int = -1
+    mask_idx: int = -1   # index into the mask list / qcfg row
+    name: str = ""
+
+    @property
+    def is_weight(self) -> bool:
+        return self.kind in ("dense", "conv2d")
+
+    def macs(self) -> int:
+        """Multiply-accumulates for one inference (dense basis for HLS est.)."""
+        if self.kind == "dense":
+            return self.in_dim * self.out_dim
+        if self.kind == "conv2d":
+            return self.h * self.w * self.kernel * self.kernel * self.in_dim * self.out_dim
+        return 0
+
+    def weight_shape(self) -> Tuple[int, ...]:
+        if self.kind == "dense":
+            return (self.in_dim, self.out_dim)
+        if self.kind == "conv2d":
+            return (self.kernel, self.kernel, self.in_dim, self.out_dim)
+        raise ValueError(f"{self.kind} has no weights")
+
+
+@dataclass
+class ModelDef:
+    name: str
+    scale: float
+    input_shape: Tuple[int, ...]  # without batch; (F,) or (H, W, C)
+    n_classes: int
+    train_batch: int
+    eval_batch: int
+    layers: List[LayerSpec] = field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    # construction helpers
+    # ------------------------------------------------------------------
+    def _weight_layers(self) -> List[LayerSpec]:
+        return [l for l in self.layers if l.is_weight]
+
+    def finalize(self) -> "ModelDef":
+        """Assign param / mask / qcfg indices in graph order."""
+        p = 0
+        m = 0
+        for l in self.layers:
+            if l.is_weight:
+                l.param_w, l.param_b, l.mask_idx = p, p + 1, m
+                p += 2
+                m += 1
+        return self
+
+    @property
+    def tag(self) -> str:
+        return f"{self.name}_s{int(round(self.scale * 1000)):04d}"
+
+    @property
+    def n_qcfg_rows(self) -> int:
+        return len(self._weight_layers())
+
+    # ------------------------------------------------------------------
+    # shapes (the contract with the rust runtime)
+    # ------------------------------------------------------------------
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        out: List[Tuple[str, Tuple[int, ...]]] = []
+        for i, l in enumerate(self._weight_layers()):
+            out.append((f"w{i}", l.weight_shape()))
+            out.append((f"b{i}", (l.out_dim,)))
+        return out
+
+    def mask_shapes(self) -> List[Tuple[int, Tuple[int, ...]]]:
+        """(aligned param index, shape) per weight tensor."""
+        return [(l.param_w, l.weight_shape()) for l in self._weight_layers()]
+
+    # ------------------------------------------------------------------
+    # forward graph
+    # ------------------------------------------------------------------
+    def forward(self, params, masks, qcfg, x):
+        """Build the quantization/pruning-aware forward pass (logits)."""
+        stack = []  # residual skip stack
+        for l in self.layers:
+            if l.kind == "dense":
+                x = L.qdense(
+                    x, params[l.param_w], params[l.param_b], masks[l.mask_idx],
+                    qcfg[l.mask_idx], l.activation,
+                )
+            elif l.kind == "conv2d":
+                x = L.qconv2d(
+                    x, params[l.param_w], params[l.param_b], masks[l.mask_idx],
+                    qcfg[l.mask_idx], l.activation,
+                )
+            elif l.kind == "maxpool2":
+                x = L.maxpool2(x)
+            elif l.kind == "flatten":
+                x = L.flatten(x)
+            elif l.kind == "residual_begin":
+                stack.append(x)
+            elif l.kind == "residual_add":
+                x = jax.nn.relu(x + stack.pop())
+            else:
+                raise ValueError(f"unknown layer kind {l.kind!r}")
+        return x
+
+    # ------------------------------------------------------------------
+    # manifest
+    # ------------------------------------------------------------------
+    def manifest_entry(self) -> dict:
+        return {
+            "model": self.name,
+            "scale": self.scale,
+            "tag": self.tag,
+            "input_shape": list(self.input_shape),
+            "n_classes": self.n_classes,
+            "train_batch": self.train_batch,
+            "eval_batch": self.eval_batch,
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in self.param_shapes()
+            ],
+            "masks": [
+                {"param": p, "shape": list(s)} for p, s in self.mask_shapes()
+            ],
+            "qcfg_rows": self.n_qcfg_rows,
+            "layers": [
+                {
+                    "kind": l.kind,
+                    "name": l.name,
+                    "activation": l.activation,
+                    "in_dim": l.in_dim,
+                    "out_dim": l.out_dim,
+                    "kernel": l.kernel,
+                    "h": l.h,
+                    "w": l.w,
+                    "param_w": l.param_w,
+                    "param_b": l.param_b,
+                    "mask_idx": l.mask_idx,
+                    "macs": l.macs(),
+                }
+                for l in self.layers
+            ],
+            "artifacts": {
+                "train": f"{self.tag}_train.hlo.txt",
+                "eval": f"{self.tag}_eval.hlo.txt",
+            },
+        }

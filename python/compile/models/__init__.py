@@ -1,0 +1,20 @@
+"""L2 model zoo: the paper's three benchmark networks."""
+
+from . import jet_dnn, resnet9_mini, vgg7_mini  # noqa: F401
+
+BUILDERS = {
+    "jet_dnn": jet_dnn.build,
+    "vgg7_mini": vgg7_mini.build,
+    "resnet9_mini": resnet9_mini.build,
+}
+
+# Scale grids pre-lowered at AOT time; the SCALING O-task walks these.
+SCALE_GRID = {
+    "jet_dnn": [1.0, 0.75, 0.5, 0.375, 0.25],
+    "vgg7_mini": [1.0, 0.75, 0.5, 0.25],
+    "resnet9_mini": [1.0, 0.75, 0.5, 0.25],
+}
+
+
+def build(name: str, scale: float = 1.0):
+    return BUILDERS[name](scale)

@@ -1,0 +1,36 @@
+"""Jet-DNN: the hls4ml LHC jet-tagging MLP (Duarte et al., JINST 2018).
+
+Architecture 16 -> 64 -> 32 -> 32 -> 5 (relu, softmax head), exactly the
+network MetaML's Table II compares on VU9P.  ``scale`` shrinks the hidden
+widths (the SCALING O-task selects among pre-lowered scale variants).
+"""
+
+from __future__ import annotations
+
+from ..modeldef import LayerSpec, ModelDef, scale_dim
+
+INPUT_FEATURES = 16
+N_CLASSES = 5
+HIDDEN = (64, 32, 32)
+
+
+def build(scale: float = 1.0) -> ModelDef:
+    dims = [INPUT_FEATURES] + [scale_dim(h, scale) for h in HIDDEN]
+    m = ModelDef(
+        name="jet_dnn",
+        scale=scale,
+        input_shape=(INPUT_FEATURES,),
+        n_classes=N_CLASSES,
+        train_batch=128,
+        eval_batch=1024,
+    )
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        m.layers.append(
+            LayerSpec(kind="dense", activation="relu", in_dim=din, out_dim=dout,
+                      name=f"fc{i + 1}")
+        )
+    m.layers.append(
+        LayerSpec(kind="dense", activation="linear", in_dim=dims[-1],
+                  out_dim=N_CLASSES, name="output")
+    )
+    return m.finalize()

@@ -1,0 +1,60 @@
+"""ResNet9-mini: width-reduced ResNet9 for the synthetic-SVHN workload.
+
+Topology: stem conv -> residual block -> pool -> conv -> residual block ->
+pool -> conv -> pool -> dense head = 9 weight layers (hence ResNet9), with
+identity skips (He et al.).  16x16x3 inputs; widths reduced for the 1-core
+budget (substitution documented in DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+from ..modeldef import LayerSpec, ModelDef, scale_dim
+
+INPUT = (16, 16, 3)
+N_CLASSES = 10
+C1, C2, C3 = 8, 16, 32
+
+
+def build(scale: float = 1.0) -> ModelDef:
+    c1 = scale_dim(C1, scale)
+    c2 = scale_dim(C2, scale)
+    c3 = scale_dim(C3, scale)
+    h, w, cin = INPUT
+    m = ModelDef(
+        name="resnet9_mini",
+        scale=scale,
+        input_shape=INPUT,
+        n_classes=N_CLASSES,
+        train_batch=64,
+        eval_batch=256,
+    )
+    m.layers += [
+        LayerSpec(kind="conv2d", activation="relu", in_dim=cin, out_dim=c1,
+                  kernel=3, h=h, w=w, name="stem"),
+        # residual block 1 (16x16, c1)
+        LayerSpec(kind="residual_begin"),
+        LayerSpec(kind="conv2d", activation="relu", in_dim=c1, out_dim=c1,
+                  kernel=3, h=h, w=w, name="res1a"),
+        LayerSpec(kind="conv2d", activation="linear", in_dim=c1, out_dim=c1,
+                  kernel=3, h=h, w=w, name="res1b"),
+        LayerSpec(kind="residual_add"),
+        LayerSpec(kind="maxpool2"),
+        LayerSpec(kind="conv2d", activation="relu", in_dim=c1, out_dim=c2,
+                  kernel=3, h=h // 2, w=w // 2, name="conv2"),
+        # residual block 2 (8x8, c2)
+        LayerSpec(kind="residual_begin"),
+        LayerSpec(kind="conv2d", activation="relu", in_dim=c2, out_dim=c2,
+                  kernel=3, h=h // 2, w=w // 2, name="res2a"),
+        LayerSpec(kind="conv2d", activation="linear", in_dim=c2, out_dim=c2,
+                  kernel=3, h=h // 2, w=w // 2, name="res2b"),
+        LayerSpec(kind="residual_add"),
+        LayerSpec(kind="maxpool2"),
+        LayerSpec(kind="conv2d", activation="relu", in_dim=c2, out_dim=c3,
+                  kernel=3, h=h // 4, w=w // 4, name="conv3"),
+        LayerSpec(kind="maxpool2"),
+        LayerSpec(kind="flatten"),
+        LayerSpec(kind="dense", activation="linear",
+                  in_dim=(h // 8) * (w // 8) * c3, out_dim=N_CLASSES,
+                  name="output"),
+    ]
+    return m.finalize()

@@ -1,0 +1,49 @@
+"""VGG7-mini: width-reduced VGG7 for the synthetic-MNIST workload.
+
+The paper evaluates VGG7 [Simonyan & Zisserman] on MNIST; with a 1-core CPU
+budget we keep the VGG topology (stacked 3x3 convs + pools + dense head) at
+reduced width and 12x12x1 inputs.  DESIGN.md §1 documents the substitution:
+the pruning/scaling searches only need over-parameterization, which the mini
+retains (>10x params vs. task difficulty).
+"""
+
+from __future__ import annotations
+
+from ..modeldef import LayerSpec, ModelDef, scale_dim
+
+INPUT = (12, 12, 1)
+N_CLASSES = 10
+C1, C2, FC = 8, 16, 32
+
+
+def build(scale: float = 1.0) -> ModelDef:
+    c1 = scale_dim(C1, scale)
+    c2 = scale_dim(C2, scale)
+    fc = scale_dim(FC, scale)
+    h, w, cin = INPUT
+    m = ModelDef(
+        name="vgg7_mini",
+        scale=scale,
+        input_shape=INPUT,
+        n_classes=N_CLASSES,
+        train_batch=64,
+        eval_batch=256,
+    )
+    m.layers += [
+        LayerSpec(kind="conv2d", activation="relu", in_dim=cin, out_dim=c1,
+                  kernel=3, h=h, w=w, name="conv1"),
+        LayerSpec(kind="conv2d", activation="relu", in_dim=c1, out_dim=c1,
+                  kernel=3, h=h, w=w, name="conv2"),
+        LayerSpec(kind="maxpool2"),
+        LayerSpec(kind="conv2d", activation="relu", in_dim=c1, out_dim=c2,
+                  kernel=3, h=h // 2, w=w // 2, name="conv3"),
+        LayerSpec(kind="conv2d", activation="relu", in_dim=c2, out_dim=c2,
+                  kernel=3, h=h // 2, w=w // 2, name="conv4"),
+        LayerSpec(kind="maxpool2"),
+        LayerSpec(kind="flatten"),
+        LayerSpec(kind="dense", activation="relu",
+                  in_dim=(h // 4) * (w // 4) * c2, out_dim=fc, name="fc1"),
+        LayerSpec(kind="dense", activation="linear", in_dim=fc,
+                  out_dim=N_CLASSES, name="output"),
+    ]
+    return m.finalize()

@@ -1,0 +1,87 @@
+"""L2 train/eval step builders (the functions that get AOT-lowered).
+
+Flat-argument convention (the rust runtime marshals literals in exactly this
+order — see modeldef.py):
+
+``train_step(w0, b0, ..., m0, ..., qcfg, x, y, lr)``
+    -> ``(w0', b0', ..., loss, acc)``
+``eval_step(w0, b0, ..., m0, ..., qcfg, x, y)``
+    -> ``(loss, acc)``
+
+Plain SGD keeps the I/O surface small (no optimizer-state round-trips); the
+rust trainer owns the schedule.  Gradients are masked inside the kernel VJP,
+so pruned weights stay exactly zero across updates.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import softmax_cross_entropy
+from .modeldef import ModelDef
+
+
+def split_args(model: ModelDef, args) -> Tuple[list, list, jax.Array]:
+    n_params = 2 * model.n_qcfg_rows
+    n_masks = model.n_qcfg_rows
+    params = list(args[:n_params])
+    masks = list(args[n_params:n_params + n_masks])
+    rest = args[n_params + n_masks:]
+    return params, masks, rest
+
+
+def make_loss_fn(model: ModelDef) -> Callable:
+    def loss_fn(params, masks, qcfg, x, y):
+        logits = model.forward(params, masks, qcfg, x)
+        return softmax_cross_entropy(logits, y, model.n_classes)
+    return loss_fn
+
+
+def make_train_step(model: ModelDef) -> Callable:
+    loss_fn = make_loss_fn(model)
+
+    def train_step(*args):
+        params, masks, rest = split_args(model, args)
+        qcfg, x, y, lr = rest
+
+        def scalar_loss(params):
+            loss, acc = loss_fn(params, masks, qcfg, x, y)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(scalar_loss, has_aux=True)(params)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new_params) + (loss, acc)
+
+    return train_step
+
+
+def make_eval_step(model: ModelDef) -> Callable:
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(*args):
+        params, masks, rest = split_args(model, args)
+        qcfg, x, y = rest
+        loss, acc = loss_fn(params, masks, qcfg, x, y)
+        return (loss, acc)
+
+    return eval_step
+
+
+def example_args(model: ModelDef, fn: str) -> List[jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs in the flat-argument order, for jit().lower()."""
+    f32 = jnp.float32
+    specs: List[jax.ShapeDtypeStruct] = []
+    for _, shape in model.param_shapes():
+        specs.append(jax.ShapeDtypeStruct(shape, f32))
+    for _, shape in model.mask_shapes():
+        specs.append(jax.ShapeDtypeStruct(shape, f32))
+    specs.append(jax.ShapeDtypeStruct((model.n_qcfg_rows, 2), f32))
+    batch = model.train_batch if fn == "train" else model.eval_batch
+    specs.append(jax.ShapeDtypeStruct((batch, *model.input_shape), f32))
+    specs.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    if fn == "train":
+        specs.append(jax.ShapeDtypeStruct((), f32))
+    return specs

@@ -1,0 +1,55 @@
+"""AOT exporter tests: HLO text round-trips and manifest consistency."""
+
+import json
+import os
+
+import pytest
+
+from compile import models
+from compile.aot import lower_model_fn
+
+
+def test_hlo_text_is_parseable_hlo():
+    """Lowered text must be HLO (not stablehlo/MLIR): the rust loader's
+    contract is HloModuleProto::from_text_file."""
+    m = models.build("jet_dnn", 0.25)
+    text = lower_model_fn(m, "eval")
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True => root is a tuple
+    assert "(f32[]" in text or "tuple(" in text
+
+
+def test_train_output_arity():
+    """train returns params' + loss + acc => tuple arity = 2L + 2."""
+    m = models.build("jet_dnn", 0.25)
+    text = lower_model_fn(m, "train")
+    n_out = 2 * m.n_qcfg_rows + 2
+    # the ENTRY root tuple lists one shape per output
+    entry = text[text.index("ENTRY"):]
+    root_line = [l for l in entry.splitlines() if "ROOT" in l][0]
+    assert root_line.count("f32[") >= n_out
+
+
+def test_manifest_matches_scale_grid():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(path))
+    tags = {e["tag"] for e in manifest["models"]}
+    for name, grid in models.SCALE_GRID.items():
+        for s in grid:
+            assert models.build(name, s).tag in tags
+
+
+def test_manifest_artifact_files_exist():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    path = os.path.join(root, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(path))
+    for entry in manifest["models"]:
+        for fn in ("train", "eval"):
+            assert os.path.exists(os.path.join(root, entry["artifacts"][fn])), (
+                entry["tag"], fn)

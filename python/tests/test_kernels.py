@@ -1,0 +1,205 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes / masks / precisions — the CORE correctness signal
+for everything the rust coordinator later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fake_quant,
+    fake_quant_raw,
+    masked_matmul,
+    masked_matmul_vjp,
+    matmul,
+    matmul_vjp,
+)
+from compile.kernels.ref import fake_quant_ref, masked_matmul_ref, matmul_ref
+
+DIMS = st.integers(min_value=1, max_value=40)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# plain matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    k1, k2 = keys(seed, 2)
+    x, w = rand(k1, m, k), rand(k2, k, n)
+    np.testing.assert_allclose(
+        matmul(x, w), matmul_ref(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_larger_than_block():
+    """Shapes crossing the 128 tile boundary exercise the K-accumulation."""
+    k1, k2 = keys(7, 2)
+    x, w = rand(k1, 130, 257), rand(k2, 257, 131)
+    np.testing.assert_allclose(
+        matmul(x, w), matmul_ref(x, w), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_matmul_custom_block():
+    k1, k2 = keys(9, 2)
+    x, w = rand(k1, 48, 64), rand(k2, 64, 32)
+    out = matmul(x, w, block=(16, 16, 16))
+    np.testing.assert_allclose(out, matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(jnp.ones((3, 4)), jnp.ones((5, 6)))
+    with pytest.raises(ValueError):
+        matmul(jnp.ones((3,)), jnp.ones((3, 4)))
+
+
+# ---------------------------------------------------------------------------
+# masked matmul (pruning path)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=DIMS, k=DIMS, n=DIMS,
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_matmul_matches_ref(m, k, n, density, seed):
+    k1, k2, k3 = keys(seed, 3)
+    x, w = rand(k1, m, k), rand(k2, k, n)
+    mask = (jax.random.uniform(k3, (k, n)) < density).astype(jnp.float32)
+    np.testing.assert_allclose(
+        masked_matmul(x, w, mask),
+        masked_matmul_ref(x, w, mask),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_masked_matmul_zero_mask_is_zero():
+    k1, k2 = keys(3, 2)
+    x, w = rand(k1, 9, 17), rand(k2, 17, 5)
+    out = masked_matmul(x, w, jnp.zeros((17, 5)))
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((9, 5), np.float32))
+
+
+def test_masked_matmul_ones_mask_is_matmul():
+    k1, k2 = keys(4, 2)
+    x, w = rand(k1, 9, 17), rand(k2, 17, 5)
+    np.testing.assert_allclose(
+        masked_matmul(x, w, jnp.ones((17, 5))),
+        matmul_ref(x, w), rtol=1e-5, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# VJP wrappers: gradients match the reference gradients
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_masked_matmul_vjp_grads(m, k, n, seed):
+    k1, k2, k3 = keys(seed, 3)
+    x, w = rand(k1, m, k), rand(k2, k, n)
+    mask = (jax.random.uniform(k3, (k, n)) < 0.6).astype(jnp.float32)
+
+    f = lambda x, w: (masked_matmul_vjp(x, w, mask) ** 2).sum()
+    fr = lambda x, w: (masked_matmul_ref(x, w, mask) ** 2).sum()
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    gxr, gwr = jax.grad(fr, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, gxr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw, gwr, rtol=1e-3, atol=1e-3)
+
+
+def test_masked_grad_keeps_pruned_weights_dead():
+    """The defining pruning invariant: masked entries get zero gradient."""
+    k1, k2, k3 = keys(11, 3)
+    x, w = rand(k1, 8, 12), rand(k2, 12, 6)
+    mask = (jax.random.uniform(k3, (12, 6)) < 0.5).astype(jnp.float32)
+    g = jax.grad(lambda w: masked_matmul_vjp(x, w, mask).sum())(w)
+    np.testing.assert_array_equal(np.asarray(g * (1 - mask)), 0.0)
+
+
+def test_matmul_vjp_matches_ref_grads():
+    k1, k2 = keys(13, 2)
+    x, w = rand(k1, 6, 10), rand(k2, 10, 4)
+    g = jax.grad(lambda w: (matmul_vjp(x, w) ** 2).sum())(w)
+    gr = jax.grad(lambda w: (matmul_ref(x, w) ** 2).sum())(w)
+    np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fake quant (ap_fixed semantics)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=DIMS, cols=DIMS,
+    total=st.integers(2, 18), integer=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_matches_ref(rows, cols, total, integer, seed):
+    integer = min(integer, total)
+    x = rand(jax.random.PRNGKey(seed), rows, cols) * 4.0
+    q = jnp.array([float(total), float(integer)], jnp.float32)
+    np.testing.assert_allclose(
+        fake_quant(x, q), fake_quant_ref(x, q), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_fake_quant_disabled_is_identity():
+    x = rand(jax.random.PRNGKey(0), 5, 7)
+    q = jnp.zeros((2,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, q)), np.asarray(x))
+
+
+def test_fake_quant_saturates():
+    x = jnp.array([[100.0, -100.0]], jnp.float32)
+    q = jnp.array([8.0, 4.0], jnp.float32)  # ap_fixed<8,4>: [-8, 8 - 1/16]
+    out = np.asarray(fake_quant(x, q))
+    assert out[0, 0] == pytest.approx(8.0 - 1.0 / 16.0)
+    assert out[0, 1] == pytest.approx(-8.0)
+
+
+def test_fake_quant_values_on_grid():
+    """Quantized values are integer multiples of 2^-frac."""
+    x = rand(jax.random.PRNGKey(5), 16, 16)
+    q = jnp.array([10.0, 3.0], jnp.float32)
+    out = np.asarray(fake_quant_raw(x, q))
+    lsb = 2.0 ** -(10 - 3)
+    np.testing.assert_allclose(out / lsb, np.round(out / lsb), atol=1e-5)
+
+
+def test_fake_quant_ste_gradient():
+    x = jnp.array([[0.3, 100.0, -0.2, -50.0]], jnp.float32)
+    q = jnp.array([8.0, 4.0], jnp.float32)
+    g = jax.grad(lambda x: fake_quant(x, q).sum())(x)
+    # in-range entries pass gradient straight through; saturated ones block it
+    np.testing.assert_array_equal(np.asarray(g), [[1.0, 0.0, 1.0, 0.0]])
+
+
+def test_fake_quant_monotone_error_in_bits():
+    """More total bits can only reduce (or keep) quantization error."""
+    x = rand(jax.random.PRNGKey(21), 32, 32)
+    errs = []
+    for total in (4, 6, 8, 12, 16):
+        q = jnp.array([float(total), 4.0], jnp.float32)
+        errs.append(float(jnp.abs(fake_quant_raw(x, q) - x).mean()))
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:]))

@@ -1,0 +1,157 @@
+"""L2 model-zoo tests: shapes, manifest contract, learning signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+from compile.modeldef import scale_dim
+from compile.train import example_args, make_eval_step, make_train_step
+
+ALL_MODELS = list(models.BUILDERS)
+
+
+def make_args(model, fn, seed=0, lr=0.05, glorot=False):
+    """Random flat args honoring the manifest ordering."""
+    key = jax.random.PRNGKey(seed)
+    specs = example_args(model, fn)
+    args = []
+    for s in specs:
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            args.append(jax.random.randint(sub, s.shape, 0, model.n_classes))
+        elif s.shape == ():
+            args.append(jnp.float32(lr))
+        else:
+            args.append(0.1 * jax.random.normal(sub, s.shape, dtype=jnp.float32))
+    n_p = 2 * model.n_qcfg_rows
+    if glorot:
+        key = jax.random.PRNGKey(seed + 1)
+        for i in range(0, n_p, 2):
+            key, sub = jax.random.split(key)
+            shape = args[i].shape
+            fan_in = int(np.prod(shape[:-1]))
+            args[i] = jax.random.normal(sub, shape, dtype=jnp.float32) / np.sqrt(fan_in)
+            args[i + 1] = jnp.zeros_like(args[i + 1])
+    for i in range(n_p, n_p + model.n_qcfg_rows):
+        args[i] = jnp.ones_like(args[i])  # masks = keep all
+    args[n_p + model.n_qcfg_rows] = jnp.zeros(
+        (model.n_qcfg_rows, 2), jnp.float32
+    )  # quantization disabled
+    return args
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_manifest_param_ordering(name):
+    m = models.build(name, 1.0)
+    entry = m.manifest_entry()
+    assert entry["qcfg_rows"] == m.n_qcfg_rows
+    assert len(entry["params"]) == 2 * m.n_qcfg_rows
+    assert len(entry["masks"]) == m.n_qcfg_rows
+    # masks point at the weight tensors, with matching shapes
+    for mask in entry["masks"]:
+        assert entry["params"][mask["param"]]["shape"] == mask["shape"]
+    # weight layers carry consistent indices
+    widx = [l for l in entry["layers"] if l["param_w"] >= 0]
+    assert [l["mask_idx"] for l in widx] == list(range(len(widx)))
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_forward_shapes(name):
+    m = models.build(name, 1.0)
+    args = make_args(m, "eval")
+    step = jax.jit(make_eval_step(m))
+    loss, acc = step(*args)
+    assert loss.shape == () and acc.shape == ()
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(acc) <= 1.0
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_scaling_shrinks_params(name):
+    big = models.build(name, 1.0)
+    small = models.build(name, 0.25)
+    n = lambda m: sum(int(np.prod(s)) for _, s in m.param_shapes())
+    assert n(small) < n(big)
+    # in/out contract preserved
+    assert small.input_shape == big.input_shape
+    assert small.n_classes == big.n_classes
+
+
+def test_scale_dim_rounding():
+    assert scale_dim(64, 1.0) == 64
+    assert scale_dim(64, 0.5) == 32
+    assert scale_dim(4, 0.25) == 4  # floor
+    assert scale_dim(30, 0.5) % 4 == 0
+
+
+def test_train_step_learns_jet():
+    """SGD on a *learnable* fixed batch must drop the loss substantially."""
+    m = models.build("jet_dnn", 1.0)
+    args = make_args(m, "train", lr=0.5, glorot=True)
+    # structured labels: a fixed random linear map of the inputs
+    key = jax.random.PRNGKey(42)
+    x = args[-3]
+    proj = jax.random.normal(key, (x.shape[1], m.n_classes))
+    args[-2] = jnp.argmax(x @ proj, axis=-1).astype(jnp.int32)
+    step = jax.jit(make_train_step(m))
+    n_p = 2 * m.n_qcfg_rows
+    first = None
+    for _ in range(100):
+        out = step(*args)
+        args[:n_p] = list(out[:n_p])
+        loss = float(out[-2])
+        first = loss if first is None else first
+    assert loss < first * 0.75, (first, loss)
+    assert float(out[-1]) > 0.4  # accuracy well above 20% chance
+
+
+def test_train_step_respects_masks():
+    """Weights pruned at step 0 must remain exactly zero after updates."""
+    m = models.build("jet_dnn", 0.5)
+    args = make_args(m, "train", lr=0.1)
+    n_p = 2 * m.n_qcfg_rows
+    key = jax.random.PRNGKey(3)
+    # prune ~half of each weight matrix and zero those weights
+    for i, (pidx, _) in enumerate(m.mask_shapes()):
+        key, sub = jax.random.split(key)
+        mask = (jax.random.uniform(sub, args[pidx].shape) < 0.5).astype(jnp.float32)
+        args[n_p + i] = mask
+        args[pidx] = args[pidx] * mask
+    step = jax.jit(make_train_step(m))
+    for _ in range(5):
+        out = step(*args)
+        args[:n_p] = list(out[:n_p])
+    for i, (pidx, _) in enumerate(m.mask_shapes()):
+        w = np.asarray(args[pidx])
+        mask = np.asarray(args[n_p + i])
+        np.testing.assert_array_equal(w * (1 - mask), 0.0)
+
+
+def test_quantization_affects_logits():
+    """Aggressive quantization must perturb the logits; 18,8 barely."""
+    m = models.build("jet_dnn", 1.0)
+    args = make_args(m, "eval", glorot=True)
+    n_p = 2 * m.n_qcfg_rows
+    params = args[:n_p]
+    masks = args[n_p:n_p + m.n_qcfg_rows]
+    x = args[-2]
+
+    def logits(q):
+        qcfg = jnp.tile(jnp.array([q], jnp.float32), (m.n_qcfg_rows, 1))
+        return m.forward(params, masks, qcfg, x)
+
+    base = logits([0.0, 0.0])
+    hi = logits([18.0, 8.0])
+    lo = logits([3.0, 2.0])
+    assert float(jnp.abs(hi - base).max()) < 0.05
+    assert float(jnp.abs(lo - base).max()) > 0.1
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_scale_grid_builds(name):
+    for scale in models.SCALE_GRID[name]:
+        m = models.build(name, scale)
+        assert m.tag.endswith(f"s{int(round(scale * 1000)):04d}")
+        assert m.n_qcfg_rows >= 4

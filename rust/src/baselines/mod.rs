@@ -1,0 +1,8 @@
+//! Table II comparator baselines, implemented from their papers' cost
+//! models and training configurations (see DESIGN.md §1).
+
+pub mod logicnets;
+pub mod qkeras;
+
+pub use logicnets::{logicnets_design, LogicNetsConfig};
+pub use qkeras::{qkeras_design, QKerasVariant};

@@ -1,0 +1,131 @@
+//! QKeras / AutoQKeras baselines (Coelho et al., Nat. Mach. Intell. 2021).
+//!
+//! Q6 = uniform 6-bit quantized_bits QAT; QE / QB = AutoQKeras'
+//! energy-optimized and bits-optimized heterogeneous configurations.
+//! Each is reproduced as a fixed per-layer precision schedule trained
+//! through our QAT pipeline (the qcfg operand of the AOT train step) and
+//! synthesized by our estimator — measured rows, not transcriptions.
+
+use crate::error::Result;
+use crate::flow::Session;
+use crate::hls::{HlsModel, IoType};
+use crate::model::state::Precision;
+use crate::model::ModelState;
+use crate::synth::{self, FpgaDevice};
+use crate::train::{TrainConfig, Trainer};
+
+/// A published (Auto)QKeras design point for the jet tagger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QKerasVariant {
+    /// Uniform 6-bit QAT (output head kept wide, QKeras default practice).
+    Q6,
+    /// AutoQKeras energy-minimized heterogeneous config.
+    QE,
+    /// AutoQKeras bit-minimized heterogeneous config.
+    QB,
+}
+
+impl QKerasVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QKerasVariant::Q6 => "QKeras Q6",
+            QKerasVariant::QE => "AutoQKeras QE",
+            QKerasVariant::QB => "AutoQKeras QB",
+        }
+    }
+
+    /// Per-layer ap_fixed schedule for the 4-layer jet tagger.
+    pub fn precisions(&self) -> Vec<Precision> {
+        match self {
+            QKerasVariant::Q6 => vec![
+                Precision::new(6, 1),
+                Precision::new(6, 1),
+                Precision::new(6, 1),
+                Precision::new(16, 6), // wide head
+            ],
+            QKerasVariant::QE => vec![
+                Precision::new(4, 1),
+                Precision::new(4, 1),
+                Precision::new(6, 2),
+                Precision::new(12, 4),
+            ],
+            QKerasVariant::QB => vec![
+                Precision::new(4, 1),
+                Precision::new(6, 2),
+                Precision::new(4, 1),
+                Precision::new(12, 4),
+            ],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct QKerasDesign {
+    pub name: String,
+    pub accuracy: f64,
+    pub report: synth::SynthReport,
+}
+
+/// Train the variant with QAT and synthesize it on `device`.
+pub fn qkeras_design(
+    session: &Session,
+    variant_kind: QKerasVariant,
+    device: &FpgaDevice,
+) -> Result<QKerasDesign> {
+    let variant = session.manifest.variant("jet_dnn", 1.0)?;
+    let exec = session.executable(&variant.tag)?;
+    let data = session.dataset("jet_dnn")?;
+    let trainer = Trainer::new(&session.runtime, &exec, &data);
+
+    let mut state = ModelState::init(variant, 0x9143);
+    let precisions = variant_kind.precisions();
+    for (i, p) in state.precisions.iter_mut().enumerate() {
+        *p = precisions[i.min(precisions.len() - 1)];
+    }
+    let mut tc = TrainConfig::for_model("jet_dnn");
+    tc.epochs = 8; // QAT needs a little longer
+    trainer.fit(&mut state, &tc)?;
+    let eval = trainer.evaluate(&state)?;
+
+    let hls = HlsModel::from_dnn(
+        variant,
+        &state,
+        Precision::new(18, 8),
+        IoType::Parallel,
+        device.name,
+        1000.0 / device.default_clock_mhz,
+    )?;
+    let report = synth::estimate(&hls, device, device.default_clock_mhz)?;
+    Ok(QKerasDesign {
+        name: variant_kind.name().to_string(),
+        accuracy: eval.accuracy,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::cost;
+
+    #[test]
+    fn schedules_have_expected_bit_budgets() {
+        let q6: u32 = QKerasVariant::Q6.precisions().iter().map(|p| p.total_bits).sum();
+        let qe: u32 = QKerasVariant::QE.precisions().iter().map(|p| p.total_bits).sum();
+        let qb: u32 = QKerasVariant::QB.precisions().iter().map(|p| p.total_bits).sum();
+        // AutoQKeras configs use fewer bits than uniform Q6
+        assert!(qe < q6);
+        assert!(qb < q6);
+    }
+
+    #[test]
+    fn only_wide_heads_use_dsps() {
+        for v in [QKerasVariant::Q6, QKerasVariant::QE, QKerasVariant::QB] {
+            let ps = v.precisions();
+            // hidden layers below the DSP threshold
+            assert!(ps[..3].iter().filter(|p| cost::uses_dsp(**p)).count() <= 1);
+            // the head is DSP-mapped (the nonzero-DSP rows of Table II)
+            assert!(cost::uses_dsp(ps[3]));
+        }
+    }
+}

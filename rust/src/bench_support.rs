@@ -1,0 +1,60 @@
+//! Shared helpers for the bench harness (benches/*.rs).
+//!
+//! Benches are `harness = false` binaries (criterion is not in the
+//! offline crate set); each regenerates one paper table/figure, printing
+//! the same rows/series the paper reports and writing CSVs under
+//! `bench_out/`.
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::flow::Session;
+use crate::model::ModelState;
+use crate::runtime::ModelExecutable;
+use crate::train::{TrainConfig, Trainer};
+
+/// Artifacts dir (env-overridable, matching the CLI).
+pub fn artifacts_dir() -> String {
+    std::env::var("METAML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Output dir for bench CSVs.
+pub fn bench_out() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("METAML_BENCH_OUT").unwrap_or_else(|_| "bench_out".into()),
+    )
+}
+
+/// Fast mode trims epochs for smoke runs (METAML_FAST=1).
+pub fn fast_mode() -> bool {
+    std::env::var("METAML_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Which models a bench should cover (METAML_BENCH_MODELS=jet_dnn,...).
+pub fn bench_models(default: &[&str]) -> Vec<String> {
+    match std::env::var("METAML_BENCH_MODELS") {
+        Ok(s) if !s.is_empty() => s.split(',').map(str::to_string).collect(),
+        _ => default.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+/// Train a fresh base model for a (model, scale) variant; returns the
+/// state + the bound executable + dataset for further probing.
+pub fn trained_base<'a>(
+    session: &'a Session,
+    model: &str,
+    scale: f64,
+    seed: u64,
+) -> Result<(ModelState, std::rc::Rc<ModelExecutable>, std::rc::Rc<Dataset>)> {
+    let variant = session.manifest.variant(model, scale)?;
+    let exec = session.executable(&variant.tag)?;
+    let data = session.dataset(model)?;
+    let mut cfg = TrainConfig::for_model(model);
+    if fast_mode() {
+        cfg.epochs = cfg.epochs.div_ceil(2);
+    }
+    cfg.seed = seed;
+    let mut state = ModelState::init(variant, seed);
+    let trainer = Trainer::new(&session.runtime, &exec, &data);
+    trainer.fit(&mut state, &cfg)?;
+    Ok((state, exec, data))
+}

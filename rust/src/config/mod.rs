@@ -1,0 +1,5 @@
+//! Flow-spec configuration: JSON flow definitions + the paper's built-ins.
+
+pub mod spec;
+
+pub use spec::{builtin_flow, builtin_flow_names, FlowSpec};

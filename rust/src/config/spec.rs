@@ -1,0 +1,251 @@
+//! Flow specifications: build FlowGraphs from JSON config or built-ins.
+//!
+//! A spec file is the user-facing way to compose design flows (paper:
+//! "users can select a set of design-flow tasks, arrange them in a
+//! desired order, and fine-tune their parameters"):
+//!
+//! ```json
+//! {
+//!   "name": "s_p_q",
+//!   "cfg": { "model": "jet_dnn", "pruning.tolerate_acc_loss": 0.02 },
+//!   "tasks": [
+//!     {"id": "gen",   "type": "KERAS-MODEL-GEN"},
+//!     {"id": "scale", "type": "SCALING"},
+//!     {"id": "prune", "type": "PRUNING"}
+//!   ],
+//!   "edges": [["gen", "scale"], ["scale", "prune"]],
+//!   "back_edges": [{"from": "prune", "to": "scale", "max_iters": 2}]
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::flow::{FlowGraph, NodeId};
+use crate::json::{self, Value};
+use crate::metamodel::Cfg;
+
+/// A parsed flow spec: graph + CFG entries.
+#[derive(Debug, Clone)]
+pub struct FlowSpec {
+    pub graph: FlowGraph,
+    pub cfg_entries: Vec<(String, Value)>,
+}
+
+impl FlowSpec {
+    /// Parse a spec from JSON text.
+    pub fn parse(text: &str) -> Result<FlowSpec> {
+        let root = json::parse(text)?;
+        let name = root.req_str("name")?.to_string();
+        let mut graph = FlowGraph::new(name);
+        let mut ids: BTreeMap<String, NodeId> = BTreeMap::new();
+
+        for t in root.req_array("tasks")? {
+            let id = t.req_str("id")?.to_string();
+            let ty = t.req_str("type")?.to_string();
+            if ids.contains_key(&id) {
+                return Err(Error::Config(format!("duplicate task id {id:?}")));
+            }
+            let node = graph.add_task(id.clone(), ty);
+            ids.insert(id, node);
+        }
+
+        let resolve = |name: &str| -> Result<NodeId> {
+            ids.get(name)
+                .copied()
+                .ok_or_else(|| Error::Config(format!("unknown task id {name:?}")))
+        };
+
+        for e in root.req_array("edges")? {
+            let pair = e
+                .as_array()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| Error::Config("edge must be [from, to]".into()))?;
+            let from = pair[0]
+                .as_str()
+                .ok_or_else(|| Error::Config("edge endpoint must be a string".into()))?;
+            let to = pair[1]
+                .as_str()
+                .ok_or_else(|| Error::Config("edge endpoint must be a string".into()))?;
+            graph.connect(resolve(from)?, resolve(to)?)?;
+        }
+
+        if let Some(Value::Array(back)) = root.get("back_edges") {
+            for b in back {
+                graph.connect_back(
+                    resolve(b.req_str("from")?)?,
+                    resolve(b.req_str("to")?)?,
+                    b.req_usize("max_iters")?,
+                )?;
+            }
+        }
+
+        let mut cfg_entries = Vec::new();
+        if let Some(Value::Object(map)) = root.get("cfg") {
+            for (k, v) in map {
+                cfg_entries.push((k.clone(), v.clone()));
+            }
+        }
+
+        graph.validate()?;
+        Ok(FlowSpec { graph, cfg_entries })
+    }
+
+    pub fn load(path: &str) -> Result<FlowSpec> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn apply_cfg(&self, cfg: &mut Cfg) {
+        for (k, v) in &self.cfg_entries {
+            cfg.set(k.clone(), v.clone());
+        }
+    }
+}
+
+/// The paper's flow architectures as built-in specs.
+pub fn builtin_flow_names() -> Vec<&'static str> {
+    vec!["baseline", "pruning", "scaling", "quantization", "s_p_q", "p_s_q"]
+}
+
+/// Construct a built-in flow (Fig 2 architectures).
+///
+/// All built-ins end with HLS4ML → VIVADO-HLS so every run produces an
+/// RTL report; `baseline` is the no-O-task reference flow.
+pub fn builtin_flow(name: &str) -> Result<FlowSpec> {
+    let chain = |flow_name: &str, middle: &[(&str, &str)]| {
+        let mut tasks = vec![("gen", "KERAS-MODEL-GEN")];
+        tasks.extend_from_slice(middle);
+        // quantization runs at the HLS level => after HLS4ML (Fig 2b)
+        let q_at_hls = middle.iter().any(|(id, _)| *id == "quantize");
+        let mut pre_hls: Vec<(&str, &str)> =
+            tasks.iter().copied().filter(|(id, _)| !(q_at_hls && *id == "quantize")).collect();
+        pre_hls.push(("hls4ml", "HLS4ML"));
+        if q_at_hls {
+            pre_hls.push(("quantize", "QUANTIZATION"));
+        }
+        pre_hls.push(("synth", "VIVADO-HLS"));
+        let mut spec = String::new();
+        spec.push_str(&format!("{{\"name\": \"{flow_name}\", \"tasks\": ["));
+        spec.push_str(
+            &pre_hls
+                .iter()
+                .map(|(id, ty)| format!("{{\"id\": \"{id}\", \"type\": \"{ty}\"}}"))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+        spec.push_str("], \"edges\": [");
+        spec.push_str(
+            &pre_hls
+                .windows(2)
+                .map(|w| format!("[\"{}\", \"{}\"]", w[0].0, w[1].0))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+        spec.push_str("]}");
+        FlowSpec::parse(&spec)
+    };
+
+    match name {
+        "baseline" => chain("baseline", &[]),
+        "pruning" => chain("pruning", &[("prune", "PRUNING")]),
+        "scaling" => chain("scaling", &[("scale", "SCALING")]),
+        "quantization" => chain("quantization", &[("quantize", "QUANTIZATION")]),
+        // Fig 2(b): scaling → pruning → (HLS4ML) → quantization
+        "s_p_q" => chain(
+            "s_p_q",
+            &[("scale", "SCALING"), ("prune", "PRUNING"), ("quantize", "QUANTIZATION")],
+        ),
+        // Fig 2(c): different O-task order — pruning → scaling → quantization
+        "p_s_q" => chain(
+            "p_s_q",
+            &[("prune", "PRUNING"), ("scale", "SCALING"), ("quantize", "QUANTIZATION")],
+        ),
+        other => Err(Error::Config(format!("unknown builtin flow {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_spec() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t", "tasks": [{"id": "a", "type": "KERAS-MODEL-GEN"}],
+                "edges": []}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.graph.nodes().len(), 1);
+        assert!(spec.cfg_entries.is_empty());
+    }
+
+    #[test]
+    fn parse_with_edges_cfg_and_back_edges() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t",
+                "cfg": {"model": "jet_dnn", "prune.tolerate_acc_loss": 0.04},
+                "tasks": [{"id": "gen", "type": "KERAS-MODEL-GEN"},
+                           {"id": "prune", "type": "PRUNING"}],
+                "edges": [["gen", "prune"]],
+                "back_edges": [{"from": "prune", "to": "gen", "max_iters": 2}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.graph.nodes().len(), 2);
+        assert_eq!(spec.graph.back_edges().len(), 1);
+        assert_eq!(spec.cfg_entries.len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FlowSpec::parse("{}").is_err());
+        // duplicate ids
+        assert!(FlowSpec::parse(
+            r#"{"name": "t", "tasks": [{"id": "a", "type": "X"},
+                {"id": "a", "type": "Y"}], "edges": []}"#
+        )
+        .is_err());
+        // unknown edge endpoint
+        assert!(FlowSpec::parse(
+            r#"{"name": "t", "tasks": [{"id": "a", "type": "X"}],
+                "edges": [["a", "b"]]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn builtins_build_and_validate() {
+        for name in builtin_flow_names() {
+            let spec = builtin_flow(name).unwrap();
+            assert!(spec.graph.validate().is_ok(), "{name}");
+            // every builtin ends in VIVADO-HLS
+            assert!(spec
+                .graph
+                .nodes()
+                .iter()
+                .any(|n| n.task_type == "VIVADO-HLS"));
+        }
+        assert!(builtin_flow("nope").is_err());
+    }
+
+    #[test]
+    fn s_p_q_order_matches_fig2b() {
+        let spec = builtin_flow("s_p_q").unwrap();
+        let order = spec.graph.topo_order().unwrap();
+        let types: Vec<&str> = order
+            .iter()
+            .map(|&id| spec.graph.node(id).unwrap().task_type.as_str())
+            .collect();
+        assert_eq!(
+            types,
+            vec![
+                "KERAS-MODEL-GEN",
+                "SCALING",
+                "PRUNING",
+                "HLS4ML",
+                "QUANTIZATION",
+                "VIVADO-HLS"
+            ]
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic dataset substrate.
+//!
+//! The paper trains on Jet-HLF (CERN LHC jet tagging), MNIST and SVHN —
+//! none of which are available offline.  Per the substitution rule
+//! (DESIGN.md §1) we synthesize datasets with matched *shape* and tuned
+//! difficulty: what the paper's experiments measure is the accuracy-vs-
+//! pruning/quantization/scaling tradeoff, which only requires a task that
+//! (a) a scaled/pruned model can still learn and (b) degrades smoothly as
+//! capacity is removed.
+
+pub mod batcher;
+pub mod synth;
+
+pub use batcher::Batcher;
+pub use synth::{Dataset, DatasetSpec};

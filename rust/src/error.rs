@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("shape mismatch: expected {expected:?}, got {got:?}")]
+    ShapeMismatch { expected: Vec<usize>, got: Vec<usize> },
+
+    #[error("flow error: {0}")]
+    Flow(String),
+
+    #[error("task error in {task}: {msg}")]
+    Task { task: String, msg: String },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("model space error: {0}")]
+    ModelSpace(String),
+
+    #[error("synthesis error: {0}")]
+    Synth(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+
+    pub fn task(task: impl Into<String>, msg: impl Into<String>) -> Self {
+        Error::Task { task: task.into(), msg: msg.into() }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

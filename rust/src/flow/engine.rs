@@ -1,0 +1,119 @@
+//! The flow execution engine.
+//!
+//! Executes a validated flow graph against a meta-model: forward edges in
+//! deterministic topological order, back edges as bounded iteration of
+//! their enclosed sub-path.  All execution is on the coordinator thread
+//! (the PJRT client is not Sync); determinism is part of the contract —
+//! re-running a flow with the same CFG and seed reproduces the LOG.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::flow::graph::{FlowGraph, NodeId};
+use crate::flow::registry::TaskRegistry;
+use crate::flow::session::Session;
+use crate::flow::task::{TaskCtx, TaskOutcome};
+use crate::metamodel::{LogEvent, MetaModel};
+
+pub struct Engine<'a> {
+    pub session: &'a Session,
+    pub registry: &'a TaskRegistry,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(session: &'a Session, registry: &'a TaskRegistry) -> Self {
+        Engine { session, registry }
+    }
+
+    /// Execute `graph` against `meta`. Returns the per-node outcomes of
+    /// the final pass over each node.
+    pub fn run(&self, graph: &FlowGraph, meta: &mut MetaModel) -> Result<Vec<TaskOutcome>> {
+        let order = graph.validate()?;
+        // multiplicity check: a task demanding k inputs must have k
+        // incoming forward edges (0-to-1 tasks are sources, etc.)
+        for node in graph.nodes() {
+            let task = self.registry.create(&node.task_type)?;
+            let (want_in, _) = task.multiplicity();
+            let have = graph.in_degree(node.id);
+            if have != want_in {
+                return Err(Error::Flow(format!(
+                    "task {} ({}) is {}-input but has {} incoming edges",
+                    node.instance,
+                    node.task_type,
+                    want_in,
+                    have
+                )));
+            }
+        }
+
+        meta.log.push(LogEvent::FlowStarted { flow: graph.name.clone() });
+        let mut outcomes: Vec<TaskOutcome> =
+            vec![TaskOutcome::default(); graph.nodes().len()];
+
+        let mut pc = 0usize; // index into topo order
+        // remaining iteration budget per back edge
+        let mut budgets: Vec<usize> =
+            graph.back_edges().iter().map(|b| b.max_iters).collect();
+
+        while pc < order.len() {
+            let node_id = order[pc];
+            let outcome = self.run_node(graph, meta, node_id)?;
+            let iterate = outcome.request_iteration;
+            outcomes[node_id] = outcome;
+
+            // back edge whose source is this node and which still has
+            // budget fires if the task requested iteration
+            let mut jumped = false;
+            if iterate {
+                for (i, be) in graph.back_edges().iter().enumerate() {
+                    if be.from == node_id && budgets[i] > 1 {
+                        budgets[i] -= 1;
+                        let target_pos = order
+                            .iter()
+                            .position(|&n| n == be.to)
+                            .expect("validated back edge");
+                        meta.log.push(LogEvent::IterationAdvanced {
+                            task: graph.node(node_id)?.instance.clone(),
+                            iteration: be.max_iters - budgets[i],
+                        });
+                        pc = target_pos;
+                        jumped = true;
+                        break;
+                    }
+                }
+            }
+            if !jumped {
+                pc += 1;
+            }
+        }
+
+        meta.log.push(LogEvent::FlowFinished { flow: graph.name.clone() });
+        Ok(outcomes)
+    }
+
+    fn run_node(
+        &self,
+        graph: &FlowGraph,
+        meta: &mut MetaModel,
+        node_id: NodeId,
+    ) -> Result<TaskOutcome> {
+        let node = graph.node(node_id)?.clone();
+        let task = self.registry.create(&node.task_type)?;
+        meta.log.push(LogEvent::TaskStarted { task: node.instance.clone() });
+        let t0 = Instant::now();
+        let mut ctx = TaskCtx {
+            meta,
+            session: self.session,
+            instance: node.instance.clone(),
+        };
+        let outcome = task.run(&mut ctx).map_err(|e| Error::Task {
+            task: node.instance.clone(),
+            msg: e.to_string(),
+        })?;
+        meta.log.push(LogEvent::TaskFinished {
+            task: node.instance.clone(),
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        Ok(outcome)
+    }
+}

@@ -1,0 +1,247 @@
+//! The design-flow graph: task instances + dependency edges (+ back edges).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::error::{Error, Result};
+
+pub type NodeId = usize;
+
+/// A task instance in a flow.
+#[derive(Debug, Clone)]
+pub struct FlowNode {
+    pub id: NodeId,
+    /// Instance name, unique per flow ("pruning", "pruning2", …).
+    pub instance: String,
+    /// Task type name resolved against the registry ("PRUNING", …).
+    pub task_type: String,
+}
+
+/// A back edge enabling iteration (cyclic design flows, paper §III).
+#[derive(Debug, Clone, Copy)]
+pub struct BackEdge {
+    pub from: NodeId,
+    pub to: NodeId,
+    /// Hard bound on re-executions of the enclosed sub-path.
+    pub max_iters: usize,
+}
+
+/// Directed flow graph.  Forward edges must be acyclic (validated); back
+/// edges may close cycles and drive iteration.
+#[derive(Debug, Default, Clone)]
+pub struct FlowGraph {
+    pub name: String,
+    nodes: Vec<FlowNode>,
+    edges: BTreeSet<(NodeId, NodeId)>,
+    back_edges: Vec<BackEdge>,
+}
+
+impl FlowGraph {
+    pub fn new(name: impl Into<String>) -> Self {
+        FlowGraph { name: name.into(), ..Default::default() }
+    }
+
+    /// Add a task instance; returns its node id.
+    pub fn add_task(&mut self, instance: impl Into<String>, task_type: impl Into<String>) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(FlowNode {
+            id,
+            instance: instance.into(),
+            task_type: task_type.into(),
+        });
+        id
+    }
+
+    /// Add a dependency edge from → to ("from completes before to").
+    pub fn connect(&mut self, from: NodeId, to: NodeId) -> Result<()> {
+        self.check_node(from)?;
+        self.check_node(to)?;
+        if from == to {
+            return Err(Error::Flow(format!("self edge on node {from}")));
+        }
+        self.edges.insert((from, to));
+        Ok(())
+    }
+
+    /// Add a back edge driving iteration of the sub-path to..=from.
+    pub fn connect_back(&mut self, from: NodeId, to: NodeId, max_iters: usize) -> Result<()> {
+        self.check_node(from)?;
+        self.check_node(to)?;
+        self.back_edges.push(BackEdge { from, to, max_iters });
+        Ok(())
+    }
+
+    fn check_node(&self, id: NodeId) -> Result<()> {
+        if id >= self.nodes.len() {
+            return Err(Error::Flow(format!("unknown node {id}")));
+        }
+        Ok(())
+    }
+
+    pub fn nodes(&self) -> &[FlowNode] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> Result<&FlowNode> {
+        self.nodes.get(id).ok_or_else(|| Error::Flow(format!("unknown node {id}")))
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        self.edges.iter().copied()
+    }
+
+    pub fn back_edges(&self) -> &[BackEdge] {
+        &self.back_edges
+    }
+
+    /// In-degree over forward edges (multiplicity checking).
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.edges.iter().filter(|(_, t)| *t == id).count()
+    }
+
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.edges.iter().filter(|(f, _)| *f == id).count()
+    }
+
+    /// Deterministic topological order over the forward edges.
+    ///
+    /// Kahn's algorithm with the lowest-id tie-break, so the same graph
+    /// always executes in the same order (the engine is single-threaded
+    /// by design — the PJRT client is not Sync; parallel branches are
+    /// interleaved deterministically instead).
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let mut indeg: BTreeMap<NodeId, usize> =
+            self.nodes.iter().map(|n| (n.id, 0)).collect();
+        for (_, t) in &self.edges {
+            *indeg.get_mut(t).unwrap() += 1;
+        }
+        let mut ready: BTreeSet<NodeId> = indeg
+            .iter()
+            .filter(|(_, &d)| d == 0)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(&id) = ready.iter().next() {
+            ready.remove(&id);
+            order.push(id);
+            for (f, t) in &self.edges {
+                if *f == id {
+                    let d = indeg.get_mut(t).unwrap();
+                    *d -= 1;
+                    if *d == 0 {
+                        ready.insert(*t);
+                    }
+                }
+            }
+        }
+        if order.len() != self.nodes.len() {
+            return Err(Error::Flow(
+                "forward edges contain a cycle (use connect_back for iteration)"
+                    .into(),
+            ));
+        }
+        Ok(order)
+    }
+
+    /// Validate back edges: target must precede source in topo order.
+    pub fn validate(&self) -> Result<Vec<NodeId>> {
+        let order = self.topo_order()?;
+        let pos: BTreeMap<NodeId, usize> =
+            order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for be in &self.back_edges {
+            if pos[&be.to] > pos[&be.from] {
+                return Err(Error::Flow(format!(
+                    "back edge {} -> {} does not point backwards",
+                    be.from, be.to
+                )));
+            }
+            if be.max_iters == 0 {
+                return Err(Error::Flow("back edge max_iters must be >= 1".into()));
+            }
+        }
+        Ok(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> FlowGraph {
+        let mut g = FlowGraph::new("chain");
+        let a = g.add_task("gen", "KERAS-MODEL-GEN");
+        let b = g.add_task("prune", "PRUNING");
+        let c = g.add_task("hls", "HLS4ML");
+        g.connect(a, b).unwrap();
+        g.connect(b, c).unwrap();
+        g
+    }
+
+    #[test]
+    fn topo_order_of_chain() {
+        assert_eq!(chain().topo_order().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn topo_order_deterministic_on_diamond() {
+        let mut g = FlowGraph::new("diamond");
+        let a = g.add_task("a", "T");
+        let b = g.add_task("b", "T");
+        let c = g.add_task("c", "T");
+        let d = g.add_task("d", "T");
+        g.connect(a, b).unwrap();
+        g.connect(a, c).unwrap();
+        g.connect(b, d).unwrap();
+        g.connect(c, d).unwrap();
+        // lowest-id tie-break => b before c
+        assert_eq!(g.topo_order().unwrap(), vec![a, b, c, d]);
+    }
+
+    #[test]
+    fn forward_cycle_rejected() {
+        let mut g = FlowGraph::new("cyc");
+        let a = g.add_task("a", "T");
+        let b = g.add_task("b", "T");
+        g.connect(a, b).unwrap();
+        g.connect(b, a).unwrap();
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn self_edge_rejected() {
+        let mut g = FlowGraph::new("s");
+        let a = g.add_task("a", "T");
+        assert!(g.connect(a, a).is_err());
+    }
+
+    #[test]
+    fn back_edge_validation() {
+        let mut g = chain();
+        g.connect_back(2, 0, 3).unwrap();
+        assert!(g.validate().is_ok());
+        // forward-pointing back edge rejected
+        let mut g2 = chain();
+        g2.connect_back(0, 2, 3).unwrap();
+        assert!(g2.validate().is_err());
+        // zero max_iters rejected
+        let mut g3 = chain();
+        g3.connect_back(2, 0, 0).unwrap();
+        assert!(g3.validate().is_err());
+    }
+
+    #[test]
+    fn degrees() {
+        let g = chain();
+        assert_eq!(g.in_degree(0), 0);
+        assert_eq!(g.in_degree(1), 1);
+        assert_eq!(g.out_degree(0), 1);
+        assert_eq!(g.out_degree(2), 0);
+    }
+
+    #[test]
+    fn unknown_node_errors() {
+        let mut g = FlowGraph::new("x");
+        let a = g.add_task("a", "T");
+        assert!(g.connect(a, 99).is_err());
+        assert!(g.node(99).is_err());
+    }
+}

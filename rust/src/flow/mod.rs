@@ -1,0 +1,24 @@
+//! Design-flow architecture (paper §III): pipe tasks + cyclic task graphs.
+//!
+//! A design flow is a directed graph whose nodes are **pipe-task
+//! instances** and whose edges are dependencies ("complete A before B").
+//! Forward edges define a deterministic topological execution order;
+//! *back edges* make the graph cyclic and express iteration — the engine
+//! re-executes the enclosed sub-path while the back edge's source task
+//! requests another pass (bounded by `max_iters`).
+//!
+//! Tasks communicate exclusively through the [crate::metamodel::MetaModel],
+//! never directly — that is what makes flows recomposable (Fig 2: swapping
+//! the order of SCALING/PRUNING/QUANTIZATION is an edge-list change).
+
+pub mod engine;
+pub mod graph;
+pub mod registry;
+pub mod session;
+pub mod task;
+
+pub use engine::Engine;
+pub use graph::{FlowGraph, NodeId};
+pub use registry::TaskRegistry;
+pub use session::Session;
+pub use task::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};

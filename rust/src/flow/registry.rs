@@ -1,0 +1,136 @@
+//! Task registry: resolves task-type names to constructors.
+//!
+//! The registry is what makes flows *recomposable from config*: a flow
+//! spec references tasks by name, the registry instantiates them, and
+//! users register custom tasks alongside the built-ins (see
+//! examples/custom_flow.rs).  `table()` renders the paper's Table I.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::flow::task::PipeTask;
+
+type Ctor = Box<dyn Fn() -> Box<dyn PipeTask>>;
+
+#[derive(Default)]
+pub struct TaskRegistry {
+    ctors: BTreeMap<String, Ctor>,
+}
+
+impl TaskRegistry {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Registry pre-populated with the paper's Table I tasks.
+    pub fn builtin() -> Self {
+        use crate::tasks;
+        let mut r = Self::empty();
+        r.register("KERAS-MODEL-GEN", || Box::new(tasks::ModelGenTask));
+        r.register("PRUNING", || Box::new(tasks::PruningTask));
+        r.register("SCALING", || Box::new(tasks::ScalingTask));
+        r.register("QUANTIZATION", || Box::new(tasks::QuantizationTask));
+        r.register("HLS4ML", || Box::new(tasks::Hls4mlTask));
+        r.register("VIVADO-HLS", || Box::new(tasks::VivadoHlsTask));
+        r
+    }
+
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        ctor: impl Fn() -> Box<dyn PipeTask> + 'static,
+    ) {
+        self.ctors.insert(name.into(), Box::new(ctor));
+    }
+
+    pub fn create(&self, name: &str) -> Result<Box<dyn PipeTask>> {
+        self.ctors
+            .get(name)
+            .map(|c| c())
+            .ok_or_else(|| Error::Flow(format!("unknown task type {name:?}")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.ctors.keys().map(String::as_str).collect()
+    }
+
+    /// Render the implemented-task table (paper Table I).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("| Type | Role | Multiplicity | Parameters |\n");
+        out.push_str("|------|------|--------------|------------|\n");
+        for name in self.names() {
+            let t = self.create(name).unwrap();
+            let (i, o) = t.multiplicity();
+            let params: Vec<String> = t
+                .params()
+                .iter()
+                .map(|p| match p.default {
+                    Some(d) => format!("{} (={})", p.name, d),
+                    None => p.name.to_string(),
+                })
+                .collect();
+            out.push_str(&format!(
+                "| {} | {} | {}-to-{} | {} |\n",
+                t.name(),
+                t.role(),
+                i,
+                o,
+                params.join(", ")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::task::{ParamSpec, TaskCtx, TaskOutcome, TaskRole};
+
+    struct Dummy;
+    impl PipeTask for Dummy {
+        fn name(&self) -> &str {
+            "DUMMY"
+        }
+        fn role(&self) -> TaskRole {
+            TaskRole::Optimization
+        }
+        fn multiplicity(&self) -> (usize, usize) {
+            (1, 1)
+        }
+        fn params(&self) -> Vec<ParamSpec> {
+            vec![]
+        }
+        fn run(&self, _ctx: &mut TaskCtx) -> crate::Result<TaskOutcome> {
+            Ok(TaskOutcome::default())
+        }
+    }
+
+    #[test]
+    fn register_and_create() {
+        let mut r = TaskRegistry::empty();
+        r.register("DUMMY", || Box::new(Dummy));
+        assert!(r.create("DUMMY").is_ok());
+        assert!(r.create("NOPE").is_err());
+        assert_eq!(r.names(), vec!["DUMMY"]);
+    }
+
+    #[test]
+    fn builtin_has_table1_tasks() {
+        let r = TaskRegistry::builtin();
+        for name in [
+            "KERAS-MODEL-GEN",
+            "PRUNING",
+            "SCALING",
+            "QUANTIZATION",
+            "HLS4ML",
+            "VIVADO-HLS",
+        ] {
+            assert!(r.create(name).is_ok(), "{name} missing");
+        }
+        let table = r.table();
+        assert!(table.contains("PRUNING"));
+        assert!(table.contains("tolerate_acc_loss"));
+    }
+}

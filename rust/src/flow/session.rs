@@ -1,0 +1,71 @@
+//! Process-wide session: PJRT runtime + manifest + caches.
+//!
+//! Tasks are stateless; everything expensive (compiled executables,
+//! synthesized datasets) is cached here and shared across the whole flow
+//! (and across flows in a bench run).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::data::{Dataset, DatasetSpec};
+use crate::error::Result;
+use crate::runtime::{Manifest, ModelExecutable, Runtime};
+
+pub struct Session {
+    pub runtime: Runtime,
+    pub manifest: Manifest,
+    execs: RefCell<HashMap<String, Rc<ModelExecutable>>>,
+    datasets: RefCell<HashMap<String, Rc<Dataset>>>,
+}
+
+impl Session {
+    pub fn open(artifacts_dir: &str) -> Result<Self> {
+        Ok(Session {
+            runtime: Runtime::cpu()?,
+            manifest: Manifest::load(artifacts_dir)?,
+            execs: RefCell::new(HashMap::new()),
+            datasets: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Session with a live PJRT runtime but an empty manifest — for
+    /// engine/flow tests that use mock tasks and never touch artifacts.
+    pub fn without_artifacts() -> Result<Self> {
+        Ok(Session {
+            runtime: Runtime::cpu()?,
+            manifest: Manifest::empty(),
+            execs: RefCell::new(HashMap::new()),
+            datasets: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compiled train+eval executables for a variant tag (cached).
+    pub fn executable(&self, tag: &str) -> Result<Rc<ModelExecutable>> {
+        if let Some(e) = self.execs.borrow().get(tag) {
+            return Ok(e.clone());
+        }
+        let exec = Rc::new(ModelExecutable::load(&self.runtime, &self.manifest, tag)?);
+        self.execs.borrow_mut().insert(tag.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// The synthetic dataset for a model family (cached; generation is
+    /// deterministic so every task sees identical data).
+    pub fn dataset(&self, model: &str) -> Result<Rc<Dataset>> {
+        if let Some(d) = self.datasets.borrow().get(model) {
+            return Ok(d.clone());
+        }
+        let variant = self
+            .manifest
+            .variants
+            .iter()
+            .find(|v| v.model == model)
+            .ok_or_else(|| crate::Error::Manifest(format!("no model {model}")))?;
+        let spec =
+            DatasetSpec::for_model(model, &variant.input_shape, variant.n_classes);
+        let data = Rc::new(Dataset::generate(&spec));
+        self.datasets.borrow_mut().insert(model.to_string(), data.clone());
+        Ok(data)
+    }
+}

@@ -1,0 +1,106 @@
+//! The pipe task abstraction (paper §III–IV, Table I).
+
+use crate::error::Result;
+use crate::flow::session::Session;
+use crate::metamodel::MetaModel;
+
+/// O-task (self-contained optimization) vs λ-task (functional
+/// transformation between model abstractions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskRole {
+    Optimization,
+    Lambda,
+}
+
+impl std::fmt::Display for TaskRole {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TaskRole::Optimization => write!(f, "O"),
+            TaskRole::Lambda => write!(f, "λ"),
+        }
+    }
+}
+
+/// A declared parameter of a task (Table I's "Parameters" column).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Rendered default (None = required / no default).
+    pub default: Option<&'static str>,
+}
+
+/// What a task reports back to the engine.
+#[derive(Debug, Clone, Default)]
+pub struct TaskOutcome {
+    /// Model-space ids this execution produced.
+    pub produced: Vec<u64>,
+    /// When true and the node is the source of a back edge, the engine
+    /// re-executes the enclosed sub-path (bounded by the edge's max_iters).
+    pub request_iteration: bool,
+}
+
+impl TaskOutcome {
+    pub fn produced(ids: impl IntoIterator<Item = u64>) -> Self {
+        TaskOutcome { produced: ids.into_iter().collect(), request_iteration: false }
+    }
+}
+
+/// Execution context handed to a task: the shared meta-model plus the
+/// process-wide session (PJRT runtime, manifest, dataset/executable caches).
+pub struct TaskCtx<'a> {
+    pub meta: &'a mut MetaModel,
+    pub session: &'a Session,
+    /// Task-instance id (CFG namespace and LOG attribution).
+    pub instance: String,
+}
+
+impl<'a> TaskCtx<'a> {
+    /// Scoped CFG lookups with declared-default fallback handled by tasks.
+    pub fn cfg_f64(&self, param: &str, default: f64) -> f64 {
+        self.meta.cfg.get_f64(&self.instance, param).unwrap_or(default)
+    }
+
+    pub fn cfg_usize(&self, param: &str, default: usize) -> usize {
+        self.meta.cfg.get_usize(&self.instance, param).unwrap_or(default)
+    }
+
+    pub fn cfg_str(&self, param: &str, default: &str) -> String {
+        self.meta
+            .cfg
+            .get_str(&self.instance, param)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn cfg_bool(&self, param: &str, default: bool) -> bool {
+        self.meta.cfg.get_bool(&self.instance, param).unwrap_or(default)
+    }
+
+    pub fn log_metric(&mut self, name: &str, value: f64) {
+        let instance = self.instance.clone();
+        self.meta.log.metric(&instance, name, value);
+    }
+
+    pub fn log_message(&mut self, text: impl Into<String>) {
+        let instance = self.instance.clone();
+        self.meta.log.message(&instance, text);
+    }
+}
+
+/// A reusable pipe task (Table I row).
+pub trait PipeTask {
+    /// Canonical task type name ("PRUNING", "HLS4ML", …).
+    fn name(&self) -> &str;
+
+    fn role(&self) -> TaskRole;
+
+    /// (inputs, outputs) multiplicity, e.g. (1, 1) or (0, 1).
+    fn multiplicity(&self) -> (usize, usize);
+
+    /// Declared parameters (Table I's parameter column).
+    fn params(&self) -> Vec<ParamSpec>;
+
+    /// Execute against the meta-model.
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome>;
+}

@@ -1,0 +1,299 @@
+//! Layer-wise IR of an HLS C++ design (the hls4ml project abstraction).
+
+use crate::error::{Error, Result};
+use crate::model::state::Precision;
+use crate::model::ModelState;
+use crate::runtime::ModelVariant;
+
+/// hls4ml IOType (io_parallel = fully unrolled, the paper's low-latency
+/// LHC-trigger configuration; io_stream = dataflow FIFOs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoType {
+    Parallel,
+    Stream,
+}
+
+impl std::fmt::Display for IoType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoType::Parallel => write!(f, "io_parallel"),
+            IoType::Stream => write!(f, "io_stream"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HlsLayerKind {
+    Dense,
+    Conv2D,
+    MaxPool2,
+    Flatten,
+    ResidualAdd,
+}
+
+/// One layer instance of the HLS design.
+#[derive(Debug, Clone)]
+pub struct HlsLayer {
+    pub name: String,
+    pub kind: HlsLayerKind,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub kernel: usize,
+    pub h: usize,
+    pub w: usize,
+    pub activation: String,
+    /// ap_fixed<W,I> datapath precision of this layer.
+    pub precision: Precision,
+    /// hls4ml reuse factor (1 = fully unrolled, the paper's setting).
+    pub reuse_factor: usize,
+    /// Total weights before pruning.
+    pub total_weights: usize,
+    /// Non-zero weights after pruning (zero weights are folded away by
+    /// HLS constant propagation in fully-unrolled designs).
+    pub nnz: usize,
+    /// Multiply-accumulates per inference (dense basis).
+    pub macs: usize,
+}
+
+impl HlsLayer {
+    pub fn is_compute(&self) -> bool {
+        matches!(self.kind, HlsLayerKind::Dense | HlsLayerKind::Conv2D)
+    }
+
+    /// Effective multiplier count: one multiplier per nonzero weight.
+    ///
+    /// Dense RF=1 fully unrolls (hls4ml io_parallel).  Conv instantiates
+    /// one MAC array for the kernel and streams it across the h*w output
+    /// positions (fpgaConvNet-style spatial reuse) — so area scales with
+    /// nnz while the spatial loop shows up in latency, matching how a
+    /// ResNet9 can be placed on a U250 at all (paper Fig 4d).
+    pub fn multipliers(&self) -> usize {
+        self.nnz
+    }
+
+    /// Spatial iterations the conv MAC array is reused for (1 for dense).
+    pub fn spatial_iters(&self) -> usize {
+        match self.kind {
+            HlsLayerKind::Conv2D => (self.h * self.w).max(1),
+            _ => 1,
+        }
+    }
+
+    /// Density (fraction of weights kept) for latency fan-in modeling.
+    pub fn density(&self) -> f64 {
+        if self.total_weights == 0 {
+            1.0
+        } else {
+            self.nnz as f64 / self.total_weights as f64
+        }
+    }
+}
+
+/// The HLS C++ model stored in the model space.
+#[derive(Debug, Clone)]
+pub struct HlsModel {
+    pub name: String,
+    pub source_model: String,
+    pub io_type: IoType,
+    pub fpga_part: String,
+    pub clock_period_ns: f64,
+    pub layers: Vec<HlsLayer>,
+}
+
+impl HlsModel {
+    /// Translate a trained DNN (manifest variant + live state) into the
+    /// HLS abstraction — the HLS4ML λ-task's core operation.
+    pub fn from_dnn(
+        variant: &ModelVariant,
+        state: &ModelState,
+        default_precision: Precision,
+        io_type: IoType,
+        fpga_part: &str,
+        clock_period_ns: f64,
+    ) -> Result<Self> {
+        let mut layers = Vec::new();
+        for l in &variant.layers {
+            let kind = match l.kind.as_str() {
+                "dense" => HlsLayerKind::Dense,
+                "conv2d" => HlsLayerKind::Conv2D,
+                "maxpool2" => HlsLayerKind::MaxPool2,
+                "flatten" => HlsLayerKind::Flatten,
+                "residual_add" => HlsLayerKind::ResidualAdd,
+                "residual_begin" => continue, // structural marker only
+                other => {
+                    return Err(Error::other(format!("unknown layer kind {other}")))
+                }
+            };
+            let (total, nnz, precision) = if l.is_weight() {
+                let mask_idx = l.mask_idx as usize;
+                let mask = &state.masks[mask_idx];
+                let total = mask.len();
+                let nnz = mask
+                    .as_f32()?
+                    .iter()
+                    .filter(|v| **v != 0.0)
+                    .count();
+                // per-layer precision from the DNN state if the
+                // quantization O-task already set one, else the default
+                let p = state.precisions[mask_idx];
+                let p = if p.enabled() { p } else { default_precision };
+                (total, nnz, p)
+            } else {
+                (0, 0, default_precision)
+            };
+            layers.push(HlsLayer {
+                name: l.name.clone(),
+                kind,
+                n_in: l.in_dim,
+                n_out: l.out_dim,
+                kernel: l.kernel,
+                h: l.h,
+                w: l.w,
+                activation: l.activation.clone(),
+                precision,
+                reuse_factor: 1,
+                total_weights: total,
+                nnz,
+                macs: l.macs,
+            });
+        }
+        Ok(HlsModel {
+            name: format!("{}_hls", variant.tag),
+            source_model: variant.tag.clone(),
+            io_type,
+            fpga_part: fpga_part.to_string(),
+            clock_period_ns,
+            layers,
+        })
+    }
+
+    /// Build an HLS model from a manifest variant and per-weight-layer
+    /// nnz counts (mask order) — used by benches to synthesize search
+    /// candidates without materializing a full ModelState.
+    pub fn from_nnz(
+        variant: &ModelVariant,
+        nnz_by_layer: &[usize],
+        precision: Precision,
+        fpga_part: &str,
+        clock_period_ns: f64,
+    ) -> Result<Self> {
+        let mut layers = Vec::new();
+        for l in &variant.layers {
+            let kind = match l.kind.as_str() {
+                "dense" => HlsLayerKind::Dense,
+                "conv2d" => HlsLayerKind::Conv2D,
+                "maxpool2" => HlsLayerKind::MaxPool2,
+                "flatten" => HlsLayerKind::Flatten,
+                "residual_add" => HlsLayerKind::ResidualAdd,
+                "residual_begin" => continue,
+                other => {
+                    return Err(Error::other(format!("unknown layer kind {other}")))
+                }
+            };
+            let (total, nnz) = if l.is_weight() {
+                let idx = l.mask_idx as usize;
+                let total: usize = variant.mask_shapes[idx].1.iter().product();
+                let nnz = nnz_by_layer.get(idx).copied().unwrap_or(total).min(total);
+                (total, nnz)
+            } else {
+                (0, 0)
+            };
+            layers.push(HlsLayer {
+                name: l.name.clone(),
+                kind,
+                n_in: l.in_dim,
+                n_out: l.out_dim,
+                kernel: l.kernel,
+                h: l.h,
+                w: l.w,
+                activation: l.activation.clone(),
+                precision,
+                reuse_factor: 1,
+                total_weights: total,
+                nnz,
+                macs: l.macs,
+            });
+        }
+        Ok(HlsModel {
+            name: format!("{}_hls", variant.tag),
+            source_model: variant.tag.clone(),
+            io_type: IoType::Parallel,
+            fpga_part: fpga_part.to_string(),
+            clock_period_ns,
+            layers,
+        })
+    }
+
+    pub fn compute_layers(&self) -> impl Iterator<Item = &HlsLayer> {
+        self.layers.iter().filter(|l| l.is_compute())
+    }
+
+    pub fn total_multipliers(&self) -> usize {
+        self.compute_layers().map(|l| l.multipliers()).sum()
+    }
+
+    /// Index of compute layer `i` within `layers` (for transforms).
+    pub fn compute_layer_indices(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_compute())
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn toy_model() -> HlsModel {
+        HlsModel {
+            name: "toy_hls".into(),
+            source_model: "toy".into(),
+            io_type: IoType::Parallel,
+            fpga_part: "xcvu9p".into(),
+            clock_period_ns: 5.0,
+            layers: vec![
+                HlsLayer {
+                    name: "fc1".into(),
+                    kind: HlsLayerKind::Dense,
+                    n_in: 16,
+                    n_out: 64,
+                    kernel: 0,
+                    h: 0,
+                    w: 0,
+                    activation: "relu".into(),
+                    precision: Precision::new(18, 8),
+                    reuse_factor: 1,
+                    total_weights: 1024,
+                    nnz: 1024,
+                    macs: 1024,
+                },
+                HlsLayer {
+                    name: "out".into(),
+                    kind: HlsLayerKind::Dense,
+                    n_in: 64,
+                    n_out: 5,
+                    kernel: 0,
+                    h: 0,
+                    w: 0,
+                    activation: "linear".into(),
+                    precision: Precision::new(18, 8),
+                    reuse_factor: 1,
+                    total_weights: 320,
+                    nnz: 160,
+                    macs: 320,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn multiplier_accounting() {
+        let m = toy_model();
+        assert_eq!(m.total_multipliers(), 1024 + 160);
+        assert_eq!(m.layers[1].density(), 0.5);
+        assert_eq!(m.compute_layer_indices(), vec![0, 1]);
+    }
+}

@@ -1,0 +1,20 @@
+//! HLS C++ model substrate (the HLS4ML output abstraction).
+//!
+//! The paper's QUANTIZATION O-task works "at the HLS C++ level, providing
+//! more direct control over hardware optimizations", using Artisan-style
+//! source-to-source transformations.  This module provides that substrate:
+//!
+//! * [ir] — a typed layer-wise IR of the generated HLS C++ design
+//!   (precision per layer as `ap_fixed<W,I>`, reuse factor, nnz after
+//!   zero-weight folding);
+//! * [transform] — a pass manager with Artisan-like rewrite passes
+//!   (set-precision, fold-zero-weights, reuse-factor);
+//! * [codegen] — emits actual hls4ml-style C++ so every HLS artifact in
+//!   the model space carries inspectable source as a supporting file.
+
+pub mod codegen;
+pub mod ir;
+pub mod transform;
+
+pub use ir::{HlsLayer, HlsLayerKind, HlsModel, IoType};
+pub use transform::{FoldZeroWeights, HlsTransform, PassManager, SetPrecision, SetReuseFactor};

@@ -1,0 +1,165 @@
+//! Artisan-style source-to-source transformation passes over the HLS IR.
+//!
+//! The paper implements QUANTIZATION "using C++ source-to-source
+//! transformations via the Artisan framework" — a meta-programming engine
+//! that pattern-matches code and rewrites it.  Our equivalent operates on
+//! the typed IR (the codegen emits the rewritten C++ afterwards): each
+//! pass selects layers by predicate and rewrites their attributes.
+
+use crate::error::Result;
+use crate::hls::ir::HlsModel;
+use crate::model::state::Precision;
+
+/// A rewrite pass over the HLS model.
+pub trait HlsTransform {
+    fn name(&self) -> &str;
+    fn apply(&self, model: &mut HlsModel) -> Result<usize>;
+}
+
+/// Ordered pass pipeline (mirrors Artisan's strategy scripts).
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<Box<dyn HlsTransform>>,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(mut self, pass: impl HlsTransform + 'static) -> Self {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    /// Run all passes; returns (pass name, rewrite count) per pass.
+    pub fn run(&self, model: &mut HlsModel) -> Result<Vec<(String, usize)>> {
+        let mut log = Vec::new();
+        for pass in &self.passes {
+            let n = pass.apply(model)?;
+            log.push((pass.name().to_string(), n));
+        }
+        Ok(log)
+    }
+}
+
+/// Rewrite the `ap_fixed<W,I>` typedef of selected layers.
+pub struct SetPrecision {
+    /// Layer-name predicate; `None` = all compute layers.
+    pub layer: Option<String>,
+    pub precision: Precision,
+}
+
+impl SetPrecision {
+    pub fn all(precision: Precision) -> Self {
+        SetPrecision { layer: None, precision }
+    }
+
+    pub fn layer(name: impl Into<String>, precision: Precision) -> Self {
+        SetPrecision { layer: Some(name.into()), precision }
+    }
+}
+
+impl HlsTransform for SetPrecision {
+    fn name(&self) -> &str {
+        "set-precision"
+    }
+
+    fn apply(&self, model: &mut HlsModel) -> Result<usize> {
+        let mut n = 0;
+        for l in model.layers.iter_mut().filter(|l| l.is_compute()) {
+            if self.layer.as_deref().map_or(true, |want| want == l.name) {
+                l.precision = self.precision;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+}
+
+/// Re-derive nnz from a sparsity observation (constant-fold zero weights,
+/// what Vivado HLS does to literal zeros in fully-unrolled MAC arrays).
+pub struct FoldZeroWeights {
+    /// (layer name, nnz) observations from the DNN state.
+    pub nnz_by_layer: Vec<(String, usize)>,
+}
+
+impl HlsTransform for FoldZeroWeights {
+    fn name(&self) -> &str {
+        "fold-zero-weights"
+    }
+
+    fn apply(&self, model: &mut HlsModel) -> Result<usize> {
+        let mut n = 0;
+        for (name, nnz) in &self.nnz_by_layer {
+            if let Some(l) = model.layers.iter_mut().find(|l| &l.name == name) {
+                l.nnz = (*nnz).min(l.total_weights);
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+}
+
+/// Set the reuse factor (time-multiplexing) of all compute layers.
+pub struct SetReuseFactor(pub usize);
+
+impl HlsTransform for SetReuseFactor {
+    fn name(&self) -> &str {
+        "set-reuse-factor"
+    }
+
+    fn apply(&self, model: &mut HlsModel) -> Result<usize> {
+        let mut n = 0;
+        for l in model.layers.iter_mut().filter(|l| l.is_compute()) {
+            l.reuse_factor = self.0.max(1);
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::ir::tests::toy_model;
+
+    #[test]
+    fn set_precision_all_and_single() {
+        let mut m = toy_model();
+        let n = SetPrecision::all(Precision::new(8, 3)).apply(&mut m).unwrap();
+        assert_eq!(n, 2);
+        assert!(m.layers.iter().all(|l| l.precision == Precision::new(8, 3)));
+
+        let n = SetPrecision::layer("fc1", Precision::new(6, 2))
+            .apply(&mut m)
+            .unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(m.layers[0].precision, Precision::new(6, 2));
+        assert_eq!(m.layers[1].precision, Precision::new(8, 3));
+    }
+
+    #[test]
+    fn fold_zero_weights_clamps() {
+        let mut m = toy_model();
+        let pass = FoldZeroWeights {
+            nnz_by_layer: vec![("fc1".into(), 100), ("out".into(), 9999)],
+        };
+        assert_eq!(pass.apply(&mut m).unwrap(), 2);
+        assert_eq!(m.layers[0].nnz, 100);
+        assert_eq!(m.layers[1].nnz, 320); // clamped to total
+    }
+
+    #[test]
+    fn pass_manager_runs_in_order() {
+        let mut m = toy_model();
+        let log = PassManager::new()
+            .add(SetPrecision::all(Precision::new(10, 4)))
+            .add(SetReuseFactor(4))
+            .run(&mut m)
+            .unwrap();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0], ("set-precision".to_string(), 2));
+        assert!(m.layers.iter().all(|l| l.reuse_factor == 4));
+    }
+}

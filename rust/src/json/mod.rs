@@ -1,0 +1,17 @@
+//! Minimal JSON support (parser + writer).
+//!
+//! The offline crate set has no serde facade, so MetaML carries its own
+//! small JSON module: enough for the AOT `manifest.json`, flow-spec config
+//! files and report emission.  Strict on structure, permissive on numbers
+//! (everything is f64, like JavaScript).
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::parse;
+pub use value::Value;
+pub use write::to_string_pretty;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,61 @@
+use super::*;
+
+#[test]
+fn parses_scalars() {
+    assert_eq!(parse("true").unwrap(), Value::Bool(true));
+    assert_eq!(parse("false").unwrap(), Value::Bool(false));
+    assert_eq!(parse("null").unwrap(), Value::Null);
+    assert_eq!(parse("42").unwrap(), Value::Number(42.0));
+    assert_eq!(parse("-3.5e2").unwrap(), Value::Number(-350.0));
+    assert_eq!(parse("\"hi\"").unwrap(), Value::String("hi".into()));
+}
+
+#[test]
+fn parses_nested() {
+    let v = parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
+    let a = v.get("a").unwrap().as_array().unwrap();
+    assert_eq!(a.len(), 3);
+    assert_eq!(a[2].get("b").unwrap().as_str(), Some("c"));
+    assert_eq!(v.get("d"), Some(&Value::Null));
+}
+
+#[test]
+fn parses_escapes_and_unicode() {
+    let v = parse(r#""a\n\t\"\\ A é""#).unwrap();
+    assert_eq!(v.as_str(), Some("a\n\t\"\\ A é"));
+}
+
+#[test]
+fn rejects_garbage() {
+    assert!(parse("{").is_err());
+    assert!(parse("[1,]").is_err());
+    assert!(parse("tru").is_err());
+    assert!(parse("1 2").is_err());
+    assert!(parse("\"unterminated").is_err());
+}
+
+#[test]
+fn roundtrips() {
+    let src = r#"{"models": [{"tag": "jet", "shape": [16, 64], "scale": 0.75}], "version": 1}"#;
+    let v = parse(src).unwrap();
+    let s = to_string_pretty(&v);
+    assert_eq!(parse(&s).unwrap(), v);
+}
+
+#[test]
+fn typed_accessors() {
+    let v = parse(r#"{"n": 3, "s": "x", "shape": [2, 4]}"#).unwrap();
+    assert_eq!(v.req_usize("n").unwrap(), 3);
+    assert_eq!(v.req_str("s").unwrap(), "x");
+    assert_eq!(v.req_shape("shape").unwrap(), vec![2, 4]);
+    assert!(v.req("missing").is_err());
+    assert!(v.req_usize("s").is_err());
+}
+
+#[test]
+fn builder_api() {
+    let mut v = Value::object();
+    v.set("x", 1.5).set("y", "z").set("arr", vec![1usize, 2]);
+    let s = to_string_pretty(&v);
+    assert_eq!(parse(&s).unwrap(), v);
+}

@@ -1,0 +1,53 @@
+//! # MetaML
+//!
+//! Reproduction of *MetaML: Automating Customizable Cross-Stage Design-Flow
+//! for Deep Learning Acceleration* (Que et al., FPL 2023) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! MetaML builds **design flows** — cyclic directed graphs of reusable
+//! [pipe tasks](flow::PipeTask) — that co-optimize a DNN and its hardware
+//! mapping across abstraction levels:
+//!
+//! * **O-tasks** optimize a model: [tasks::PruningTask] (auto binary-search
+//!   magnitude pruning), [tasks::ScalingTask] (layer-width search),
+//!   [tasks::QuantizationTask] (HLS-level mixed-precision walk);
+//! * **λ-tasks** transform between abstractions: [tasks::ModelGenTask]
+//!   (train a DNN via the PJRT runtime), [tasks::Hls4mlTask] (DNN → HLS
+//!   C++ model), [tasks::VivadoHlsTask] (HLS → RTL resource/latency report).
+//!
+//! Tasks communicate through the [metamodel::MetaModel]: a CFG key-value
+//! store, a LOG execution trace, and a model space holding DNN / HLS / RTL
+//! abstractions.
+//!
+//! The compute hot path (training / evaluating candidate models) executes
+//! AOT-compiled XLA artifacts produced once by `python/compile/aot.py`
+//! from JAX models whose inner loops are Pallas kernels — Python never
+//! runs at flow-execution time.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod config;
+pub mod data;
+pub mod error;
+pub mod flow;
+pub mod hls;
+pub mod json;
+pub mod metamodel;
+pub mod model;
+pub mod prune;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod scale;
+pub mod synth;
+pub mod tasks;
+pub mod testutil;
+pub mod train;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,215 @@
+//! MetaML CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands map onto the paper's workflows:
+//!   `list-tasks`                       Table I task registry
+//!   `train --model jet_dnn`            KERAS-MODEL-GEN equivalent
+//!   `run-flow --flow <spec.json>`      execute a design flow from config
+//!   `synth --model jet_dnn`            HLS4ML + VIVADO-HLS report only
+//!   `smoke`                            runtime round-trip check
+
+use metaml::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "smoke" => cmd_smoke(),
+        "train" => cmd_train(&args[1..]),
+        "list-tasks" => cmd_list_tasks(),
+        "run-flow" => cmd_run_flow(&args[1..]),
+        "synth" => cmd_synth(&args[1..]),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "metaml {} — cross-stage design-flow automation (FPL'23 reproduction)
+
+USAGE: metaml <COMMAND> [OPTIONS]
+
+COMMANDS:
+  smoke                         verify the PJRT runtime + artifacts
+  train       --model <name> [--scale S] [--epochs N]   train via AOT step
+  list-tasks                    print the pipe-task registry (Table I)
+  run-flow    --flow <spec.json> [--model <name>]       execute a design flow
+  synth       --model <name> [--scale S]                HLS+RTL report
+  help                          this message
+
+Artifacts are read from ./artifacts (build with `make artifacts`).",
+        metaml::version()
+    );
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn artifacts_dir() -> String {
+    std::env::var("METAML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn cmd_smoke() -> Result<()> {
+    use metaml::data::{Dataset, DatasetSpec};
+    use metaml::model::ModelState;
+    use metaml::runtime::{Manifest, ModelExecutable, Runtime};
+    use metaml::train::{TrainConfig, Trainer};
+
+    let manifest = Manifest::load(artifacts_dir())?;
+    println!("manifest: {} variants", manifest.variants.len());
+    let runtime = Runtime::cpu()?;
+    println!("platform: {}", runtime.platform());
+
+    let variant = manifest.variant("jet_dnn", 1.0)?;
+    let exec = ModelExecutable::load(&runtime, &manifest, &variant.tag)?;
+    let spec = DatasetSpec::for_model(&variant.model, &variant.input_shape, variant.n_classes);
+    let data = Dataset::generate(&spec);
+    let mut state = ModelState::init(variant, 7);
+    let trainer = Trainer::new(&runtime, &exec, &data);
+    let before = trainer.evaluate(&state)?;
+    println!("before: loss {:.4} acc {:.4}", before.loss, before.accuracy);
+    trainer.fit(&mut state, &TrainConfig { epochs: 2, verbose: true, ..Default::default() })?;
+    let after = trainer.evaluate(&state)?;
+    println!("after : loss {:.4} acc {:.4}", after.loss, after.accuracy);
+    let stats = runtime.stats();
+    println!(
+        "runtime: {} compiles ({:.2}s), {} executions ({:.3}s)",
+        stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+    if after.accuracy <= before.accuracy {
+        return Err(metaml::Error::other("smoke: training did not improve accuracy"));
+    }
+    println!("smoke OK");
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    use metaml::data::{Dataset, DatasetSpec};
+    use metaml::model::ModelState;
+    use metaml::runtime::{Manifest, ModelExecutable, Runtime};
+    use metaml::train::{TrainConfig, Trainer};
+
+    let model = opt(args, "--model").unwrap_or_else(|| "jet_dnn".into());
+    let scale: f64 = opt(args, "--scale").map(|s| s.parse().unwrap()).unwrap_or(1.0);
+    let epochs: usize = opt(args, "--epochs").map(|s| s.parse().unwrap()).unwrap_or(5);
+
+    let manifest = Manifest::load(artifacts_dir())?;
+    let runtime = Runtime::cpu()?;
+    let variant = manifest.variant(&model, scale)?;
+    let exec = ModelExecutable::load(&runtime, &manifest, &variant.tag)?;
+    let spec = DatasetSpec::for_model(&variant.model, &variant.input_shape, variant.n_classes);
+    let data = Dataset::generate(&spec);
+    let mut state = ModelState::init(variant, 7);
+    let trainer = Trainer::new(&runtime, &exec, &data);
+    println!("training {} for {epochs} epochs on {}", variant.tag, spec.name);
+    trainer.fit(
+        &mut state,
+        &{ let mut c = TrainConfig::for_model(&variant.model); c.epochs = epochs; c.verbose = true; c },
+    )?;
+    let eval = trainer.evaluate(&state)?;
+    println!("test: loss {:.4} acc {:.4} (n={})", eval.loss, eval.accuracy, eval.n);
+    Ok(())
+}
+
+fn cmd_list_tasks() -> Result<()> {
+    let registry = metaml::flow::TaskRegistry::builtin();
+    println!("Implemented pipe tasks (paper Table I):\n");
+    print!("{}", registry.table());
+    println!("\nBuilt-in flows: {}", metaml::config::builtin_flow_names().join(", "));
+    Ok(())
+}
+
+fn cmd_run_flow(args: &[String]) -> Result<()> {
+    use metaml::config::{builtin_flow, FlowSpec};
+    use metaml::flow::{Engine, Session, TaskRegistry};
+    use metaml::metamodel::MetaModel;
+
+    let flow_arg = opt(args, "--flow").unwrap_or_else(|| "pruning".into());
+    let spec = if flow_arg.ends_with(".json") {
+        FlowSpec::load(&flow_arg)?
+    } else {
+        builtin_flow(&flow_arg)?
+    };
+
+    let session = Session::open(&artifacts_dir())?;
+    let registry = TaskRegistry::builtin();
+    let mut meta = MetaModel::new();
+    meta.log.echo = true;
+    spec.apply_cfg(&mut meta.cfg);
+    if let Some(model) = opt(args, "--model") {
+        meta.cfg.set("model", model);
+    }
+    // pass-through -c key=value overrides
+    for i in 0..args.len() {
+        if args[i] == "-c" {
+            if let Some(kv) = args.get(i + 1) {
+                if let Some((k, v)) = kv.split_once('=') {
+                    if let Ok(n) = v.parse::<f64>() {
+                        meta.cfg.set(k, n);
+                    } else {
+                        meta.cfg.set(k, v);
+                    }
+                }
+            }
+        }
+    }
+
+    println!("running flow '{}'", spec.graph.name);
+    let engine = Engine::new(&session, &registry);
+    engine.run(&spec.graph, &mut meta)?;
+
+    println!("\nmodel space ({} artifacts):", meta.space.len());
+    for m in meta.space.iter() {
+        let metrics: Vec<String> = m
+            .metrics
+            .iter()
+            .map(|(k, v)| format!("{k}={v:.4}"))
+            .collect();
+        println!(
+            "  #{} [{}] {} (by {}) {}",
+            m.id,
+            m.abstraction(),
+            m.name,
+            m.producer,
+            metrics.join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_synth(args: &[String]) -> Result<()> {
+    use metaml::flow::{Engine, Session, TaskRegistry};
+    use metaml::metamodel::MetaModel;
+
+    let model = opt(args, "--model").unwrap_or_else(|| "jet_dnn".into());
+    let scale: f64 = opt(args, "--scale").map(|s| s.parse().unwrap()).unwrap_or(1.0);
+    let device = opt(args, "--device").unwrap_or_else(|| "vu9p".into());
+
+    let session = Session::open(&artifacts_dir())?;
+    let registry = TaskRegistry::builtin();
+    let mut meta = MetaModel::new();
+    meta.cfg.set("model", model);
+    meta.cfg.set("scale", scale);
+    meta.cfg.set("FPGA_part_number", device);
+    let spec = metaml::config::builtin_flow("baseline")?;
+    Engine::new(&session, &registry).run(&spec.graph, &mut meta)?;
+    let rtl = meta
+        .space
+        .latest(metaml::metamodel::Abstraction::Rtl)
+        .ok_or_else(|| metaml::Error::other("no RTL artifact produced"))?;
+    println!("{}", metaml::synth::report::render(rtl.rtl()?));
+    Ok(())
+}

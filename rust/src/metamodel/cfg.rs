@@ -1,0 +1,91 @@
+//! CFG section: key-value store for pipe-task parameters.
+//!
+//! Keys are namespaced `"<task-instance>.<param>"`; plain keys act as flow-
+//! wide defaults.  Lookup order: instance-scoped, then global, then the
+//! task's declared default.
+
+use std::collections::BTreeMap;
+
+use crate::json::Value;
+
+#[derive(Debug, Default, Clone)]
+pub struct Cfg {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Cfg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<Value>) {
+        self.entries.insert(key.into(), value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Scoped lookup: `"{instance}.{param}"` first, then `"{param}"`.
+    pub fn lookup(&self, instance: &str, param: &str) -> Option<&Value> {
+        self.entries
+            .get(&format!("{instance}.{param}"))
+            .or_else(|| self.entries.get(param))
+    }
+
+    pub fn get_f64(&self, instance: &str, param: &str) -> Option<f64> {
+        self.lookup(instance, param).and_then(Value::as_f64)
+    }
+
+    pub fn get_usize(&self, instance: &str, param: &str) -> Option<usize> {
+        self.lookup(instance, param).and_then(Value::as_usize)
+    }
+
+    pub fn get_str(&self, instance: &str, param: &str) -> Option<&str> {
+        self.lookup(instance, param).and_then(Value::as_str)
+    }
+
+    pub fn get_bool(&self, instance: &str, param: &str) -> Option<bool> {
+        self.lookup(instance, param).and_then(Value::as_bool)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Value)> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_lookup_precedence() {
+        let mut cfg = Cfg::new();
+        cfg.set("train_epochs", 5usize);
+        cfg.set("pruning.train_epochs", 3usize);
+        assert_eq!(cfg.get_usize("pruning", "train_epochs"), Some(3));
+        assert_eq!(cfg.get_usize("scaling", "train_epochs"), Some(5));
+        assert_eq!(cfg.get_usize("scaling", "missing"), None);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let mut cfg = Cfg::new();
+        cfg.set("alpha", 0.02);
+        cfg.set("name", "jet_dnn");
+        cfg.set("auto", true);
+        assert_eq!(cfg.get_f64("t", "alpha"), Some(0.02));
+        assert_eq!(cfg.get_str("t", "name"), Some("jet_dnn"));
+        assert_eq!(cfg.get_bool("t", "auto"), Some(true));
+        // wrong type => None
+        assert_eq!(cfg.get_usize("t", "name"), None);
+    }
+}

@@ -1,0 +1,156 @@
+//! LOG section: the runtime execution trace of a design flow.
+
+use std::time::Instant;
+
+/// What happened at one trace point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LogEvent {
+    FlowStarted { flow: String },
+    FlowFinished { flow: String },
+    TaskStarted { task: String },
+    TaskFinished { task: String, secs: f64 },
+    /// A named scalar a task measured (accuracy, pruning rate, DSP count…).
+    Metric { task: String, name: String, value: f64 },
+    /// Free-form progress message.
+    Message { task: String, text: String },
+    ModelStored { task: String, model_id: u64, abstraction: String },
+    IterationAdvanced { task: String, iteration: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct LogEntry {
+    pub seq: usize,
+    pub at_secs: f64,
+    pub event: LogEvent,
+}
+
+/// Append-only execution trace.
+#[derive(Debug)]
+pub struct ExecLog {
+    started: Instant,
+    entries: Vec<LogEntry>,
+    /// Mirror entries to stdout as they arrive.
+    pub echo: bool,
+}
+
+impl Default for ExecLog {
+    fn default() -> Self {
+        ExecLog { started: Instant::now(), entries: Vec::new(), echo: false }
+    }
+}
+
+impl ExecLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, event: LogEvent) {
+        let entry = LogEntry {
+            seq: self.entries.len(),
+            at_secs: self.started.elapsed().as_secs_f64(),
+            event,
+        };
+        if self.echo {
+            println!("  [{:>8.3}s] {}", entry.at_secs, render(&entry.event));
+        }
+        self.entries.push(entry);
+    }
+
+    pub fn metric(&mut self, task: &str, name: &str, value: f64) {
+        self.push(LogEvent::Metric {
+            task: task.to_string(),
+            name: name.to_string(),
+            value,
+        });
+    }
+
+    pub fn message(&mut self, task: &str, text: impl Into<String>) {
+        self.push(LogEvent::Message { task: task.to_string(), text: text.into() });
+    }
+
+    pub fn entries(&self) -> &[LogEntry] {
+        &self.entries
+    }
+
+    /// All metric values named `name` recorded by `task`, in order.
+    pub fn metric_series(&self, task: &str, name: &str) -> Vec<f64> {
+        self.entries
+            .iter()
+            .filter_map(|e| match &e.event {
+                LogEvent::Metric { task: t, name: n, value }
+                    if t == task && n == name =>
+                {
+                    Some(*value)
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Render the full trace as text (debugging aid per the paper).
+    pub fn render_trace(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            out.push_str(&format!("[{:>9.3}s] {}\n", e.at_secs, render(&e.event)));
+        }
+        out
+    }
+}
+
+fn render(event: &LogEvent) -> String {
+    match event {
+        LogEvent::FlowStarted { flow } => format!("flow {flow}: started"),
+        LogEvent::FlowFinished { flow } => format!("flow {flow}: finished"),
+        LogEvent::TaskStarted { task } => format!("{task}: started"),
+        LogEvent::TaskFinished { task, secs } => {
+            format!("{task}: finished in {secs:.3}s")
+        }
+        LogEvent::Metric { task, name, value } => {
+            format!("{task}: {name} = {value:.6}")
+        }
+        LogEvent::Message { task, text } => format!("{task}: {text}"),
+        LogEvent::ModelStored { task, model_id, abstraction } => {
+            format!("{task}: stored model #{model_id} [{abstraction}]")
+        }
+        LogEvent::IterationAdvanced { task, iteration } => {
+            format!("{task}: iteration {iteration}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_with_seq() {
+        let mut log = ExecLog::new();
+        log.push(LogEvent::TaskStarted { task: "a".into() });
+        log.metric("a", "acc", 0.75);
+        log.push(LogEvent::TaskFinished { task: "a".into(), secs: 0.1 });
+        assert_eq!(log.entries().len(), 3);
+        assert_eq!(log.entries()[1].seq, 1);
+    }
+
+    #[test]
+    fn metric_series_filters() {
+        let mut log = ExecLog::new();
+        log.metric("prune", "rate", 0.5);
+        log.metric("prune", "acc", 0.8);
+        log.metric("prune", "rate", 0.75);
+        log.metric("other", "rate", 0.1);
+        assert_eq!(log.metric_series("prune", "rate"), vec![0.5, 0.75]);
+        assert!(log.metric_series("prune", "missing").is_empty());
+    }
+
+    #[test]
+    fn trace_renders_every_entry() {
+        let mut log = ExecLog::new();
+        log.message("t", "hello");
+        log.metric("t", "x", 1.0);
+        let trace = log.render_trace();
+        assert!(trace.contains("hello"));
+        assert!(trace.contains("x = 1"));
+        assert_eq!(trace.lines().count(), 2);
+    }
+}

@@ -1,0 +1,32 @@
+//! The meta-model: shared state of a design flow (paper §III, Fig 1).
+//!
+//! Three sections, exactly as the paper describes:
+//! * **CFG** — a key-value store holding the parameters of every pipe task
+//!   in the flow ([cfg::Cfg]);
+//! * **LOG** — the runtime execution trace, for debugging and for the
+//!   experiment harness ([log::ExecLog]);
+//! * **model space** — the models generated during flow execution, across
+//!   abstraction levels (DNN, HLS C++, RTL), each with supporting files,
+//!   tool reports and computed metrics ([space::ModelSpace]).
+
+pub mod cfg;
+pub mod log;
+pub mod space;
+
+pub use cfg::Cfg;
+pub use log::{ExecLog, LogEvent};
+pub use space::{Abstraction, ModelArtifact, ModelId, ModelPayload, ModelSpace};
+
+/// The shared space pipe tasks read and write.
+#[derive(Debug, Default)]
+pub struct MetaModel {
+    pub cfg: Cfg,
+    pub log: ExecLog,
+    pub space: ModelSpace,
+}
+
+impl MetaModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}

@@ -1,0 +1,257 @@
+//! Model space: generated models across abstraction levels.
+//!
+//! Fig 1 of the paper shows the model space holding six models spanning
+//! DNN, HLS C++ and RTL abstractions, each with supporting files, tool
+//! reports and computed metrics.  Artifacts are immutable once stored;
+//! O-tasks store *new* models (with `parent` lineage) rather than mutating.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::hls::HlsModel;
+use crate::model::ModelState;
+use crate::synth::SynthReport;
+
+pub type ModelId = u64;
+
+/// Abstraction level of a stored model (pipeline stage it belongs to).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Abstraction {
+    Dnn,
+    HlsCpp,
+    Rtl,
+}
+
+impl std::fmt::Display for Abstraction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Abstraction::Dnn => write!(f, "DNN"),
+            Abstraction::HlsCpp => write!(f, "HLS-C++"),
+            Abstraction::Rtl => write!(f, "RTL"),
+        }
+    }
+}
+
+/// The model payload at each abstraction level.
+#[derive(Debug, Clone)]
+pub enum ModelPayload {
+    /// Trained DNN: variant tag + live state (params/masks/precisions).
+    Dnn(ModelState),
+    /// HLS C++ model: typed layer IR (+ generated source, see supporting).
+    Hls(HlsModel),
+    /// RTL-stage result: the synthesis report stands in for the netlist.
+    Rtl(SynthReport),
+}
+
+impl ModelPayload {
+    pub fn abstraction(&self) -> Abstraction {
+        match self {
+            ModelPayload::Dnn(_) => Abstraction::Dnn,
+            ModelPayload::Hls(_) => Abstraction::HlsCpp,
+            ModelPayload::Rtl(_) => Abstraction::Rtl,
+        }
+    }
+}
+
+/// One stored model: payload + metrics + supporting files + lineage.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub id: ModelId,
+    pub name: String,
+    pub producer: String,
+    pub parent: Option<ModelId>,
+    pub payload: ModelPayload,
+    /// Computed metrics (accuracy, pruning_rate, dsp, lut, latency_ns, …).
+    pub metrics: BTreeMap<String, f64>,
+    /// Supporting files: (file name, content) — e.g. generated HLS C++.
+    pub supporting: Vec<(String, String)>,
+}
+
+impl ModelArtifact {
+    pub fn abstraction(&self) -> Abstraction {
+        self.payload.abstraction()
+    }
+
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.get(name).copied()
+    }
+
+    pub fn dnn(&self) -> Result<&ModelState> {
+        match &self.payload {
+            ModelPayload::Dnn(s) => Ok(s),
+            _ => Err(Error::ModelSpace(format!(
+                "model #{} is {} not DNN",
+                self.id,
+                self.abstraction()
+            ))),
+        }
+    }
+
+    pub fn hls(&self) -> Result<&HlsModel> {
+        match &self.payload {
+            ModelPayload::Hls(m) => Ok(m),
+            _ => Err(Error::ModelSpace(format!(
+                "model #{} is {} not HLS-C++",
+                self.id,
+                self.abstraction()
+            ))),
+        }
+    }
+
+    pub fn rtl(&self) -> Result<&SynthReport> {
+        match &self.payload {
+            ModelPayload::Rtl(r) => Ok(r),
+            _ => Err(Error::ModelSpace(format!(
+                "model #{} is {} not RTL",
+                self.id,
+                self.abstraction()
+            ))),
+        }
+    }
+}
+
+/// Append-only store of model artifacts.
+#[derive(Debug, Default)]
+pub struct ModelSpace {
+    items: Vec<ModelArtifact>,
+}
+
+impl ModelSpace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store a model, returning its id.
+    pub fn store(
+        &mut self,
+        name: impl Into<String>,
+        producer: impl Into<String>,
+        parent: Option<ModelId>,
+        payload: ModelPayload,
+    ) -> ModelId {
+        let id = self.items.len() as ModelId;
+        self.items.push(ModelArtifact {
+            id,
+            name: name.into(),
+            producer: producer.into(),
+            parent,
+            payload,
+            metrics: BTreeMap::new(),
+            supporting: Vec::new(),
+        });
+        id
+    }
+
+    pub fn get(&self, id: ModelId) -> Result<&ModelArtifact> {
+        self.items
+            .get(id as usize)
+            .ok_or_else(|| Error::ModelSpace(format!("no model #{id}")))
+    }
+
+    pub fn get_mut(&mut self, id: ModelId) -> Result<&mut ModelArtifact> {
+        self.items
+            .get_mut(id as usize)
+            .ok_or_else(|| Error::ModelSpace(format!("no model #{id}")))
+    }
+
+    pub fn set_metric(&mut self, id: ModelId, name: &str, value: f64) -> Result<()> {
+        self.get_mut(id)?.metrics.insert(name.to_string(), value);
+        Ok(())
+    }
+
+    pub fn add_supporting(
+        &mut self,
+        id: ModelId,
+        file: impl Into<String>,
+        content: impl Into<String>,
+    ) -> Result<()> {
+        self.get_mut(id)?.supporting.push((file.into(), content.into()));
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ModelArtifact> {
+        self.items.iter()
+    }
+
+    /// Most recently stored model at an abstraction level.
+    pub fn latest(&self, abstraction: Abstraction) -> Option<&ModelArtifact> {
+        self.items.iter().rev().find(|m| m.abstraction() == abstraction)
+    }
+
+    /// Ancestry chain of a model, oldest first (lineage for reports).
+    pub fn lineage(&self, id: ModelId) -> Result<Vec<ModelId>> {
+        let mut chain = vec![id];
+        let mut cur = id;
+        while let Some(parent) = self.get(cur)?.parent {
+            if chain.contains(&parent) {
+                return Err(Error::ModelSpace("lineage cycle".into()));
+            }
+            chain.push(parent);
+            cur = parent;
+        }
+        chain.reverse();
+        Ok(chain)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::state::Precision;
+
+    fn dnn_payload() -> ModelPayload {
+        ModelPayload::Dnn(ModelState {
+            tag: "t".into(),
+            params: vec![],
+            masks: vec![],
+            precisions: vec![Precision::DISABLED],
+            weight_param_idx: vec![],
+        })
+    }
+
+    #[test]
+    fn store_get_metrics() {
+        let mut sp = ModelSpace::new();
+        let id = sp.store("m0", "model-gen", None, dnn_payload());
+        sp.set_metric(id, "accuracy", 0.76).unwrap();
+        assert_eq!(sp.get(id).unwrap().metric("accuracy"), Some(0.76));
+        assert_eq!(sp.get(id).unwrap().abstraction(), Abstraction::Dnn);
+        assert!(sp.get(99).is_err());
+    }
+
+    #[test]
+    fn latest_by_abstraction() {
+        let mut sp = ModelSpace::new();
+        let a = sp.store("m0", "gen", None, dnn_payload());
+        let b = sp.store("m1", "prune", Some(a), dnn_payload());
+        assert_eq!(sp.latest(Abstraction::Dnn).unwrap().id, b);
+        assert!(sp.latest(Abstraction::Rtl).is_none());
+    }
+
+    #[test]
+    fn lineage_chain() {
+        let mut sp = ModelSpace::new();
+        let a = sp.store("m0", "gen", None, dnn_payload());
+        let b = sp.store("m1", "prune", Some(a), dnn_payload());
+        let c = sp.store("m2", "quant", Some(b), dnn_payload());
+        assert_eq!(sp.lineage(c).unwrap(), vec![a, b, c]);
+        assert_eq!(sp.lineage(a).unwrap(), vec![a]);
+    }
+
+    #[test]
+    fn typed_payload_accessors() {
+        let mut sp = ModelSpace::new();
+        let id = sp.store("m0", "gen", None, dnn_payload());
+        assert!(sp.get(id).unwrap().dnn().is_ok());
+        assert!(sp.get(id).unwrap().hls().is_err());
+        assert!(sp.get(id).unwrap().rtl().is_err());
+    }
+}

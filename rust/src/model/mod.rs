@@ -1,0 +1,5 @@
+//! DNN model abstraction: a manifest variant + its live training state.
+
+pub mod state;
+
+pub use state::ModelState;

@@ -1,0 +1,261 @@
+//! Live model state: params + pruning masks + quantization config.
+//!
+//! This is the "DNN model" abstraction stored in the metamodel's model
+//! space.  It is pure host data (no xla handles), so it can be cloned into
+//! model-space snapshots, serialized, and moved between pipe tasks.
+
+use crate::error::{Error, Result};
+use crate::runtime::{HostTensor, ModelVariant};
+use crate::util::Prng;
+
+/// Per-layer ap_fixed precision (row of the qcfg tensor).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Precision {
+    pub total_bits: u32,
+    pub int_bits: u32,
+}
+
+impl Precision {
+    pub const DISABLED: Precision = Precision { total_bits: 0, int_bits: 0 };
+
+    pub fn new(total_bits: u32, int_bits: u32) -> Self {
+        Precision { total_bits, int_bits }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.total_bits > 0
+    }
+
+    pub fn frac_bits(&self) -> i64 {
+        self.total_bits as i64 - self.int_bits as i64
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.enabled() {
+            write!(f, "ap_fixed<{},{}>", self.total_bits, self.int_bits)
+        } else {
+            write!(f, "float")
+        }
+    }
+}
+
+/// Parameters + masks + per-layer precision for one model variant.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub tag: String,
+    pub params: Vec<HostTensor>,
+    pub masks: Vec<HostTensor>,
+    pub precisions: Vec<Precision>,
+    /// Indices into `params` of the weight tensors (mask-aligned).
+    pub weight_param_idx: Vec<usize>,
+}
+
+impl ModelState {
+    /// Glorot-initialized state with full masks and disabled quantization.
+    pub fn init(variant: &ModelVariant, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let mut params = Vec::with_capacity(variant.n_params());
+        for (name, shape) in &variant.param_shapes {
+            let n: usize = shape.iter().product();
+            if name.starts_with('w') {
+                let fan_in: usize = shape[..shape.len() - 1].iter().product();
+                let fan_out = shape[shape.len() - 1];
+                let data = rng.fork(n as u64).glorot(fan_in, fan_out, n);
+                params.push(HostTensor::F32 { shape: shape.clone(), data });
+            } else {
+                params.push(HostTensor::zeros(shape));
+            }
+        }
+        let masks = variant
+            .mask_shapes
+            .iter()
+            .map(|(_, shape)| HostTensor::ones(shape))
+            .collect();
+        ModelState {
+            tag: variant.tag.clone(),
+            params,
+            masks,
+            precisions: vec![Precision::DISABLED; variant.qcfg_rows],
+            weight_param_idx: variant.mask_shapes.iter().map(|(p, _)| *p).collect(),
+        }
+    }
+
+    pub fn n_weight_layers(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// The qcfg tensor in the layout the AOT graph expects: f32[L, 2].
+    pub fn qcfg_tensor(&self) -> HostTensor {
+        let mut data = Vec::with_capacity(self.precisions.len() * 2);
+        for p in &self.precisions {
+            data.push(p.total_bits as f32);
+            data.push(p.int_bits as f32);
+        }
+        HostTensor::F32 { shape: vec![self.precisions.len(), 2], data }
+    }
+
+    /// Weight tensor of layer `l` (mask-aligned indexing).
+    pub fn weight(&self, l: usize) -> &HostTensor {
+        &self.params[self.weight_param_idx[l]]
+    }
+
+    pub fn weight_param_index(&self, l: usize) -> usize {
+        self.weight_param_idx[l]
+    }
+
+    /// Apply the masks to the weights (zero out pruned entries).
+    pub fn apply_masks(&mut self) -> Result<()> {
+        for (l, &pidx) in self.weight_param_idx.clone().iter().enumerate() {
+            let mask = self.masks[l].as_f32()?.to_vec();
+            let w = self.params[pidx].as_f32_mut()?;
+            if w.len() != mask.len() {
+                return Err(Error::other("mask/weight length mismatch"));
+            }
+            for (wv, mv) in w.iter_mut().zip(&mask) {
+                *wv *= mv;
+            }
+        }
+        Ok(())
+    }
+
+    /// Global fraction of weights pruned (over maskable weight tensors).
+    pub fn pruned_fraction(&self) -> f64 {
+        let mut zero = 0usize;
+        let mut total = 0usize;
+        for m in &self.masks {
+            if let HostTensor::F32 { data, .. } = m {
+                zero += data.iter().filter(|v| **v == 0.0).count();
+                total += data.len();
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zero as f64 / total as f64
+        }
+    }
+
+    /// Per-layer density (fraction kept) in mask order.
+    pub fn layer_densities(&self) -> Vec<f64> {
+        self.masks.iter().map(|m| 1.0 - m.zero_fraction()).collect()
+    }
+
+    /// Total number of remaining (unpruned) multiplies represented by masks.
+    pub fn nonzero_weights(&self) -> usize {
+        self.masks
+            .iter()
+            .map(|m| match m {
+                HostTensor::F32 { data, .. } => {
+                    data.iter().filter(|v| **v != 0.0).count()
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Assemble the flat eval argument list: params ++ masks ++ [qcfg, x, y].
+    pub fn eval_args(&self, x: HostTensor, y: HostTensor) -> Vec<HostTensor> {
+        let mut args =
+            Vec::with_capacity(self.params.len() + self.masks.len() + 3);
+        args.extend(self.params.iter().cloned());
+        args.extend(self.masks.iter().cloned());
+        args.push(self.qcfg_tensor());
+        args.push(x);
+        args.push(y);
+        args
+    }
+
+    /// Assemble the flat train argument list (eval args + lr).
+    pub fn train_args(&self, x: HostTensor, y: HostTensor, lr: f32) -> Vec<HostTensor> {
+        let mut args = self.eval_args(x, y);
+        args.push(HostTensor::scalar(lr));
+        args
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn variant() -> ModelVariant {
+        ModelVariant {
+            model: "toy".into(),
+            scale: 1.0,
+            tag: "toy_s1000".into(),
+            input_shape: vec![4],
+            n_classes: 2,
+            train_batch: 8,
+            eval_batch: 8,
+            param_shapes: vec![
+                ("w0".into(), vec![4, 8]),
+                ("b0".into(), vec![8]),
+                ("w1".into(), vec![8, 2]),
+                ("b1".into(), vec![2]),
+            ],
+            mask_shapes: vec![(0, vec![4, 8]), (2, vec![8, 2])],
+            qcfg_rows: 2,
+            layers: vec![],
+            train_artifact: "t".into(),
+            eval_artifact: "e".into(),
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_biases_zero() {
+        let s = ModelState::init(&variant(), 1);
+        assert_eq!(s.params.len(), 4);
+        assert_eq!(s.params[0].shape(), &[4, 8]);
+        assert!(s.params[1].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        assert!(s.params[0].as_f32().unwrap().iter().any(|&v| v != 0.0));
+        assert_eq!(s.pruned_fraction(), 0.0);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = ModelState::init(&variant(), 7);
+        let b = ModelState::init(&variant(), 7);
+        assert_eq!(a.params[0], b.params[0]);
+        let c = ModelState::init(&variant(), 8);
+        assert_ne!(a.params[0], c.params[0]);
+    }
+
+    #[test]
+    fn qcfg_layout() {
+        let mut s = ModelState::init(&variant(), 1);
+        s.precisions[1] = Precision::new(8, 3);
+        let q = s.qcfg_tensor();
+        assert_eq!(q.shape(), &[2, 2]);
+        assert_eq!(q.as_f32().unwrap(), &[0.0, 0.0, 8.0, 3.0]);
+    }
+
+    #[test]
+    fn mask_application_and_sparsity() {
+        let mut s = ModelState::init(&variant(), 1);
+        // prune half of layer 0
+        if let HostTensor::F32 { data, .. } = &mut s.masks[0] {
+            for v in data.iter_mut().take(16) {
+                *v = 0.0;
+            }
+        }
+        s.apply_masks().unwrap();
+        assert_eq!(s.weight(0).as_f32().unwrap()[..16], vec![0.0f32; 16][..]);
+        let pf = s.pruned_fraction();
+        assert!((pf - 16.0 / 48.0).abs() < 1e-9, "{pf}");
+        assert_eq!(s.nonzero_weights(), 32);
+        let d = s.layer_densities();
+        assert!((d[0] - 0.5).abs() < 1e-9 && d[1] == 1.0);
+    }
+
+    #[test]
+    fn arg_assembly_order() {
+        let s = ModelState::init(&variant(), 1);
+        let x = HostTensor::zeros(&[8, 4]);
+        let y = HostTensor::from_i32(&[8], vec![0; 8]).unwrap();
+        let args = s.train_args(x, y, 0.1);
+        assert_eq!(args.len(), 4 + 2 + 3 + 1);
+        assert_eq!(args[6].shape(), &[2, 2]); // qcfg
+        assert_eq!(args[9].scalar_f32().unwrap(), 0.1); // lr last
+    }
+}

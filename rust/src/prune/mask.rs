@@ -1,0 +1,136 @@
+//! Magnitude-based pruning masks.
+//!
+//! Global magnitude pruning (TF-MOT-equivalent): rank every weight across
+//! all maskable tensors by |w| and zero the smallest `rate` fraction.
+//! Biases are never pruned (they are not mask-aligned).
+
+use crate::error::Result;
+use crate::model::ModelState;
+use crate::runtime::HostTensor;
+
+/// Build masks pruning the globally-smallest `rate` fraction of weights.
+///
+/// Returns one {0,1} f32 mask per weight tensor, in mask order.
+pub fn global_magnitude_masks(state: &ModelState, rate: f64) -> Result<Vec<HostTensor>> {
+    let rate = rate.clamp(0.0, 1.0);
+    // gather |w| over all weight tensors
+    let mut magnitudes: Vec<f32> = Vec::new();
+    for l in 0..state.n_weight_layers() {
+        magnitudes.extend(state.weight(l).as_f32()?.iter().map(|v| v.abs()));
+    }
+    if magnitudes.is_empty() {
+        return Ok(vec![]);
+    }
+    let k = ((magnitudes.len() as f64) * rate).round() as usize;
+    let threshold = if k == 0 {
+        -1.0f32 // keep everything (all |w| >= 0 > -1)
+    } else if k >= magnitudes.len() {
+        f32::INFINITY
+    } else {
+        // k-th smallest magnitude = pruning threshold
+        let mut sorted = magnitudes.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[k - 1]
+    };
+
+    let mut masks = Vec::with_capacity(state.n_weight_layers());
+    let mut pruned_so_far = 0usize;
+    let target = k;
+    for l in 0..state.n_weight_layers() {
+        let w = state.weight(l).as_f32()?;
+        let mut data = Vec::with_capacity(w.len());
+        for &v in w {
+            // strict threshold with tie-budget: prune while |w| <= thr and
+            // budget remains (exact-rate invariant under ties)
+            if v.abs() <= threshold && pruned_so_far < target {
+                data.push(0.0);
+                pruned_so_far += 1;
+            } else {
+                data.push(1.0);
+            }
+        }
+        masks.push(HostTensor::F32 {
+            shape: state.weight(l).shape().to_vec(),
+            data,
+        });
+    }
+    Ok(masks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::state::Precision;
+
+    fn state_with_weights(w0: Vec<f32>, w1: Vec<f32>) -> ModelState {
+        ModelState {
+            tag: "t".into(),
+            params: vec![
+                HostTensor::F32 { shape: vec![w0.len()], data: w0 },
+                HostTensor::F32 { shape: vec![w1.len()], data: w1 },
+            ],
+            masks: vec![
+                HostTensor::ones(&[4]),
+                HostTensor::ones(&[4]),
+            ],
+            precisions: vec![Precision::DISABLED; 2],
+            weight_param_idx: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn rate_zero_keeps_all() {
+        let s = state_with_weights(vec![0.0, 0.1, 0.2, 0.3], vec![1.0, 2.0, 3.0, 4.0]);
+        let masks = global_magnitude_masks(&s, 0.0).unwrap();
+        assert!(masks.iter().all(|m| m.zero_fraction() == 0.0));
+    }
+
+    #[test]
+    fn rate_one_prunes_all() {
+        let s = state_with_weights(vec![0.5; 4], vec![1.0; 4]);
+        let masks = global_magnitude_masks(&s, 1.0).unwrap();
+        assert!(masks.iter().all(|m| m.zero_fraction() == 1.0));
+    }
+
+    #[test]
+    fn prunes_smallest_globally() {
+        let s = state_with_weights(
+            vec![0.01, 0.02, 5.0, 6.0],
+            vec![0.03, 7.0, 8.0, 9.0],
+        );
+        let masks = global_magnitude_masks(&s, 3.0 / 8.0).unwrap();
+        // the three smallest magnitudes are 0.01, 0.02 (layer 0), 0.03 (layer 1)
+        assert_eq!(masks[0].as_f32().unwrap(), &[0.0, 0.0, 1.0, 1.0]);
+        assert_eq!(masks[1].as_f32().unwrap(), &[0.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn exact_rate_under_ties() {
+        let s = state_with_weights(vec![1.0; 4], vec![1.0; 4]);
+        let masks = global_magnitude_masks(&s, 0.5).unwrap();
+        let zeros: usize = masks
+            .iter()
+            .map(|m| m.as_f32().unwrap().iter().filter(|v| **v == 0.0).count())
+            .sum();
+        assert_eq!(zeros, 4);
+    }
+
+    #[test]
+    fn rate_monotonicity() {
+        let s = state_with_weights(
+            vec![0.1, 0.4, 0.2, 0.9],
+            vec![0.5, 0.7, 0.3, 0.8],
+        );
+        let mut prev_zeros = 0;
+        for rate in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let masks = global_magnitude_masks(&s, rate).unwrap();
+            let zeros: usize = masks
+                .iter()
+                .map(|m| m.as_f32().unwrap().iter().filter(|v| **v == 0.0).count())
+                .sum();
+            assert!(zeros >= prev_zeros);
+            prev_zeros = zeros;
+        }
+        assert_eq!(prev_zeros, 8);
+    }
+}

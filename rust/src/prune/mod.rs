@@ -1,0 +1,7 @@
+//! Pruning substrate: magnitude masks + the auto-pruning binary search.
+
+pub mod mask;
+pub mod search;
+
+pub use mask::global_magnitude_masks;
+pub use search::{autoprune, AutopruneConfig, PruneProbe, PruneTrace};

@@ -1,0 +1,147 @@
+//! The auto-pruning binary search (paper §V-B, Figs 3–4).
+//!
+//! Objective:  maximize  Pruning_rate
+//!             subject to Accuracy_loss(Pruning_rate) ≤ α_p
+//!
+//! Step 1 (s1) measures the 0%-rate accuracy Acc_p0; subsequent steps
+//! binary-search the rate, accepting a probe when the fine-tuned accuracy
+//! stays within α_p of Acc_p0 and terminating when the interval shrinks
+//! below β_p — giving 1 + log2(1/β_p) steps, exactly the paper's count.
+
+use crate::error::Result;
+use crate::model::ModelState;
+use crate::prune::mask::global_magnitude_masks;
+use crate::train::{TrainConfig, Trainer};
+
+#[derive(Debug, Clone)]
+pub struct AutopruneConfig {
+    /// α_p: tolerated accuracy loss (paper default 2% = 0.02).
+    pub tolerate_acc_loss: f64,
+    /// β_p: terminate when hi − lo < β_p (paper default 2% = 0.02).
+    pub rate_threshold: f64,
+    /// Fine-tune epochs per probe.
+    pub train_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for AutopruneConfig {
+    fn default() -> Self {
+        AutopruneConfig {
+            tolerate_acc_loss: 0.02,
+            rate_threshold: 0.02,
+            train_epochs: 2,
+            seed: 23,
+        }
+    }
+}
+
+/// One probe of the binary search (a point in Fig 3).
+#[derive(Debug, Clone)]
+pub struct PruneProbe {
+    pub step: usize,
+    pub rate: f64,
+    pub accuracy: f64,
+    pub accepted: bool,
+    /// Search direction after this probe: +1 rate increased, -1 decreased.
+    pub direction: i8,
+    /// Non-zero weights per layer of this candidate (for Fig 4 resources).
+    pub layer_nnz: Vec<usize>,
+}
+
+/// Search result: the accepted state + the full trace (for Figs 3–4).
+#[derive(Debug)]
+pub struct PruneTrace {
+    pub base_accuracy: f64,
+    pub best_rate: f64,
+    pub best_accuracy: f64,
+    pub probes: Vec<PruneProbe>,
+}
+
+/// Run auto-pruning on `state` in place (leaves the best accepted
+/// masks+weights applied).  The trainer supplies fit/evaluate.
+pub fn autoprune(
+    trainer: &Trainer,
+    state: &mut ModelState,
+    cfg: &AutopruneConfig,
+) -> Result<PruneTrace> {
+    let fit_cfg = TrainConfig {
+        epochs: cfg.train_epochs,
+        seed: cfg.seed,
+        ..TrainConfig::for_model(&trainer.exec.variant.model)
+    };
+
+    let layer_nnz = |s: &ModelState| -> Vec<usize> {
+        s.masks
+            .iter()
+            .map(|m| match m.as_f32() {
+                Ok(d) => d.iter().filter(|v| **v != 0.0).count(),
+                Err(_) => 0,
+            })
+            .collect()
+    };
+
+    // s1: baseline accuracy at 0% rate
+    let base = trainer.evaluate(state)?;
+    let mut probes = vec![PruneProbe {
+        step: 1,
+        rate: 0.0,
+        accuracy: base.accuracy,
+        accepted: true,
+        direction: 1,
+        layer_nnz: layer_nnz(state),
+    }];
+
+    let mut lo = 0.0f64; // highest accepted rate
+    let mut hi = 1.0f64; // lowest rejected rate
+    let mut best_state = state.clone();
+    let mut best_acc = base.accuracy;
+    let mut step = 1usize;
+
+    while hi - lo > cfg.rate_threshold {
+        step += 1;
+        let rate = 0.5 * (lo + hi);
+        // candidate: prune from the *base* trained weights, then fine-tune
+        let mut cand = state.clone();
+        cand.masks = global_magnitude_masks(&cand, rate)?;
+        cand.apply_masks()?;
+        trainer.fit(&mut cand, &fit_cfg)?;
+        let eval = trainer.evaluate(&cand)?;
+        let ok = base.accuracy - eval.accuracy <= cfg.tolerate_acc_loss;
+        probes.push(PruneProbe {
+            step,
+            rate,
+            accuracy: eval.accuracy,
+            accepted: ok,
+            direction: if ok { 1 } else { -1 },
+            layer_nnz: layer_nnz(&cand),
+        });
+        if ok {
+            lo = rate;
+            best_state = cand;
+            best_acc = eval.accuracy;
+        } else {
+            hi = rate;
+        }
+    }
+
+    *state = best_state;
+    Ok(PruneTrace {
+        base_accuracy: base.accuracy,
+        best_rate: lo,
+        best_accuracy: best_acc,
+        probes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn expected_step_count() {
+        // paper: steps = 1 + log2(1/β); β=2% → 1 + ~5.6 → 7 probes
+        // interval halves from 1.0: after n probes width = 2^-n
+        // terminates when width < 0.02 → n = 6 probes + s1 = 7
+        let beta = 0.02f64;
+        let n_probes = (1.0f64 / beta).log2().ceil() as usize;
+        assert_eq!(n_probes, 6);
+    }
+}

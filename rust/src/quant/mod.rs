@@ -1,0 +1,5 @@
+//! Quantization substrate: fixed-point search at the HLS level.
+
+pub mod search;
+
+pub use search::{quantize_search, QuantConfig, QuantProbe, QuantTrace};

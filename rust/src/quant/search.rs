@@ -1,0 +1,177 @@
+//! The QUANTIZATION O-task's mixed-precision search (paper §V-B).
+//!
+//! Operates at the HLS level: precisions are per-layer `ap_fixed<W,I>`
+//! types instrumented into the C++ kernel (our HLS IR + SetPrecision
+//! pass), and accuracy is checked by "co-design simulation" — here the
+//! AOT eval executable, whose qcfg operand reproduces ap_fixed semantics
+//! bit-exactly (the fused Pallas kernel).
+//!
+//! Greedy descent: starting from the default precision, repeatedly try
+//! shaving one total bit off the single layer whose reduction costs the
+//! least accuracy, while total accuracy loss stays < α_q.  Integer bits
+//! shrink once the fractional part is exhausted.
+
+use crate::error::Result;
+use crate::model::state::Precision;
+use crate::model::ModelState;
+use crate::train::Trainer;
+
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    /// α_q: tolerated accuracy loss (paper: 1% headline, 4% aggressive).
+    pub tolerate_acc_loss: f64,
+    /// Starting precision (the HLS4ML default, 18 total / 8 integer).
+    pub start: Precision,
+    /// Smallest allowed total bits per layer.
+    pub min_bits: u32,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            tolerate_acc_loss: 0.01,
+            start: Precision::new(18, 8),
+            min_bits: 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantProbe {
+    pub round: usize,
+    pub layer: usize,
+    pub tried: Precision,
+    pub accuracy: f64,
+    pub accepted: bool,
+}
+
+#[derive(Debug)]
+pub struct QuantTrace {
+    pub base_accuracy: f64,
+    pub final_accuracy: f64,
+    pub precisions: Vec<Precision>,
+    pub probes: Vec<QuantProbe>,
+    /// Total bits across layers, before → after.
+    pub bits_before: u32,
+    pub bits_after: u32,
+}
+
+/// The one-bit-narrower candidates of a precision: shaving a fraction
+/// bit (coarser grid) or an integer bit (smaller range).  The search
+/// tries both — integer bits are usually free on sub-unit weights, which
+/// is how the paper's mixed-precision configs reach ap_fixed<8,3>-class
+/// types from the 18,8 default.
+fn reduce_candidates(p: Precision) -> Vec<Precision> {
+    let mut out = Vec::with_capacity(2);
+    if p.total_bits <= 2 {
+        return out;
+    }
+    if p.frac_bits() > 0 {
+        out.push(Precision::new(p.total_bits - 1, p.int_bits));
+    }
+    if p.int_bits > 1 {
+        out.push(Precision::new(p.total_bits - 1, p.int_bits - 1));
+    }
+    out
+}
+
+/// Run the greedy mixed-precision search on `state` in place.
+pub fn quantize_search(
+    trainer: &Trainer,
+    state: &mut ModelState,
+    cfg: &QuantConfig,
+) -> Result<QuantTrace> {
+    let n_layers = state.n_weight_layers();
+    // instrument the starting precision everywhere
+    for p in state.precisions.iter_mut() {
+        *p = cfg.start;
+    }
+    let base = trainer.evaluate(state)?;
+    let floor = base.accuracy - cfg.tolerate_acc_loss;
+    let bits_before = cfg.start.total_bits * n_layers as u32;
+
+    let mut probes = Vec::new();
+    let mut final_acc = base.accuracy;
+    let mut round = 0usize;
+    loop {
+        round += 1;
+        // try reducing each layer by one bit (either fraction or integer);
+        // keep the best acceptable reduction across all layers
+        let mut best: Option<(usize, Precision, f64)> = None;
+        for l in 0..n_layers {
+            let cur = state.precisions[l];
+            for next in reduce_candidates(cur) {
+                if next.total_bits < cfg.min_bits {
+                    continue;
+                }
+                state.precisions[l] = next;
+                let eval = trainer.evaluate(state)?;
+                state.precisions[l] = cur;
+                let ok = eval.accuracy >= floor;
+                probes.push(QuantProbe {
+                    round,
+                    layer: l,
+                    tried: next,
+                    accuracy: eval.accuracy,
+                    accepted: ok,
+                });
+                if ok && best.as_ref().map_or(true, |(_, _, a)| eval.accuracy > *a) {
+                    best = Some((l, next, eval.accuracy));
+                }
+            }
+        }
+        match best {
+            Some((l, p, acc)) => {
+                state.precisions[l] = p;
+                final_acc = acc;
+            }
+            None => break, // no layer can shrink within tolerance
+        }
+    }
+
+    let bits_after = state.precisions.iter().map(|p| p.total_bits).sum();
+    Ok(QuantTrace {
+        base_accuracy: base.accuracy,
+        final_accuracy: final_acc,
+        precisions: state.precisions.clone(),
+        probes,
+        bits_before,
+        bits_after,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_offers_fraction_and_integer_cuts() {
+        let cands = reduce_candidates(Precision::new(10, 8));
+        assert_eq!(cands.len(), 2);
+        assert!(cands.contains(&Precision::new(9, 8))); // fewer frac bits
+        assert!(cands.contains(&Precision::new(9, 7))); // fewer int bits
+        // fraction exhausted: only the integer cut remains
+        let cands = reduce_candidates(Precision::new(8, 8));
+        assert_eq!(cands, vec![Precision::new(7, 7)]);
+        // floor
+        assert!(reduce_candidates(Precision::new(2, 2)).is_empty());
+    }
+
+    #[test]
+    fn reduce_terminates_from_any_start() {
+        let mut frontier = vec![Precision::new(18, 8)];
+        let mut steps = 0;
+        while let Some(p) = frontier.pop() {
+            for next in reduce_candidates(p) {
+                assert!(next.total_bits < p.total_bits);
+                assert!(next.frac_bits() >= 0, "{next}");
+                assert!(next.int_bits >= 1);
+                if next.total_bits > 3 {
+                    frontier.push(next);
+                }
+            }
+            steps += 1;
+            assert!(steps < 100_000);
+        }
+    }
+}

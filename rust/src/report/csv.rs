@@ -1,0 +1,85 @@
+//! CSV emission for figure series (benches write bench_out/*.csv).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Simple CSV writer with header enforcement.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "csv row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        let formatted: Vec<String> = cells.iter().map(|v| format!("{v}")).collect();
+        self.row(&formatted);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(
+                &r.iter()
+                    .map(|c| {
+                        if c.contains(',') || c.contains('"') {
+                            format!("\"{}\"", c.replace('"', "\"\""))
+                        } else {
+                            c.clone()
+                        }
+                    })
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a path, creating parent directories.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_quotes() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "x,y".into()]);
+        w.row_f64(&[0.5, 2.0]);
+        let s = w.render();
+        assert_eq!(s, "a,b\n1,\"x,y\"\n0.5,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_enforced() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into()]);
+    }
+}

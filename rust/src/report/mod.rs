@@ -1,0 +1,7 @@
+//! Report rendering: aligned text tables + CSV series for figures.
+
+pub mod csv;
+pub mod table;
+
+pub use csv::CsvWriter;
+pub use table::Table;

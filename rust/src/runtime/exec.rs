@@ -1,0 +1,196 @@
+//! PJRT client wrapper + compiled-executable cache.
+//!
+//! One `Runtime` per process (the PJRT CPU client is not Send/Sync in the
+//! `xla` crate, so everything executes on the coordinator thread).  Compiled
+//! executables are cached by artifact file name — re-entering a flow task
+//! never recompiles.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{Manifest, ModelVariant};
+use crate::runtime::tensor::HostTensor;
+
+/// Execution statistics (perf accounting; see EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// Owns the PJRT client and the executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load(&self, manifest: &Manifest, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = manifest.artifact_path(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::other("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.compiles += 1;
+            stats.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let literals = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let parts = self.execute_literals(exe, &literals)?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Literal-level execution (the hot path): no HostTensor marshaling.
+    ///
+    /// `fit()` keeps parameters as Literals across steps — outputs of one
+    /// step feed the next directly, so per-step host<->literal copies are
+    /// limited to the batch upload and the loss/acc scalars (§Perf L3).
+    pub fn execute_literals(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // Computations are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+
+    /// Borrowed-literal execution: constant operands are passed by
+    /// reference (zero copies per step).
+    pub fn execute_literals_ref(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+}
+
+/// A (model, scale) variant bound to its compiled train/eval executables.
+pub struct ModelExecutable {
+    pub variant: ModelVariant,
+    train: Rc<xla::PjRtLoadedExecutable>,
+    eval: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl ModelExecutable {
+    /// The raw compiled train-step executable (hot-path literal API).
+    pub fn train_exe(&self) -> &xla::PjRtLoadedExecutable {
+        &self.train
+    }
+
+    /// The raw compiled eval executable (hot-path literal API).
+    pub fn eval_exe(&self) -> &xla::PjRtLoadedExecutable {
+        &self.eval
+    }
+
+    pub fn load(runtime: &Runtime, manifest: &Manifest, tag: &str) -> Result<Self> {
+        let variant = manifest.get(tag)?.clone();
+        let train = runtime.load(manifest, &variant.train_artifact)?;
+        let eval = runtime.load(manifest, &variant.eval_artifact)?;
+        Ok(ModelExecutable { variant, train, eval })
+    }
+
+    /// One SGD step. `args` = params ++ masks ++ [qcfg, x, y, lr].
+    /// Returns (new_params, loss, acc).
+    pub fn train_step(
+        &self,
+        runtime: &Runtime,
+        args: &[HostTensor],
+    ) -> Result<(Vec<HostTensor>, f32, f32)> {
+        let expect = self.variant.n_params() + self.variant.n_masks() + 4;
+        if args.len() != expect {
+            return Err(Error::other(format!(
+                "train_step: expected {expect} args, got {}",
+                args.len()
+            )));
+        }
+        let out = runtime.execute(&self.train, args)?;
+        let n = self.variant.n_params();
+        if out.len() != n + 2 {
+            return Err(Error::other(format!(
+                "train_step: expected {} outputs, got {}",
+                n + 2,
+                out.len()
+            )));
+        }
+        let mut out = out;
+        let acc = out.pop().unwrap().scalar_f32()?;
+        let loss = out.pop().unwrap().scalar_f32()?;
+        Ok((out, loss, acc))
+    }
+
+    /// Evaluate one batch. `args` = params ++ masks ++ [qcfg, x, y].
+    /// Returns (loss, acc).
+    pub fn eval_step(&self, runtime: &Runtime, args: &[HostTensor]) -> Result<(f32, f32)> {
+        let expect = self.variant.n_params() + self.variant.n_masks() + 3;
+        if args.len() != expect {
+            return Err(Error::other(format!(
+                "eval_step: expected {expect} args, got {}",
+                args.len()
+            )));
+        }
+        let out = runtime.execute(&self.eval, args)?;
+        if out.len() != 2 {
+            return Err(Error::other(format!(
+                "eval_step: expected 2 outputs, got {}",
+                out.len()
+            )));
+        }
+        Ok((out[0].scalar_f32()?, out[1].scalar_f32()?))
+    }
+}

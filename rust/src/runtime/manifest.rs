@@ -1,0 +1,197 @@
+//! AOT manifest: the contract between `python/compile/aot.py` and rust.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+
+/// One layer of a model (feeds the HLS4ML λ-task's IR translation).
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    pub kind: String, // dense | conv2d | maxpool2 | flatten | residual_*
+    pub name: String,
+    pub activation: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub kernel: usize,
+    pub h: usize,
+    pub w: usize,
+    pub param_w: i64,
+    pub param_b: i64,
+    pub mask_idx: i64,
+    pub macs: usize,
+}
+
+impl LayerDesc {
+    pub fn is_weight(&self) -> bool {
+        self.param_w >= 0
+    }
+}
+
+/// One exported (model, scale) variant.
+#[derive(Debug, Clone)]
+pub struct ModelVariant {
+    pub model: String,
+    pub scale: f64,
+    pub tag: String,
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    /// (name, shape) in flat-argument order: w0, b0, w1, b1, ...
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    /// (aligned param index, shape) per weight tensor, in qcfg-row order.
+    pub mask_shapes: Vec<(usize, Vec<usize>)>,
+    pub qcfg_rows: usize,
+    pub layers: Vec<LayerDesc>,
+    pub train_artifact: String,
+    pub eval_artifact: String,
+}
+
+impl ModelVariant {
+    fn from_json(v: &Value) -> Result<Self> {
+        let params = v
+            .req_array("params")?
+            .iter()
+            .map(|p| Ok((p.req_str("name")?.to_string(), p.req_shape("shape")?)))
+            .collect::<Result<Vec<_>>>()?;
+        let masks = v
+            .req_array("masks")?
+            .iter()
+            .map(|m| Ok((m.req_usize("param")?, m.req_shape("shape")?)))
+            .collect::<Result<Vec<_>>>()?;
+        let layers = v
+            .req_array("layers")?
+            .iter()
+            .map(|l| {
+                Ok(LayerDesc {
+                    kind: l.req_str("kind")?.to_string(),
+                    name: l.req_str("name")?.to_string(),
+                    activation: l.req_str("activation")?.to_string(),
+                    in_dim: l.req_usize("in_dim")?,
+                    out_dim: l.req_usize("out_dim")?,
+                    kernel: l.req_usize("kernel")?,
+                    h: l.req_usize("h")?,
+                    w: l.req_usize("w")?,
+                    param_w: l.req_f64("param_w")? as i64,
+                    param_b: l.req_f64("param_b")? as i64,
+                    mask_idx: l.req_f64("mask_idx")? as i64,
+                    macs: l.req_usize("macs")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = v.req("artifacts")?;
+        Ok(ModelVariant {
+            model: v.req_str("model")?.to_string(),
+            scale: v.req_f64("scale")?,
+            tag: v.req_str("tag")?.to_string(),
+            input_shape: v.req_shape("input_shape")?,
+            n_classes: v.req_usize("n_classes")?,
+            train_batch: v.req_usize("train_batch")?,
+            eval_batch: v.req_usize("eval_batch")?,
+            param_shapes: params,
+            mask_shapes: masks,
+            qcfg_rows: v.req_usize("qcfg_rows")?,
+            layers,
+            train_artifact: artifacts.req_str("train")?.to_string(),
+            eval_artifact: artifacts.req_str("eval")?.to_string(),
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_shapes.len()
+    }
+
+    pub fn n_masks(&self) -> usize {
+        self.mask_shapes.len()
+    }
+
+    /// Total trainable parameter count.
+    pub fn total_weights(&self) -> usize {
+        self.param_shapes
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Weight layers in qcfg-row order (dense/conv only).
+    pub fn weight_layers(&self) -> Vec<&LayerDesc> {
+        self.layers.iter().filter(|l| l.is_weight()).collect()
+    }
+}
+
+/// The parsed artifacts/manifest.json plus its directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<ModelVariant>,
+    by_tag: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Empty manifest (mock/test sessions without artifacts).
+    pub fn empty() -> Self {
+        Manifest {
+            dir: PathBuf::from("."),
+            variants: Vec::new(),
+            by_tag: HashMap::new(),
+        }
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let root = json::parse(&text)?;
+        let variants = root
+            .req_array("models")?
+            .iter()
+            .map(ModelVariant::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let by_tag = variants
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.tag.clone(), i))
+            .collect();
+        Ok(Manifest { dir, variants, by_tag })
+    }
+
+    pub fn get(&self, tag: &str) -> Result<&ModelVariant> {
+        self.by_tag
+            .get(tag)
+            .map(|&i| &self.variants[i])
+            .ok_or_else(|| Error::Manifest(format!("unknown variant {tag:?}")))
+    }
+
+    /// All scales exported for a model, descending (1.0 first).
+    pub fn scales_for(&self, model: &str) -> Vec<f64> {
+        let mut scales: Vec<f64> = self
+            .variants
+            .iter()
+            .filter(|v| v.model == model)
+            .map(|v| v.scale)
+            .collect();
+        scales.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        scales
+    }
+
+    /// Variant lookup by (model, scale).
+    pub fn variant(&self, model: &str, scale: f64) -> Result<&ModelVariant> {
+        self.variants
+            .iter()
+            .find(|v| v.model == model && (v.scale - scale).abs() < 1e-9)
+            .ok_or_else(|| {
+                Error::Manifest(format!("no variant {model}@{scale}"))
+            })
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}

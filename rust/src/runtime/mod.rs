@@ -1,0 +1,21 @@
+//! L3 runtime: load AOT artifacts (HLO text) and execute them via PJRT.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//! * artifacts are HLO *text* (`HloModuleProto::from_text_file` reassigns
+//!   instruction ids, sidestepping the 64-bit-id proto incompatibility
+//!   between jax >= 0.5 and xla_extension 0.5.1);
+//! * `manifest.json` records, per (model, scale) variant, the exact flat
+//!   argument order (params, masks, qcfg, batch, labels[, lr]) and the
+//!   output arity (params' + loss + acc for train; loss + acc for eval);
+//! * all computations return a tuple (lowered with `return_tuple=True`).
+//!
+//! Python never runs on this path — the rust binary is self-contained
+//! once `make artifacts` has produced the directory.
+
+pub mod exec;
+pub mod manifest;
+pub mod tensor;
+
+pub use exec::{ModelExecutable, Runtime};
+pub use manifest::{LayerDesc, Manifest, ModelVariant};
+pub use tensor::HostTensor;

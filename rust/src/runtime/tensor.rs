@@ -1,0 +1,188 @@
+//! Host-side tensors and Literal marshaling.
+
+use crate::error::{Error, Result};
+
+/// A host tensor: dense row-major f32 or i32 data + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(Error::ShapeMismatch {
+                expected: shape.to_vec(),
+                got: vec![data.len()],
+            });
+        }
+        Ok(HostTensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(Error::ShapeMismatch {
+                expected: shape.to_vec(),
+                got: vec![data.len()],
+            });
+        }
+        Ok(HostTensor::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(Error::other("tensor is not f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(Error::other("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => Err(Error::other("tensor is not i32")),
+        }
+    }
+
+    /// Scalar extraction (for loss/acc outputs).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(Error::other(format!(
+                "expected scalar, got {:?}",
+                self.shape()
+            )));
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an xla Literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a Literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            ty => Err(Error::other(format!("unsupported literal type {ty:?}"))),
+        }
+    }
+
+    /// Fraction of exact zeros (sparsity accounting for pruning).
+    pub fn zero_fraction(&self) -> f64 {
+        match self {
+            HostTensor::F32 { data, .. } => {
+                if data.is_empty() {
+                    return 0.0;
+                }
+                data.iter().filter(|v| **v == 0.0).count() as f64 / data.len() as f64
+            }
+            HostTensor::I32 { data, .. } => {
+                if data.is_empty() {
+                    return 0.0;
+                }
+                data.iter().filter(|v| **v == 0).count() as f64 / data.len() as f64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::from_f32(&[2, 3], vec![1.0; 6]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(HostTensor::from_f32(&[2, 3], vec![1.0; 5]).is_err());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn zero_fraction() {
+        let t = HostTensor::from_f32(&[4], vec![0.0, 1.0, 0.0, 2.0]).unwrap();
+        assert_eq!(t.zero_fraction(), 0.5);
+        assert_eq!(HostTensor::zeros(&[3]).zero_fraction(), 1.0);
+        assert_eq!(HostTensor::ones(&[3]).zero_fraction(), 0.0);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar(2.5);
+        assert_eq!(t.scalar_f32().unwrap(), 2.5);
+        assert!(HostTensor::ones(&[2]).scalar_f32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::from_i32(&[3], vec![7, -1, 0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

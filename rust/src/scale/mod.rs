@@ -1,0 +1,5 @@
+//! Scaling substrate: layer-size search over the pre-lowered scale grid.
+
+pub mod search;
+
+pub use search::{scale_search, ScaleConfig, ScaleProbe, ScaleTrace};

@@ -1,0 +1,160 @@
+//! The SCALING O-task's automatic layer-size search (paper §V-B).
+//!
+//! Layer widths change tensor shapes, so each candidate scale is a
+//! separate pre-lowered AOT variant (the manifest's scale grid).  The
+//! search walks the grid downward from the current scale, retraining each
+//! candidate, and stops when the accuracy loss vs the unscaled baseline
+//! exceeds α_s (paper default 0.05% — essentially "free" shrinkage only).
+
+use std::rc::Rc;
+
+use crate::error::Result;
+use crate::flow::session::Session;
+use crate::model::ModelState;
+use crate::train::{TrainConfig, Trainer};
+
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    /// α_s: tolerated accuracy loss (paper sets 0.05% = 0.0005).
+    pub tolerate_acc_loss: f64,
+    /// Scale applied when auto-search is off (Table I default_scale_factor).
+    pub default_scale_factor: f64,
+    /// Auto-search the grid vs apply default_scale_factor once.
+    pub auto: bool,
+    /// Bound on candidate trials (Table I max_trials_num).
+    pub max_trials: usize,
+    pub train_epochs: usize,
+    pub seed: u64,
+    /// When scaling runs *after* pruning (Fig 5b), candidates inherit the
+    /// pruned structure: each scaled model is re-pruned at this rate and
+    /// briefly fine-tuned before evaluation.  0.0 = no inheritance.
+    pub inherit_pruning_rate: f64,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        ScaleConfig {
+            tolerate_acc_loss: 0.0005,
+            default_scale_factor: 0.5,
+            auto: true,
+            max_trials: 8,
+            train_epochs: 4,
+            seed: 29,
+            inherit_pruning_rate: 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ScaleProbe {
+    pub trial: usize,
+    pub scale: f64,
+    pub accuracy: f64,
+    pub accepted: bool,
+    pub params: usize,
+}
+
+#[derive(Debug)]
+pub struct ScaleTrace {
+    pub base_accuracy: f64,
+    pub best_scale: f64,
+    pub best_accuracy: f64,
+    pub probes: Vec<ScaleProbe>,
+}
+
+/// Run the scaling search. Returns the trace plus the new (retrained)
+/// state at the chosen scale; the caller re-binds executables for the
+/// returned scale's variant tag.
+pub fn scale_search(
+    session: &Session,
+    model: &str,
+    current_scale: f64,
+    base_accuracy: f64,
+    cfg: &ScaleConfig,
+) -> Result<(ScaleTrace, ModelState, f64)> {
+    let data = session.dataset(model)?;
+    let grid = session.manifest.scales_for(model);
+    let candidates: Vec<f64> = if cfg.auto {
+        grid.iter().copied().filter(|&s| s < current_scale).collect()
+    } else {
+        // single trial at the closest grid point to the default factor
+        let want = current_scale * cfg.default_scale_factor;
+        let nearest = grid
+            .iter()
+            .copied()
+            .min_by(|a, b| {
+                (a - want).abs().partial_cmp(&(b - want).abs()).unwrap()
+            })
+            .filter(|&s| s < current_scale);
+        nearest.into_iter().collect()
+    };
+
+    let fit_cfg = |epochs| TrainConfig {
+        epochs,
+        seed: cfg.seed,
+        ..TrainConfig::for_model(model)
+    };
+
+    let mut probes = Vec::new();
+    let mut best: Option<(f64, ModelState, f64)> = None;
+    for (i, scale) in candidates.into_iter().take(cfg.max_trials).enumerate() {
+        let variant = session.manifest.variant(model, scale)?;
+        let exec: Rc<_> = session.executable(&variant.tag)?;
+        let trainer = Trainer::new(&session.runtime, &exec, &data);
+        let mut cand = ModelState::init(variant, cfg.seed);
+        trainer.fit(&mut cand, &fit_cfg(cfg.train_epochs))?;
+        if cfg.inherit_pruning_rate > 0.0 {
+            cand.masks =
+                crate::prune::global_magnitude_masks(&cand, cfg.inherit_pruning_rate)?;
+            cand.apply_masks()?;
+            trainer.fit(&mut cand, &fit_cfg(2))?;
+        }
+        let eval = trainer.evaluate(&cand)?;
+        let ok = base_accuracy - eval.accuracy <= cfg.tolerate_acc_loss;
+        probes.push(ScaleProbe {
+            trial: i + 1,
+            scale,
+            accuracy: eval.accuracy,
+            accepted: ok,
+            params: variant.total_weights(),
+        });
+        if ok {
+            best = Some((scale, cand, eval.accuracy));
+        } else {
+            break; // grid walk stops at the first violation (paper)
+        }
+    }
+
+    let (best_scale, state, best_acc) = match best {
+        Some(b) => b,
+        None => {
+            // no smaller scale acceptable: stay at the current scale
+            let variant = session.manifest.variant(model, current_scale)?;
+            let exec = session.executable(&variant.tag)?;
+            let trainer = Trainer::new(&session.runtime, &exec, &data);
+            let mut state = ModelState::init(variant, cfg.seed);
+            trainer.fit(&mut state, &fit_cfg(cfg.train_epochs))?;
+            if cfg.inherit_pruning_rate > 0.0 {
+                state.masks = crate::prune::global_magnitude_masks(
+                    &state,
+                    cfg.inherit_pruning_rate,
+                )?;
+                state.apply_masks()?;
+                trainer.fit(&mut state, &fit_cfg(2))?;
+            }
+            let eval = trainer.evaluate(&state)?;
+            (current_scale, state, eval.accuracy)
+        }
+    };
+
+    Ok((
+        ScaleTrace {
+            base_accuracy,
+            best_scale,
+            best_accuracy: best_acc,
+            probes,
+        },
+        state,
+        best_scale,
+    ))
+}

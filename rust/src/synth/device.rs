@@ -1,0 +1,84 @@
+//! FPGA device database (the parts the paper evaluates on, §V-A).
+
+/// Capacity record for one FPGA part.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaDevice {
+    pub name: &'static str,
+    pub part: &'static str,
+    pub dsp: usize,
+    pub lut: usize,
+    pub ff: usize,
+    pub bram_18k: usize,
+    /// Default clock per the paper: 100 MHz Zynq 7020, 200 MHz U250/VU9P.
+    pub default_clock_mhz: f64,
+}
+
+/// The four parts used across the paper's experiments.
+pub const DEVICES: &[FpgaDevice] = &[
+    FpgaDevice {
+        name: "zynq7020",
+        part: "xc7z020clg400-1",
+        dsp: 220,
+        lut: 53_200,
+        ff: 106_400,
+        bram_18k: 280,
+        default_clock_mhz: 100.0,
+    },
+    FpgaDevice {
+        name: "ku115",
+        part: "xcku115-flvb2104-2-e",
+        dsp: 5_520,
+        lut: 663_360,
+        ff: 1_326_720,
+        bram_18k: 4_320,
+        default_clock_mhz: 200.0,
+    },
+    FpgaDevice {
+        name: "vu9p",
+        part: "xcvu9p-flga2104-2L-e",
+        dsp: 6_840,
+        lut: 1_182_240,
+        ff: 2_364_480,
+        bram_18k: 4_320,
+        default_clock_mhz: 200.0,
+    },
+    FpgaDevice {
+        name: "u250",
+        part: "xcu250-figd2104-2L-e",
+        dsp: 12_288,
+        lut: 1_728_000,
+        ff: 3_456_000,
+        bram_18k: 5_376,
+        default_clock_mhz: 200.0,
+    },
+];
+
+impl FpgaDevice {
+    pub fn by_name(name: &str) -> Option<&'static FpgaDevice> {
+        DEVICES.iter().find(|d| d.name == name || d.part == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name_and_part() {
+        assert_eq!(FpgaDevice::by_name("vu9p").unwrap().dsp, 6_840);
+        assert_eq!(
+            FpgaDevice::by_name("xc7z020clg400-1").unwrap().name,
+            "zynq7020"
+        );
+        assert!(FpgaDevice::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn capacities_ordered() {
+        let z = FpgaDevice::by_name("zynq7020").unwrap();
+        let v = FpgaDevice::by_name("vu9p").unwrap();
+        let u = FpgaDevice::by_name("u250").unwrap();
+        assert!(z.dsp < v.dsp && v.dsp < u.dsp);
+        assert!(z.lut < v.lut && v.lut < u.lut);
+    }
+}

@@ -1,0 +1,223 @@
+//! Whole-design synthesis estimation: HLS IR → resource/latency/power report.
+
+use crate::error::{Error, Result};
+use crate::hls::ir::{HlsLayerKind, HlsModel};
+use crate::synth::cost;
+use crate::synth::device::FpgaDevice;
+
+/// Per-layer usage breakdown.
+#[derive(Debug, Clone)]
+pub struct LayerUsage {
+    pub name: String,
+    pub dsp: f64,
+    pub lut: f64,
+    pub ff: f64,
+    pub bram_18k: f64,
+    pub cycles: usize,
+}
+
+/// The "RTL model": what the VIVADO-HLS λ-task stores in the model space.
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub design: String,
+    pub device: FpgaDevice,
+    pub clock_mhz: f64,
+    pub layers: Vec<LayerUsage>,
+    pub dsp: usize,
+    pub lut: usize,
+    pub ff: usize,
+    pub bram_18k: usize,
+    pub latency_cycles: usize,
+    pub latency_ns: f64,
+    pub dynamic_power_w: f64,
+    /// Initiation interval (II=1 pipeline at RF=1).
+    pub ii: usize,
+}
+
+impl SynthReport {
+    pub fn dsp_pct(&self) -> f64 {
+        100.0 * self.dsp as f64 / self.device.dsp as f64
+    }
+
+    pub fn lut_pct(&self) -> f64 {
+        100.0 * self.lut as f64 / self.device.lut as f64
+    }
+
+    pub fn ff_pct(&self) -> f64 {
+        100.0 * self.ff as f64 / self.device.ff as f64
+    }
+
+    pub fn bram_pct(&self) -> f64 {
+        100.0 * self.bram_18k as f64 / self.device.bram_18k as f64
+    }
+
+    /// Does the design fit the device?
+    pub fn fits(&self) -> bool {
+        self.dsp <= self.device.dsp
+            && self.lut <= self.device.lut
+            && self.ff <= self.device.ff
+            && self.bram_18k <= self.device.bram_18k
+    }
+}
+
+/// Estimate a full HLS design on a device.
+pub fn estimate(model: &HlsModel, device: &FpgaDevice, clock_mhz: f64) -> Result<SynthReport> {
+    if clock_mhz <= 0.0 {
+        return Err(Error::Synth(format!("bad clock {clock_mhz} MHz")));
+    }
+    let mut layers = Vec::new();
+    let (mut dsp, mut lut, mut ff, mut bram) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut cycles = 0usize;
+
+    for l in &model.layers {
+        match l.kind {
+            HlsLayerKind::Dense | HlsLayerKind::Conv2D => {
+                let fan_in = if l.kind == HlsLayerKind::Conv2D {
+                    l.kernel * l.kernel * l.n_in
+                } else {
+                    l.n_in
+                };
+                // reuse factor time-multiplexes the MAC array
+                let mults = (l.multipliers() as f64 / l.reuse_factor as f64).ceil();
+                let l_dsp = mults * cost::dsp_per_mult(l.precision);
+                let mut l_lut = mults * cost::lut_per_mult(l.precision);
+                let n_adds = (l.multipliers()).saturating_sub(l.n_out);
+                l_lut += cost::lut_adder_tree(
+                    (n_adds as f64 / l.reuse_factor as f64).ceil() as usize,
+                    cost::acc_bits(l.precision, fan_in),
+                );
+                let l_ff = cost::ff_estimate(l_lut, l_dsp);
+                // conv line buffers: (kernel-1) rows of (width*channels)
+                let l_bram = if l.kind == HlsLayerKind::Conv2D {
+                    let bits_per_row = l.w * l.n_in * cost::effective_bits(l.precision) as usize;
+                    ((l.kernel.saturating_sub(1) * bits_per_row) as f64 / 18_432.0).ceil()
+                } else {
+                    0.0
+                };
+                let l_cycles = cost::layer_cycles(
+                    l.precision,
+                    fan_in,
+                    l.density(),
+                    l.spatial_iters(),
+                ) * l.reuse_factor;
+                layers.push(LayerUsage {
+                    name: l.name.clone(),
+                    dsp: l_dsp,
+                    lut: l_lut,
+                    ff: l_ff,
+                    bram_18k: l_bram,
+                    cycles: l_cycles,
+                });
+                dsp += l_dsp;
+                lut += l_lut;
+                ff += l_ff;
+                bram += l_bram;
+                cycles += l_cycles;
+            }
+            HlsLayerKind::MaxPool2 => {
+                // comparators: ~1 LUT per bit per output element
+                cycles += 1;
+                lut += 64.0;
+            }
+            HlsLayerKind::ResidualAdd => {
+                cycles += 1;
+                lut += 128.0;
+            }
+            HlsLayerKind::Flatten => {}
+        }
+    }
+    cycles += cost::SOFTMAX_CYCLES;
+
+    let latency_ns = cycles as f64 * 1000.0 / clock_mhz;
+    let power = cost::power_w(dsp, lut, clock_mhz);
+    Ok(SynthReport {
+        design: model.name.clone(),
+        device: *device,
+        clock_mhz,
+        layers,
+        dsp: dsp.round() as usize,
+        lut: lut.round() as usize,
+        ff: ff.round() as usize,
+        bram_18k: bram.round() as usize,
+        latency_cycles: cycles,
+        latency_ns,
+        dynamic_power_w: power,
+        ii: 1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::ir::tests::toy_model;
+    use crate::hls::transform::{HlsTransform, SetPrecision};
+    use crate::model::state::Precision;
+
+    fn vu9p() -> &'static FpgaDevice {
+        FpgaDevice::by_name("vu9p").unwrap()
+    }
+
+    #[test]
+    fn basic_report_fields() {
+        let r = estimate(&toy_model(), vu9p(), 200.0).unwrap();
+        assert!(r.dsp > 0 && r.lut > 0 && r.ff > 0);
+        assert!(r.latency_cycles > 2);
+        assert!((r.latency_ns - r.latency_cycles as f64 * 5.0).abs() < 1e-9);
+        assert!(r.fits());
+        assert!(r.dsp_pct() > 0.0 && r.dsp_pct() < 100.0);
+    }
+
+    #[test]
+    fn pruning_reduces_everything() {
+        let m = toy_model();
+        let full = estimate(&m, vu9p(), 200.0).unwrap();
+        let mut pruned = m.clone();
+        for l in pruned.layers.iter_mut() {
+            l.nnz = l.total_weights / 10;
+        }
+        let r = estimate(&pruned, vu9p(), 200.0).unwrap();
+        assert!(r.dsp < full.dsp);
+        assert!(r.lut < full.lut);
+        assert!(r.latency_cycles <= full.latency_cycles);
+    }
+
+    #[test]
+    fn quantizing_below_threshold_moves_dsp_to_lut() {
+        let mut m = toy_model();
+        let before = estimate(&m, vu9p(), 200.0).unwrap();
+        SetPrecision::all(Precision::new(8, 3)).apply(&mut m).unwrap();
+        let after = estimate(&m, vu9p(), 200.0).unwrap();
+        assert_eq!(after.dsp, 0);
+        assert!(before.dsp > 0);
+        // LUT-fabric multipliers appear
+        assert!(after.lut > 0);
+    }
+
+    #[test]
+    fn clock_scales_latency_ns_not_cycles() {
+        let m = toy_model();
+        let a = estimate(&m, vu9p(), 200.0).unwrap();
+        let b = estimate(&m, vu9p(), 100.0).unwrap();
+        assert_eq!(a.latency_cycles, b.latency_cycles);
+        assert!((b.latency_ns / a.latency_ns - 2.0).abs() < 1e-9);
+        assert!(b.dynamic_power_w < a.dynamic_power_w);
+    }
+
+    #[test]
+    fn reuse_factor_trades_area_for_latency() {
+        let m = toy_model();
+        let rf1 = estimate(&m, vu9p(), 200.0).unwrap();
+        let mut m4 = m.clone();
+        for l in m4.layers.iter_mut() {
+            l.reuse_factor = 4;
+        }
+        let rf4 = estimate(&m4, vu9p(), 200.0).unwrap();
+        assert!(rf4.dsp < rf1.dsp);
+        assert!(rf4.latency_cycles > rf1.latency_cycles);
+    }
+
+    #[test]
+    fn rejects_bad_clock() {
+        assert!(estimate(&toy_model(), vu9p(), 0.0).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! FPGA synthesis estimator (the Vivado HLS / place&route substitute).
+//!
+//! The paper's VIVADO-HLS λ-task consumes an HLS C++ project and produces
+//! tool reports: resource utilization (DSP/LUT/FF/BRAM), latency and
+//! power.  Offline we replace the tool with an analytical model of
+//! hls4ml-style fully-unrolled (RF=1, io_parallel) designs, calibrated so
+//! the paper's Table II magnitudes and trends hold (see DESIGN.md §1).
+//!
+//! The model captures exactly the effects the paper's O-tasks exploit:
+//! * pruning ⇒ zero weights fold away ⇒ fewer multipliers/adders;
+//! * quantization ⇒ below-threshold multiplies move from DSP to LUT
+//!   fabric and shrink with bit-width;
+//! * scaling ⇒ smaller layers ⇒ everything shrinks, latency drops with
+//!   log2(fan-in).
+
+pub mod cost;
+pub mod device;
+pub mod estimate;
+pub mod report;
+
+pub use device::{FpgaDevice, DEVICES};
+pub use estimate::{estimate, LayerUsage, SynthReport};

@@ -1,0 +1,63 @@
+//! Text rendering of synthesis reports (the "tool report" supporting file).
+
+use crate::synth::estimate::SynthReport;
+
+/// Render a Vivado-HLS-style utilization report.
+pub fn render(r: &SynthReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== Synthesis report: {} on {} ({}) @ {:.0} MHz ==\n",
+        r.design, r.device.name, r.device.part, r.clock_mhz
+    ));
+    out.push_str(&format!(
+        "latency: {} cycles = {:.1} ns   II = {}   dynamic power: {:.3} W\n",
+        r.latency_cycles, r.latency_ns, r.ii, r.dynamic_power_w
+    ));
+    out.push_str("\n| resource | used | available | util % |\n");
+    out.push_str("|----------|------|-----------|--------|\n");
+    out.push_str(&format!(
+        "| DSP48    | {:>8} | {:>9} | {:>6.2} |\n",
+        r.dsp, r.device.dsp, r.dsp_pct()
+    ));
+    out.push_str(&format!(
+        "| LUT      | {:>8} | {:>9} | {:>6.2} |\n",
+        r.lut, r.device.lut, r.lut_pct()
+    ));
+    out.push_str(&format!(
+        "| FF       | {:>8} | {:>9} | {:>6.2} |\n",
+        r.ff, r.device.ff, r.ff_pct()
+    ));
+    out.push_str(&format!(
+        "| BRAM18K  | {:>8} | {:>9} | {:>6.2} |\n",
+        r.bram_18k, r.device.bram_18k, r.bram_pct()
+    ));
+    out.push_str(&format!(
+        "\nfits device: {}\n\nper-layer:\n",
+        if r.fits() { "YES" } else { "NO" }
+    ));
+    for l in &r.layers {
+        out.push_str(&format!(
+            "  {:<10} dsp {:>8.1} lut {:>10.1} ff {:>10.1} bram {:>5.1} cycles {:>4}\n",
+            l.name, l.dsp, l.lut, l.ff, l.bram_18k, l.cycles
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::ir::tests::toy_model;
+    use crate::synth::device::FpgaDevice;
+    use crate::synth::estimate::estimate;
+
+    #[test]
+    fn renders_all_sections() {
+        let r = estimate(&toy_model(), FpgaDevice::by_name("vu9p").unwrap(), 200.0).unwrap();
+        let text = render(&r);
+        assert!(text.contains("DSP48"));
+        assert!(text.contains("fits device: YES"));
+        assert!(text.contains("fc1"));
+        assert!(text.contains("dynamic power"));
+    }
+}

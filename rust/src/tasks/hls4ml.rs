@@ -1,0 +1,80 @@
+//! HLS4ML λ-task: translate the DNN model into an HLS C++ model (Table I).
+
+use crate::error::Result;
+use crate::flow::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};
+use crate::hls::{codegen, HlsModel, IoType};
+use crate::metamodel::ModelPayload;
+
+pub struct Hls4mlTask;
+
+impl PipeTask for Hls4mlTask {
+    fn name(&self) -> &str {
+        "HLS4ML"
+    }
+
+    fn role(&self) -> TaskRole {
+        TaskRole::Lambda
+    }
+
+    fn multiplicity(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "default_precision", description: "datapath type for unquantized layers", default: Some("ap_fixed<18,8>") },
+            ParamSpec { name: "IOType", description: "io_parallel | io_stream", default: Some("io_parallel") },
+            ParamSpec { name: "FPGA_part_number", description: "target device (name or part)", default: Some("vu9p") },
+            ParamSpec { name: "clock_period", description: "target clock period (ns)", default: Some("5.0") },
+            ParamSpec { name: "test_dataset", description: "dataset for co-simulation", default: Some("per-model") },
+        ]
+    }
+
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome> {
+        let input = super::util::latest_dnn(ctx)?;
+        let state = input.dnn()?;
+        let variant = ctx.session.manifest.get(&state.tag)?.clone();
+
+        let precision = super::util::parse_precision(
+            &ctx.cfg_str("default_precision", "ap_fixed<18,8>"),
+        )?;
+        let io_type = match ctx.cfg_str("IOType", "io_parallel").as_str() {
+            "io_stream" => IoType::Stream,
+            _ => IoType::Parallel,
+        };
+        let part = ctx.cfg_str("FPGA_part_number", "vu9p");
+        let clock_ns = ctx.cfg_f64("clock_period", 5.0);
+
+        let hls =
+            HlsModel::from_dnn(&variant, state, precision, io_type, &part, clock_ns)?;
+        let mults = hls.total_multipliers();
+        ctx.log_metric("multipliers", mults as f64);
+        ctx.log_message(format!(
+            "translated {} to HLS: {} layers, {} multipliers, {} @ {} ns",
+            variant.tag,
+            hls.layers.len(),
+            mults,
+            io_type,
+            clock_ns
+        ));
+
+        let files = codegen::emit(&hls);
+        let id = ctx.meta.space.store(
+            format!("{}_hls", variant.tag),
+            ctx.instance.clone(),
+            Some(input.id),
+            ModelPayload::Hls(hls),
+        );
+        for (name, content) in files {
+            ctx.meta.space.add_supporting(id, name, content)?;
+        }
+        // carry the DNN metrics forward for reporting
+        for key in ["accuracy", "pruning_rate", "scale", "bits_total"] {
+            if let Some(v) = input.metric(key) {
+                ctx.meta.space.set_metric(id, key, v)?;
+            }
+        }
+        ctx.meta.space.set_metric(id, "multipliers", mults as f64)?;
+        Ok(TaskOutcome::produced([id]))
+    }
+}

@@ -1,0 +1,78 @@
+//! The reusable pipe-task library (paper §IV, Table I).
+//!
+//! O-tasks (optimization): [PruningTask], [ScalingTask], [QuantizationTask].
+//! λ-tasks (transformation): [ModelGenTask] (KERAS-MODEL-GEN), [Hls4mlTask],
+//! [VivadoHlsTask].
+//!
+//! Tasks are stateless; all state lives in the meta-model, all heavy
+//! compute in the session's AOT executables.
+
+mod hls4ml;
+mod model_gen;
+mod pruning;
+mod quantization;
+mod scaling;
+mod vivado_hls;
+
+pub use hls4ml::Hls4mlTask;
+pub use model_gen::ModelGenTask;
+pub use pruning::PruningTask;
+pub use quantization::QuantizationTask;
+pub use scaling::ScalingTask;
+pub use vivado_hls::VivadoHlsTask;
+
+pub(crate) mod util {
+    use crate::error::{Error, Result};
+    use crate::flow::TaskCtx;
+    use crate::metamodel::{Abstraction, ModelArtifact};
+    use crate::model::state::Precision;
+
+    /// Latest DNN artifact in the model space (most tasks' input).
+    pub fn latest_dnn(ctx: &TaskCtx) -> Result<ModelArtifact> {
+        ctx.meta
+            .space
+            .latest(Abstraction::Dnn)
+            .cloned()
+            .ok_or_else(|| Error::other("no DNN model in the model space"))
+    }
+
+    /// Parse "ap_fixed<18,8>" / "float" into a Precision.
+    pub fn parse_precision(s: &str) -> Result<Precision> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("float") || s.eq_ignore_ascii_case("none") {
+            return Ok(Precision::DISABLED);
+        }
+        let inner = s
+            .strip_prefix("ap_fixed<")
+            .and_then(|r| r.strip_suffix('>'))
+            .ok_or_else(|| Error::Config(format!("bad precision spec {s:?}")))?;
+        let mut parts = inner.split(',');
+        let total: u32 = parts
+            .next()
+            .and_then(|p| p.trim().parse().ok())
+            .ok_or_else(|| Error::Config(format!("bad precision spec {s:?}")))?;
+        let int: u32 = parts
+            .next()
+            .and_then(|p| p.trim().parse().ok())
+            .ok_or_else(|| Error::Config(format!("bad precision spec {s:?}")))?;
+        if parts.next().is_some() || int > total || total == 0 {
+            return Err(Error::Config(format!("bad precision spec {s:?}")));
+        }
+        Ok(Precision::new(total, int))
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn parses_ap_fixed() {
+            let p = parse_precision("ap_fixed<18,8>").unwrap();
+            assert_eq!((p.total_bits, p.int_bits), (18, 8));
+            assert_eq!(parse_precision("float").unwrap(), Precision::DISABLED);
+            assert!(parse_precision("ap_fixed<8>").is_err());
+            assert!(parse_precision("ap_fixed<4,8>").is_err());
+            assert!(parse_precision("garbage").is_err());
+        }
+    }
+}

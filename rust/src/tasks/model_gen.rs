@@ -1,0 +1,85 @@
+//! KERAS-MODEL-GEN λ-task: produce (and optionally train) the initial DNN.
+//!
+//! Table I: multiplicity 0-to-1; parameters train_en, train_test_dataset,
+//! train_epochs.  Our training runs through the AOT train executable, and
+//! the dataset is the model family's synthetic substitute (DESIGN.md §1).
+
+use crate::error::Result;
+use crate::flow::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};
+use crate::metamodel::ModelPayload;
+use crate::model::ModelState;
+use crate::train::{TrainConfig, Trainer};
+
+pub struct ModelGenTask;
+
+impl PipeTask for ModelGenTask {
+    fn name(&self) -> &str {
+        "KERAS-MODEL-GEN"
+    }
+
+    fn role(&self) -> TaskRole {
+        TaskRole::Lambda
+    }
+
+    fn multiplicity(&self) -> (usize, usize) {
+        (0, 1)
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "model", description: "model family to generate", default: Some("jet_dnn") },
+            ParamSpec { name: "scale", description: "initial layer-size scale", default: Some("1.0") },
+            ParamSpec { name: "train_en", description: "train after generation", default: Some("true") },
+            ParamSpec { name: "train_test_dataset", description: "dataset name (synthetic substitute)", default: Some("per-model") },
+            ParamSpec { name: "train_epochs", description: "training epochs", default: Some("per-model") },
+            ParamSpec { name: "seed", description: "init + shuffle seed", default: Some("7") },
+        ]
+    }
+
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome> {
+        let model = ctx.cfg_str("model", "jet_dnn");
+        let scale = ctx.cfg_f64("scale", 1.0);
+        let train_en = ctx.cfg_bool("train_en", true);
+        let seed = ctx.cfg_usize("seed", 7) as u64;
+
+        let variant = ctx.session.manifest.variant(&model, scale)?.clone();
+        let mut cfg = TrainConfig::for_model(&model);
+        cfg.epochs = ctx.cfg_usize("train_epochs", cfg.epochs);
+        cfg.seed = seed;
+
+        let mut state = ModelState::init(&variant, seed);
+        let exec = ctx.session.executable(&variant.tag)?;
+        let data = ctx.session.dataset(&model)?;
+        let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
+
+        if train_en {
+            ctx.log_message(format!(
+                "training {} for {} epochs on {}",
+                variant.tag, cfg.epochs, data.spec.name
+            ));
+            trainer.fit(&mut state, &cfg)?;
+        }
+        let eval = trainer.evaluate(&state)?;
+        ctx.log_metric("accuracy", eval.accuracy);
+        ctx.log_metric("loss", eval.loss);
+
+        let id = ctx.meta.space.store(
+            format!("{}_base", variant.tag),
+            ctx.instance.clone(),
+            None,
+            ModelPayload::Dnn(state),
+        );
+        ctx.meta.space.set_metric(id, "accuracy", eval.accuracy)?;
+        ctx.meta.space.set_metric(id, "loss", eval.loss)?;
+        ctx.meta.space.set_metric(id, "scale", scale)?;
+        ctx.meta
+            .space
+            .set_metric(id, "params", variant.total_weights() as f64)?;
+        ctx.meta.log.push(crate::metamodel::LogEvent::ModelStored {
+            task: ctx.instance.clone(),
+            model_id: id,
+            abstraction: "DNN".into(),
+        });
+        Ok(TaskOutcome::produced([id]))
+    }
+}

@@ -1,0 +1,80 @@
+//! PRUNING O-task: auto-pruning by binary search (Table I; §V-B, Fig 3).
+
+use crate::error::Result;
+use crate::flow::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};
+use crate::metamodel::ModelPayload;
+use crate::prune::{autoprune, AutopruneConfig};
+use crate::train::Trainer;
+
+pub struct PruningTask;
+
+impl PipeTask for PruningTask {
+    fn name(&self) -> &str {
+        "PRUNING"
+    }
+
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+
+    fn multiplicity(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "tolerate_acc_loss", description: "α_p: accepted accuracy drop", default: Some("0.02") },
+            ParamSpec { name: "pruning_rate_thresh", description: "β_p: binary-search stop width", default: Some("0.02") },
+            ParamSpec { name: "train_test_dataset", description: "dataset (synthetic substitute)", default: Some("per-model") },
+            ParamSpec { name: "train_epochs", description: "fine-tune epochs per probe", default: Some("2") },
+        ]
+    }
+
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome> {
+        let input = super::util::latest_dnn(ctx)?;
+        let mut state = input.dnn()?.clone();
+        let variant = ctx.session.manifest.get(&state.tag)?.clone();
+
+        let cfg = AutopruneConfig {
+            tolerate_acc_loss: ctx.cfg_f64("tolerate_acc_loss", 0.02),
+            rate_threshold: ctx.cfg_f64("pruning_rate_thresh", 0.02),
+            train_epochs: ctx.cfg_usize("train_epochs", 2),
+            seed: ctx.cfg_usize("seed", 23) as u64,
+        };
+
+        let exec = ctx.session.executable(&variant.tag)?;
+        let data = ctx.session.dataset(&variant.model)?;
+        let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
+
+        let trace = autoprune(&trainer, &mut state, &cfg)?;
+        for p in &trace.probes {
+            ctx.log_metric("probe_rate", p.rate);
+            ctx.log_metric("probe_accuracy", p.accuracy);
+            ctx.log_metric("probe_accepted", if p.accepted { 1.0 } else { 0.0 });
+        }
+        ctx.log_metric("pruning_rate", trace.best_rate);
+        ctx.log_metric("accuracy", trace.best_accuracy);
+        ctx.log_message(format!(
+            "auto-pruning: rate {:.1}% (base acc {:.4} -> {:.4}, {} probes)",
+            100.0 * trace.best_rate,
+            trace.base_accuracy,
+            trace.best_accuracy,
+            trace.probes.len()
+        ));
+
+        let nnz = state.nonzero_weights() as f64;
+        let id = ctx.meta.space.store(
+            format!("{}_pruned", variant.tag),
+            ctx.instance.clone(),
+            Some(input.id),
+            ModelPayload::Dnn(state),
+        );
+        ctx.meta.space.set_metric(id, "accuracy", trace.best_accuracy)?;
+        ctx.meta.space.set_metric(id, "pruning_rate", trace.best_rate)?;
+        ctx.meta.space.set_metric(id, "nonzero_weights", nnz)?;
+        ctx.meta
+            .space
+            .set_metric(id, "scale", input.metric("scale").unwrap_or(1.0))?;
+        Ok(TaskOutcome::produced([id]))
+    }
+}

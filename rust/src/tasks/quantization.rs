@@ -1,0 +1,138 @@
+//! QUANTIZATION O-task: HLS-level mixed-precision search (Table I; §V-B).
+//!
+//! In the paper this task rewrites `ap_fixed` types in the generated HLS
+//! C++ via Artisan source-to-source transforms and validates accuracy by
+//! co-simulation.  Here: the search runs against the AOT eval executable
+//! (bit-exact ap_fixed emulation in the fused Pallas kernel), and the
+//! chosen per-layer precisions are instrumented into the HLS model via
+//! the SetPrecision pass, re-emitting the C++ supporting files.
+//!
+//! When no HLS model exists yet (order-ablation flows that quantize at
+//! the DNN level), the task degrades gracefully and only updates the DNN
+//! state's precisions.
+
+use crate::error::Result;
+use crate::flow::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};
+use crate::hls::{codegen, HlsTransform, SetPrecision};
+use crate::metamodel::{Abstraction, ModelPayload};
+use crate::quant::{quantize_search, QuantConfig};
+use crate::train::Trainer;
+
+pub struct QuantizationTask;
+
+impl PipeTask for QuantizationTask {
+    fn name(&self) -> &str {
+        "QUANTIZATION"
+    }
+
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+
+    fn multiplicity(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "tolerate_acc_loss", description: "α_q: accepted accuracy drop", default: Some("0.01") },
+            ParamSpec { name: "start_precision", description: "starting ap_fixed type", default: Some("ap_fixed<18,8>") },
+            ParamSpec { name: "min_bits", description: "floor on per-layer total bits", default: Some("2") },
+            ParamSpec { name: "train_test_dataset", description: "dataset (synthetic substitute)", default: Some("per-model") },
+        ]
+    }
+
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome> {
+        let input = super::util::latest_dnn(ctx)?;
+        let mut state = input.dnn()?.clone();
+        let variant = ctx.session.manifest.get(&state.tag)?.clone();
+
+        let cfg = QuantConfig {
+            tolerate_acc_loss: ctx.cfg_f64("tolerate_acc_loss", 0.01),
+            start: super::util::parse_precision(
+                &ctx.cfg_str("start_precision", "ap_fixed<18,8>"),
+            )?,
+            min_bits: ctx.cfg_usize("min_bits", 2) as u32,
+        };
+
+        let exec = ctx.session.executable(&variant.tag)?;
+        let data = ctx.session.dataset(&variant.model)?;
+        let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
+
+        let trace = quantize_search(&trainer, &mut state, &cfg)?;
+        for p in &trace.probes {
+            ctx.log_metric("probe_layer", p.layer as f64);
+            ctx.log_metric("probe_bits", p.tried.total_bits as f64);
+            ctx.log_metric("probe_accuracy", p.accuracy);
+        }
+        ctx.log_metric("accuracy", trace.final_accuracy);
+        ctx.log_metric("bits_total", trace.bits_after as f64);
+        ctx.log_message(format!(
+            "quantization: {} -> {} total bits (acc {:.4} -> {:.4}); per-layer {}",
+            trace.bits_before,
+            trace.bits_after,
+            trace.base_accuracy,
+            trace.final_accuracy,
+            state
+                .precisions
+                .iter()
+                .map(|p| p.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+
+        // store the quantized DNN
+        let dnn_id = ctx.meta.space.store(
+            format!("{}_quantized", variant.tag),
+            ctx.instance.clone(),
+            Some(input.id),
+            ModelPayload::Dnn(state.clone()),
+        );
+        ctx.meta.space.set_metric(dnn_id, "accuracy", trace.final_accuracy)?;
+        ctx.meta.space.set_metric(dnn_id, "bits_total", trace.bits_after as f64)?;
+        ctx.meta
+            .space
+            .set_metric(dnn_id, "scale", input.metric("scale").unwrap_or(1.0))?;
+        if let Some(r) = input.metric("pruning_rate") {
+            ctx.meta.space.set_metric(dnn_id, "pruning_rate", r)?;
+        }
+        let mut produced = vec![dnn_id];
+
+        // instrument the precisions into the HLS model, if one exists
+        if let Some(hls_art) = ctx.meta.space.latest(Abstraction::HlsCpp).cloned() {
+            let mut hls = hls_art.hls()?.clone();
+            let idxs = hls.compute_layer_indices();
+            for (layer_i, &ir_i) in idxs.iter().enumerate() {
+                if layer_i < state.precisions.len() {
+                    let name = hls.layers[ir_i].name.clone();
+                    SetPrecision::layer(name, state.precisions[layer_i])
+                        .apply(&mut hls)?;
+                }
+            }
+            let files = codegen::emit(&hls);
+            let hls_id = ctx.meta.space.store(
+                format!("{}_quantized_hls", variant.tag),
+                ctx.instance.clone(),
+                Some(hls_art.id),
+                ModelPayload::Hls(hls),
+            );
+            for (name, content) in files {
+                ctx.meta.space.add_supporting(hls_id, name, content)?;
+            }
+            ctx.meta
+                .space
+                .set_metric(hls_id, "accuracy", trace.final_accuracy)?;
+            ctx.meta
+                .space
+                .set_metric(hls_id, "bits_total", trace.bits_after as f64)?;
+            // carry search-provenance metrics so the final RTL row has them
+            for key in ["pruning_rate", "scale"] {
+                if let Some(v) = ctx.meta.space.get(dnn_id)?.metric(key) {
+                    ctx.meta.space.set_metric(hls_id, key, v)?;
+                }
+            }
+            produced.push(hls_id);
+        }
+        Ok(TaskOutcome::produced(produced))
+    }
+}

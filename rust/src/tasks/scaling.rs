@@ -1,0 +1,97 @@
+//! SCALING O-task: automatic layer-size reduction (Table I; §V-B).
+
+use crate::error::Result;
+use crate::flow::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};
+use crate::metamodel::ModelPayload;
+use crate::scale::{scale_search, ScaleConfig};
+
+pub struct ScalingTask;
+
+impl PipeTask for ScalingTask {
+    fn name(&self) -> &str {
+        "SCALING"
+    }
+
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+
+    fn multiplicity(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "default_scale_factor", description: "scale applied when auto off", default: Some("0.5") },
+            ParamSpec { name: "tolerate_acc_loss", description: "α_s: accepted accuracy drop", default: Some("0.0005") },
+            ParamSpec { name: "scale_auto", description: "walk the scale grid automatically", default: Some("true") },
+            ParamSpec { name: "max_trials_num", description: "bound on candidate trials", default: Some("8") },
+            ParamSpec { name: "train_test_dataset", description: "dataset (synthetic substitute)", default: Some("per-model") },
+            ParamSpec { name: "train_epochs", description: "training epochs per trial", default: Some("4") },
+        ]
+    }
+
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome> {
+        let input = super::util::latest_dnn(ctx)?;
+        let in_state = input.dnn()?;
+        let variant = ctx.session.manifest.get(&in_state.tag)?.clone();
+        let base_acc = match input.metric("accuracy") {
+            Some(a) => a,
+            None => {
+                let exec = ctx.session.executable(&variant.tag)?;
+                let data = ctx.session.dataset(&variant.model)?;
+                let trainer =
+                    crate::train::Trainer::new(&ctx.session.runtime, &exec, &data);
+                trainer.evaluate(in_state)?.accuracy
+            }
+        };
+
+        let cfg = ScaleConfig {
+            tolerate_acc_loss: ctx.cfg_f64("tolerate_acc_loss", 0.0005),
+            default_scale_factor: ctx.cfg_f64("default_scale_factor", 0.5),
+            auto: ctx.cfg_bool("scale_auto", true),
+            max_trials: ctx.cfg_usize("max_trials_num", 8),
+            train_epochs: ctx.cfg_usize("train_epochs", 4),
+            seed: ctx.cfg_usize("seed", 29) as u64,
+            // when an upstream PRUNING task already pruned the model, the
+            // scaled candidates must carry that structure (Fig 5b)
+            inherit_pruning_rate: input.metric("pruning_rate").unwrap_or(0.0),
+        };
+
+        let (trace, state, new_scale) =
+            scale_search(ctx.session, &variant.model, variant.scale, base_acc, &cfg)?;
+        for p in &trace.probes {
+            ctx.log_metric("probe_scale", p.scale);
+            ctx.log_metric("probe_accuracy", p.accuracy);
+            ctx.log_metric("probe_params", p.params as f64);
+        }
+        ctx.log_metric("scale", new_scale);
+        ctx.log_metric("accuracy", trace.best_accuracy);
+        ctx.log_message(format!(
+            "scaling: {} -> {} (acc {:.4} -> {:.4}, {} trials)",
+            variant.scale,
+            new_scale,
+            trace.base_accuracy,
+            trace.best_accuracy,
+            trace.probes.len()
+        ));
+
+        let new_variant = ctx.session.manifest.variant(&variant.model, new_scale)?;
+        let params = new_variant.total_weights() as f64;
+        let id = ctx.meta.space.store(
+            format!("{}_scaled", new_variant.tag),
+            ctx.instance.clone(),
+            Some(input.id),
+            ModelPayload::Dnn(state),
+        );
+        ctx.meta.space.set_metric(id, "accuracy", trace.best_accuracy)?;
+        ctx.meta.space.set_metric(id, "scale", new_scale)?;
+        ctx.meta.space.set_metric(id, "params", params)?;
+        if cfg.inherit_pruning_rate > 0.0 {
+            ctx.meta
+                .space
+                .set_metric(id, "pruning_rate", cfg.inherit_pruning_rate)?;
+        }
+        Ok(TaskOutcome::produced([id]))
+    }
+}

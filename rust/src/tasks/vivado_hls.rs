@@ -1,0 +1,98 @@
+//! VIVADO-HLS λ-task: synthesize the HLS model into an RTL report (Table I).
+
+use crate::error::{Error, Result};
+use crate::flow::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};
+use crate::metamodel::{Abstraction, ModelPayload};
+use crate::synth::{self, FpgaDevice};
+
+pub struct VivadoHlsTask;
+
+impl PipeTask for VivadoHlsTask {
+    fn name(&self) -> &str {
+        "VIVADO-HLS"
+    }
+
+    fn role(&self) -> TaskRole {
+        TaskRole::Lambda
+    }
+
+    fn multiplicity(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![ParamSpec {
+            name: "project_dir",
+            description: "HLS project directory (report naming only)",
+            default: Some("metaml_prj"),
+        }]
+    }
+
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome> {
+        let input = ctx
+            .meta
+            .space
+            .latest(Abstraction::HlsCpp)
+            .cloned()
+            .ok_or_else(|| Error::other("no HLS model in the model space"))?;
+        let hls = input.hls()?.clone();
+
+        let device = FpgaDevice::by_name(&hls.fpga_part)
+            .ok_or_else(|| Error::Synth(format!("unknown device {}", hls.fpga_part)))?;
+        let clock_mhz = 1000.0 / hls.clock_period_ns;
+        let report = synth::estimate(&hls, device, clock_mhz)?;
+
+        ctx.log_metric("dsp", report.dsp as f64);
+        ctx.log_metric("lut", report.lut as f64);
+        ctx.log_metric("ff", report.ff as f64);
+        ctx.log_metric("bram", report.bram_18k as f64);
+        ctx.log_metric("latency_cycles", report.latency_cycles as f64);
+        ctx.log_metric("latency_ns", report.latency_ns);
+        ctx.log_metric("power_w", report.dynamic_power_w);
+        ctx.log_message(format!(
+            "synthesized {}: {} DSP ({:.1}%), {} LUT ({:.1}%), {} cycles = {:.0} ns, {}",
+            report.design,
+            report.dsp,
+            report.dsp_pct(),
+            report.lut,
+            report.lut_pct(),
+            report.latency_cycles,
+            report.latency_ns,
+            if report.fits() { "fits" } else { "DOES NOT FIT" },
+        ));
+
+        let text = synth::report::render(&report);
+        let metrics: Vec<(&str, f64)> = vec![
+            ("dsp", report.dsp as f64),
+            ("dsp_pct", report.dsp_pct()),
+            ("lut", report.lut as f64),
+            ("lut_pct", report.lut_pct()),
+            ("ff", report.ff as f64),
+            ("ff_pct", report.ff_pct()),
+            ("bram", report.bram_18k as f64),
+            ("bram_pct", report.bram_pct()),
+            ("latency_cycles", report.latency_cycles as f64),
+            ("latency_ns", report.latency_ns),
+            ("power_w", report.dynamic_power_w),
+            ("fits", if report.fits() { 1.0 } else { 0.0 }),
+        ];
+        let id = ctx.meta.space.store(
+            format!("{}_rtl", hls.name),
+            ctx.instance.clone(),
+            Some(input.id),
+            ModelPayload::Rtl(report),
+        );
+        ctx.meta.space.add_supporting(id, "csynth.rpt", text)?;
+        for (k, v) in metrics {
+            ctx.meta.space.set_metric(id, k, v)?;
+        }
+        // carry model-quality metrics forward so the RTL artifact is the
+        // single row source for Table II
+        for key in ["accuracy", "pruning_rate", "scale", "bits_total"] {
+            if let Some(v) = input.metric(key) {
+                ctx.meta.space.set_metric(id, key, v)?;
+            }
+        }
+        Ok(TaskOutcome::produced([id]))
+    }
+}

@@ -1,0 +1,68 @@
+//! Mini property-testing helper (proptest is not in the offline crate
+//! set).  Runs a closure against N seeded random cases via the crate's
+//! own deterministic [crate::util::Prng]; failures report the seed so a
+//! case can be replayed by construction.
+//!
+//! ```
+//! metaml::testutil::check(100, |rng| {
+//!     let n = 1 + rng.below(40);
+//!     /* build a case, assert an invariant, or return Err(msg) */
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::Prng;
+
+/// Run `prop` against `cases` seeded random cases; panics with the seed
+/// of the first failing case.
+pub fn check<F>(cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Prng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |rng| {
+            let x = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_case() {
+        check(10, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 5, "x = {x}");
+            Ok(())
+        });
+    }
+}

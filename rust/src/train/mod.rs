@@ -1,0 +1,5 @@
+//! Training driver: SGD loop over AOT train/eval executables.
+
+pub mod trainer;
+
+pub use trainer::{EvalResult, TrainConfig, Trainer};

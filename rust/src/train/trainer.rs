@@ -1,0 +1,221 @@
+//! SGD training loop over the PJRT executables.
+//!
+//! Matches the Keras fit/evaluate surface the paper's O-tasks rely on:
+//! `fit(state, epochs)` and `evaluate(state)`, with cosine-decayed lr and
+//! deterministic shuffling.  The loop never allocates per step beyond the
+//! literal marshaling (profiled in benches/perf_runtime.rs).
+
+use crate::data::{Batcher, Dataset};
+use crate::error::Result;
+use crate::model::ModelState;
+use crate::runtime::{HostTensor, ModelExecutable, Runtime};
+
+/// Hyper-parameters for a fit() call.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub base_lr: f32,
+    pub min_lr: f32,
+    pub seed: u64,
+    /// Print a line per epoch when true (flows log through the metamodel).
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 5, base_lr: 0.5, min_lr: 0.02, seed: 17, verbose: false }
+    }
+}
+
+impl TrainConfig {
+    /// Per-model defaults (CNNs need gentler SGD than the jet MLP).
+    pub fn for_model(model: &str) -> Self {
+        match model {
+            "vgg7_mini" => TrainConfig {
+                epochs: 8,
+                base_lr: 0.12,
+                min_lr: 0.01,
+                ..Default::default()
+            },
+            "resnet9_mini" => TrainConfig {
+                epochs: 8,
+                base_lr: 0.06,
+                min_lr: 0.005,
+                ..Default::default()
+            },
+            _ => TrainConfig { epochs: 6, ..Default::default() },
+        }
+    }
+}
+
+/// Aggregated evaluation over the full test split.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Binds a runtime + compiled variant + dataset into a Keras-like trainer.
+pub struct Trainer<'a> {
+    pub runtime: &'a Runtime,
+    pub exec: &'a ModelExecutable,
+    pub data: &'a Dataset,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(runtime: &'a Runtime, exec: &'a ModelExecutable, data: &'a Dataset) -> Self {
+        Trainer { runtime, exec, data }
+    }
+
+    /// Cosine lr schedule over the whole fit() horizon.
+    fn lr_at(cfg: &TrainConfig, step: usize, total: usize) -> f32 {
+        if total <= 1 {
+            return cfg.base_lr;
+        }
+        let t = step as f32 / (total - 1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        cfg.min_lr + (cfg.base_lr - cfg.min_lr) * cos
+    }
+
+    /// SGD-train `state` in place; returns final (train_loss, train_acc).
+    ///
+    /// Hot-path note (§Perf L3): the step loop works on xla Literals
+    /// directly — masks/qcfg are marshaled once, parameters flow from one
+    /// step's output tuple into the next step's inputs without host
+    /// round-trips; per-step host work is the batch upload + two scalars.
+    pub fn fit(&self, state: &mut ModelState, cfg: &TrainConfig) -> Result<(f32, f32)> {
+        let batch = self.exec.variant.train_batch;
+        let mut batcher = Batcher::new(self.data, batch, cfg.seed);
+        let steps_per_epoch = batcher.steps_per_epoch().max(1);
+        let total = steps_per_epoch * cfg.epochs;
+        let n_params = state.params.len();
+
+        // constant operands: marshal exactly once
+        let mut params: Vec<xla::Literal> = state
+            .params
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let consts: Vec<xla::Literal> = state
+            .masks
+            .iter()
+            .cloned()
+            .chain([state.qcfg_tensor()])
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut last = (0.0f32, 0.0f32);
+        let mut step = 0usize;
+        for epoch in 0..cfg.epochs {
+            let mut ep_loss = 0.0f64;
+            let mut ep_acc = 0.0f64;
+            for _ in 0..steps_per_epoch {
+                let (x, y) = batcher.next_batch()?;
+                let lr = Self::lr_at(cfg, step, total);
+                let x_lit = x.to_literal()?;
+                let y_lit = y.to_literal()?;
+                let lr_lit = HostTensor::scalar(lr).to_literal()?;
+                // args = params ++ masks ++ qcfg ++ [x, y, lr], all borrowed
+                // (execute takes Borrow<Literal>, so constants are never
+                // copied and parameters never leave the literal domain)
+                let mut args: Vec<&xla::Literal> =
+                    Vec::with_capacity(n_params + consts.len() + 3);
+                args.extend(params.iter());
+                args.extend(consts.iter());
+                args.push(&x_lit);
+                args.push(&y_lit);
+                args.push(&lr_lit);
+
+                let mut out =
+                    self.runtime.execute_literals_ref(self.exec.train_exe(), &args)?;
+                let acc = HostTensor::from_literal(&out[n_params + 1])?.scalar_f32()?;
+                let loss = HostTensor::from_literal(&out[n_params])?.scalar_f32()?;
+                out.truncate(n_params);
+                params = out;
+                ep_loss += loss as f64;
+                ep_acc += acc as f64;
+                last = (loss, acc);
+                step += 1;
+            }
+            if cfg.verbose {
+                println!(
+                    "    epoch {:>2}: loss {:.4} acc {:.4}",
+                    epoch + 1,
+                    ep_loss / steps_per_epoch as f64,
+                    ep_acc / steps_per_epoch as f64
+                );
+            }
+        }
+        // write the final parameters back into the model state
+        state.params = params
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(last)
+    }
+
+    /// Evaluate on the full test split (tail batch padded, weighted by
+    /// valid count — padding rows are repeats and slightly bias the tail
+    /// batch, bounded by batch/n_test; acceptable for trend experiments).
+    ///
+    /// Same literal-borrowing hot path as fit(): model operands are
+    /// marshaled once per evaluate() call, not once per batch — the
+    /// quantization search calls this hundreds of times (§Perf L3).
+    pub fn evaluate(&self, state: &ModelState) -> Result<EvalResult> {
+        let batch = self.exec.variant.eval_batch;
+        let consts: Vec<xla::Literal> = state
+            .params
+            .iter()
+            .chain(state.masks.iter())
+            .cloned()
+            .chain([state.qcfg_tensor()])
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut n = 0usize;
+        for (x, y, valid) in self.data.test_batches(batch)? {
+            let x_lit = x.to_literal()?;
+            let y_lit = y.to_literal()?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(consts.len() + 2);
+            args.extend(consts.iter());
+            args.push(&x_lit);
+            args.push(&y_lit);
+            let out = self
+                .runtime
+                .execute_literals_ref(self.exec.eval_exe(), &args)?;
+            let loss = HostTensor::from_literal(&out[0])?.scalar_f32()?;
+            let acc = HostTensor::from_literal(&out[1])?.scalar_f32()?;
+            loss_sum += loss as f64 * valid as f64;
+            acc_sum += acc as f64 * valid as f64;
+            n += valid;
+        }
+        Ok(EvalResult {
+            loss: loss_sum / n.max(1) as f64,
+            accuracy: acc_sum / n.max(1) as f64,
+            n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_endpoints() {
+        let cfg = TrainConfig { base_lr: 1.0, min_lr: 0.1, ..Default::default() };
+        assert!((Trainer::lr_at(&cfg, 0, 100) - 1.0).abs() < 1e-6);
+        assert!((Trainer::lr_at(&cfg, 99, 100) - 0.1).abs() < 1e-6);
+        let mid = Trainer::lr_at(&cfg, 50, 100);
+        assert!(mid < 1.0 && mid > 0.1);
+        // monotone non-increasing
+        let mut prev = f32::MAX;
+        for s in 0..100 {
+            let lr = Trainer::lr_at(&cfg, s, 100);
+            assert!(lr <= prev + 1e-6);
+            prev = lr;
+        }
+    }
+}

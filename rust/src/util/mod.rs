@@ -1,0 +1,6 @@
+//! Small shared utilities: deterministic PRNG, stats helpers, timing.
+
+pub mod prng;
+pub mod stats;
+
+pub use prng::Prng;

@@ -1,0 +1,240 @@
+//! Flow-engine integration tests with mock tasks (no AOT artifacts).
+//!
+//! Covers the engine's contract: deterministic topological execution,
+//! multiplicity enforcement, back-edge iteration bounds, LOG events,
+//! error attribution, and (via the mini property harness) invariants
+//! over randomly generated DAGs.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use metaml::flow::{
+    Engine, FlowGraph, ParamSpec, PipeTask, Session, TaskCtx, TaskOutcome,
+    TaskRegistry, TaskRole,
+};
+use metaml::metamodel::{LogEvent, MetaModel};
+use metaml::prop_assert;
+use metaml::testutil::check;
+
+/// Mock task that appends its instance name to a shared trace.
+struct TraceTask {
+    trace: Rc<RefCell<Vec<String>>>,
+    inputs: usize,
+    iterate_times: usize,
+    fail: bool,
+}
+
+impl PipeTask for TraceTask {
+    fn name(&self) -> &str {
+        "TRACE"
+    }
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+    fn multiplicity(&self) -> (usize, usize) {
+        (self.inputs, 1)
+    }
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![]
+    }
+    fn run(&self, ctx: &mut TaskCtx) -> metaml::Result<TaskOutcome> {
+        if self.fail {
+            return Err(metaml::Error::other("boom"));
+        }
+        self.trace.borrow_mut().push(ctx.instance.clone());
+        let count = self
+            .trace
+            .borrow()
+            .iter()
+            .filter(|t| **t == ctx.instance)
+            .count();
+        Ok(TaskOutcome {
+            produced: vec![],
+            request_iteration: count <= self.iterate_times,
+        })
+    }
+}
+
+fn registry_with(
+    trace: &Rc<RefCell<Vec<String>>>,
+    inputs_by_type: &[(&'static str, usize, usize, bool)],
+) -> TaskRegistry {
+    let mut r = TaskRegistry::empty();
+    for &(name, inputs, iterate, fail) in inputs_by_type {
+        let t = trace.clone();
+        r.register(name, move || {
+            Box::new(TraceTask {
+                trace: t.clone(),
+                inputs,
+                iterate_times: iterate,
+                fail,
+            })
+        });
+    }
+    r
+}
+
+fn session() -> Session {
+    Session::without_artifacts().expect("pjrt cpu client")
+}
+
+#[test]
+fn chain_executes_in_order() {
+    let trace = Rc::new(RefCell::new(Vec::new()));
+    let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("MID", 1, 0, false)]);
+    let mut g = FlowGraph::new("chain");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "MID");
+    let c = g.add_task("c", "MID");
+    g.connect(a, b).unwrap();
+    g.connect(b, c).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    assert_eq!(*trace.borrow(), vec!["a", "b", "c"]);
+
+    // LOG contains started/finished pairs per task + flow markers
+    let events = meta.log.entries();
+    assert!(matches!(events.first().unwrap().event, LogEvent::FlowStarted { .. }));
+    assert!(matches!(events.last().unwrap().event, LogEvent::FlowFinished { .. }));
+    let starts = events
+        .iter()
+        .filter(|e| matches!(e.event, LogEvent::TaskStarted { .. }))
+        .count();
+    assert_eq!(starts, 3);
+}
+
+#[test]
+fn multiplicity_violations_rejected() {
+    let trace = Rc::new(RefCell::new(Vec::new()));
+    let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("MID", 1, 0, false)]);
+    // MID with zero inputs
+    let mut g = FlowGraph::new("bad");
+    g.add_task("m", "MID");
+    let session = session();
+    let mut meta = MetaModel::new();
+    let err = Engine::new(&session, &registry).run(&g, &mut meta);
+    assert!(err.is_err());
+    assert!(err.unwrap_err().to_string().contains("1-input"));
+
+    // SRC with one input
+    let mut g2 = FlowGraph::new("bad2");
+    let a = g2.add_task("a", "SRC");
+    let b = g2.add_task("b", "SRC");
+    g2.connect(a, b).unwrap();
+    let mut meta2 = MetaModel::new();
+    assert!(Engine::new(&session, &registry).run(&g2, &mut meta2).is_err());
+}
+
+#[test]
+fn back_edge_iterates_subpath_bounded() {
+    let trace = Rc::new(RefCell::new(Vec::new()));
+    // "b" asks for iteration twice (runs at most 3 times w/ budget 3)
+    let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("LOOP", 1, 2, false)]);
+    let mut g = FlowGraph::new("loop");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "LOOP");
+    g.connect(a, b).unwrap();
+    g.connect_back(b, a, 3).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    // a,b then back to a,b then a,b — 3 passes of the subpath
+    assert_eq!(*trace.borrow(), vec!["a", "b", "a", "b", "a", "b"]);
+    let iter_events = meta
+        .log
+        .entries()
+        .iter()
+        .filter(|e| matches!(e.event, LogEvent::IterationAdvanced { .. }))
+        .count();
+    assert_eq!(iter_events, 2);
+}
+
+#[test]
+fn back_edge_budget_caps_runaway_iteration() {
+    let trace = Rc::new(RefCell::new(Vec::new()));
+    // task ALWAYS asks to iterate: budget must stop it
+    let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("LOOP", 1, 999, false)]);
+    let mut g = FlowGraph::new("runaway");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "LOOP");
+    g.connect(a, b).unwrap();
+    g.connect_back(b, a, 4).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    assert_eq!(trace.borrow().len(), 8); // 4 passes x 2 tasks
+}
+
+#[test]
+fn task_errors_are_attributed() {
+    let trace = Rc::new(RefCell::new(Vec::new()));
+    let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("FAIL", 1, 0, true)]);
+    let mut g = FlowGraph::new("failing");
+    let a = g.add_task("ok", "SRC");
+    let b = g.add_task("broken", "FAIL");
+    g.connect(a, b).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    let err = Engine::new(&session, &registry)
+        .run(&g, &mut meta)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("broken"), "{err}");
+    assert!(err.contains("boom"), "{err}");
+}
+
+#[test]
+fn property_random_dags_execute_all_nodes_in_topo_order() {
+    check(60, |rng| {
+        let trace = Rc::new(RefCell::new(Vec::new()));
+        let registry =
+            registry_with(&trace, &[("SRC", 0, 0, false), ("MID", 1, 0, false)]);
+
+        // random layered DAG: sources + chain/merge-free 1-input nodes
+        let n = 2 + rng.below(10);
+        let mut g = FlowGraph::new("prop");
+        let mut kinds = Vec::new();
+        for i in 0..n {
+            // node 0 is always a source; later nodes choose a parent
+            if i == 0 || rng.below(4) == 0 {
+                g.add_task(format!("n{i}"), "SRC");
+                kinds.push(0usize);
+            } else {
+                let node = g.add_task(format!("n{i}"), "MID");
+                // parent strictly earlier => forward edges acyclic
+                let parent = rng.below(i);
+                g.connect(parent, node).map_err(|e| e.to_string())?;
+                kinds.push(1);
+                let _ = node;
+            }
+        }
+
+        let session = Session::without_artifacts().map_err(|e| e.to_string())?;
+        let mut meta = MetaModel::new();
+        Engine::new(&session, &registry)
+            .run(&g, &mut meta)
+            .map_err(|e| e.to_string())?;
+
+        let executed = trace.borrow();
+        prop_assert!(
+            executed.len() == n,
+            "executed {} of {n} nodes",
+            executed.len()
+        );
+        // every node runs after its parent: trace order must respect ids
+        // (lowest-id tie-break makes the order exactly sorted here, since
+        // each node's parent has a smaller id)
+        let order = g.topo_order().map_err(|e| e.to_string())?;
+        let names: Vec<String> = order
+            .iter()
+            .map(|&id| g.node(id).unwrap().instance.clone())
+            .collect();
+        prop_assert!(*executed == names, "trace {executed:?} != topo {names:?}");
+        Ok(())
+    });
+}

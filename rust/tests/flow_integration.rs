@@ -1,0 +1,138 @@
+//! Full-stack integration tests: real artifacts + real PJRT execution.
+//!
+//! These exercise the paper's flows end to end (train → optimize → HLS →
+//! RTL) against the AOT artifacts.  They are skipped gracefully when
+//! `make artifacts` has not run (e.g. a fresh checkout without python).
+
+use metaml::config::builtin_flow;
+use metaml::flow::{Engine, Session, TaskRegistry};
+use metaml::metamodel::{Abstraction, MetaModel};
+
+fn open_session() -> Option<Session> {
+    let dir = std::env::var("METAML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match Session::open(&dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping integration test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pruning_flow_end_to_end() {
+    let Some(session) = open_session() else { return };
+    let registry = TaskRegistry::builtin();
+    let spec = builtin_flow("pruning").unwrap();
+    let mut meta = MetaModel::new();
+    meta.cfg.set("model", "jet_dnn");
+
+    Engine::new(&session, &registry).run(&spec.graph, &mut meta).unwrap();
+
+    // model space holds DNN → pruned DNN → HLS → RTL with lineage
+    assert_eq!(meta.space.len(), 4);
+    let rtl = meta.space.latest(Abstraction::Rtl).unwrap();
+    let lineage = meta.space.lineage(rtl.id).unwrap();
+    assert_eq!(lineage.len(), 4);
+
+    // pruning found a non-trivial rate without tanking accuracy
+    let pruned = meta.space.latest(Abstraction::Dnn).unwrap();
+    let rate = pruned.metric("pruning_rate").unwrap();
+    assert!(rate > 0.3, "rate {rate}");
+    let base_acc = meta.space.get(lineage[0]).unwrap().metric("accuracy").unwrap();
+    let final_acc = pruned.metric("accuracy").unwrap();
+    assert!(base_acc - final_acc <= 0.02 + 1e-9, "{base_acc} -> {final_acc}");
+
+    // resources must have dropped vs an unpruned estimate of same arch
+    assert!(rtl.metric("dsp").unwrap() < 3192.0 * 0.7);
+    assert!(rtl.metric("fits").unwrap() == 1.0);
+
+    // the HLS artifact carries generated C++ supporting files
+    let hls = meta.space.latest(Abstraction::HlsCpp).unwrap();
+    assert!(hls.supporting.iter().any(|(f, _)| f == "defines.h"));
+    let defines = &hls.supporting.iter().find(|(f, _)| f == "defines.h").unwrap().1;
+    assert!(defines.contains("ap_fixed<18,8>"));
+}
+
+#[test]
+fn quantization_flow_instruments_hls_types() {
+    let Some(session) = open_session() else { return };
+    let registry = TaskRegistry::builtin();
+    let spec = builtin_flow("quantization").unwrap();
+    let mut meta = MetaModel::new();
+    meta.cfg.set("model", "jet_dnn");
+    meta.cfg.set("quantize.tolerate_acc_loss", 0.02);
+
+    Engine::new(&session, &registry).run(&spec.graph, &mut meta).unwrap();
+
+    // the quantized HLS artifact must carry narrower types than 18,8
+    let hls = meta.space.latest(Abstraction::HlsCpp).unwrap();
+    assert!(hls.name.contains("quantized"));
+    let bits = hls.metric("bits_total").unwrap();
+    assert!(bits < 4.0 * 18.0, "no reduction: {bits}");
+    let defines = &hls.supporting.iter().find(|(f, _)| f == "defines.h").unwrap().1;
+    assert!(!defines.is_empty());
+
+    // RTL report synthesized from the quantized model
+    let rtl = meta.space.latest(Abstraction::Rtl).unwrap();
+    assert!(rtl.metric("lut").unwrap() > 0.0);
+}
+
+#[test]
+fn combined_flow_beats_baseline_resources() {
+    let Some(session) = open_session() else { return };
+    let registry = TaskRegistry::builtin();
+
+    let run = |flow: &str| {
+        let spec = builtin_flow(flow).unwrap();
+        let mut meta = MetaModel::new();
+        meta.cfg.set("model", "jet_dnn");
+        Engine::new(&session, &registry).run(&spec.graph, &mut meta).unwrap();
+        let rtl = meta.space.latest(Abstraction::Rtl).unwrap().clone();
+        (
+            rtl.metric("accuracy").unwrap(),
+            rtl.metric("dsp").unwrap(),
+            rtl.metric("lut").unwrap(),
+        )
+    };
+
+    let (base_acc, base_dsp, base_lut) = run("baseline");
+    let (spq_acc, spq_dsp, spq_lut) = run("s_p_q");
+
+    // the paper's headline: large resource reduction at small accuracy cost
+    assert!(spq_dsp <= base_dsp * 0.25, "dsp {base_dsp} -> {spq_dsp}");
+    assert!(spq_lut <= base_lut * 0.6, "lut {base_lut} -> {spq_lut}");
+    assert!(base_acc - spq_acc < 0.06, "acc {base_acc} -> {spq_acc}");
+}
+
+#[test]
+fn scaling_flow_shrinks_params() {
+    let Some(session) = open_session() else { return };
+    let registry = TaskRegistry::builtin();
+    let spec = builtin_flow("scaling").unwrap();
+    let mut meta = MetaModel::new();
+    meta.cfg.set("model", "jet_dnn");
+    // generous tolerance so the walk descends at least one grid point
+    meta.cfg.set("scale.tolerate_acc_loss", 0.02);
+
+    Engine::new(&session, &registry).run(&spec.graph, &mut meta).unwrap();
+    let dnn = meta.space.latest(Abstraction::Dnn).unwrap();
+    assert!(dnn.metric("scale").unwrap() < 1.0);
+}
+
+#[test]
+fn run_metrics_land_in_log() {
+    let Some(session) = open_session() else { return };
+    let registry = TaskRegistry::builtin();
+    let spec = builtin_flow("pruning").unwrap();
+    let mut meta = MetaModel::new();
+    meta.cfg.set("model", "jet_dnn");
+    Engine::new(&session, &registry).run(&spec.graph, &mut meta).unwrap();
+
+    // the LOG carries the full probe series (Fig 3 is rendered from it)
+    let rates = meta.log.metric_series("prune", "probe_rate");
+    assert!(rates.len() >= 6, "probes {rates:?}");
+    assert!(rates.windows(2).all(|w| w[0] != w[1]));
+    let trace = meta.log.render_trace();
+    assert!(trace.contains("auto-pruning"));
+}
