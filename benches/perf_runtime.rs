@@ -94,6 +94,9 @@ fn main() -> metaml::Result<()> {
     }
 
     // literal marshaling: tensor -> literal -> tensor round trip
+    // (PJRT-backend-only concern; the reference interpreter never
+    // marshals literals)
+    #[cfg(feature = "xla")]
     {
         let t = metaml::runtime::HostTensor::ones(&[64, 1024]);
         let n = 200;

@@ -1,41 +1,87 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no proc-macro dependencies: the
+//! crate builds offline with an empty dependency set by default).  The
+//! [`Error::Xla`] variant only exists when the `xla` feature enables the
+//! PJRT backend.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "xla")]
+    Xla(xla::Error),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
-    #[error("manifest error: {0}")]
     Manifest(String),
 
-    #[error("shape mismatch: expected {expected:?}, got {got:?}")]
     ShapeMismatch { expected: Vec<usize>, got: Vec<usize> },
 
-    #[error("flow error: {0}")]
     Flow(String),
 
-    #[error("task error in {task}: {msg}")]
     Task { task: String, msg: String },
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("model space error: {0}")]
     ModelSpace(String),
 
-    #[error("synthesis error: {0}")]
     Synth(String),
 
-    #[error("{0}")]
+    /// Execution-backend failure (reference interpreter or PJRT).
+    Backend(String),
+
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            #[cfg(feature = "xla")]
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json error at byte {offset}: {msg}")
+            }
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: expected {expected:?}, got {got:?}")
+            }
+            Error::Flow(msg) => write!(f, "flow error: {msg}"),
+            Error::Task { task, msg } => write!(f, "task error in {task}: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::ModelSpace(msg) => write!(f, "model space error: {msg}"),
+            Error::Synth(msg) => write!(f, "synthesis error: {msg}"),
+            Error::Backend(msg) => write!(f, "backend error: {msg}"),
+            Error::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            #[cfg(feature = "xla")]
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 impl Error {
@@ -46,6 +92,39 @@ impl Error {
     pub fn task(task: impl Into<String>, msg: impl Into<String>) -> Self {
         Error::Task { task: task.into(), msg: msg.into() }
     }
+
+    pub fn backend(msg: impl Into<String>) -> Self {
+        Error::Backend(msg.into())
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_contract() {
+        assert_eq!(Error::Manifest("x".into()).to_string(), "manifest error: x");
+        assert_eq!(
+            Error::task("prune", "boom").to_string(),
+            "task error in prune: boom"
+        );
+        assert_eq!(Error::other("plain").to_string(), "plain");
+        assert_eq!(
+            Error::backend("no client").to_string(),
+            "backend error: no client"
+        );
+        let e = Error::ShapeMismatch { expected: vec![2, 3], got: vec![5] };
+        assert_eq!(e.to_string(), "shape mismatch: expected [2, 3], got [5]");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

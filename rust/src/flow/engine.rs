@@ -30,11 +30,14 @@ impl<'a> Engine<'a> {
     pub fn run(&self, graph: &FlowGraph, meta: &mut MetaModel) -> Result<Vec<TaskOutcome>> {
         let order = graph.validate()?;
         // multiplicity check: a task demanding k inputs must have k
-        // incoming forward edges (0-to-1 tasks are sources, etc.)
+        // incoming forward edges (0-to-1 tasks are sources, etc.).
+        // In-degrees are computed once for the whole graph (one pass over
+        // the edge set) rather than per node.
+        let in_degrees = graph.in_degrees();
         for node in graph.nodes() {
             let task = self.registry.create(&node.task_type)?;
             let (want_in, _) = task.multiplicity();
-            let have = graph.in_degree(node.id);
+            let have = in_degrees[node.id];
             if have != want_in {
                 return Err(Error::Flow(format!(
                     "task {} ({}) is {}-input but has {} incoming edges",
@@ -51,7 +54,10 @@ impl<'a> Engine<'a> {
             vec![TaskOutcome::default(); graph.nodes().len()];
 
         let mut pc = 0usize; // index into topo order
-        // remaining iteration budget per back edge
+        // remaining re-execution budget per back edge: max_iters bounds
+        // how many times the enclosed sub-path is *re*-executed, so a
+        // max_iters == 1 edge fires exactly once (the initial pass is
+        // not counted against the budget)
         let mut budgets: Vec<usize> =
             graph.back_edges().iter().map(|b| b.max_iters).collect();
 
@@ -66,7 +72,7 @@ impl<'a> Engine<'a> {
             let mut jumped = false;
             if iterate {
                 for (i, be) in graph.back_edges().iter().enumerate() {
-                    if be.from == node_id && budgets[i] > 1 {
+                    if be.from == node_id && budgets[i] > 0 {
                         budgets[i] -= 1;
                         let target_pos = order
                             .iter()

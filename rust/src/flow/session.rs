@@ -1,8 +1,14 @@
-//! Process-wide session: PJRT runtime + manifest + caches.
+//! Process-wide session: execution runtime + manifest + caches.
 //!
-//! Tasks are stateless; everything expensive (compiled executables,
+//! Tasks are stateless; everything expensive (backend-bound executables,
 //! synthesized datasets) is cached here and shared across the whole flow
 //! (and across flows in a bench run).
+//!
+//! The session no longer assumes PJRT: it is constructed over any
+//! [`Runtime`] (see [`crate::runtime::ExecBackend`]).  The convenience
+//! constructors use [`Runtime::cpu`], which defaults to the pure-Rust
+//! reference interpreter and honors `METAML_BACKEND=xla` when the PJRT
+//! backend is compiled in.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -20,27 +26,34 @@ pub struct Session {
 }
 
 impl Session {
-    pub fn open(artifacts_dir: &str) -> Result<Self> {
-        Ok(Session {
-            runtime: Runtime::cpu()?,
-            manifest: Manifest::load(artifacts_dir)?,
+    /// Session over an explicit backend runtime and manifest.
+    pub fn with_backend(runtime: Runtime, manifest: Manifest) -> Self {
+        Session {
+            runtime,
+            manifest,
             execs: RefCell::new(HashMap::new()),
             datasets: RefCell::new(HashMap::new()),
-        })
+        }
     }
 
-    /// Session with a live PJRT runtime but an empty manifest — for
+    /// Session over an explicit backend runtime, loading the manifest
+    /// from an artifacts directory.
+    pub fn open_with(runtime: Runtime, artifacts_dir: &str) -> Result<Self> {
+        Ok(Self::with_backend(runtime, Manifest::load(artifacts_dir)?))
+    }
+
+    /// Default-backend session over an artifacts directory.
+    pub fn open(artifacts_dir: &str) -> Result<Self> {
+        Self::open_with(Runtime::cpu()?, artifacts_dir)
+    }
+
+    /// Session with a live runtime but an empty manifest — for
     /// engine/flow tests that use mock tasks and never touch artifacts.
     pub fn without_artifacts() -> Result<Self> {
-        Ok(Session {
-            runtime: Runtime::cpu()?,
-            manifest: Manifest::empty(),
-            execs: RefCell::new(HashMap::new()),
-            datasets: RefCell::new(HashMap::new()),
-        })
+        Ok(Self::with_backend(Runtime::cpu()?, Manifest::empty()))
     }
 
-    /// Compiled train+eval executables for a variant tag (cached).
+    /// Backend-bound train+eval executable for a variant tag (cached).
     pub fn executable(&self, tag: &str) -> Result<Rc<ModelExecutable>> {
         if let Some(e) = self.execs.borrow().get(tag) {
             return Ok(e.clone());

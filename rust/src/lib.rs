@@ -19,10 +19,18 @@
 //! store, a LOG execution trace, and a model space holding DNN / HLS / RTL
 //! abstractions.
 //!
-//! The compute hot path (training / evaluating candidate models) executes
-//! AOT-compiled XLA artifacts produced once by `python/compile/aot.py`
-//! from JAX models whose inner loops are Pallas kernels — Python never
-//! runs at flow-execution time.
+//! The compute hot path (training / evaluating candidate models) runs
+//! through the pluggable [runtime::ExecBackend] trait, decoupling
+//! design-flow tasks from the execution substrate:
+//!
+//! * the default [runtime::RefBackend] is a pure-Rust reference
+//!   interpreter of the train/eval step semantics (masked + fake-quantized
+//!   matmuls, softmax cross-entropy SGD) — zero native dependencies, so
+//!   every flow runs on any machine;
+//! * with `--features xla`, the PJRT backend (`runtime::PjrtBackend`)
+//!   executes AOT-compiled XLA artifacts produced once by
+//!   `python/compile/aot.py` from JAX models whose inner loops are Pallas
+//!   kernels — Python never runs at flow-execution time.
 
 pub mod baselines;
 pub mod bench_support;

@@ -39,14 +39,16 @@ fn print_help() {
 USAGE: metaml <COMMAND> [OPTIONS]
 
 COMMANDS:
-  smoke                         verify the PJRT runtime + artifacts
+  smoke                         verify the execution backend + artifacts
   train       --model <name> [--scale S] [--epochs N]   train via AOT step
   list-tasks                    print the pipe-task registry (Table I)
   run-flow    --flow <spec.json> [--model <name>]       execute a design flow
   synth       --model <name> [--scale S]                HLS+RTL report
   help                          this message
 
-Artifacts are read from ./artifacts (build with `make artifacts`).",
+Artifacts are read from ./artifacts (build with `make artifacts`).
+The execution backend is selected by METAML_BACKEND: `reference`
+(default, pure-Rust interpreter) or `xla` (PJRT, needs --features xla).",
         metaml::version()
     );
 }

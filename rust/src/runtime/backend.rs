@@ -1,0 +1,168 @@
+//! The pluggable execution-backend abstraction (MetaML-Pro-style
+//! cross-stage decoupling): design-flow tasks describe *what* to run —
+//! train/eval steps over [`HostTensor`]s in the flat argument convention —
+//! and an [`ExecBackend`] decides *how*.
+//!
+//! Two backends exist:
+//! * the default pure-Rust **reference interpreter**
+//!   ([`crate::runtime::interp::RefBackend`]) executes the step semantics
+//!   directly from the manifest's layer descriptions — zero native
+//!   dependencies, runs anywhere;
+//! * the **PJRT backend** (`--features xla`,
+//!   [`crate::runtime::exec::PjrtBackend`]) compiles and executes the
+//!   AOT HLO artifacts produced by `python/compile/aot.py`.
+//!
+//! Selection: [`Runtime::cpu`] honors `METAML_BACKEND`
+//! (`reference` default, `xla` when compiled in).
+
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{Manifest, ModelVariant};
+use crate::runtime::tensor::HostTensor;
+
+/// Execution statistics (perf accounting; see EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// A (model, scale) variant bound to a backend, ready to step.
+///
+/// The flat argument convention (the contract with
+/// `python/compile/train.py`):
+/// * train: `params ++ masks ++ [qcfg, x, y, lr]` → `(params', loss, acc)`
+/// * eval:  `params ++ masks ++ [qcfg, x, y]` → `(loss, acc)`
+pub trait ModelExec {
+    fn variant(&self) -> &ModelVariant;
+
+    /// One SGD step; returns (new_params, loss, acc).
+    fn train_step(&self, args: &[HostTensor]) -> Result<(Vec<HostTensor>, f32, f32)>;
+
+    /// Evaluate one batch; returns (loss, acc).
+    fn eval_step(&self, args: &[HostTensor]) -> Result<(f32, f32)>;
+}
+
+/// An execution substrate that can realize manifest variants.
+pub trait ExecBackend {
+    /// Human-readable platform name ("reference-interpreter", "cpu", …).
+    fn platform(&self) -> String;
+
+    /// Bind a manifest variant to an executable model.
+    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Rc<dyn ModelExec>>;
+
+    fn stats(&self) -> RuntimeStats;
+}
+
+#[cfg(feature = "xla")]
+fn xla_cpu() -> Result<Runtime> {
+    Runtime::pjrt_cpu()
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_cpu() -> Result<Runtime> {
+    Err(Error::backend(
+        "METAML_BACKEND=xla requires building with `--features xla` \
+         (and linking the real xla-rs crate)",
+    ))
+}
+
+/// The process-wide execution runtime: a boxed [`ExecBackend`].
+pub struct Runtime {
+    backend: Box<dyn ExecBackend>,
+}
+
+impl Runtime {
+    /// The pure-Rust reference-interpreter backend (always available).
+    pub fn reference() -> Runtime {
+        Runtime { backend: Box::new(crate::runtime::interp::RefBackend::new()) }
+    }
+
+    /// The PJRT CPU backend executing AOT HLO artifacts.
+    #[cfg(feature = "xla")]
+    pub fn pjrt_cpu() -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(crate::runtime::exec::PjrtBackend::cpu()?) })
+    }
+
+    /// Wrap a custom backend.
+    pub fn from_backend(backend: Box<dyn ExecBackend>) -> Runtime {
+        Runtime { backend }
+    }
+
+    /// Default CPU runtime, selected by `METAML_BACKEND`:
+    /// `reference` (default) or `xla` (requires `--features xla`).
+    pub fn cpu() -> Result<Runtime> {
+        match std::env::var("METAML_BACKEND").unwrap_or_default().as_str() {
+            "" | "reference" | "ref" => Ok(Runtime::reference()),
+            "xla" | "pjrt" => xla_cpu(),
+            other => Err(Error::backend(format!(
+                "unknown METAML_BACKEND {other:?} (expected \"reference\" or \"xla\")"
+            ))),
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.backend.stats()
+    }
+
+    pub fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Rc<dyn ModelExec>> {
+        self.backend.load_model(manifest, tag)
+    }
+}
+
+/// A variant bound to its backend executable — the object tasks, the
+/// trainer and the benches hold on to (cached per tag in
+/// [`crate::flow::Session`]).
+pub struct ModelExecutable {
+    pub variant: ModelVariant,
+    exec: Rc<dyn ModelExec>,
+}
+
+impl ModelExecutable {
+    pub fn load(runtime: &Runtime, manifest: &Manifest, tag: &str) -> Result<Self> {
+        let exec = runtime.load_model(manifest, tag)?;
+        let variant = exec.variant().clone();
+        Ok(ModelExecutable { variant, exec })
+    }
+
+    /// One SGD step. `args` = params ++ masks ++ [qcfg, x, y, lr].
+    /// Returns (new_params, loss, acc).
+    pub fn train_step(&self, args: &[HostTensor]) -> Result<(Vec<HostTensor>, f32, f32)> {
+        let expect = self.variant.n_params() + self.variant.n_masks() + 4;
+        if args.len() != expect {
+            return Err(Error::other(format!(
+                "train_step: expected {expect} args, got {}",
+                args.len()
+            )));
+        }
+        let (params, loss, acc) = self.exec.train_step(args)?;
+        if params.len() != self.variant.n_params() {
+            return Err(Error::other(format!(
+                "train_step: expected {} output params, got {}",
+                self.variant.n_params(),
+                params.len()
+            )));
+        }
+        Ok((params, loss, acc))
+    }
+
+    /// Evaluate one batch. `args` = params ++ masks ++ [qcfg, x, y].
+    /// Returns (loss, acc).
+    pub fn eval_step(&self, args: &[HostTensor]) -> Result<(f32, f32)> {
+        let expect = self.variant.n_params() + self.variant.n_masks() + 3;
+        if args.len() != expect {
+            return Err(Error::other(format!(
+                "eval_step: expected {expect} args, got {}",
+                args.len()
+            )));
+        }
+        self.exec.eval_step(args)
+    }
+}

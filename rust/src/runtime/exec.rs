@@ -1,9 +1,20 @@
-//! PJRT client wrapper + compiled-executable cache.
+//! PJRT execution backend (`--features xla`): compiles and runs the AOT
+//! HLO-text artifacts produced by `python/compile/aot.py`.
 //!
-//! One `Runtime` per process (the PJRT CPU client is not Send/Sync in the
-//! `xla` crate, so everything executes on the coordinator thread).  Compiled
-//! executables are cached by artifact file name — re-entering a flow task
-//! never recompiles.
+//! One [`PjrtBackend`] per process (the PJRT CPU client is not Send/Sync
+//! in the `xla` crate, so everything executes on the coordinator thread).
+//! Compiled executables are cached by artifact file name — re-entering a
+//! flow task never recompiles.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//! * artifacts are HLO *text* (`HloModuleProto::from_text_file` reassigns
+//!   instruction ids, sidestepping the 64-bit-id proto incompatibility
+//!   between jax >= 0.5 and xla_extension 0.5.1);
+//! * all computations return a tuple (lowered with `return_tuple=True`).
+//!
+//! By default the `xla` dependency resolves to the in-tree `xla-stub`
+//! crate, which type-checks this whole path offline but fails client
+//! construction at runtime; point it at the real xla-rs crate to execute.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -11,41 +22,25 @@ use std::rc::Rc;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::runtime::backend::{ExecBackend, ModelExec, RuntimeStats};
 use crate::runtime::manifest::{Manifest, ModelVariant};
 use crate::runtime::tensor::HostTensor;
 
-/// Execution statistics (perf accounting; see EXPERIMENTS.md §Perf).
-#[derive(Debug, Default, Clone)]
-pub struct RuntimeStats {
-    pub compiles: usize,
-    pub compile_secs: f64,
-    pub executions: usize,
-    pub execute_secs: f64,
-}
-
-/// Owns the PJRT client and the executable cache.
-pub struct Runtime {
+/// Owns the PJRT client and the compiled-executable cache.
+pub struct PjrtBackend {
     client: xla::PjRtClient,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<RuntimeStats>,
+    stats: Rc<RefCell<RuntimeStats>>,
 }
 
-impl Runtime {
-    /// Create a CPU PJRT runtime.
+impl PjrtBackend {
+    /// Create a CPU PJRT backend.
     pub fn cpu() -> Result<Self> {
-        Ok(Runtime {
+        Ok(PjrtBackend {
             client: xla::PjRtClient::cpu()?,
             cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: Rc::new(RefCell::new(RuntimeStats::default())),
         })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
     }
 
     /// Load + compile an HLO-text artifact (cached by file name).
@@ -69,89 +64,85 @@ impl Runtime {
         Ok(exe)
     }
 
-    /// Execute with host tensors; returns the decomposed output tuple.
-    pub fn execute(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[HostTensor],
-    ) -> Result<Vec<HostTensor>> {
-        let literals = args
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        let parts = self.execute_literals(exe, &literals)?;
-        parts.iter().map(HostTensor::from_literal).collect()
-    }
+}
 
-    /// Literal-level execution (the hot path): no HostTensor marshaling.
-    ///
-    /// `fit()` keeps parameters as Literals across steps — outputs of one
-    /// step feed the next directly, so per-step host<->literal copies are
-    /// limited to the batch upload and the loss/acc scalars (§Perf L3).
-    pub fn execute_literals(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        // Computations are lowered with return_tuple=True.
-        let parts = result.to_tuple()?;
-        let mut stats = self.stats.borrow_mut();
+/// Shared execution path: marshal host tensors to borrowed literals,
+/// execute, decompose the output tuple (computations are lowered with
+/// `return_tuple=True`), unmarshal, account stats.
+fn run_marshaled(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[HostTensor],
+    stats: &Rc<RefCell<RuntimeStats>>,
+) -> Result<Vec<HostTensor>> {
+    let literals = args
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<Vec<_>>>()?;
+    let refs: Vec<&xla::Literal> = literals.iter().collect();
+    let t0 = Instant::now();
+    let result = exe.execute::<&xla::Literal>(&refs)?[0][0].to_literal_sync()?;
+    let parts = result.to_tuple()?;
+    {
+        let mut stats = stats.borrow_mut();
         stats.executions += 1;
         stats.execute_secs += t0.elapsed().as_secs_f64();
-        Ok(parts)
+    }
+    parts.iter().map(HostTensor::from_literal).collect()
+}
+
+impl ExecBackend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
     }
 
-    /// Borrowed-literal execution: constant operands are passed by
-    /// reference (zero copies per step).
-    pub fn execute_literals_ref(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[&xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let t0 = Instant::now();
-        let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        let mut stats = self.stats.borrow_mut();
-        stats.executions += 1;
-        stats.execute_secs += t0.elapsed().as_secs_f64();
-        Ok(parts)
+    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Rc<dyn ModelExec>> {
+        let variant = manifest.get(tag)?.clone();
+        let train = self.load(manifest, &variant.train_artifact)?;
+        let eval = self.load(manifest, &variant.eval_artifact)?;
+        Ok(Rc::new(PjrtModel {
+            variant,
+            train,
+            eval,
+            stats: self.stats.clone(),
+        }))
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
     }
 }
 
 /// A (model, scale) variant bound to its compiled train/eval executables.
-pub struct ModelExecutable {
-    pub variant: ModelVariant,
+///
+/// Marshaling note: every step converts the full argument list host →
+/// literal and the outputs back.  The pre-backend-trait trainer kept
+/// parameters in the literal domain across steps; that staging is
+/// incompatible with a backend-agnostic step interface, so the PJRT
+/// path pays one round-trip per step (the reference backend, which CI
+/// exercises, never marshals at all).
+pub struct PjrtModel {
+    variant: ModelVariant,
     train: Rc<xla::PjRtLoadedExecutable>,
     eval: Rc<xla::PjRtLoadedExecutable>,
+    stats: Rc<RefCell<RuntimeStats>>,
 }
 
-impl ModelExecutable {
-    /// The raw compiled train-step executable (hot-path literal API).
-    pub fn train_exe(&self) -> &xla::PjRtLoadedExecutable {
-        &self.train
-    }
-
-    /// The raw compiled eval executable (hot-path literal API).
-    pub fn eval_exe(&self) -> &xla::PjRtLoadedExecutable {
-        &self.eval
-    }
-
-    pub fn load(runtime: &Runtime, manifest: &Manifest, tag: &str) -> Result<Self> {
-        let variant = manifest.get(tag)?.clone();
-        let train = runtime.load(manifest, &variant.train_artifact)?;
-        let eval = runtime.load(manifest, &variant.eval_artifact)?;
-        Ok(ModelExecutable { variant, train, eval })
-    }
-
-    /// One SGD step. `args` = params ++ masks ++ [qcfg, x, y, lr].
-    /// Returns (new_params, loss, acc).
-    pub fn train_step(
+impl PjrtModel {
+    fn execute(
         &self,
-        runtime: &Runtime,
+        exe: &xla::PjRtLoadedExecutable,
         args: &[HostTensor],
-    ) -> Result<(Vec<HostTensor>, f32, f32)> {
+    ) -> Result<Vec<HostTensor>> {
+        run_marshaled(exe, args, &self.stats)
+    }
+}
+
+impl ModelExec for PjrtModel {
+    fn variant(&self) -> &ModelVariant {
+        &self.variant
+    }
+
+    fn train_step(&self, args: &[HostTensor]) -> Result<(Vec<HostTensor>, f32, f32)> {
         let expect = self.variant.n_params() + self.variant.n_masks() + 4;
         if args.len() != expect {
             return Err(Error::other(format!(
@@ -159,7 +150,7 @@ impl ModelExecutable {
                 args.len()
             )));
         }
-        let out = runtime.execute(&self.train, args)?;
+        let out = self.execute(&self.train, args)?;
         let n = self.variant.n_params();
         if out.len() != n + 2 {
             return Err(Error::other(format!(
@@ -174,9 +165,7 @@ impl ModelExecutable {
         Ok((out, loss, acc))
     }
 
-    /// Evaluate one batch. `args` = params ++ masks ++ [qcfg, x, y].
-    /// Returns (loss, acc).
-    pub fn eval_step(&self, runtime: &Runtime, args: &[HostTensor]) -> Result<(f32, f32)> {
+    fn eval_step(&self, args: &[HostTensor]) -> Result<(f32, f32)> {
         let expect = self.variant.n_params() + self.variant.n_masks() + 3;
         if args.len() != expect {
             return Err(Error::other(format!(
@@ -184,7 +173,7 @@ impl ModelExecutable {
                 args.len()
             )));
         }
-        let out = runtime.execute(&self.eval, args)?;
+        let out = self.execute(&self.eval, args)?;
         if out.len() != 2 {
             return Err(Error::other(format!(
                 "eval_step: expected 2 outputs, got {}",

@@ -1,0 +1,940 @@
+//! The pure-Rust reference-interpreter backend.
+//!
+//! Executes the train/eval step semantics directly from a manifest
+//! variant's layer descriptions, with no native dependencies — the
+//! default [`crate::runtime::ExecBackend`].  It mirrors, op for op, the
+//! Python reference stack (`python/compile/kernels/*.py`,
+//! `layers.py`, `train.py`):
+//!
+//! * `fq`: ap_fixed<W,I> round-to-nearest-even + saturate, identity when
+//!   W == 0 (`fake_quant_ref`);
+//! * forward: `act(fq(x,q) @ (fq(w,q) * mask) + b)` per weight layer,
+//!   conv as channel-major im2col, 2x2 VALID max-pool, residual
+//!   `relu(x + skip)`;
+//! * backward (the `qmm` custom-VJP STE semantics):
+//!   `dx = (g @ (fq(w)*m)^T) * ste(x)`,
+//!   `dw = (fq(x)^T @ g) * m * ste(w)` — pruned weights stay dead,
+//!   saturated weights get no gradient;
+//! * loss: stable log-softmax cross-entropy mean + argmax accuracy;
+//! * update: plain SGD `p' = p - lr * g`.
+//!
+//! Parity with the JAX stack is pinned by `rust/tests/backend_parity.rs`
+//! against goldens generated from the actual Pallas-interpret kernels.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::backend::{ExecBackend, ModelExec, RuntimeStats};
+use crate::runtime::manifest::{LayerDesc, Manifest, ModelVariant};
+use crate::runtime::tensor::HostTensor;
+
+/// Round half to even (`jnp.round` semantics; `f32::round` rounds half
+/// away from zero, which would diverge from the reference kernels).
+fn round_ties_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - x.signum()
+    } else {
+        r
+    }
+}
+
+/// ap_fixed<W,I> fake quantization: round to nearest (ties to even) at
+/// `2^(W-I)` resolution, saturate to the representable range.  `W <= 0`
+/// disables quantization (identity).
+pub fn fake_quant(v: f32, total_bits: f32, int_bits: f32) -> f32 {
+    if total_bits <= 0.0 {
+        return v;
+    }
+    let scale = (total_bits - int_bits).exp2();
+    let hi = (int_bits - 1.0).exp2() - 1.0 / scale;
+    let lo = -(int_bits - 1.0).exp2();
+    (round_ties_even(v * scale) / scale).clamp(lo, hi)
+}
+
+/// Straight-through gradient mask: 1 inside the representable range (or
+/// when quantization is disabled), 0 where the forward pass saturated.
+fn ste(v: f32, total_bits: f32, int_bits: f32) -> f32 {
+    if total_bits <= 0.0 {
+        return 1.0;
+    }
+    let hi = (int_bits - 1.0).exp2();
+    if v.abs() <= hi {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// `a[m,k] @ b[k,n]` (row-major, f32 accumulation).
+///
+/// No zero-skipping: `0 * NaN = NaN` must propagate exactly as in the
+/// XLA matmul, so a diverged model reports NaN loss instead of a
+/// plausible finite value.
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for t in 0..k {
+            let av = a[i * k + t];
+            let brow = &b[t * n..(t + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a[m,n] @ b[k,n]^T` → `[m,k]`.
+fn mm_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for j in 0..k {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * k + j] = acc;
+        }
+    }
+    out
+}
+
+/// `a[m,k]^T @ b[m,n]` → `[k,n]` (same NaN-propagation contract as [`mm`]).
+fn mm_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    for t in 0..m {
+        let arow = &a[t * k..(t + 1) * k];
+        let brow = &b[t * n..(t + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `fq(w) * mask`, elementwise.
+fn quantized_masked(w: &[f32], mask: &[f32], wb: f32, ib: f32) -> Vec<f32> {
+    w.iter()
+        .zip(mask)
+        .map(|(&wv, &mv)| fake_quant(wv, wb, ib) * mv)
+        .collect()
+}
+
+/// Channel-major im2col: `[B,H,W,C]` → `[B*H*W, C*k*k]`, SAME padding,
+/// stride 1, feature index `c*k*k + kh*k + kw` (matching
+/// `conv_general_dilated_patches` + the HWIO→(C,k,k,Cout) weight
+/// transpose in `layers.qconv2d`).
+fn im2col(x: &[f32], shape: [usize; 4], k: usize) -> Vec<f32> {
+    let [b, h, w, c] = shape;
+    let pad = (k - 1) / 2;
+    let fk = c * k * k;
+    let mut cols = vec![0.0f32; b * h * w * fk];
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..w {
+                let row = ((bi * h + i) * w + j) * fk;
+                for kh in 0..k {
+                    let y = i + kh;
+                    if y < pad || y - pad >= h {
+                        continue;
+                    }
+                    let y = y - pad;
+                    for kw in 0..k {
+                        let xx = j + kw;
+                        if xx < pad || xx - pad >= w {
+                            continue;
+                        }
+                        let xx = xx - pad;
+                        let src = ((bi * h + y) * w + xx) * c;
+                        for ci in 0..c {
+                            cols[row + ci * k * k + kh * k + kw] = x[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Scatter-add transpose of [`im2col`]: `[B*H*W, C*k*k]` → `[B,H,W,C]`.
+fn col2im(dcols: &[f32], shape: [usize; 4], k: usize) -> Vec<f32> {
+    let [b, h, w, c] = shape;
+    let pad = (k - 1) / 2;
+    let fk = c * k * k;
+    let mut dx = vec![0.0f32; b * h * w * c];
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..w {
+                let row = ((bi * h + i) * w + j) * fk;
+                for kh in 0..k {
+                    let y = i + kh;
+                    if y < pad || y - pad >= h {
+                        continue;
+                    }
+                    let y = y - pad;
+                    for kw in 0..k {
+                        let xx = j + kw;
+                        if xx < pad || xx - pad >= w {
+                            continue;
+                        }
+                        let xx = xx - pad;
+                        let dst = ((bi * h + y) * w + xx) * c;
+                        for ci in 0..c {
+                            dx[dst + ci] += dcols[row + ci * k * k + kh * k + kw];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// HWIO `[k,k,Cin,Cout]` → matmul operand `[Cin*k*k, Cout]`.
+fn hwio_to_2d(w4: &[f32], k: usize, cin: usize, cout: usize) -> Vec<f32> {
+    let mut w2 = vec![0.0f32; cin * k * k * cout];
+    for kh in 0..k {
+        for kw in 0..k {
+            for c in 0..cin {
+                let src = (((kh * k) + kw) * cin + c) * cout;
+                let dst = (c * k * k + kh * k + kw) * cout;
+                w2[dst..dst + cout].copy_from_slice(&w4[src..src + cout]);
+            }
+        }
+    }
+    w2
+}
+
+/// Inverse of [`hwio_to_2d`].
+fn hwio_from_2d(w2: &[f32], k: usize, cin: usize, cout: usize) -> Vec<f32> {
+    let mut w4 = vec![0.0f32; k * k * cin * cout];
+    for kh in 0..k {
+        for kw in 0..k {
+            for c in 0..cin {
+                let dst = (((kh * k) + kw) * cin + c) * cout;
+                let src = (c * k * k + kh * k + kw) * cout;
+                w4[dst..dst + cout].copy_from_slice(&w2[src..src + cout]);
+            }
+        }
+    }
+    w4
+}
+
+/// Current activation value flowing through the layer stack.
+struct Act {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+/// Per-layer state saved by the forward pass for the backward pass.
+enum Tape {
+    /// `x`: pre-quantization layer input; `out`: post-activation output.
+    Dense { x: Vec<f32>, out: Vec<f32>, li: usize },
+    /// `cols`: pre-quantization im2col patches; `in_shape`: input NHWC.
+    Conv { cols: Vec<f32>, in_shape: [usize; 4], out: Vec<f32>, li: usize },
+    /// `arg`: per-output-cell index of the (first) max in its 2x2 window.
+    Pool { in_shape: [usize; 4], arg: Vec<u8> },
+    Flatten,
+    /// `skip`: the activation captured at the block entry.
+    ResBegin { skip: Vec<f32> },
+    /// `begin`: tape index of the matching [`Tape::ResBegin`].
+    ResAdd { begin: usize, out: Vec<f32> },
+}
+
+struct Forward {
+    logits: Act,
+    tape: Vec<Tape>,
+}
+
+/// Parsed flat argument list (the `python/compile/train.py` convention).
+struct StepArgs<'a> {
+    params: Vec<&'a [f32]>,
+    masks: Vec<&'a [f32]>,
+    /// Flattened `[L, 2]` rows of `[total_bits, int_bits]`.
+    qcfg: &'a [f32],
+    x: &'a HostTensor,
+    y: &'a [i32],
+    lr: Option<f32>,
+}
+
+/// A manifest variant bound to the reference interpreter.
+pub struct RefModel {
+    variant: ModelVariant,
+    stats: Rc<RefCell<RuntimeStats>>,
+}
+
+impl RefModel {
+    fn layer_q(&self, qcfg: &[f32], l: &LayerDesc) -> Result<(f32, f32)> {
+        let row = l.mask_idx as usize;
+        if l.mask_idx < 0 || (row + 1) * 2 > qcfg.len() {
+            return Err(Error::backend(format!(
+                "layer {} has qcfg row {} but qcfg holds {} rows",
+                l.name,
+                l.mask_idx,
+                qcfg.len() / 2
+            )));
+        }
+        Ok((qcfg[2 * row], qcfg[2 * row + 1]))
+    }
+
+    fn split_args<'a>(&self, args: &'a [HostTensor], with_lr: bool) -> Result<StepArgs<'a>> {
+        let n_p = self.variant.n_params();
+        let n_m = self.variant.n_masks();
+        let expect = n_p + n_m + 3 + usize::from(with_lr);
+        if args.len() != expect {
+            return Err(Error::backend(format!(
+                "expected {expect} args, got {}",
+                args.len()
+            )));
+        }
+        let mut params = Vec::with_capacity(n_p);
+        for (i, (name, shape)) in self.variant.param_shapes.iter().enumerate() {
+            let p = args[i].as_f32()?;
+            let want: usize = shape.iter().product();
+            if p.len() != want {
+                return Err(Error::backend(format!(
+                    "param {name}: expected {want} elements, got {}",
+                    p.len()
+                )));
+            }
+            params.push(p);
+        }
+        let mut masks = Vec::with_capacity(n_m);
+        for (i, (pidx, shape)) in self.variant.mask_shapes.iter().enumerate() {
+            let m = args[n_p + i].as_f32()?;
+            let want: usize = shape.iter().product();
+            if m.len() != want {
+                return Err(Error::backend(format!(
+                    "mask {i} (param {pidx}): expected {want} elements, got {}",
+                    m.len()
+                )));
+            }
+            masks.push(m);
+        }
+        let qcfg = args[n_p + n_m].as_f32()?;
+        if qcfg.len() != 2 * self.variant.qcfg_rows {
+            return Err(Error::backend(format!(
+                "qcfg: expected {} rows, got {} elements",
+                self.variant.qcfg_rows,
+                qcfg.len()
+            )));
+        }
+        let x = &args[n_p + n_m + 1];
+        let y = args[n_p + n_m + 2].as_i32()?;
+        let batch = *x.shape().first().unwrap_or(&0);
+        if y.len() != batch {
+            return Err(Error::backend(format!(
+                "labels: expected {batch} entries, got {}",
+                y.len()
+            )));
+        }
+        let lr = if with_lr { Some(args[n_p + n_m + 3].scalar_f32()?) } else { None };
+        Ok(StepArgs { params, masks, qcfg, x, y, lr })
+    }
+
+    /// Forward pass.  With `record` set, saves per-layer state for
+    /// [`Self::backward`]; without it (the eval path) only the
+    /// [`Tape::ResBegin`] skip values needed by the forward computation
+    /// itself are kept, so evaluation never clones activations.
+    fn forward(&self, a: &StepArgs, record: bool) -> Result<Forward> {
+        let mut act = Act { shape: a.x.shape().to_vec(), data: a.x.as_f32()?.to_vec() };
+        let mut tape: Vec<Tape> = Vec::with_capacity(self.variant.layers.len());
+        let mut res_stack: Vec<usize> = Vec::new();
+
+        for (li, l) in self.variant.layers.iter().enumerate() {
+            match l.kind.as_str() {
+                "dense" => {
+                    if act.shape.len() != 2 || act.shape[1] != l.in_dim {
+                        return Err(Error::backend(format!(
+                            "dense {}: input shape {:?}, want [B, {}]",
+                            l.name, act.shape, l.in_dim
+                        )));
+                    }
+                    let (wb, ib) = self.layer_q(a.qcfg, l)?;
+                    let b = act.shape[0];
+                    let w = a.params[l.param_w as usize];
+                    let bias = a.params[l.param_b as usize];
+                    let mask = a.masks[l.mask_idx as usize];
+                    let wq = quantized_masked(w, mask, wb, ib);
+                    let xq: Vec<f32> =
+                        act.data.iter().map(|&v| fake_quant(v, wb, ib)).collect();
+                    let mut z = mm(&xq, &wq, b, l.in_dim, l.out_dim);
+                    apply_bias_activation(&mut z, bias, l.out_dim, &l.activation)?;
+                    if record {
+                        tape.push(Tape::Dense {
+                            x: std::mem::take(&mut act.data),
+                            out: z.clone(),
+                            li,
+                        });
+                    }
+                    act = Act { shape: vec![b, l.out_dim], data: z };
+                }
+                "conv2d" => {
+                    if act.shape.len() != 4 || act.shape[3] != l.in_dim {
+                        return Err(Error::backend(format!(
+                            "conv2d {}: input shape {:?}, want [B,H,W,{}]",
+                            l.name, act.shape, l.in_dim
+                        )));
+                    }
+                    let (wb, ib) = self.layer_q(a.qcfg, l)?;
+                    let in_shape =
+                        [act.shape[0], act.shape[1], act.shape[2], act.shape[3]];
+                    let [b, h, w, cin] = in_shape;
+                    let k = l.kernel;
+                    let cout = l.out_dim;
+                    let cols = im2col(&act.data, in_shape, k);
+                    let w2 =
+                        hwio_to_2d(a.params[l.param_w as usize], k, cin, cout);
+                    let m2 = hwio_to_2d(a.masks[l.mask_idx as usize], k, cin, cout);
+                    let wq2 = quantized_masked(&w2, &m2, wb, ib);
+                    let colsq: Vec<f32> =
+                        cols.iter().map(|&v| fake_quant(v, wb, ib)).collect();
+                    let rows = b * h * w;
+                    let mut z = mm(&colsq, &wq2, rows, cin * k * k, cout);
+                    apply_bias_activation(
+                        &mut z,
+                        a.params[l.param_b as usize],
+                        cout,
+                        &l.activation,
+                    )?;
+                    if record {
+                        tape.push(Tape::Conv { cols, in_shape, out: z.clone(), li });
+                    }
+                    act = Act { shape: vec![b, h, w, cout], data: z };
+                }
+                "maxpool2" => {
+                    if act.shape.len() != 4 {
+                        return Err(Error::backend(format!(
+                            "maxpool2: input shape {:?}, want NHWC",
+                            act.shape
+                        )));
+                    }
+                    let in_shape =
+                        [act.shape[0], act.shape[1], act.shape[2], act.shape[3]];
+                    let [b, h, w, c] = in_shape;
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut out = vec![0.0f32; b * oh * ow * c];
+                    let mut arg = if record { vec![0u8; b * oh * ow * c] } else { Vec::new() };
+                    for bi in 0..b {
+                        for i in 0..oh {
+                            for j in 0..ow {
+                                for ci in 0..c {
+                                    let mut best = f32::NEG_INFINITY;
+                                    let mut bidx = 0u8;
+                                    for di in 0..2 {
+                                        for dj in 0..2 {
+                                            let v = act.data[((bi * h + 2 * i + di)
+                                                * w
+                                                + 2 * j
+                                                + dj)
+                                                * c
+                                                + ci];
+                                            if v.is_nan() {
+                                                // NaN must win the window
+                                                // (lax.max propagates NaN)
+                                                best = f32::NAN;
+                                            } else if v > best {
+                                                best = v;
+                                                bidx = (di * 2 + dj) as u8;
+                                            }
+                                        }
+                                    }
+                                    let o = ((bi * oh + i) * ow + j) * c + ci;
+                                    out[o] = best;
+                                    if record {
+                                        arg[o] = bidx;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    if record {
+                        tape.push(Tape::Pool { in_shape, arg });
+                    }
+                    act = Act { shape: vec![b, oh, ow, c], data: out };
+                }
+                "flatten" => {
+                    let b = act.shape[0];
+                    let rest: usize = act.shape[1..].iter().product();
+                    if record {
+                        tape.push(Tape::Flatten);
+                    }
+                    act.shape = vec![b, rest];
+                }
+                "residual_begin" => {
+                    res_stack.push(tape.len());
+                    tape.push(Tape::ResBegin { skip: act.data.clone() });
+                }
+                "residual_add" => {
+                    let begin = res_stack.pop().ok_or_else(|| {
+                        Error::backend("residual_add without residual_begin")
+                    })?;
+                    let skip = match &tape[begin] {
+                        Tape::ResBegin { skip } => skip,
+                        _ => unreachable!("res_stack points at ResBegin entries"),
+                    };
+                    if skip.len() != act.data.len() {
+                        return Err(Error::backend(
+                            "residual_add: branch/skip shape mismatch",
+                        ));
+                    }
+                    // NaN-propagating relu(v + s), as in jax.nn.relu
+                    let z: Vec<f32> = act
+                        .data
+                        .iter()
+                        .zip(skip)
+                        .map(|(&v, &s)| {
+                            let sum = v + s;
+                            if sum < 0.0 {
+                                0.0
+                            } else {
+                                sum
+                            }
+                        })
+                        .collect();
+                    if record {
+                        tape.push(Tape::ResAdd { begin, out: z.clone() });
+                    }
+                    act.data = z;
+                }
+                other => {
+                    return Err(Error::backend(format!(
+                        "reference interpreter: unknown layer kind {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(Forward { logits: act, tape })
+    }
+
+    /// Stable softmax cross-entropy + accuracy; returns `d loss / d logits`.
+    fn loss_acc(&self, logits: &Act, y: &[i32]) -> Result<(f32, f32, Vec<f32>)> {
+        let n_classes = self.variant.n_classes;
+        if logits.shape.len() != 2 || logits.shape[1] != n_classes {
+            return Err(Error::backend(format!(
+                "logits shape {:?}, want [B, {n_classes}]",
+                logits.shape
+            )));
+        }
+        let b = logits.shape[0];
+        let mut loss = 0.0f32;
+        let mut correct = 0usize;
+        let mut dlogits = vec![0.0f32; b * n_classes];
+        for i in 0..b {
+            let row = &logits.data[i * n_classes..(i + 1) * n_classes];
+            let label = y[i];
+            if label < 0 || label as usize >= n_classes {
+                return Err(Error::backend(format!(
+                    "label {label} out of range [0, {n_classes})"
+                )));
+            }
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for &v in row {
+                sum += (v - mx).exp();
+            }
+            let lse = sum.ln();
+            loss -= row[label as usize] - mx - lse;
+            // argmax with first-max tie-break and NaN treated as maximal
+            // (jnp.argmax semantics)
+            let mut am = 0usize;
+            for (c, &v) in row.iter().enumerate().skip(1) {
+                let cur = row[am];
+                let better = if v.is_nan() { !cur.is_nan() } else { v > cur };
+                if better {
+                    am = c;
+                }
+            }
+            if am == label as usize {
+                correct += 1;
+            }
+            for c in 0..n_classes {
+                let soft = (row[c] - mx - lse).exp();
+                let onehot = if c == label as usize { 1.0 } else { 0.0 };
+                dlogits[i * n_classes + c] = (soft - onehot) / b as f32;
+            }
+        }
+        Ok((loss / b as f32, correct as f32 / b as f32, dlogits))
+    }
+
+    /// Reverse pass over the tape; returns per-param gradients in flat
+    /// param order.
+    fn backward(&self, a: &StepArgs, fwd: &Forward, dlogits: Vec<f32>) -> Result<Vec<Vec<f32>>> {
+        let mut grads: Vec<Vec<f32>> =
+            a.params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let mut g = dlogits;
+        // gradient contributions waiting at a ResBegin tape index
+        let mut pending: Vec<Option<Vec<f32>>> = (0..fwd.tape.len()).map(|_| None).collect();
+
+        for (t, entry) in fwd.tape.iter().enumerate().rev() {
+            match entry {
+                Tape::Dense { x, out, li } => {
+                    let l = &self.variant.layers[*li];
+                    let (wb, ib) = self.layer_q(a.qcfg, l)?;
+                    if l.activation == "relu" {
+                        relu_mask(&mut g, out);
+                    }
+                    let b = x.len() / l.in_dim;
+                    let w = a.params[l.param_w as usize];
+                    let mask = a.masks[l.mask_idx as usize];
+                    grads[l.param_b as usize] = bias_grad(&g, b, l.out_dim);
+                    let wq = quantized_masked(w, mask, wb, ib);
+                    let mut dx = mm_bt(&g, &wq, b, l.out_dim, l.in_dim);
+                    for (d, &xv) in dx.iter_mut().zip(x) {
+                        *d *= ste(xv, wb, ib);
+                    }
+                    let xq: Vec<f32> =
+                        x.iter().map(|&v| fake_quant(v, wb, ib)).collect();
+                    let mut dw = mm_at(&xq, &g, b, l.in_dim, l.out_dim);
+                    for ((d, &mv), &wv) in dw.iter_mut().zip(mask).zip(w) {
+                        *d *= mv * ste(wv, wb, ib);
+                    }
+                    grads[l.param_w as usize] = dw;
+                    g = dx;
+                }
+                Tape::Conv { cols, in_shape, out, li } => {
+                    let l = &self.variant.layers[*li];
+                    let (wb, ib) = self.layer_q(a.qcfg, l)?;
+                    if l.activation == "relu" {
+                        relu_mask(&mut g, out);
+                    }
+                    let [_, _, _, cin] = *in_shape;
+                    let (k, cout) = (l.kernel, l.out_dim);
+                    let fk = cin * k * k;
+                    let rows = cols.len() / fk;
+                    grads[l.param_b as usize] = bias_grad(&g, rows, cout);
+                    let w2 =
+                        hwio_to_2d(a.params[l.param_w as usize], k, cin, cout);
+                    let m2 = hwio_to_2d(a.masks[l.mask_idx as usize], k, cin, cout);
+                    let wq2 = quantized_masked(&w2, &m2, wb, ib);
+                    let mut dcols = mm_bt(&g, &wq2, rows, cout, fk);
+                    for (d, &cv) in dcols.iter_mut().zip(cols) {
+                        *d *= ste(cv, wb, ib);
+                    }
+                    let colsq: Vec<f32> =
+                        cols.iter().map(|&v| fake_quant(v, wb, ib)).collect();
+                    let mut dw2 = mm_at(&colsq, &g, rows, fk, cout);
+                    for ((d, &mv), &wv) in dw2.iter_mut().zip(&m2).zip(&w2) {
+                        *d *= mv * ste(wv, wb, ib);
+                    }
+                    grads[l.param_w as usize] = hwio_from_2d(&dw2, k, cin, cout);
+                    g = col2im(&dcols, *in_shape, k);
+                }
+                Tape::Pool { in_shape, arg } => {
+                    let [b, h, w, c] = *in_shape;
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut dx = vec![0.0f32; b * h * w * c];
+                    for bi in 0..b {
+                        for i in 0..oh {
+                            for j in 0..ow {
+                                for ci in 0..c {
+                                    let o = ((bi * oh + i) * ow + j) * c + ci;
+                                    let (di, dj) =
+                                        ((arg[o] / 2) as usize, (arg[o] % 2) as usize);
+                                    dx[((bi * h + 2 * i + di) * w + 2 * j + dj) * c
+                                        + ci] += g[o];
+                                }
+                            }
+                        }
+                    }
+                    g = dx;
+                }
+                Tape::Flatten => {
+                    // pure reshape: the gradient buffer is already flat
+                }
+                Tape::ResAdd { begin, out } => {
+                    relu_mask(&mut g, out);
+                    if let Some(acc) = pending[*begin].as_mut() {
+                        for (dst, &src) in acc.iter_mut().zip(&g) {
+                            *dst += src;
+                        }
+                    } else {
+                        pending[*begin] = Some(g.clone());
+                    }
+                }
+                Tape::ResBegin { .. } => {
+                    if let Some(skip_g) = pending[t].take() {
+                        for (dst, &src) in g.iter_mut().zip(&skip_g) {
+                            *dst += src;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(grads)
+    }
+}
+
+/// `z += bias` (broadcast over rows) then apply the layer activation.
+fn apply_bias_activation(z: &mut [f32], bias: &[f32], width: usize, activation: &str) -> Result<()> {
+    for row in z.chunks_mut(width) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+    match activation {
+        "relu" => {
+            // `if v < 0` rather than f32::max: Rust's max(NaN, 0.0)
+            // returns 0.0, but jnp.maximum propagates NaN
+            for v in z.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            Ok(())
+        }
+        "linear" => Ok(()),
+        other => Err(Error::backend(format!("unknown activation {other:?}"))),
+    }
+}
+
+/// `g *= (out > 0)` — the relu VJP against the saved post-activation.
+fn relu_mask(g: &mut [f32], out: &[f32]) {
+    for (gv, &ov) in g.iter_mut().zip(out) {
+        if ov <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Column sums of `g[rows, width]` (the bias gradient).
+fn bias_grad(g: &[f32], rows: usize, width: usize) -> Vec<f32> {
+    let mut db = vec![0.0f32; width];
+    for i in 0..rows {
+        for (d, &gv) in db.iter_mut().zip(&g[i * width..(i + 1) * width]) {
+            *d += gv;
+        }
+    }
+    db
+}
+
+impl ModelExec for RefModel {
+    fn variant(&self) -> &ModelVariant {
+        &self.variant
+    }
+
+    fn train_step(&self, args: &[HostTensor]) -> Result<(Vec<HostTensor>, f32, f32)> {
+        let t0 = Instant::now();
+        let a = self.split_args(args, true)?;
+        let lr = a.lr.expect("split_args(with_lr)");
+        let fwd = self.forward(&a, true)?;
+        let (loss, acc, dlogits) = self.loss_acc(&fwd.logits, a.y)?;
+        let grads = self.backward(&a, &fwd, dlogits)?;
+        let mut new_params = Vec::with_capacity(a.params.len());
+        for (i, (p, gr)) in a.params.iter().zip(&grads).enumerate() {
+            let data: Vec<f32> =
+                p.iter().zip(gr).map(|(&pv, &gv)| pv - lr * gv).collect();
+            let shape = &self.variant.param_shapes[i].1;
+            new_params.push(HostTensor::F32 { shape: shape.clone(), data });
+        }
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.execute_secs += t0.elapsed().as_secs_f64();
+        Ok((new_params, loss, acc))
+    }
+
+    fn eval_step(&self, args: &[HostTensor]) -> Result<(f32, f32)> {
+        let t0 = Instant::now();
+        let a = self.split_args(args, false)?;
+        let fwd = self.forward(&a, false)?;
+        let (loss, acc, _) = self.loss_acc(&fwd.logits, a.y)?;
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.execute_secs += t0.elapsed().as_secs_f64();
+        Ok((loss, acc))
+    }
+}
+
+/// Reject malformed manifests up front so the interpreter can index
+/// params/masks/qcfg by layer descriptor — and slice weight buffers by
+/// layer dims — without panicking.
+fn validate_layer_indices(variant: &ModelVariant) -> Result<()> {
+    let n_p = variant.n_params() as i64;
+    let n_m = variant.n_masks() as i64;
+    for l in &variant.layers {
+        if !matches!(l.kind.as_str(), "dense" | "conv2d") {
+            continue;
+        }
+        if l.param_w < 0 || l.param_w >= n_p || l.param_b < 0 || l.param_b >= n_p {
+            return Err(Error::backend(format!(
+                "layer {}: param indices ({}, {}) out of range [0, {n_p})",
+                l.name, l.param_w, l.param_b
+            )));
+        }
+        if l.mask_idx < 0 || l.mask_idx >= n_m || l.mask_idx as usize >= variant.qcfg_rows {
+            return Err(Error::backend(format!(
+                "layer {}: mask/qcfg row {} out of range ({} masks, {} qcfg rows)",
+                l.name, l.mask_idx, n_m, variant.qcfg_rows
+            )));
+        }
+        if l.kind == "conv2d" && l.kernel == 0 {
+            return Err(Error::backend(format!(
+                "conv2d layer {}: kernel size must be positive",
+                l.name
+            )));
+        }
+        // dims recorded on the layer must agree with the declared
+        // param/mask shapes the interpreter slices by
+        let w_shape = &variant.param_shapes[l.param_w as usize].1;
+        let b_shape = &variant.param_shapes[l.param_b as usize].1;
+        let m_shape = &variant.mask_shapes[l.mask_idx as usize].1;
+        let want_w: Vec<usize> = if l.kind == "dense" {
+            vec![l.in_dim, l.out_dim]
+        } else {
+            vec![l.kernel, l.kernel, l.in_dim, l.out_dim]
+        };
+        if w_shape.as_slice() != want_w.as_slice() {
+            return Err(Error::backend(format!(
+                "layer {}: weight shape {w_shape:?} does not match layer dims {want_w:?}",
+                l.name
+            )));
+        }
+        if b_shape.len() != 1 || b_shape[0] != l.out_dim {
+            return Err(Error::backend(format!(
+                "layer {}: bias shape {b_shape:?} does not match out_dim {}",
+                l.name, l.out_dim
+            )));
+        }
+        if m_shape != w_shape {
+            return Err(Error::backend(format!(
+                "layer {}: mask shape {m_shape:?} does not match weight shape {w_shape:?}",
+                l.name
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The reference-interpreter backend: no artifacts, no native libraries.
+pub struct RefBackend {
+    stats: Rc<RefCell<RuntimeStats>>,
+}
+
+impl RefBackend {
+    pub fn new() -> Self {
+        RefBackend { stats: Rc::new(RefCell::new(RuntimeStats::default())) }
+    }
+}
+
+impl Default for RefBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecBackend for RefBackend {
+    fn platform(&self) -> String {
+        "reference-interpreter".to_string()
+    }
+
+    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Rc<dyn ModelExec>> {
+        let t0 = Instant::now();
+        let variant = manifest.get(tag)?.clone();
+        if variant.layers.is_empty() {
+            return Err(Error::backend(format!(
+                "variant {tag:?} carries no layer descriptions; the reference \
+                 interpreter executes from manifest layers"
+            )));
+        }
+        validate_layer_indices(&variant)?;
+        let mut stats = self.stats.borrow_mut();
+        stats.compiles += 1;
+        stats.compile_secs += t0.elapsed().as_secs_f64();
+        Ok(Rc::new(RefModel { variant, stats: self.stats.clone() }))
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_ties_even_matches_jnp_round() {
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(3.5), 4.0);
+        assert_eq!(round_ties_even(-2.5), -2.0);
+        assert_eq!(round_ties_even(-3.5), -4.0);
+        assert_eq!(round_ties_even(2.4), 2.0);
+        assert_eq!(round_ties_even(2.6), 3.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(0.0), 0.0);
+    }
+
+    #[test]
+    fn fake_quant_disabled_is_identity() {
+        for v in [-7.3f32, -0.1, 0.0, 0.49, 123.4] {
+            assert_eq!(fake_quant(v, 0.0, 0.0), v);
+        }
+    }
+
+    #[test]
+    fn fake_quant_rounds_and_saturates() {
+        // ap_fixed<6,3>: scale 8, range [-4, 3.875]
+        assert_eq!(fake_quant(7.9, 6.0, 3.0), 3.875);
+        assert_eq!(fake_quant(-9.0, 6.0, 3.0), -4.0);
+        assert_eq!(fake_quant(0.13, 6.0, 3.0), 0.125);
+        assert_eq!(fake_quant(1.0, 6.0, 3.0), 1.0);
+    }
+
+    #[test]
+    fn ste_boundary() {
+        // enabled <7,3>: representable magnitude bound 2^(3-1) = 4
+        assert_eq!(ste(3.9, 7.0, 3.0), 1.0);
+        assert_eq!(ste(4.0, 7.0, 3.0), 1.0);
+        assert_eq!(ste(4.1, 7.0, 3.0), 0.0);
+        assert_eq!(ste(-4.1, 7.0, 3.0), 0.0);
+        assert_eq!(ste(100.0, 0.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        // a: 2x3, b: 3x2
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = mm(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+        // b^T is 2x3; mm_bt(a2x3 @ (bt)^T) must equal mm with b
+        let bt = [7.0f32, 9.0, 11.0, 8.0, 10.0, 12.0];
+        assert_eq!(mm_bt(&a, &bt, 2, 3, 2), c);
+        // a^T path: (a^T)^T @ b
+        let at = [1.0f32, 4.0, 2.0, 5.0, 3.0, 6.0];
+        assert_eq!(mm_at(&at, &b, 3, 2, 2), c);
+    }
+
+    #[test]
+    fn im2col_col2im_roundtrip_shapes() {
+        // 1x2x2x1 input, k=3: each pixel sees its 3x3 SAME neighborhood
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let cols = im2col(&x, [1, 2, 2, 1], 3);
+        assert_eq!(cols.len(), 4 * 9);
+        // center of patch (kh=1, kw=1) is the pixel itself
+        for (p, &v) in x.iter().enumerate() {
+            assert_eq!(cols[p * 9 + 4], v);
+        }
+        // col2im of all-ones gradient counts each pixel's patch memberships
+        let dx = col2im(&vec![1.0f32; 4 * 9], [1, 2, 2, 1], 3);
+        assert_eq!(dx, vec![4.0; 4]);
+    }
+
+    #[test]
+    fn hwio_transpose_roundtrip() {
+        let (k, cin, cout) = (3, 2, 4);
+        let w4: Vec<f32> = (0..k * k * cin * cout).map(|i| i as f32).collect();
+        let w2 = hwio_to_2d(&w4, k, cin, cout);
+        assert_eq!(hwio_from_2d(&w2, k, cin, cout), w4);
+    }
+}

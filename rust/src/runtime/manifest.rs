@@ -132,11 +132,19 @@ pub struct Manifest {
 impl Manifest {
     /// Empty manifest (mock/test sessions without artifacts).
     pub fn empty() -> Self {
-        Manifest {
-            dir: PathBuf::from("."),
-            variants: Vec::new(),
-            by_tag: HashMap::new(),
-        }
+        Self::from_variants(Vec::new())
+    }
+
+    /// In-memory manifest from already-built variant descriptions — for
+    /// tests and reference-backend sessions that never touch AOT
+    /// artifact files.
+    pub fn from_variants(variants: Vec<ModelVariant>) -> Self {
+        let by_tag = variants
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.tag.clone(), i))
+            .collect();
+        Manifest { dir: PathBuf::from("."), variants, by_tag }
     }
 
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {

@@ -1,21 +1,30 @@
-//! L3 runtime: load AOT artifacts (HLO text) and execute them via PJRT.
+//! L3 runtime: pluggable execution backends behind [`ExecBackend`].
 //!
-//! The interchange contract with `python/compile/aot.py`:
-//! * artifacts are HLO *text* (`HloModuleProto::from_text_file` reassigns
-//!   instruction ids, sidestepping the 64-bit-id proto incompatibility
-//!   between jax >= 0.5 and xla_extension 0.5.1);
-//! * `manifest.json` records, per (model, scale) variant, the exact flat
-//!   argument order (params, masks, qcfg, batch, labels[, lr]) and the
-//!   output arity (params' + loss + acc for train; loss + acc for eval);
-//! * all computations return a tuple (lowered with `return_tuple=True`).
+//! Design-flow tasks never talk to an execution substrate directly —
+//! they hold a [`Runtime`] (a boxed backend) and [`ModelExecutable`]s
+//! (manifest variants bound to that backend) and exchange
+//! [`HostTensor`]s in the flat argument order recorded per variant by
+//! `manifest.json` (params, masks, qcfg, batch, labels[, lr]).
 //!
-//! Python never runs on this path — the rust binary is self-contained
-//! once `make artifacts` has produced the directory.
+//! Backends:
+//! * [`interp::RefBackend`] (default) — a pure-Rust reference
+//!   interpreter executing the train/eval step semantics from the
+//!   manifest's layer descriptions; zero native dependencies.
+//! * [`exec::PjrtBackend`] (`--features xla`) — loads AOT artifacts
+//!   (HLO text) produced by `python/compile/aot.py` and executes them
+//!   via PJRT.  Python never runs on this path — the rust binary is
+//!   self-contained once `make artifacts` has produced the directory.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod exec;
+pub mod interp;
 pub mod manifest;
 pub mod tensor;
 
-pub use exec::{ModelExecutable, Runtime};
+pub use backend::{ExecBackend, ModelExec, ModelExecutable, Runtime, RuntimeStats};
+#[cfg(feature = "xla")]
+pub use exec::PjrtBackend;
+pub use interp::RefBackend;
 pub use manifest::{LayerDesc, Manifest, ModelVariant};
 pub use tensor::HostTensor;

@@ -97,16 +97,28 @@ impl HostTensor {
     }
 
     /// Convert to an xla Literal with this tensor's shape.
+    ///
+    /// Zero-element tensors are rejected: `Literal::vec1` of an empty
+    /// slice misbehaves in the native crate, and no computation in the
+    /// AOT contract takes a zero-element operand.
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
+        if self.is_empty() {
+            return Err(Error::other(format!(
+                "cannot marshal zero-element tensor (shape {:?}) to a literal",
+                self.shape()
+            )));
+        }
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
-            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
-            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
         };
         Ok(lit.reshape(&dims)?)
     }
 
     /// Read a Literal back into a host tensor.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -171,6 +183,18 @@ mod tests {
     }
 
     #[test]
+    fn zero_element_tensors_are_well_formed() {
+        let t = HostTensor::from_f32(&[0], vec![]).unwrap();
+        assert!(t.is_empty());
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.zero_fraction(), 0.0);
+        let t2 = HostTensor::from_f32(&[2, 0, 3], vec![]).unwrap();
+        assert_eq!(t2.shape(), &[2, 0, 3]);
+        assert!(t2.scalar_f32().is_err());
+    }
+
+    #[cfg(feature = "xla")]
+    #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         let lit = t.to_literal().unwrap();
@@ -178,11 +202,25 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = HostTensor::from_i32(&[3], vec![7, -1, 0]).unwrap();
         let lit = t.to_literal().unwrap();
         let back = HostTensor::from_literal(&lit).unwrap();
         assert_eq!(back, t);
+    }
+
+    /// Regression: `to_literal` on a zero-element tensor must error, not
+    /// panic (Literal::vec1 of an empty slice misbehaves natively).
+    #[cfg(feature = "xla")]
+    #[test]
+    fn empty_tensor_to_literal_errors_cleanly() {
+        let t = HostTensor::from_f32(&[0], vec![]).unwrap();
+        assert!(t.to_literal().is_err());
+        let t2 = HostTensor::from_i32(&[4, 0], vec![]).unwrap();
+        assert!(t2.to_literal().is_err());
+        // scalars (shape [], one element) still marshal
+        assert!(HostTensor::scalar(1.5).to_literal().is_ok());
     }
 }

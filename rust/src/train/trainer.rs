@@ -1,9 +1,17 @@
-//! SGD training loop over the PJRT executables.
+//! SGD training loop over a backend-bound [`ModelExecutable`].
 //!
 //! Matches the Keras fit/evaluate surface the paper's O-tasks rely on:
 //! `fit(state, epochs)` and `evaluate(state)`, with cosine-decayed lr and
-//! deterministic shuffling.  The loop never allocates per step beyond the
-//! literal marshaling (profiled in benches/perf_runtime.rs).
+//! deterministic shuffling.  The loop is backend-agnostic: each step
+//! passes the flat argument list (params ++ masks ++ [qcfg, x, y, lr])
+//! through [`ModelExecutable::train_step`] and feeds the returned
+//! parameters straight into the next step.  Constant operands (masks,
+//! qcfg) are staged once per fit()/evaluate() call and the argument
+//! vector is reused across steps, so the host side allocates only for
+//! the batch.  Whether a step marshals beyond that is the backend's
+//! concern: the reference interpreter reads the tensors in place; the
+//! PJRT backend converts host ↔ literal once per step (see
+//! `runtime::exec::PjrtModel`).
 
 use crate::data::{Batcher, Dataset};
 use crate::error::Result;
@@ -56,8 +64,13 @@ pub struct EvalResult {
     pub n: usize,
 }
 
-/// Binds a runtime + compiled variant + dataset into a Keras-like trainer.
+/// Binds a runtime + backend-bound executable + dataset into a
+/// Keras-like trainer.
 pub struct Trainer<'a> {
+    /// The runtime the executable is bound to.  The step loop drives
+    /// [`ModelExecutable`] directly, but the handle stays here so
+    /// trainer consumers can reach platform/stats accounting without
+    /// re-threading the session.
     pub runtime: &'a Runtime,
     pub exec: &'a ModelExecutable,
     pub data: &'a Dataset,
@@ -79,11 +92,6 @@ impl<'a> Trainer<'a> {
     }
 
     /// SGD-train `state` in place; returns final (train_loss, train_acc).
-    ///
-    /// Hot-path note (§Perf L3): the step loop works on xla Literals
-    /// directly — masks/qcfg are marshaled once, parameters flow from one
-    /// step's output tuple into the next step's inputs without host
-    /// round-trips; per-step host work is the batch upload + two scalars.
     pub fn fit(&self, state: &mut ModelState, cfg: &TrainConfig) -> Result<(f32, f32)> {
         let batch = self.exec.variant.train_batch;
         let mut batcher = Batcher::new(self.data, batch, cfg.seed);
@@ -91,19 +99,15 @@ impl<'a> Trainer<'a> {
         let total = steps_per_epoch * cfg.epochs;
         let n_params = state.params.len();
 
-        // constant operands: marshal exactly once
-        let mut params: Vec<xla::Literal> = state
-            .params
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        let consts: Vec<xla::Literal> = state
-            .masks
-            .iter()
-            .cloned()
-            .chain([state.qcfg_tensor()])
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
+        // args = params ++ masks ++ qcfg ++ [x, y, lr]; the constant
+        // middle (masks, qcfg) is staged once, the params prefix is
+        // overwritten with each step's outputs, and the x/y/lr tail is
+        // replaced per step.
+        let base = n_params + state.masks.len() + 1;
+        let mut args: Vec<HostTensor> = Vec::with_capacity(base + 3);
+        args.extend(state.params.iter().cloned());
+        args.extend(state.masks.iter().cloned());
+        args.push(state.qcfg_tensor());
 
         let mut last = (0.0f32, 0.0f32);
         let mut step = 0usize;
@@ -113,26 +117,15 @@ impl<'a> Trainer<'a> {
             for _ in 0..steps_per_epoch {
                 let (x, y) = batcher.next_batch()?;
                 let lr = Self::lr_at(cfg, step, total);
-                let x_lit = x.to_literal()?;
-                let y_lit = y.to_literal()?;
-                let lr_lit = HostTensor::scalar(lr).to_literal()?;
-                // args = params ++ masks ++ qcfg ++ [x, y, lr], all borrowed
-                // (execute takes Borrow<Literal>, so constants are never
-                // copied and parameters never leave the literal domain)
-                let mut args: Vec<&xla::Literal> =
-                    Vec::with_capacity(n_params + consts.len() + 3);
-                args.extend(params.iter());
-                args.extend(consts.iter());
-                args.push(&x_lit);
-                args.push(&y_lit);
-                args.push(&lr_lit);
+                args.truncate(base);
+                args.push(x);
+                args.push(y);
+                args.push(HostTensor::scalar(lr));
 
-                let mut out =
-                    self.runtime.execute_literals_ref(self.exec.train_exe(), &args)?;
-                let acc = HostTensor::from_literal(&out[n_params + 1])?.scalar_f32()?;
-                let loss = HostTensor::from_literal(&out[n_params])?.scalar_f32()?;
-                out.truncate(n_params);
-                params = out;
+                let (new_params, loss, acc) = self.exec.train_step(&args)?;
+                for (slot, p) in args.iter_mut().zip(new_params) {
+                    *slot = p;
+                }
                 ep_loss += loss as f64;
                 ep_acc += acc as f64;
                 last = (loss, acc);
@@ -148,10 +141,8 @@ impl<'a> Trainer<'a> {
             }
         }
         // write the final parameters back into the model state
-        state.params = params
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect::<Result<Vec<_>>>()?;
+        args.truncate(n_params);
+        state.params = args;
         Ok(last)
     }
 
@@ -159,34 +150,24 @@ impl<'a> Trainer<'a> {
     /// valid count — padding rows are repeats and slightly bias the tail
     /// batch, bounded by batch/n_test; acceptable for trend experiments).
     ///
-    /// Same literal-borrowing hot path as fit(): model operands are
-    /// marshaled once per evaluate() call, not once per batch — the
-    /// quantization search calls this hundreds of times (§Perf L3).
+    /// Model operands are staged once per evaluate() call, not once per
+    /// batch — the quantization search calls this hundreds of times.
     pub fn evaluate(&self, state: &ModelState) -> Result<EvalResult> {
         let batch = self.exec.variant.eval_batch;
-        let consts: Vec<xla::Literal> = state
-            .params
-            .iter()
-            .chain(state.masks.iter())
-            .cloned()
-            .chain([state.qcfg_tensor()])
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
+        let base = state.params.len() + state.masks.len() + 1;
+        let mut args: Vec<HostTensor> = Vec::with_capacity(base + 2);
+        args.extend(state.params.iter().cloned());
+        args.extend(state.masks.iter().cloned());
+        args.push(state.qcfg_tensor());
+
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut n = 0usize;
         for (x, y, valid) in self.data.test_batches(batch)? {
-            let x_lit = x.to_literal()?;
-            let y_lit = y.to_literal()?;
-            let mut args: Vec<&xla::Literal> = Vec::with_capacity(consts.len() + 2);
-            args.extend(consts.iter());
-            args.push(&x_lit);
-            args.push(&y_lit);
-            let out = self
-                .runtime
-                .execute_literals_ref(self.exec.eval_exe(), &args)?;
-            let loss = HostTensor::from_literal(&out[0])?.scalar_f32()?;
-            let acc = HostTensor::from_literal(&out[1])?.scalar_f32()?;
+            args.truncate(base);
+            args.push(x);
+            args.push(y);
+            let (loss, acc) = self.exec.eval_step(&args)?;
             loss_sum += loss as f64 * valid as f64;
             acc_sum += acc as f64 * valid as f64;
             n += valid;

@@ -75,7 +75,7 @@ fn registry_with(
 }
 
 fn session() -> Session {
-    Session::without_artifacts().expect("pjrt cpu client")
+    Session::without_artifacts().expect("reference backend session")
 }
 
 #[test]
@@ -130,7 +130,8 @@ fn multiplicity_violations_rejected() {
 #[test]
 fn back_edge_iterates_subpath_bounded() {
     let trace = Rc::new(RefCell::new(Vec::new()));
-    // "b" asks for iteration twice (runs at most 3 times w/ budget 3)
+    // "b" asks for iteration twice; the budget of 3 re-executions is
+    // not the binding limit here
     let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("LOOP", 1, 2, false)]);
     let mut g = FlowGraph::new("loop");
     let a = g.add_task("a", "SRC");
@@ -166,7 +167,44 @@ fn back_edge_budget_caps_runaway_iteration() {
     let session = session();
     let mut meta = MetaModel::new();
     Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
-    assert_eq!(trace.borrow().len(), 8); // 4 passes x 2 tasks
+    // max_iters bounds RE-executions: initial pass + 4 re-executions
+    // = 5 passes x 2 tasks
+    assert_eq!(trace.borrow().len(), 10);
+    let iter_events = meta
+        .log
+        .entries()
+        .iter()
+        .filter(|e| matches!(e.event, LogEvent::IterationAdvanced { .. }))
+        .count();
+    assert_eq!(iter_events, 4);
+}
+
+/// Regression for the back-edge off-by-one: a `max_iters == 1` back edge
+/// must re-execute its sub-path exactly once (it used to be a silent
+/// no-op because the budget check required a budget strictly above 1).
+#[test]
+fn back_edge_with_unit_budget_reexecutes_exactly_once() {
+    let trace = Rc::new(RefCell::new(Vec::new()));
+    // task ALWAYS asks to iterate, so only the budget limits re-execution
+    let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("LOOP", 1, 999, false)]);
+    let mut g = FlowGraph::new("single-iteration");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "LOOP");
+    g.connect(a, b).unwrap();
+    g.connect_back(b, a, 1).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    // initial pass + exactly one re-execution of the a..b sub-path
+    assert_eq!(*trace.borrow(), vec!["a", "b", "a", "b"]);
+    let iter_events = meta
+        .log
+        .entries()
+        .iter()
+        .filter(|e| matches!(e.event, LogEvent::IterationAdvanced { .. }))
+        .count();
+    assert_eq!(iter_events, 1);
 }
 
 #[test]

@@ -1,8 +1,11 @@
-//! Full-stack integration tests: real artifacts + real PJRT execution.
+//! Full-stack integration tests: real manifest + full flow execution.
 //!
 //! These exercise the paper's flows end to end (train → optimize → HLS →
-//! RTL) against the AOT artifacts.  They are skipped gracefully when
-//! `make artifacts` has not run (e.g. a fresh checkout without python).
+//! RTL) against an artifacts directory, on whichever execution backend
+//! `METAML_BACKEND` selects (reference interpreter by default; the
+//! interpreter only needs `manifest.json`, not the HLO files).  They are
+//! skipped gracefully when `make artifacts` has not run (e.g. a fresh
+//! checkout without python).
 
 use metaml::config::builtin_flow;
 use metaml::flow::{Engine, Session, TaskRegistry};

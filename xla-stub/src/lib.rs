@@ -1,0 +1,243 @@
+//! Offline stand-in for the `xla` (xla-rs) crate.
+//!
+//! The real crate links the XLA/PJRT C++ libraries, which are unavailable
+//! in offline and CI environments.  This stub mirrors exactly the subset
+//! of the xla-rs API that `metaml`'s PJRT backend uses, so that
+//! `cargo check --features xla` type-checks the whole PJRT path with no
+//! native dependencies:
+//!
+//! * [`Literal`] is a *real* host-side implementation (construction,
+//!   reshape, readback, tuples) — literal marshaling round-trips work;
+//! * [`PjRtClient`] and everything behind it returns a descriptive
+//!   [`Error`] at runtime: there is no execution engine here.
+//!
+//! To run real AOT artifacts, repoint the `xla` dependency in the root
+//! `Cargo.toml` at the actual xla-rs crate; no `metaml` source changes
+//! are required.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type matching the surface `metaml` relies on (`Display` + source).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: this build links the offline xla-stub crate; \
+         point the `xla` dependency at the real xla-rs crate (with the XLA \
+         C++ libraries installed) to execute PJRT artifacts"
+    ))
+}
+
+/// Element types used by the metaml marshaling layer.  Non-exhaustive to
+/// mirror the real crate's much larger dtype set (callers must keep a
+/// fallback arm).
+#[non_exhaustive]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Dense array shape: element type + dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Store {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Marker trait for element types storable in a [`Literal`].
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn store(data: &[Self]) -> Store;
+    fn read(store: &Store) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn store(data: &[Self]) -> Store {
+        Store::F32(data.to_vec())
+    }
+    fn read(store: &Store) -> Result<Vec<Self>> {
+        match store {
+            Store::F32(v) => Ok(v.clone()),
+            Store::I32(_) => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn store(data: &[Self]) -> Store {
+        Store::I32(data.to_vec())
+    }
+    fn read(store: &Store) -> Result<Vec<Self>> {
+        match store {
+            Store::I32(v) => Ok(v.clone()),
+            Store::F32(_) => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+/// Host-side literal: fully functional (unlike the execution types below).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    shape: ArrayShape,
+    store: Store,
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            shape: ArrayShape { ty: T::TY, dims: vec![data.len() as i64] },
+            store: T::store(data),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match &self.store {
+            Store::F32(v) => v.len(),
+            Store::I32(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.shape.dims, dims
+            )));
+        }
+        Ok(Literal {
+            shape: ArrayShape { ty: self.shape.ty, dims: dims.to_vec() },
+            store: self.store.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(&self.store)
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they
+    /// only come from executions), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literal decomposition"))
+    }
+}
+
+/// Parsed HLO module handle (stub: construction always fails).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// Computation handle compiled from an HLO proto.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("the PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+/// Device buffer handle (stub: never constructed).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_validates_count() {
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+        assert!(lit.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn execution_surfaces_error_not_panic() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+    }
+}
