@@ -8,6 +8,7 @@
 //! bench_out/fig3_<model>.csv.
 
 use metaml::bench_support::{artifacts_dir, bench_models, bench_out, fast_mode};
+use metaml::dse::ProbePool;
 use metaml::flow::Session;
 use metaml::prune::{autoprune, AutopruneConfig};
 use metaml::report::{CsvWriter, Table};
@@ -33,7 +34,8 @@ fn run(session: &Session, model: &str) -> metaml::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let trace = autoprune(&trainer, &mut state, &cfg)?;
+    let pool = ProbePool::with_default_jobs();
+    let trace = autoprune(&trainer, &mut state, &cfg, &pool)?;
 
     let mut table = Table::new(&["step", "rate %", "accuracy %", "Δacc %", "direction", "verdict"]);
     let mut csv = CsvWriter::new(&["step", "rate", "accuracy", "accepted", "direction"]);

@@ -10,6 +10,7 @@
 //! reported against the device.  Writes bench_out/fig4_<model>.csv.
 
 use metaml::bench_support::{artifacts_dir, bench_models, bench_out, fast_mode};
+use metaml::dse::ProbePool;
 use metaml::flow::Session;
 use metaml::hls::{HlsModel, HlsTransform, SetReuseFactor};
 use metaml::model::state::Precision;
@@ -42,7 +43,8 @@ fn run(session: &Session, model: &str, device_name: &str) -> metaml::Result<()> 
         train_epochs: if fast_mode() { 1 } else { 2 },
         ..Default::default()
     };
-    let trace = autoprune(&trainer, &mut state, &cfg)?;
+    let pool = ProbePool::with_default_jobs();
+    let trace = autoprune(&trainer, &mut state, &cfg, &pool)?;
 
     // Reuse factor: the paper's edge deployments (Zynq @100 MHz) cannot
     // fully unroll; pick the smallest power-of-2 RF that fits the

@@ -9,6 +9,7 @@
 //! Writes bench_out/fig5a.csv and bench_out/fig5b.csv.
 
 use metaml::bench_support::{artifacts_dir, bench_out, fast_mode};
+use metaml::dse::ProbePool;
 use metaml::flow::Session;
 use metaml::prune::{autoprune, AutopruneConfig};
 use metaml::report::{CsvWriter, Table};
@@ -26,7 +27,8 @@ fn main() -> metaml::Result<()> {
     let (mut solo, exec, data) =
         metaml::bench_support::trained_base(&session, "jet_dnn", 1.0, 1501)?;
     let trainer = Trainer::new(&session.runtime, &exec, &data);
-    let solo_trace = autoprune(&trainer, &mut solo, &prune_cfg)?;
+    let pool = ProbePool::with_default_jobs();
+    let solo_trace = autoprune(&trainer, &mut solo, &prune_cfg, &pool)?;
 
     // ---- Fig 5(a): scaling THEN pruning --------------------------------
     println!("== Fig 5(a): scaling -> pruning on Jet-DNN ==");
@@ -39,12 +41,12 @@ fn main() -> metaml::Result<()> {
         ..Default::default()
     };
     let (strace, mut scaled_state, new_scale) =
-        scale_search(&session, "jet_dnn", 1.0, base_acc, &scfg)?;
+        scale_search(&session, "jet_dnn", 1.0, base_acc, &scfg, &pool)?;
     let sexec = session.executable(
         &session.manifest.variant("jet_dnn", new_scale)?.tag,
     )?;
     let strainer = Trainer::new(&session.runtime, &sexec, &data);
-    let strace2 = autoprune(&strainer, &mut scaled_state, &prune_cfg)?;
+    let strace2 = autoprune(&strainer, &mut scaled_state, &prune_cfg, &pool)?;
 
     let mut table = Table::new(&["step", "rate %", "accuracy %", "verdict"]);
     let mut csv = CsvWriter::new(&["step", "rate", "accuracy", "accepted"]);
@@ -80,7 +82,7 @@ fn main() -> metaml::Result<()> {
         ..scfg.clone()
     };
     let (btrace, _, bscale) =
-        scale_search(&session, "jet_dnn", 1.0, pruned_acc, &bcfg)?;
+        scale_search(&session, "jet_dnn", 1.0, pruned_acc, &bcfg, &pool)?;
     let mut table_b = Table::new(&["trial", "scale", "params", "accuracy %", "Δacc %", "verdict"]);
     let mut csv_b = CsvWriter::new(&["trial", "scale", "params", "accuracy", "accepted"]);
     for p in &btrace.probes {

@@ -5,18 +5,29 @@
 //!   * train-step dispatch latency + steps/s per model (the hot loop of
 //!     every O-task probe);
 //!   * eval throughput (samples/s);
+//!   * DSE probe throughput, sequential vs parallel (1 / 2 / max
+//!     workers), plus an end-to-end `quantize_search` jobs comparison
+//!     that asserts the parallel trace is bit-identical;
 //!   * literal marshaling overhead (host→device→host round trip);
 //!   * flow-engine overhead (no-op task graph traversal).
 //!
-//! Writes bench_out/perf_runtime.csv.
+//! Runs against real artifacts when present, else the in-memory
+//! `jet_dnn` manifest (reference interpreter), so every machine can
+//! reproduce the numbers.  Writes bench_out/perf_runtime.csv and a
+//! machine-readable bench_out/perf_runtime.json.
 
 use std::time::Instant;
 
-use metaml::bench_support::{artifacts_dir, bench_models, bench_out};
+use metaml::bench_support::{artifacts_dir, bench_models, bench_out, synthetic_jet_manifest};
+use metaml::dse::{ProbePool, ProbeRequest};
 use metaml::flow::{Engine, FlowGraph, ParamSpec, PipeTask, Session, TaskCtx, TaskOutcome, TaskRegistry, TaskRole};
+use metaml::json::{self, Value};
 use metaml::metamodel::MetaModel;
+use metaml::model::state::Precision;
 use metaml::model::ModelState;
+use metaml::quant::{quantize_search, QuantConfig, QuantTrace};
 use metaml::report::{CsvWriter, Table};
+use metaml::runtime::Runtime;
 use metaml::train::Trainer;
 
 struct NopTask;
@@ -38,9 +49,71 @@ impl PipeTask for NopTask {
     }
 }
 
+/// Keeps the CSV and the machine-readable JSON trajectory in sync.
+struct Recorder {
+    csv: CsvWriter,
+    rows: Vec<Value>,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        Recorder {
+            csv: CsvWriter::new(&["metric", "model", "value", "unit"]),
+            rows: Vec::new(),
+        }
+    }
+
+    fn record(&mut self, metric: &str, model: &str, value: f64, unit: &str) {
+        self.csv
+            .row(&[metric.into(), model.into(), format!("{value}"), unit.into()]);
+        let mut row = Value::object();
+        row.set("metric", metric);
+        row.set("model", model);
+        row.set("value", value);
+        row.set("unit", unit);
+        self.rows.push(row);
+    }
+
+    fn save(&self) -> metaml::Result<()> {
+        self.csv.save(bench_out().join("perf_runtime.csv"))?;
+        let mut root = Value::object();
+        root.set("bench", "perf_runtime");
+        root.set("rows", Value::Array(self.rows.clone()));
+        std::fs::create_dir_all(bench_out())?;
+        std::fs::write(
+            bench_out().join("perf_runtime.json"),
+            json::to_string_pretty(&root),
+        )?;
+        Ok(())
+    }
+}
+
+/// Probe-trace equality down to accuracy bit patterns (the parallel
+/// determinism contract).
+fn traces_identical(a: &QuantTrace, b: &QuantTrace) -> bool {
+    a.precisions == b.precisions
+        && a.bits_after == b.bits_after
+        && a.probes.len() == b.probes.len()
+        && a.probes.iter().zip(&b.probes).all(|(x, y)| {
+            x.round == y.round
+                && x.layer == y.layer
+                && x.tried == y.tried
+                && x.accuracy.to_bits() == y.accuracy.to_bits()
+                && x.accepted == y.accepted
+        })
+}
+
 fn main() -> metaml::Result<()> {
-    let session = Session::open(&artifacts_dir())?;
-    let mut csv = CsvWriter::new(&["metric", "model", "value", "unit"]);
+    // real artifacts when available; otherwise the in-memory jet_dnn
+    // manifest keeps the bench runnable on any machine
+    let session = match Session::open(&artifacts_dir()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("note: no artifacts ({e}); using the in-memory jet_dnn manifest");
+            Session::with_backend(Runtime::cpu()?, synthetic_jet_manifest())
+        }
+    };
+    let mut rec = Recorder::new();
     let mut table = Table::new(&["metric", "model", "value"]);
 
     // compile: cold vs warm
@@ -53,22 +126,24 @@ fn main() -> metaml::Result<()> {
         let warm = t1.elapsed().as_secs_f64();
         table.row_strs(&["compile cold", "jet_dnn", &format!("{:.3} s", cold)]);
         table.row_strs(&["compile warm (cache)", "jet_dnn", &format!("{:.6} s", warm)]);
-        csv.row(&["compile_cold".into(), "jet_dnn".into(), format!("{cold}"), "s".into()]);
-        csv.row(&["compile_warm".into(), "jet_dnn".into(), format!("{warm}"), "s".into()]);
+        rec.record("compile_cold", "jet_dnn", cold, "s");
+        rec.record("compile_warm", "jet_dnn", warm, "s");
     }
 
     for model in bench_models(&["jet_dnn", "vgg7_mini", "resnet9_mini"]) {
+        if session.manifest.variants.iter().all(|v| v.model != model) {
+            eprintln!("note: model {model} not in manifest; skipping");
+            continue;
+        }
         let variant = session.manifest.variant(&model, 1.0)?.clone();
         let exec = session.executable(&variant.tag)?;
         let data = session.dataset(&model)?;
         let trainer = Trainer::new(&session.runtime, &exec, &data);
         let mut state = ModelState::init(&variant, 77);
 
-        // train-step latency (hot loop): time N steps through fit()
-        let steps = if model == "jet_dnn" { 128 } else { 16 };
+        // train-step latency (hot loop): fit one epoch and normalize
         let mut cfg = metaml::train::TrainConfig::for_model(&model);
         cfg.epochs = 1;
-        // fit runs one epoch = n_train/batch steps; time it and normalize
         let t0 = Instant::now();
         trainer.fit(&mut state, &cfg)?;
         let secs = t0.elapsed().as_secs_f64();
@@ -80,9 +155,8 @@ fn main() -> metaml::Result<()> {
             &model,
             &format!("{:.1} ms/step ({:.0} samples/s)", ms_per_step, samples_s),
         ]);
-        csv.row(&["train_step_ms".into(), model.clone(), format!("{ms_per_step}"), "ms".into()]);
-        csv.row(&["train_samples_s".into(), model.clone(), format!("{samples_s}"), "1/s".into()]);
-        let _ = steps;
+        rec.record("train_step_ms", &model, ms_per_step, "ms");
+        rec.record("train_samples_s", &model, samples_s, "1/s");
 
         // eval throughput
         let t0 = Instant::now();
@@ -90,7 +164,109 @@ fn main() -> metaml::Result<()> {
         let secs = t0.elapsed().as_secs_f64();
         let eps = eval.n as f64 / secs;
         table.row_strs(&["eval", &model, &format!("{:.0} samples/s", eps)]);
-        csv.row(&["eval_samples_s".into(), model.clone(), format!("{eps}"), "1/s".into()]);
+        rec.record("eval_samples_s", &model, eps, "1/s");
+    }
+
+    // DSE probe throughput: one quant-round-shaped candidate batch,
+    // evaluated at 1 / 2 / max workers (fresh pool each, so every run
+    // is cache-cold), plus the end-to-end quantize_search comparison
+    {
+        let variant = session.manifest.variant("jet_dnn", 1.0)?.clone();
+        let exec = session.executable(&variant.tag)?;
+        let data = session.dataset("jet_dnn")?;
+        let trainer = Trainer::new(&session.runtime, &exec, &data);
+        let mut state = ModelState::init(&variant, 4242);
+        let mut cfg = metaml::train::TrainConfig::for_model("jet_dnn");
+        cfg.epochs = 2;
+        trainer.fit(&mut state, &cfg)?;
+
+        // 24 distinct (layer, precision) candidates — what a few rounds
+        // of the quantization search submit
+        let widths = [18u32, 16, 14, 12, 10, 8];
+        let n_layers = state.n_weight_layers().max(1);
+        let requests: Vec<ProbeRequest> = (0..n_layers * widths.len())
+            .map(|i| {
+                let mut cand = state.clone();
+                cand.precisions[i % n_layers] =
+                    Precision::new(widths[i / n_layers], 4);
+                ProbeRequest::new(i, cand)
+            })
+            .collect();
+
+        let max_jobs = metaml::dse::default_jobs();
+        let mut worker_counts = vec![1usize, 2];
+        if max_jobs > 2 {
+            worker_counts.push(max_jobs);
+        }
+        let mut baseline: Option<Vec<f64>> = None;
+        for &jobs in &worker_counts {
+            let pool = ProbePool::new(jobs);
+            let t0 = Instant::now();
+            let results = pool.evaluate_batch(&trainer, &requests)?;
+            let secs = t0.elapsed().as_secs_f64();
+            let probes_s = requests.len() as f64 / secs;
+            let accs: Vec<f64> = results.iter().map(|r| r.eval.accuracy).collect();
+            match &baseline {
+                None => baseline = Some(accs),
+                Some(b) => {
+                    if b.iter().zip(&accs).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                        return Err(metaml::Error::other(format!(
+                            "dse_probe: jobs={jobs} results diverged from sequential"
+                        )));
+                    }
+                }
+            }
+            table.row_strs(&[
+                &format!("dse probe batch (jobs={jobs})"),
+                "jet_dnn",
+                &format!("{:.1} probes/s", probes_s),
+            ]);
+            rec.record(&format!("dse_probe_jobs{jobs}"), "jet_dnn", probes_s, "probes/s");
+        }
+        rec.record("dse_jobs_max", "-", max_jobs as f64, "workers");
+
+        // end-to-end mixed-precision search, sequential vs parallel
+        let qcfg = QuantConfig {
+            start: Precision::new(12, 6),
+            min_bits: 8,
+            ..Default::default()
+        };
+        let mut seq_state = state.clone();
+        let t0 = Instant::now();
+        let seq_trace =
+            quantize_search(&trainer, &mut seq_state, &qcfg, &ProbePool::new(1))?;
+        let seq_secs = t0.elapsed().as_secs_f64();
+
+        let mut par_state = state.clone();
+        let t0 = Instant::now();
+        let par_trace =
+            quantize_search(&trainer, &mut par_state, &qcfg, &ProbePool::new(max_jobs))?;
+        let par_secs = t0.elapsed().as_secs_f64();
+
+        if !traces_identical(&seq_trace, &par_trace) {
+            return Err(metaml::Error::other(
+                "dse_probe: parallel quantize_search trace diverged from sequential",
+            ));
+        }
+        let speedup = seq_secs / par_secs.max(1e-12);
+        table.row_strs(&[
+            "quantize_search jobs=1",
+            "jet_dnn",
+            &format!("{:.3} s ({} probes)", seq_secs, seq_trace.probes.len()),
+        ]);
+        table.row_strs(&[
+            &format!("quantize_search jobs={max_jobs}"),
+            "jet_dnn",
+            &format!("{:.3} s ({:.2}x, bit-identical)", par_secs, speedup),
+        ]);
+        rec.record("dse_quant_search_jobs1_s", "jet_dnn", seq_secs, "s");
+        rec.record(
+            &format!("dse_quant_search_jobs{max_jobs}_s"),
+            "jet_dnn",
+            par_secs,
+            "s",
+        );
+        rec.record("dse_quant_search_speedup", "jet_dnn", speedup, "x");
     }
 
     // literal marshaling: tensor -> literal -> tensor round trip
@@ -107,21 +283,16 @@ fn main() -> metaml::Result<()> {
         }
         let us = 1e6 * t0.elapsed().as_secs_f64() / n as f64;
         table.row_strs(&["literal round-trip 256KB", "-", &format!("{:.1} µs", us)]);
-        csv.row(&["literal_roundtrip_us".into(), "-".into(), format!("{us}"), "us".into()]);
+        rec.record("literal_roundtrip_us", "-", us, "us");
     }
 
-    // flow-engine overhead: 64-node no-op chain
+    // flow-engine overhead: 64 independent no-op tasks
     {
         let mut registry = TaskRegistry::empty();
         registry.register("NOP", || Box::new(NopTask));
         let mut g = FlowGraph::new("nop-chain");
-        let mut prev = None;
         for i in 0..64 {
-            let n = g.add_task(format!("n{i}"), "NOP");
-            if let Some(p) = prev {
-                let _ = p; // chain kept acyclic but disconnected: NOP is 0-input
-            }
-            prev = Some(n);
+            g.add_task(format!("n{i}"), "NOP");
         }
         let engine = Engine::new(&session, &registry);
         let mut meta = MetaModel::new();
@@ -129,7 +300,7 @@ fn main() -> metaml::Result<()> {
         engine.run(&g, &mut meta)?;
         let us_per_task = 1e6 * t0.elapsed().as_secs_f64() / 64.0;
         table.row_strs(&["engine overhead", "-", &format!("{:.1} µs/task", us_per_task)]);
-        csv.row(&["engine_overhead_us_task".into(), "-".into(), format!("{us_per_task}"), "us".into()]);
+        rec.record("engine_overhead_us_task", "-", us_per_task, "us");
     }
 
     println!("== §Perf: runtime microbenchmarks ==");
@@ -139,6 +310,6 @@ fn main() -> metaml::Result<()> {
         "runtime totals: {} compiles {:.2}s, {} executions {:.2}s",
         stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
     );
-    csv.save(bench_out().join("perf_runtime.csv"))?;
+    rec.save()?;
     Ok(())
 }

@@ -16,6 +16,7 @@ use metaml::baselines::logicnets::{logicnets_design, JSC_L, JSC_M};
 use metaml::baselines::qkeras::{qkeras_design, QKerasVariant};
 use metaml::bench_support::{artifacts_dir, bench_out, fast_mode};
 use metaml::config::builtin_flow;
+use metaml::dse::ProbePool;
 use metaml::flow::{Engine, Session, TaskRegistry};
 use metaml::hls::HlsModel;
 use metaml::metamodel::{Abstraction, MetaModel};
@@ -126,7 +127,8 @@ fn main() -> metaml::Result<()> {
             metaml::bench_support::trained_base(&session, "jet_dnn", 1.0, 2307)?;
         let trainer = Trainer::new(&session.runtime, &exec, &data);
         let qcfg = QuantConfig { tolerate_acc_loss: 0.01, ..Default::default() };
-        let trace = quantize_search(&trainer, &mut state, &qcfg)?;
+        let pool = ProbePool::with_default_jobs();
+        let trace = quantize_search(&trainer, &mut state, &qcfg, &pool)?;
         let hls = HlsModel::from_dnn(
             &exec.variant,
             &state,

@@ -5,11 +5,13 @@
 //! the same rows/series the paper reports and writing CSVs under
 //! `bench_out/`.
 
+use std::sync::Arc;
+
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::flow::Session;
 use crate::model::ModelState;
-use crate::runtime::ModelExecutable;
+use crate::runtime::{LayerDesc, Manifest, ModelExecutable, ModelVariant};
 use crate::train::{TrainConfig, Trainer};
 
 /// Artifacts dir (env-overridable, matching the CLI).
@@ -37,14 +39,76 @@ pub fn bench_models(default: &[&str]) -> Vec<String> {
     }
 }
 
+/// Dense-layer descriptor for hand-built manifest variants (benches and
+/// tests that run the reference interpreter without artifacts).
+/// Convention: `param_b = param_w + 1`, `macs = in_dim * out_dim`.
+pub fn dense_layer(name: &str, activation: &str, in_dim: usize, out_dim: usize, param_w: i64, mask_idx: i64) -> LayerDesc {
+    LayerDesc {
+        kind: "dense".into(),
+        name: name.into(),
+        activation: activation.into(),
+        in_dim,
+        out_dim,
+        kernel: 0,
+        h: 0,
+        w: 0,
+        param_w,
+        param_b: param_w + 1,
+        mask_idx,
+        macs: in_dim * out_dim,
+    }
+}
+
+/// In-memory manifest describing the paper's jet-tagging MLP
+/// (16 → 64 → 32 → 32 → 5, the hls4ml benchmark architecture) for the
+/// reference interpreter.  Lets benches exercise the real `jet_dnn`
+/// probe hot path on machines where `make artifacts` has not run.
+pub fn synthetic_jet_manifest() -> Manifest {
+    let dims = [16usize, 64, 32, 32, 5];
+    let mut param_shapes = Vec::new();
+    let mut mask_shapes = Vec::new();
+    let mut layers = Vec::new();
+    for l in 0..4 {
+        let (d_in, d_out) = (dims[l], dims[l + 1]);
+        let param_w = (2 * l) as i64;
+        param_shapes.push((format!("w{l}"), vec![d_in, d_out]));
+        param_shapes.push((format!("b{l}"), vec![d_out]));
+        mask_shapes.push((2 * l, vec![d_in, d_out]));
+        let activation = if l == 3 { "linear" } else { "relu" };
+        layers.push(dense_layer(
+            &format!("fc{}", l + 1),
+            activation,
+            d_in,
+            d_out,
+            param_w,
+            l as i64,
+        ));
+    }
+    Manifest::from_variants(vec![ModelVariant {
+        model: "jet_dnn".into(),
+        scale: 1.0,
+        tag: "jet_dnn_s1000".into(),
+        input_shape: vec![16],
+        n_classes: 5,
+        train_batch: 64,
+        eval_batch: 256,
+        param_shapes,
+        mask_shapes,
+        qcfg_rows: 4,
+        layers,
+        train_artifact: "unused".into(),
+        eval_artifact: "unused".into(),
+    }])
+}
+
 /// Train a fresh base model for a (model, scale) variant; returns the
 /// state + the bound executable + dataset for further probing.
-pub fn trained_base<'a>(
-    session: &'a Session,
+pub fn trained_base(
+    session: &Session,
     model: &str,
     scale: f64,
     seed: u64,
-) -> Result<(ModelState, std::rc::Rc<ModelExecutable>, std::rc::Rc<Dataset>)> {
+) -> Result<(ModelState, Arc<ModelExecutable>, Arc<Dataset>)> {
     let variant = session.manifest.variant(model, scale)?;
     let exec = session.executable(&variant.tag)?;
     let data = session.dataset(model)?;

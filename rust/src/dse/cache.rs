@@ -1,0 +1,264 @@
+//! Memoizing evaluation cache for design-space-exploration probes.
+//!
+//! The memo is strictly correctness-first: a key incorporates *every*
+//! input the evaluation depends on, so a hit can only ever replace a
+//! bit-identical re-computation.  That deliberately means the
+//! quantization rounds do **not** hit it — once a round folds an
+//! accepted cut into the base precisions, every subsequent candidate is
+//! a genuinely different network (the sequential search re-evaluated
+//! them too).  Hits come from exact repeats: duplicate candidates
+//! inside one batch, re-submitted configurations when a pool outlives
+//! a search (re-entered flow tasks, ablation benches replaying a
+//! config), and repeated base evaluations.
+//!
+//! Keys are `(variant tag, per-layer precisions, payload fingerprint)`:
+//! the precisions are kept exact (they are the axis the quant search
+//! moves along), while the rest of the evaluation context — parameter
+//! and mask buffers plus the dataset spec the trainer evaluates on —
+//! is folded into a 64-bit FNV-1a-style fingerprint.  Evaluation is a
+//! pure function of exactly these inputs, so a key match is a result
+//! match even when one pool outlives a search or is shared across
+//! trainers; collisions would need two probe states agreeing on tag
+//! *and* precisions *and* a 64-bit hash — negligible at DSE scale
+//! (hundreds of probes).
+//!
+//! Candidate states share identical params/masks within one search, so
+//! the per-probe fingerprint re-hashes constant data; it is kept cheap
+//! (one xor-multiply per 64-bit word rather than byte-at-a-time FNV)
+//! because a fingerprint pass is still orders of magnitude lighter than
+//! the full-test-split evaluation it guards.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+use crate::data::DatasetSpec;
+use crate::model::ModelState;
+use crate::runtime::HostTensor;
+use crate::train::EvalResult;
+
+/// Incremental FNV-1a-style mix: one xor-multiply per 64-bit word
+/// (coarser than byte-wise FNV, ample for a cache guarded by exact
+/// tag + precisions).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn word(&mut self, w: u64) {
+        self.0 = (self.0 ^ w).wrapping_mul(0x100_0000_01b3);
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        self.word(bs.len() as u64);
+        for &b in bs {
+            self.word(b as u64);
+        }
+    }
+
+    fn tensor(&mut self, t: &HostTensor) {
+        match t {
+            HostTensor::F32 { shape, data } => {
+                self.word(0xF32);
+                self.word(shape.len() as u64);
+                for &d in shape {
+                    self.word(d as u64);
+                }
+                for &v in data {
+                    self.word(v.to_bits() as u64);
+                }
+            }
+            HostTensor::I32 { shape, data } => {
+                self.word(0x132);
+                self.word(shape.len() as u64);
+                for &d in shape {
+                    self.word(d as u64);
+                }
+                for &v in data {
+                    self.word(v as u32 as u64);
+                }
+            }
+        }
+    }
+}
+
+/// Cache key identifying one evaluation: variant tag + exact per-layer
+/// precisions + a fingerprint of the parameter/mask payload and the
+/// dataset it is evaluated on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EvalKey {
+    pub tag: String,
+    /// `(total_bits, int_bits)` per weight layer, exact.
+    pub precisions: Vec<(u32, u32)>,
+    /// Fingerprint over params ++ masks bit patterns ++ dataset spec.
+    pub fingerprint: u64,
+}
+
+impl EvalKey {
+    /// Key for a candidate model state evaluated against `spec`'s
+    /// dataset (the spec pins which test split the result is for, so a
+    /// pool shared across trainers can never alias results).
+    pub fn of(state: &ModelState, spec: &DatasetSpec) -> EvalKey {
+        let mut h = Fnv::new();
+        h.bytes(spec.name.as_bytes());
+        h.word(spec.input_shape.len() as u64);
+        for &d in &spec.input_shape {
+            h.word(d as u64);
+        }
+        h.word(spec.n_classes as u64);
+        h.word(spec.n_train as u64);
+        h.word(spec.n_test as u64);
+        h.word(spec.noise.to_bits());
+        h.word(spec.seed);
+        h.word(state.params.len() as u64);
+        for t in &state.params {
+            h.tensor(t);
+        }
+        h.word(state.masks.len() as u64);
+        for t in &state.masks {
+            h.tensor(t);
+        }
+        EvalKey {
+            tag: state.tag.clone(),
+            precisions: state
+                .precisions
+                .iter()
+                .map(|p| (p.total_bits, p.int_bits))
+                .collect(),
+            fingerprint: h.0,
+        }
+    }
+}
+
+/// Thread-safe memo table for probe evaluations.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: Mutex<HashMap<EvalKey, EvalResult>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up a key, counting the hit/miss.
+    pub fn get(&self, key: &EvalKey) -> Option<EvalResult> {
+        let map = self.map.lock().unwrap_or_else(PoisonError::into_inner);
+        match map.get(key) {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(*r)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, key: EvalKey, result: EvalResult) {
+        self.map
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(key, result);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::state::Precision;
+
+    fn toy_state() -> ModelState {
+        ModelState {
+            tag: "toy_s1000".into(),
+            params: vec![
+                HostTensor::from_f32(&[2, 2], vec![0.5, -1.0, 2.0, 0.0]).unwrap(),
+                HostTensor::from_f32(&[2], vec![0.0, 0.0]).unwrap(),
+            ],
+            masks: vec![HostTensor::ones(&[2, 2])],
+            precisions: vec![Precision::new(8, 3)],
+            weight_param_idx: vec![0],
+        }
+    }
+
+    fn toy_spec() -> DatasetSpec {
+        DatasetSpec {
+            name: "toy_sim".into(),
+            input_shape: vec![2],
+            n_classes: 2,
+            n_train: 16,
+            n_test: 8,
+            noise: 0.5,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn identical_states_share_a_key() {
+        let a = toy_state();
+        let b = a.clone();
+        let spec = toy_spec();
+        assert_eq!(EvalKey::of(&a, &spec), EvalKey::of(&b, &spec));
+    }
+
+    #[test]
+    fn key_distinguishes_params_masks_precisions_dataset() {
+        let base = toy_state();
+        let spec = toy_spec();
+        let k0 = EvalKey::of(&base, &spec);
+
+        let mut p = base.clone();
+        p.params[0].as_f32_mut().unwrap()[0] = 0.5000001;
+        assert_ne!(EvalKey::of(&p, &spec), k0, "param bit flip must change the key");
+
+        let mut m = base.clone();
+        m.masks[0].as_f32_mut().unwrap()[3] = 0.0;
+        assert_ne!(EvalKey::of(&m, &spec), k0, "mask change must change the key");
+
+        let mut q = base.clone();
+        q.precisions[0] = Precision::new(7, 3);
+        assert_ne!(EvalKey::of(&q, &spec), k0, "precision change must change the key");
+
+        let mut other_data = toy_spec();
+        other_data.seed = 4;
+        assert_ne!(
+            EvalKey::of(&base, &other_data),
+            k0,
+            "dataset change must change the key"
+        );
+    }
+
+    #[test]
+    fn cache_round_trip_and_counters() {
+        let cache = EvalCache::new();
+        let key = EvalKey::of(&toy_state(), &toy_spec());
+        assert!(cache.get(&key).is_none());
+        let result = EvalResult { loss: 0.25, accuracy: 0.75, n: 64 };
+        cache.insert(key.clone(), result);
+        assert_eq!(cache.get(&key), Some(result));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,0 +1,54 @@
+//! Parallel design-space exploration (DSE) engine.
+//!
+//! MetaML's O-tasks explore by firing hundreds of independent candidate
+//! probes — `Trainer::evaluate`/`fit` calls over perturbed
+//! [`crate::model::ModelState`]s.  The probes are embarrassingly
+//! parallel (QUANTIZATION tries `2·L` one-bit reductions per round,
+//! SCALING walks a speculative grid, AUTOPRUNE fine-tunes binary-search
+//! candidates), and the execution substrate underneath is `Send + Sync`
+//! end to end (see [`crate::runtime::ExecBackend`]), so this module
+//! fans them out across a scoped-thread worker pool:
+//!
+//! * [`ProbePool`] — deterministic batch executor
+//!   (`std::thread::scope`, no external dependencies) plus the shared
+//!   memoizing [`EvalCache`];
+//! * [`ProbeRequest`] / [`ProbeResult`] — the batch evaluation API for
+//!   candidate states;
+//! * [`default_jobs`] — worker-count resolution.
+//!
+//! **Determinism contract:** results are bit-identical for every
+//! `jobs` value.  Batches return in request order, selection/tie-break
+//! logic runs sequentially over complete batches, and each probe is
+//! computed by the same single-threaded code path regardless of worker
+//! count.  Parallelism (and the cache) change only how fast the answer
+//! arrives.
+//!
+//! Worker-count precedence, highest first:
+//! 1. the `jobs` CFG key (set per task instance, or globally by the
+//!    CLI `--jobs` flag);
+//! 2. the `METAML_JOBS` environment variable;
+//! 3. `std::thread::available_parallelism()`.
+
+pub mod cache;
+pub mod pool;
+
+pub use cache::{EvalCache, EvalKey};
+pub use pool::{ProbePool, ProbeRequest, ProbeResult};
+
+/// Worker count from `METAML_JOBS`, when set to a positive integer.
+pub fn env_jobs() -> Option<usize> {
+    std::env::var("METAML_JOBS")
+        .ok()?
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .filter(|&n| n >= 1)
+}
+
+/// Default DSE worker count: `METAML_JOBS` when set, otherwise the
+/// machine's available parallelism (1 if unknown).
+pub fn default_jobs() -> usize {
+    env_jobs().unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}

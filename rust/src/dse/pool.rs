@@ -1,0 +1,227 @@
+//! Deterministic scoped-thread worker pool for candidate probes.
+//!
+//! The pool is a *batch* executor: callers hand it an indexed set of
+//! independent jobs and get the results back in index order, whatever
+//! the worker interleaving was.  Parallelism changes wall-clock only —
+//! every job is computed by exactly the same single-threaded code path
+//! as under `jobs = 1`, so probe results are bit-identical across
+//! worker counts and the metamodel LOG stays reproducible.
+//!
+//! Built on `std::thread::scope` (no crates.io dependencies): workers
+//! borrow the caller's state directly, claim indices from a shared
+//! atomic cursor, and write results into per-index slots.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+use crate::dse::cache::{EvalCache, EvalKey};
+use crate::error::{Error, Result};
+use crate::model::ModelState;
+use crate::train::{EvalResult, Trainer};
+
+/// One candidate model to evaluate.
+pub struct ProbeRequest {
+    /// Caller-side tag for mapping results back (layer index, grid
+    /// point, …); echoed on the matching [`ProbeResult`].
+    pub id: usize,
+    pub state: ModelState,
+}
+
+impl ProbeRequest {
+    pub fn new(id: usize, state: ModelState) -> Self {
+        ProbeRequest { id, state }
+    }
+}
+
+/// Evaluation of one candidate, in request order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeResult {
+    pub id: usize,
+    pub eval: EvalResult,
+    /// True when the result was served from the memo cache (or from a
+    /// duplicate request earlier in the same batch) instead of a fresh
+    /// evaluation.
+    pub cached: bool,
+}
+
+/// A worker pool + eval memo shared by one search (typically created
+/// per O-task run from [`crate::flow::TaskCtx::jobs`]).
+pub struct ProbePool {
+    jobs: usize,
+    cache: EvalCache,
+}
+
+impl ProbePool {
+    /// Pool with an explicit worker count (clamped to >= 1).
+    pub fn new(jobs: usize) -> Self {
+        ProbePool { jobs: jobs.max(1), cache: EvalCache::new() }
+    }
+
+    /// Pool sized by `METAML_JOBS` / available parallelism
+    /// (see [`crate::dse::default_jobs`]).
+    pub fn with_default_jobs() -> Self {
+        Self::new(crate::dse::default_jobs())
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+
+    /// Run `f(0..n)` across the pool's workers; results come back in
+    /// index order.  The first `Err` in index order is propagated after
+    /// the whole batch has been attempted.
+    pub fn run_batch<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.jobs.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<T>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i);
+                    *slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
+                });
+            }
+        });
+
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .unwrap_or_else(|| {
+                        Err(Error::other("probe pool: worker dropped a job slot"))
+                    })
+            })
+            .collect()
+    }
+
+    /// Evaluate a batch of candidate model states concurrently through
+    /// `trainer`, memoizing by [`EvalKey`].
+    ///
+    /// Deterministic by construction: cache resolution happens
+    /// sequentially in request order, duplicate requests inside the
+    /// batch collapse onto the first occurrence, and fresh evaluations
+    /// are pure per-candidate work fanned out via [`Self::run_batch`].
+    pub fn evaluate_batch(
+        &self,
+        trainer: &Trainer,
+        requests: &[ProbeRequest],
+    ) -> Result<Vec<ProbeResult>> {
+        let keys: Vec<EvalKey> = requests
+            .iter()
+            .map(|r| EvalKey::of(&r.state, &trainer.data.spec))
+            .collect();
+
+        // Resolve each request: cached, to-compute, or duplicate of an
+        // earlier to-compute entry (mapped to its position in the
+        // compute list).
+        enum Resolution {
+            Cached(EvalResult),
+            Compute(usize),
+            Duplicate(usize),
+        }
+        let mut first_compute: std::collections::HashMap<&EvalKey, usize> =
+            std::collections::HashMap::new();
+        let mut compute_idx: Vec<usize> = Vec::new();
+        let mut resolved: Vec<Resolution> = Vec::with_capacity(requests.len());
+        for (i, key) in keys.iter().enumerate() {
+            if let Some(hit) = self.cache.get(key) {
+                resolved.push(Resolution::Cached(hit));
+            } else if let Some(&slot) = first_compute.get(key) {
+                resolved.push(Resolution::Duplicate(slot));
+            } else {
+                first_compute.insert(key, compute_idx.len());
+                resolved.push(Resolution::Compute(compute_idx.len()));
+                compute_idx.push(i);
+            }
+        }
+
+        let fresh: Vec<EvalResult> = self.run_batch(compute_idx.len(), |slot| {
+            trainer.evaluate(&requests[compute_idx[slot]].state)
+        })?;
+        for (slot, &i) in compute_idx.iter().enumerate() {
+            self.cache.insert(keys[i].clone(), fresh[slot]);
+        }
+
+        Ok(requests
+            .iter()
+            .zip(&resolved)
+            .map(|(req, res)| match *res {
+                Resolution::Cached(eval) => {
+                    ProbeResult { id: req.id, eval, cached: true }
+                }
+                Resolution::Compute(slot) => {
+                    ProbeResult { id: req.id, eval: fresh[slot], cached: false }
+                }
+                Resolution::Duplicate(slot) => {
+                    ProbeResult { id: req.id, eval: fresh[slot], cached: true }
+                }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_batch_preserves_index_order() {
+        let pool = ProbePool::new(4);
+        let out = pool.run_batch(33, |i| Ok(i * i)).unwrap();
+        assert_eq!(out, (0..33).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_batch_sequential_matches_parallel() {
+        let seq = ProbePool::new(1).run_batch(17, |i| Ok(i as u64 * 3 + 1)).unwrap();
+        let par = ProbePool::new(8).run_batch(17, |i| Ok(i as u64 * 3 + 1)).unwrap();
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn run_batch_propagates_first_error_in_index_order() {
+        let pool = ProbePool::new(4);
+        let res: Result<Vec<usize>> = pool.run_batch(10, |i| {
+            if i == 3 || i == 7 {
+                Err(Error::other(format!("boom {i}")))
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(res.unwrap_err().to_string(), "boom 3");
+    }
+
+    #[test]
+    fn run_batch_empty_is_empty() {
+        let pool = ProbePool::new(4);
+        let out: Vec<usize> = pool.run_batch(0, |_| unreachable!()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn jobs_clamped_to_at_least_one() {
+        assert_eq!(ProbePool::new(0).jobs(), 1);
+        assert_eq!(ProbePool::new(3).jobs(), 3);
+    }
+}

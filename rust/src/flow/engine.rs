@@ -2,9 +2,12 @@
 //!
 //! Executes a validated flow graph against a meta-model: forward edges in
 //! deterministic topological order, back edges as bounded iteration of
-//! their enclosed sub-path.  All execution is on the coordinator thread
-//! (the PJRT client is not Sync); determinism is part of the contract —
-//! re-running a flow with the same CFG and seed reproduces the LOG.
+//! their enclosed sub-path.  Task orchestration stays on the coordinator
+//! thread (tasks mutate the shared meta-model), while O-tasks fan their
+//! candidate probes out across the [`crate::dse::ProbePool`] worker
+//! threads.  Determinism is part of the contract regardless of worker
+//! count — re-running a flow with the same CFG and seed reproduces the
+//! LOG bit for bit.
 
 use std::time::Instant;
 

@@ -9,10 +9,14 @@
 //! constructors use [`Runtime::cpu`], which defaults to the pure-Rust
 //! reference interpreter and honors `METAML_BACKEND=xla` when the PJRT
 //! backend is compiled in.
+//!
+//! One session is shared by every DSE probe worker (`Session` is
+//! `Send + Sync`): the executable/dataset caches are `Mutex`-guarded
+//! maps of `Arc` handles, and the lock is held across a cache miss so
+//! racing workers bind a variant exactly once.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::data::{Dataset, DatasetSpec};
 use crate::error::Result;
@@ -21,8 +25,8 @@ use crate::runtime::{Manifest, ModelExecutable, Runtime};
 pub struct Session {
     pub runtime: Runtime,
     pub manifest: Manifest,
-    execs: RefCell<HashMap<String, Rc<ModelExecutable>>>,
-    datasets: RefCell<HashMap<String, Rc<Dataset>>>,
+    execs: Mutex<HashMap<String, Arc<ModelExecutable>>>,
+    datasets: Mutex<HashMap<String, Arc<Dataset>>>,
 }
 
 impl Session {
@@ -31,8 +35,8 @@ impl Session {
         Session {
             runtime,
             manifest,
-            execs: RefCell::new(HashMap::new()),
-            datasets: RefCell::new(HashMap::new()),
+            execs: Mutex::new(HashMap::new()),
+            datasets: Mutex::new(HashMap::new()),
         }
     }
 
@@ -54,19 +58,21 @@ impl Session {
     }
 
     /// Backend-bound train+eval executable for a variant tag (cached).
-    pub fn executable(&self, tag: &str) -> Result<Rc<ModelExecutable>> {
-        if let Some(e) = self.execs.borrow().get(tag) {
+    pub fn executable(&self, tag: &str) -> Result<Arc<ModelExecutable>> {
+        let mut execs = self.execs.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(e) = execs.get(tag) {
             return Ok(e.clone());
         }
-        let exec = Rc::new(ModelExecutable::load(&self.runtime, &self.manifest, tag)?);
-        self.execs.borrow_mut().insert(tag.to_string(), exec.clone());
+        let exec = Arc::new(ModelExecutable::load(&self.runtime, &self.manifest, tag)?);
+        execs.insert(tag.to_string(), exec.clone());
         Ok(exec)
     }
 
     /// The synthetic dataset for a model family (cached; generation is
     /// deterministic so every task sees identical data).
-    pub fn dataset(&self, model: &str) -> Result<Rc<Dataset>> {
-        if let Some(d) = self.datasets.borrow().get(model) {
+    pub fn dataset(&self, model: &str) -> Result<Arc<Dataset>> {
+        let mut datasets = self.datasets.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(d) = datasets.get(model) {
             return Ok(d.clone());
         }
         let variant = self
@@ -77,8 +83,22 @@ impl Session {
             .ok_or_else(|| crate::Error::Manifest(format!("no model {model}")))?;
         let spec =
             DatasetSpec::for_model(model, &variant.input_shape, variant.n_classes);
-        let data = Rc::new(Dataset::generate(&spec));
-        self.datasets.borrow_mut().insert(model.to_string(), data.clone());
+        let data = Arc::new(Dataset::generate(&spec));
+        datasets.insert(model.to_string(), data.clone());
         Ok(data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn session_is_shareable_across_probe_workers() {
+        assert_send_sync::<Session>();
+        assert_send_sync::<Arc<ModelExecutable>>();
+        assert_send_sync::<Arc<Dataset>>();
     }
 }

@@ -77,6 +77,19 @@ impl<'a> TaskCtx<'a> {
         self.meta.cfg.get_bool(&self.instance, param).unwrap_or(default)
     }
 
+    /// DSE worker count for this task instance.  Precedence: the `jobs`
+    /// CFG key (instance-scoped, then global — the CLI `--jobs` flag
+    /// sets the global key), then `METAML_JOBS`, then available
+    /// parallelism (see [`crate::dse::default_jobs`]).  A zero from the
+    /// CFG falls back to the default chain.
+    pub fn jobs(&self) -> usize {
+        self.meta
+            .cfg
+            .get_usize(&self.instance, "jobs")
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(crate::dse::default_jobs)
+    }
+
     pub fn log_metric(&mut self, name: &str, value: f64) {
         let instance = self.instance.clone();
         self.meta.log.metric(&instance, name, value);

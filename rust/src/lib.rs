@@ -31,11 +31,17 @@
 //!   executes AOT-compiled XLA artifacts produced once by
 //!   `python/compile/aot.py` from JAX models whose inner loops are Pallas
 //!   kernels — Python never runs at flow-execution time.
+//!
+//! The substrate is `Send + Sync` end to end, and the O-task searches
+//! fan their candidate probes out across the [dse::ProbePool] — a
+//! scoped-thread worker pool with a memoizing eval cache that keeps
+//! results bit-identical to sequential execution (see [dse]).
 
 pub mod baselines;
 pub mod bench_support;
 pub mod config;
 pub mod data;
+pub mod dse;
 pub mod error;
 pub mod flow;
 pub mod hls;

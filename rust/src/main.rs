@@ -42,13 +42,17 @@ COMMANDS:
   smoke                         verify the execution backend + artifacts
   train       --model <name> [--scale S] [--epochs N]   train via AOT step
   list-tasks                    print the pipe-task registry (Table I)
-  run-flow    --flow <spec.json> [--model <name>]       execute a design flow
+  run-flow    --flow <spec.json> [--model <name>] [--jobs N]
+                                execute a design flow; --jobs sets the DSE
+                                probe worker count for all O-tasks
   synth       --model <name> [--scale S]                HLS+RTL report
   help                          this message
 
 Artifacts are read from ./artifacts (build with `make artifacts`).
 The execution backend is selected by METAML_BACKEND: `reference`
-(default, pure-Rust interpreter) or `xla` (PJRT, needs --features xla).",
+(default, pure-Rust interpreter) or `xla` (PJRT, needs --features xla).
+DSE probe workers: --jobs > METAML_JOBS > available parallelism; search
+results are bit-identical for every worker count.",
         metaml::version()
     );
 }
@@ -58,6 +62,28 @@ fn opt(args: &[String], name: &str) -> Option<String> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .cloned()
+}
+
+/// Parse an optional `--flag value` argument, turning malformed values
+/// into a clean [`metaml::Error`] instead of a panic.
+fn parse_opt<T: std::str::FromStr>(args: &[String], name: &str) -> Result<Option<T>> {
+    match opt(args, name) {
+        None => Ok(None),
+        Some(s) => s.parse::<T>().map(Some).map_err(|_| {
+            metaml::Error::other(format!(
+                "invalid value {s:?} for {name} (expected {})",
+                std::any::type_name::<T>()
+            ))
+        }),
+    }
+}
+
+/// `--jobs N` with N >= 1 (the DSE probe worker count).
+fn parse_jobs(args: &[String]) -> Result<Option<usize>> {
+    match parse_opt::<usize>(args, "--jobs")? {
+        Some(0) => Err(metaml::Error::other("--jobs must be at least 1")),
+        other => Ok(other),
+    }
 }
 
 fn artifacts_dir() -> String {
@@ -105,8 +131,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
     use metaml::train::{TrainConfig, Trainer};
 
     let model = opt(args, "--model").unwrap_or_else(|| "jet_dnn".into());
-    let scale: f64 = opt(args, "--scale").map(|s| s.parse().unwrap()).unwrap_or(1.0);
-    let epochs: usize = opt(args, "--epochs").map(|s| s.parse().unwrap()).unwrap_or(5);
+    let scale: f64 = parse_opt(args, "--scale")?.unwrap_or(1.0);
+    let epochs: usize = parse_opt(args, "--epochs")?.unwrap_or(5);
 
     let manifest = Manifest::load(artifacts_dir())?;
     let runtime = Runtime::cpu()?;
@@ -154,6 +180,11 @@ fn cmd_run_flow(args: &[String]) -> Result<()> {
     if let Some(model) = opt(args, "--model") {
         meta.cfg.set("model", model);
     }
+    // DSE probe worker count for every O-task in the flow (global CFG
+    // key; instance-scoped `-c <task>.jobs=N` overrides still win)
+    if let Some(jobs) = parse_jobs(args)? {
+        meta.cfg.set("jobs", jobs);
+    }
     // pass-through -c key=value overrides
     for i in 0..args.len() {
         if args[i] == "-c" {
@@ -197,7 +228,7 @@ fn cmd_synth(args: &[String]) -> Result<()> {
     use metaml::metamodel::MetaModel;
 
     let model = opt(args, "--model").unwrap_or_else(|| "jet_dnn".into());
-    let scale: f64 = opt(args, "--scale").map(|s| s.parse().unwrap()).unwrap_or(1.0);
+    let scale: f64 = parse_opt(args, "--scale")?.unwrap_or(1.0);
     let device = opt(args, "--device").unwrap_or_else(|| "vu9p".into());
 
     let session = Session::open(&artifacts_dir())?;

@@ -7,11 +7,26 @@
 //! binary-search the rate, accepting a probe when the fine-tuned accuracy
 //! stays within α_p of Acc_p0 and terminating when the interval shrinks
 //! below β_p — giving 1 + log2(1/β_p) steps, exactly the paper's count.
+//!
+//! Every probe is a pure function of its rate (candidates always prune
+//! from the *base* trained weights), so fine-tune probes are submitted
+//! through the [`ProbePool`].  Binary search is latency-bound — each
+//! step's rate depends on the previous verdict — so with `jobs >= 3`
+//! the pool speculatively computes both possible next-step rates in the
+//! same batch as the current one and memoizes them; otherwise-idle
+//! workers buy the next step for free and the final step's probe is
+//! always pre-resolved.  (The trade is bounded: ≤ 2× probe work for a
+//! one-batch-shorter critical path; below 3 workers speculation cannot
+//! overlap and is skipped.)  The probe trace records only the rates the
+//! binary search visits, so it is bit-identical for any worker count.
 
+use std::collections::HashMap;
+
+use crate::dse::ProbePool;
 use crate::error::Result;
 use crate::model::ModelState;
 use crate::prune::mask::global_magnitude_masks;
-use crate::train::{TrainConfig, Trainer};
+use crate::train::{EvalResult, TrainConfig, Trainer};
 
 #[derive(Debug, Clone)]
 pub struct AutopruneConfig {
@@ -57,27 +72,29 @@ pub struct PruneTrace {
     pub probes: Vec<PruneProbe>,
 }
 
+fn layer_nnz(s: &ModelState) -> Vec<usize> {
+    s.masks
+        .iter()
+        .map(|m| match m.as_f32() {
+            Ok(d) => d.iter().filter(|v| **v != 0.0).count(),
+            Err(_) => 0,
+        })
+        .collect()
+}
+
 /// Run auto-pruning on `state` in place (leaves the best accepted
-/// masks+weights applied).  The trainer supplies fit/evaluate.
+/// masks+weights applied).  The trainer supplies fit/evaluate; probe
+/// fine-tunes fan out through `pool`.
 pub fn autoprune(
     trainer: &Trainer,
     state: &mut ModelState,
     cfg: &AutopruneConfig,
+    pool: &ProbePool,
 ) -> Result<PruneTrace> {
     let fit_cfg = TrainConfig {
         epochs: cfg.train_epochs,
         seed: cfg.seed,
         ..TrainConfig::for_model(&trainer.exec.variant.model)
-    };
-
-    let layer_nnz = |s: &ModelState| -> Vec<usize> {
-        s.masks
-            .iter()
-            .map(|m| match m.as_f32() {
-                Ok(d) => d.iter().filter(|v| **v != 0.0).count(),
-                Err(_) => 0,
-            })
-            .collect()
     };
 
     // s1: baseline accuracy at 0% rate
@@ -91,21 +108,65 @@ pub fn autoprune(
         layer_nnz: layer_nnz(state),
     }];
 
-    let mut lo = 0.0f64; // highest accepted rate
-    let mut hi = 1.0f64; // lowest rejected rate
-    let mut best_state = state.clone();
-    let mut best_acc = base.accuracy;
-    let mut step = 1usize;
-
-    while hi - lo > cfg.rate_threshold {
-        step += 1;
-        let rate = 0.5 * (lo + hi);
-        // candidate: prune from the *base* trained weights, then fine-tune
-        let mut cand = state.clone();
+    // One probe: prune from the *base* trained weights at `rate`, then
+    // fine-tune and evaluate.  Independent of every other probe.
+    let base_state: &ModelState = state;
+    let probe = |rate: f64| -> Result<(ModelState, EvalResult, Vec<usize>)> {
+        let mut cand = base_state.clone();
         cand.masks = global_magnitude_masks(&cand, rate)?;
         cand.apply_masks()?;
         trainer.fit(&mut cand, &fit_cfg)?;
         let eval = trainer.evaluate(&cand)?;
+        let nnz = layer_nnz(&cand);
+        Ok((cand, eval, nnz))
+    };
+
+    let mut lo = 0.0f64; // highest accepted rate
+    let mut hi = 1.0f64; // lowest rejected rate
+    let mut best_state = base_state.clone();
+    let mut best_acc = base.accuracy;
+    let mut step = 1usize;
+    // memoized probes by exact rate (binary midpoints are exact f64s);
+    // holds the speculative lookahead results between steps.  Outcomes
+    // stay wrapped in Result so that an error at a speculated rate only
+    // propagates if the binary search actually visits that rate — the
+    // exact error semantics of the sequential walk, for any jobs value.
+    type Probe = (ModelState, EvalResult, Vec<usize>);
+    let mut memo: HashMap<u64, Result<Probe>> = HashMap::new();
+
+    while hi - lo > cfg.rate_threshold {
+        step += 1;
+        let rate = 0.5 * (lo + hi);
+
+        let mut wanted = vec![rate];
+        if pool.jobs() >= 3 {
+            // speculative one-step lookahead: with enough workers to
+            // overlap, also compute the probe each branch outcome would
+            // need next (both are in-flight while this step's own probe
+            // runs, so the next step — and the final step — hit the memo)
+            let next_if_accept = 0.5 * (rate + hi); // lo <- rate
+            let next_if_reject = 0.5 * (lo + rate); // hi <- rate
+            if hi - rate > cfg.rate_threshold {
+                wanted.push(next_if_accept);
+            }
+            if rate - lo > cfg.rate_threshold {
+                wanted.push(next_if_reject);
+            }
+        }
+        let missing: Vec<f64> = wanted
+            .into_iter()
+            .filter(|r| !memo.contains_key(&r.to_bits()))
+            .collect();
+        let computed = pool.run_batch(missing.len(), |i| Ok(probe(missing[i])))?;
+        for (r, result) in missing.iter().zip(computed) {
+            memo.insert(r.to_bits(), result);
+        }
+
+        // take ownership of this step's probe (evicting it), so the
+        // accepted state moves instead of cloning
+        let (cand, eval, nnz) = memo
+            .remove(&rate.to_bits())
+            .expect("current rate was just probed")?;
         let ok = base.accuracy - eval.accuracy <= cfg.tolerate_acc_loss;
         probes.push(PruneProbe {
             step,
@@ -113,7 +174,7 @@ pub fn autoprune(
             accuracy: eval.accuracy,
             accepted: ok,
             direction: if ok { 1 } else { -1 },
-            layer_nnz: layer_nnz(&cand),
+            layer_nnz: nnz,
         });
         if ok {
             lo = rate;
@@ -122,6 +183,12 @@ pub fn autoprune(
         } else {
             hi = rate;
         }
+        // speculated rates outside the surviving interval can never be
+        // visited; drop their states to bound memo memory
+        memo.retain(|&bits, _| {
+            let r = f64::from_bits(bits);
+            r > lo && r < hi
+        });
     }
 
     *state = best_state;

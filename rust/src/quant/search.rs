@@ -10,7 +10,20 @@
 //! shaving one total bit off the single layer whose reduction costs the
 //! least accuracy, while total accuracy loss stays < α_q.  Integer bits
 //! shrink once the fractional part is exhausted.
+//!
+//! The `2·L` candidates of each round are independent, so they are
+//! submitted as one batch through the [`ProbePool`] and evaluated
+//! concurrently under `jobs > 1`.  (Each round's candidates are
+//! genuinely new networks — an accepted cut changes the base precision
+//! vector — so the pool's memo only fires on exact repeats, e.g. when a
+//! pool is reused across searches; per-candidate state clones are
+//! O(params) but the probe evaluations they feed dominate by orders of
+//! magnitude.)  Selection is deterministic for any worker count: the
+//! full batch is scanned in candidate order with an explicit tie-break
+//! — highest accuracy, then lowest layer index, then fewest integer
+//! bits — so the trace is bit-identical to sequential execution.
 
+use crate::dse::{ProbePool, ProbeRequest};
 use crate::error::Result;
 use crate::model::state::Precision;
 use crate::model::ModelState;
@@ -75,11 +88,13 @@ fn reduce_candidates(p: Precision) -> Vec<Precision> {
     out
 }
 
-/// Run the greedy mixed-precision search on `state` in place.
+/// Run the greedy mixed-precision search on `state` in place, fanning
+/// each round's candidate batch out across `pool`.
 pub fn quantize_search(
     trainer: &Trainer,
     state: &mut ModelState,
     cfg: &QuantConfig,
+    pool: &ProbePool,
 ) -> Result<QuantTrace> {
     let n_layers = state.n_weight_layers();
     // instrument the starting precision everywhere
@@ -95,29 +110,58 @@ pub fn quantize_search(
     let mut round = 0usize;
     loop {
         round += 1;
-        // try reducing each layer by one bit (either fraction or integer);
-        // keep the best acceptable reduction across all layers
-        let mut best: Option<(usize, Precision, f64)> = None;
+        // enumerate this round's candidates in fixed order: layer
+        // ascending, fraction cut before integer cut (the
+        // reduce_candidates order)
+        let mut cands: Vec<(usize, Precision)> = Vec::new();
         for l in 0..n_layers {
-            let cur = state.precisions[l];
-            for next in reduce_candidates(cur) {
-                if next.total_bits < cfg.min_bits {
-                    continue;
+            for next in reduce_candidates(state.precisions[l]) {
+                if next.total_bits >= cfg.min_bits {
+                    cands.push((l, next));
                 }
-                state.precisions[l] = next;
-                let eval = trainer.evaluate(state)?;
-                state.precisions[l] = cur;
-                let ok = eval.accuracy >= floor;
-                probes.push(QuantProbe {
-                    round,
-                    layer: l,
-                    tried: next,
-                    accuracy: eval.accuracy,
-                    accepted: ok,
-                });
-                if ok && best.as_ref().map_or(true, |(_, _, a)| eval.accuracy > *a) {
-                    best = Some((l, next, eval.accuracy));
+            }
+        }
+        if cands.is_empty() {
+            break; // every layer is at the floor
+        }
+
+        let requests: Vec<ProbeRequest> = cands
+            .iter()
+            .enumerate()
+            .map(|(i, &(l, p))| {
+                let mut cand = state.clone();
+                cand.precisions[l] = p;
+                ProbeRequest::new(i, cand)
+            })
+            .collect();
+        let results = pool.evaluate_batch(trainer, &requests)?;
+
+        // keep the best acceptable reduction across all candidates;
+        // ties break to the lowest layer index, then fewest int bits
+        let mut best: Option<(usize, Precision, f64)> = None;
+        for (&(l, p), r) in cands.iter().zip(&results) {
+            let acc = r.eval.accuracy;
+            let ok = acc >= floor;
+            probes.push(QuantProbe {
+                round,
+                layer: l,
+                tried: p,
+                accuracy: acc,
+                accepted: ok,
+            });
+            if !ok {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bl, bp, ba)) => {
+                    acc > ba
+                        || (acc == ba
+                            && (l < bl || (l == bl && p.int_bits < bp.int_bits)))
                 }
+            };
+            if better {
+                best = Some((l, p, acc));
             }
         }
         match best {

@@ -14,14 +14,26 @@
 //!
 //! Selection: [`Runtime::cpu`] honors `METAML_BACKEND`
 //! (`reference` default, `xla` when compiled in).
+//!
+//! ## Thread-safety contract
+//!
+//! The whole substrate is `Send + Sync`: [`ExecBackend`] and
+//! [`ModelExec`] require both as supertraits, executables are shared via
+//! [`Arc`], and stats accumulate through the lock-free [`StatsCell`].
+//! This is what lets the DSE probe pool ([`crate::dse`]) evaluate
+//! candidate models from scoped worker threads while sharing one
+//! [`crate::flow::Session`].
 
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{Manifest, ModelVariant};
 use crate::runtime::tensor::HostTensor;
 
-/// Execution statistics (perf accounting; see EXPERIMENTS.md §Perf).
+/// Execution statistics snapshot (perf accounting; see EXPERIMENTS.md
+/// §Perf).  Produced by [`StatsCell::snapshot`]; plain host data.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub compiles: usize,
@@ -30,13 +42,56 @@ pub struct RuntimeStats {
     pub execute_secs: f64,
 }
 
+/// Lock-free stats accumulator shared between a backend and the models
+/// it loads.  Counters are relaxed atomics: worker threads bump them
+/// concurrently and only aggregate totals are ever read (durations
+/// accumulate as integer nanoseconds so no CAS loop is needed).
+#[derive(Debug, Default)]
+pub struct StatsCell {
+    compiles: AtomicUsize,
+    compile_nanos: AtomicU64,
+    executions: AtomicUsize,
+    execute_nanos: AtomicU64,
+}
+
+impl StatsCell {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_compile(&self, elapsed: Duration) {
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        self.compile_nanos
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_execute(&self, elapsed: Duration) {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.execute_nanos
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> RuntimeStats {
+        RuntimeStats {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            compile_secs: self.compile_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            executions: self.executions.load(Ordering::Relaxed),
+            execute_secs: self.execute_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
 /// A (model, scale) variant bound to a backend, ready to step.
 ///
 /// The flat argument convention (the contract with
 /// `python/compile/train.py`):
 /// * train: `params ++ masks ++ [qcfg, x, y, lr]` → `(params', loss, acc)`
 /// * eval:  `params ++ masks ++ [qcfg, x, y]` → `(loss, acc)`
-pub trait ModelExec {
+///
+/// `Send + Sync` is part of the contract: one loaded model is stepped
+/// concurrently by DSE probe workers.  Implementations must not keep
+/// per-call mutable state outside the argument list.
+pub trait ModelExec: Send + Sync {
     fn variant(&self) -> &ModelVariant;
 
     /// One SGD step; returns (new_params, loss, acc).
@@ -47,12 +102,15 @@ pub trait ModelExec {
 }
 
 /// An execution substrate that can realize manifest variants.
-pub trait ExecBackend {
+///
+/// Backends are shared across probe-pool worker threads, so the trait
+/// requires `Send + Sync`; interior caches must be lock-guarded.
+pub trait ExecBackend: Send + Sync {
     /// Human-readable platform name ("reference-interpreter", "cpu", …).
     fn platform(&self) -> String;
 
     /// Bind a manifest variant to an executable model.
-    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Rc<dyn ModelExec>>;
+    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Arc<dyn ModelExec>>;
 
     fn stats(&self) -> RuntimeStats;
 }
@@ -112,17 +170,17 @@ impl Runtime {
         self.backend.stats()
     }
 
-    pub fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Rc<dyn ModelExec>> {
+    pub fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Arc<dyn ModelExec>> {
         self.backend.load_model(manifest, tag)
     }
 }
 
 /// A variant bound to its backend executable — the object tasks, the
 /// trainer and the benches hold on to (cached per tag in
-/// [`crate::flow::Session`]).
+/// [`crate::flow::Session`], shared across probe workers via `Arc`).
 pub struct ModelExecutable {
     pub variant: ModelVariant,
-    exec: Rc<dyn ModelExec>,
+    exec: Arc<dyn ModelExec>,
 }
 
 impl ModelExecutable {
@@ -164,5 +222,41 @@ impl ModelExecutable {
             )));
         }
         self.exec.eval_step(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Compile-time guarantees the DSE pool depends on: the whole
+    // execution stack can be shared across scoped worker threads.
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn runtime_stack_is_send_sync() {
+        assert_send_sync::<Runtime>();
+        assert_send_sync::<ModelExecutable>();
+        assert_send_sync::<StatsCell>();
+        assert_send_sync::<Arc<dyn ModelExec>>();
+        assert_send_sync::<Box<dyn ExecBackend>>();
+    }
+
+    #[test]
+    fn stats_cell_accumulates_across_threads() {
+        let cell = StatsCell::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        cell.add_execute(Duration::from_nanos(1_000));
+                    }
+                });
+            }
+        });
+        let snap = cell.snapshot();
+        assert_eq!(snap.executions, 400);
+        assert!((snap.execute_secs - 400.0 * 1e-6).abs() < 1e-12);
+        assert_eq!(snap.compiles, 0);
     }
 }

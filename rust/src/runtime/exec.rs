@@ -1,10 +1,9 @@
 //! PJRT execution backend (`--features xla`): compiles and runs the AOT
 //! HLO-text artifacts produced by `python/compile/aot.py`.
 //!
-//! One [`PjrtBackend`] per process (the PJRT CPU client is not Send/Sync
-//! in the `xla` crate, so everything executes on the coordinator thread).
-//! Compiled executables are cached by artifact file name — re-entering a
-//! flow task never recompiles.
+//! One [`PjrtBackend`] per process.  Compiled executables are cached by
+//! artifact file name behind a `Mutex` — re-entering a flow task never
+//! recompiles, and concurrent probe workers share the cache safely.
 //!
 //! The interchange contract with `python/compile/aot.py`:
 //! * artifacts are HLO *text* (`HloModuleProto::from_text_file` reassigns
@@ -15,22 +14,27 @@
 //! By default the `xla` dependency resolves to the in-tree `xla-stub`
 //! crate, which type-checks this whole path offline but fails client
 //! construction at runtime; point it at the real xla-rs crate to execute.
+//!
+//! Thread-safety note: [`crate::runtime::ExecBackend`] requires
+//! `Send + Sync`, which the stub types satisfy.  The real xla-rs PJRT
+//! client is not `Sync`; linking it requires wrapping the client in a
+//! dispatch thread (or a `Send`-able fork of xla-rs) — the offline
+//! `cargo check --features xla` contract only covers the stub.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::runtime::backend::{ExecBackend, ModelExec, RuntimeStats};
+use crate::runtime::backend::{ExecBackend, ModelExec, RuntimeStats, StatsCell};
 use crate::runtime::manifest::{Manifest, ModelVariant};
 use crate::runtime::tensor::HostTensor;
 
 /// Owns the PJRT client and the compiled-executable cache.
 pub struct PjrtBackend {
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    stats: Rc<RefCell<RuntimeStats>>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Arc<StatsCell>,
 }
 
 impl PjrtBackend {
@@ -38,14 +42,17 @@ impl PjrtBackend {
     pub fn cpu() -> Result<Self> {
         Ok(PjrtBackend {
             client: xla::PjRtClient::cpu()?,
-            cache: RefCell::new(HashMap::new()),
-            stats: Rc::new(RefCell::new(RuntimeStats::default())),
+            cache: Mutex::new(HashMap::new()),
+            stats: Arc::new(StatsCell::new()),
         })
     }
 
-    /// Load + compile an HLO-text artifact (cached by file name).
-    pub fn load(&self, manifest: &Manifest, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(file) {
+    /// Load + compile an HLO-text artifact (cached by file name).  The
+    /// cache lock is held across compilation so two workers racing on
+    /// the same artifact compile it once.
+    pub fn load(&self, manifest: &Manifest, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(exe) = cache.get(file) {
             return Ok(exe.clone());
         }
         let path = manifest.artifact_path(file);
@@ -54,16 +61,11 @@ impl PjrtBackend {
             path.to_str().ok_or_else(|| Error::other("non-utf8 path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        {
-            let mut stats = self.stats.borrow_mut();
-            stats.compiles += 1;
-            stats.compile_secs += t0.elapsed().as_secs_f64();
-        }
-        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.stats.add_compile(t0.elapsed());
+        cache.insert(file.to_string(), exe.clone());
         Ok(exe)
     }
-
 }
 
 /// Shared execution path: marshal host tensors to borrowed literals,
@@ -72,7 +74,7 @@ impl PjrtBackend {
 fn run_marshaled(
     exe: &xla::PjRtLoadedExecutable,
     args: &[HostTensor],
-    stats: &Rc<RefCell<RuntimeStats>>,
+    stats: &StatsCell,
 ) -> Result<Vec<HostTensor>> {
     let literals = args
         .iter()
@@ -82,11 +84,7 @@ fn run_marshaled(
     let t0 = Instant::now();
     let result = exe.execute::<&xla::Literal>(&refs)?[0][0].to_literal_sync()?;
     let parts = result.to_tuple()?;
-    {
-        let mut stats = stats.borrow_mut();
-        stats.executions += 1;
-        stats.execute_secs += t0.elapsed().as_secs_f64();
-    }
+    stats.add_execute(t0.elapsed());
     parts.iter().map(HostTensor::from_literal).collect()
 }
 
@@ -95,11 +93,11 @@ impl ExecBackend for PjrtBackend {
         self.client.platform_name()
     }
 
-    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Rc<dyn ModelExec>> {
+    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Arc<dyn ModelExec>> {
         let variant = manifest.get(tag)?.clone();
         let train = self.load(manifest, &variant.train_artifact)?;
         let eval = self.load(manifest, &variant.eval_artifact)?;
-        Ok(Rc::new(PjrtModel {
+        Ok(Arc::new(PjrtModel {
             variant,
             train,
             eval,
@@ -108,7 +106,7 @@ impl ExecBackend for PjrtBackend {
     }
 
     fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.snapshot()
     }
 }
 
@@ -122,9 +120,9 @@ impl ExecBackend for PjrtBackend {
 /// exercises, never marshals at all).
 pub struct PjrtModel {
     variant: ModelVariant,
-    train: Rc<xla::PjRtLoadedExecutable>,
-    eval: Rc<xla::PjRtLoadedExecutable>,
-    stats: Rc<RefCell<RuntimeStats>>,
+    train: Arc<xla::PjRtLoadedExecutable>,
+    eval: Arc<xla::PjRtLoadedExecutable>,
+    stats: Arc<StatsCell>,
 }
 
 impl PjrtModel {

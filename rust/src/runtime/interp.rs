@@ -21,12 +21,11 @@
 //! Parity with the JAX stack is pinned by `rust/tests/backend_parity.rs`
 //! against goldens generated from the actual Pallas-interpret kernels.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::runtime::backend::{ExecBackend, ModelExec, RuntimeStats};
+use crate::runtime::backend::{ExecBackend, ModelExec, RuntimeStats, StatsCell};
 use crate::runtime::manifest::{LayerDesc, Manifest, ModelVariant};
 use crate::runtime::tensor::HostTensor;
 
@@ -268,9 +267,13 @@ struct StepArgs<'a> {
 }
 
 /// A manifest variant bound to the reference interpreter.
+///
+/// Holds only the immutable variant description plus the shared atomic
+/// stats cell, so one model is freely stepped from concurrent DSE probe
+/// workers (`ModelExec` requires `Send + Sync`).
 pub struct RefModel {
     variant: ModelVariant,
-    stats: Rc<RefCell<RuntimeStats>>,
+    stats: Arc<StatsCell>,
 }
 
 impl RefModel {
@@ -737,9 +740,7 @@ impl ModelExec for RefModel {
             let shape = &self.variant.param_shapes[i].1;
             new_params.push(HostTensor::F32 { shape: shape.clone(), data });
         }
-        let mut stats = self.stats.borrow_mut();
-        stats.executions += 1;
-        stats.execute_secs += t0.elapsed().as_secs_f64();
+        self.stats.add_execute(t0.elapsed());
         Ok((new_params, loss, acc))
     }
 
@@ -748,9 +749,7 @@ impl ModelExec for RefModel {
         let a = self.split_args(args, false)?;
         let fwd = self.forward(&a, false)?;
         let (loss, acc, _) = self.loss_acc(&fwd.logits, a.y)?;
-        let mut stats = self.stats.borrow_mut();
-        stats.executions += 1;
-        stats.execute_secs += t0.elapsed().as_secs_f64();
+        self.stats.add_execute(t0.elapsed());
         Ok((loss, acc))
     }
 }
@@ -817,12 +816,12 @@ fn validate_layer_indices(variant: &ModelVariant) -> Result<()> {
 
 /// The reference-interpreter backend: no artifacts, no native libraries.
 pub struct RefBackend {
-    stats: Rc<RefCell<RuntimeStats>>,
+    stats: Arc<StatsCell>,
 }
 
 impl RefBackend {
     pub fn new() -> Self {
-        RefBackend { stats: Rc::new(RefCell::new(RuntimeStats::default())) }
+        RefBackend { stats: Arc::new(StatsCell::new()) }
     }
 }
 
@@ -837,7 +836,7 @@ impl ExecBackend for RefBackend {
         "reference-interpreter".to_string()
     }
 
-    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Rc<dyn ModelExec>> {
+    fn load_model(&self, manifest: &Manifest, tag: &str) -> Result<Arc<dyn ModelExec>> {
         let t0 = Instant::now();
         let variant = manifest.get(tag)?.clone();
         if variant.layers.is_empty() {
@@ -847,14 +846,12 @@ impl ExecBackend for RefBackend {
             )));
         }
         validate_layer_indices(&variant)?;
-        let mut stats = self.stats.borrow_mut();
-        stats.compiles += 1;
-        stats.compile_secs += t0.elapsed().as_secs_f64();
-        Ok(Rc::new(RefModel { variant, stats: self.stats.clone() }))
+        self.stats.add_compile(t0.elapsed());
+        Ok(Arc::new(RefModel { variant, stats: self.stats.clone() }))
     }
 
     fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.snapshot()
     }
 }
 

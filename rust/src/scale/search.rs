@@ -5,9 +5,17 @@
 //! search walks the grid downward from the current scale, retraining each
 //! candidate, and stops when the accuracy loss vs the unscaled baseline
 //! exceeds α_s (paper default 0.05% — essentially "free" shrinkage only).
+//!
+//! Under `jobs > 1` the grid is evaluated *speculatively* in
+//! worker-count-sized waves through the [`ProbePool`]: each wave trains
+//! `jobs` candidates concurrently, then the stop rule scans results in
+//! grid order before the next wave launches.  Speculative work is
+//! bounded by otherwise-idle capacity (at most `jobs - 1` discarded
+//! trials, and wall-clock never exceeds the lazy walk), and the probe
+//! trace is bit-identical to the sequential walk (which `jobs = 1`
+//! still performs lazily, trial by trial).
 
-use std::rc::Rc;
-
+use crate::dse::ProbePool;
 use crate::error::Result;
 use crate::flow::session::Session;
 use crate::model::ModelState;
@@ -71,10 +79,11 @@ pub fn scale_search(
     current_scale: f64,
     base_accuracy: f64,
     cfg: &ScaleConfig,
+    pool: &ProbePool,
 ) -> Result<(ScaleTrace, ModelState, f64)> {
     let data = session.dataset(model)?;
     let grid = session.manifest.scales_for(model);
-    let candidates: Vec<f64> = if cfg.auto {
+    let mut candidates: Vec<f64> = if cfg.auto {
         grid.iter().copied().filter(|&s| s < current_scale).collect()
     } else {
         // single trial at the closest grid point to the default factor
@@ -88,6 +97,7 @@ pub fn scale_search(
             .filter(|&s| s < current_scale);
         nearest.into_iter().collect()
     };
+    candidates.truncate(cfg.max_trials);
 
     let fit_cfg = |epochs| TrainConfig {
         epochs,
@@ -95,11 +105,12 @@ pub fn scale_search(
         ..TrainConfig::for_model(model)
     };
 
-    let mut probes = Vec::new();
-    let mut best: Option<(f64, ModelState, f64)> = None;
-    for (i, scale) in candidates.into_iter().take(cfg.max_trials).enumerate() {
+    // One candidate trial: bind the variant, train from scratch,
+    // optionally inherit pruning, evaluate.  Pure per-scale work — the
+    // speculative path runs this concurrently for the whole grid.
+    let probe = |scale: f64| -> Result<(ModelState, f64, usize)> {
         let variant = session.manifest.variant(model, scale)?;
-        let exec: Rc<_> = session.executable(&variant.tag)?;
+        let exec = session.executable(&variant.tag)?;
         let trainer = Trainer::new(&session.runtime, &exec, &data);
         let mut cand = ModelState::init(variant, cfg.seed);
         trainer.fit(&mut cand, &fit_cfg(cfg.train_epochs))?;
@@ -110,18 +121,43 @@ pub fn scale_search(
             trainer.fit(&mut cand, &fit_cfg(2))?;
         }
         let eval = trainer.evaluate(&cand)?;
-        let ok = base_accuracy - eval.accuracy <= cfg.tolerate_acc_loss;
-        probes.push(ScaleProbe {
-            trial: i + 1,
-            scale,
-            accuracy: eval.accuracy,
-            accepted: ok,
-            params: variant.total_weights(),
-        });
-        if ok {
-            best = Some((scale, cand, eval.accuracy));
-        } else {
-            break; // grid walk stops at the first violation (paper)
+        Ok((cand, eval.accuracy, variant.total_weights()))
+    };
+
+    // Speculative evaluation in worker-sized waves.  Per-trial outcomes
+    // are wrapped so that errors past the stopping point are discarded
+    // exactly as the lazy walk would never have hit them.
+    let wave = pool.jobs().min(candidates.len()).max(1);
+    let mut probes = Vec::new();
+    let mut best: Option<(f64, ModelState, f64)> = None;
+    'walk: for (wave_idx, chunk) in candidates.chunks(wave).enumerate() {
+        let mut speculated: Vec<Option<Result<(ModelState, f64, usize)>>> =
+            if wave > 1 {
+                pool.run_batch(chunk.len(), |i| Ok(probe(chunk[i])))?
+                    .into_iter()
+                    .map(Some)
+                    .collect()
+            } else {
+                (0..chunk.len()).map(|_| None).collect()
+            };
+        for (j, &scale) in chunk.iter().enumerate() {
+            let (cand, accuracy, params) = match speculated[j].take() {
+                Some(result) => result?,
+                None => probe(scale)?,
+            };
+            let ok = base_accuracy - accuracy <= cfg.tolerate_acc_loss;
+            probes.push(ScaleProbe {
+                trial: wave_idx * wave + j + 1,
+                scale,
+                accuracy,
+                accepted: ok,
+                params,
+            });
+            if ok {
+                best = Some((scale, cand, accuracy));
+            } else {
+                break 'walk; // grid walk stops at the first violation (paper)
+            }
         }
     }
 
@@ -129,21 +165,8 @@ pub fn scale_search(
         Some(b) => b,
         None => {
             // no smaller scale acceptable: stay at the current scale
-            let variant = session.manifest.variant(model, current_scale)?;
-            let exec = session.executable(&variant.tag)?;
-            let trainer = Trainer::new(&session.runtime, &exec, &data);
-            let mut state = ModelState::init(variant, cfg.seed);
-            trainer.fit(&mut state, &fit_cfg(cfg.train_epochs))?;
-            if cfg.inherit_pruning_rate > 0.0 {
-                state.masks = crate::prune::global_magnitude_masks(
-                    &state,
-                    cfg.inherit_pruning_rate,
-                )?;
-                state.apply_masks()?;
-                trainer.fit(&mut state, &fit_cfg(2))?;
-            }
-            let eval = trainer.evaluate(&state)?;
-            (current_scale, state, eval.accuracy)
+            let (state, accuracy, _) = probe(current_scale)?;
+            (current_scale, state, accuracy)
         }
     };
 

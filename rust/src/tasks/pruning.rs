@@ -27,6 +27,7 @@ impl PipeTask for PruningTask {
             ParamSpec { name: "pruning_rate_thresh", description: "β_p: binary-search stop width", default: Some("0.02") },
             ParamSpec { name: "train_test_dataset", description: "dataset (synthetic substitute)", default: Some("per-model") },
             ParamSpec { name: "train_epochs", description: "fine-tune epochs per probe", default: Some("2") },
+            ParamSpec { name: "jobs", description: "DSE probe workers (default METAML_JOBS/auto)", default: Some("auto") },
         ]
     }
 
@@ -46,7 +47,8 @@ impl PipeTask for PruningTask {
         let data = ctx.session.dataset(&variant.model)?;
         let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
 
-        let trace = autoprune(&trainer, &mut state, &cfg)?;
+        let pool = crate::dse::ProbePool::new(ctx.jobs());
+        let trace = autoprune(&trainer, &mut state, &cfg, &pool)?;
         for p in &trace.probes {
             ctx.log_metric("probe_rate", p.rate);
             ctx.log_metric("probe_accuracy", p.accuracy);

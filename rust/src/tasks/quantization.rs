@@ -39,6 +39,7 @@ impl PipeTask for QuantizationTask {
             ParamSpec { name: "start_precision", description: "starting ap_fixed type", default: Some("ap_fixed<18,8>") },
             ParamSpec { name: "min_bits", description: "floor on per-layer total bits", default: Some("2") },
             ParamSpec { name: "train_test_dataset", description: "dataset (synthetic substitute)", default: Some("per-model") },
+            ParamSpec { name: "jobs", description: "DSE probe workers (default METAML_JOBS/auto)", default: Some("auto") },
         ]
     }
 
@@ -59,12 +60,14 @@ impl PipeTask for QuantizationTask {
         let data = ctx.session.dataset(&variant.model)?;
         let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
 
-        let trace = quantize_search(&trainer, &mut state, &cfg)?;
+        let pool = crate::dse::ProbePool::new(ctx.jobs());
+        let trace = quantize_search(&trainer, &mut state, &cfg, &pool)?;
         for p in &trace.probes {
             ctx.log_metric("probe_layer", p.layer as f64);
             ctx.log_metric("probe_bits", p.tried.total_bits as f64);
             ctx.log_metric("probe_accuracy", p.accuracy);
         }
+        ctx.log_metric("eval_cache_hits", pool.cache().hits() as f64);
         ctx.log_metric("accuracy", trace.final_accuracy);
         ctx.log_metric("bits_total", trace.bits_after as f64);
         ctx.log_message(format!(

@@ -28,6 +28,7 @@ impl PipeTask for ScalingTask {
             ParamSpec { name: "max_trials_num", description: "bound on candidate trials", default: Some("8") },
             ParamSpec { name: "train_test_dataset", description: "dataset (synthetic substitute)", default: Some("per-model") },
             ParamSpec { name: "train_epochs", description: "training epochs per trial", default: Some("4") },
+            ParamSpec { name: "jobs", description: "DSE probe workers (default METAML_JOBS/auto)", default: Some("auto") },
         ]
     }
 
@@ -58,8 +59,9 @@ impl PipeTask for ScalingTask {
             inherit_pruning_rate: input.metric("pruning_rate").unwrap_or(0.0),
         };
 
+        let pool = crate::dse::ProbePool::new(ctx.jobs());
         let (trace, state, new_scale) =
-            scale_search(ctx.session, &variant.model, variant.scale, base_acc, &cfg)?;
+            scale_search(ctx.session, &variant.model, variant.scale, base_acc, &cfg, &pool)?;
         for p in &trace.probes {
             ctx.log_metric("probe_scale", p.scale);
             ctx.log_metric("probe_accuracy", p.accuracy);

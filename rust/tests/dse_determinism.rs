@@ -1,0 +1,275 @@
+//! Parallel-DSE determinism contract tests.
+//!
+//! The probe pool promises: results are bit-identical for every `jobs`
+//! value, and the memoizing eval cache never changes a result.  These
+//! tests pin that contract on real searches over the reference
+//! interpreter — `quantize_search`, `autoprune` and `scale_search` are
+//! each run under `jobs = 1` and `jobs = 4` from identical starting
+//! states, and every trace field (including accuracy bit patterns and
+//! accepted-probe sets) must match.
+
+use metaml::bench_support::dense_layer;
+use metaml::data::{Dataset, DatasetSpec};
+use metaml::dse::{ProbePool, ProbeRequest};
+use metaml::flow::Session;
+use metaml::model::state::Precision;
+use metaml::model::ModelState;
+use metaml::prune::{autoprune, AutopruneConfig};
+use metaml::quant::{quantize_search, QuantConfig};
+use metaml::runtime::{Manifest, ModelExecutable, ModelVariant, Runtime};
+use metaml::scale::{scale_search, ScaleConfig};
+use metaml::train::{TrainConfig, Trainer};
+
+/// A 3-weight-layer MLP variant (8 → h1 → h2 → 3) at a given scale tag.
+fn mlp_variant(scale: f64, tag: &str, h1: usize, h2: usize) -> ModelVariant {
+    ModelVariant {
+        model: "dse_mlp".into(),
+        scale,
+        tag: tag.into(),
+        input_shape: vec![8],
+        n_classes: 3,
+        train_batch: 32,
+        eval_batch: 64,
+        param_shapes: vec![
+            ("w0".into(), vec![8, h1]),
+            ("b0".into(), vec![h1]),
+            ("w1".into(), vec![h1, h2]),
+            ("b1".into(), vec![h2]),
+            ("w2".into(), vec![h2, 3]),
+            ("b2".into(), vec![3]),
+        ],
+        mask_shapes: vec![(0, vec![8, h1]), (2, vec![h1, h2]), (4, vec![h2, 3])],
+        qcfg_rows: 3,
+        layers: vec![
+            dense_layer("fc1", "relu", 8, h1, 0, 0),
+            dense_layer("fc2", "relu", h1, h2, 2, 1),
+            dense_layer("out", "linear", h2, 3, 4, 2),
+        ],
+        train_artifact: "unused".into(),
+        eval_artifact: "unused".into(),
+    }
+}
+
+/// Small, fast dataset shared by the single-variant tests.
+fn small_dataset() -> Dataset {
+    Dataset::generate(&DatasetSpec {
+        name: "dse_sim".into(),
+        input_shape: vec![8],
+        n_classes: 3,
+        n_train: 256,
+        n_test: 128,
+        noise: 0.8,
+        seed: 9,
+    })
+}
+
+/// Reference-backend executable + briefly trained base state.
+fn trained_setup() -> (Runtime, ModelExecutable, Dataset, ModelState) {
+    let variant = mlp_variant(1.0, "dse_mlp_s1000", 16, 8);
+    let manifest = Manifest::from_variants(vec![variant.clone()]);
+    let runtime = Runtime::reference();
+    let exec = ModelExecutable::load(&runtime, &manifest, &variant.tag).unwrap();
+    let data = small_dataset();
+    let mut state = ModelState::init(&variant, 71);
+    {
+        let trainer = Trainer::new(&runtime, &exec, &data);
+        let cfg = TrainConfig { epochs: 3, seed: 17, ..Default::default() };
+        trainer.fit(&mut state, &cfg).unwrap();
+    }
+    (runtime, exec, data, state)
+}
+
+#[test]
+fn quantize_search_is_jobs_invariant() {
+    let (runtime, exec, data, base) = trained_setup();
+    let trainer = Trainer::new(&runtime, &exec, &data);
+    let cfg = QuantConfig {
+        tolerate_acc_loss: 0.02,
+        start: Precision::new(10, 5),
+        min_bits: 6,
+    };
+
+    let mut state_seq = base.clone();
+    let trace_seq =
+        quantize_search(&trainer, &mut state_seq, &cfg, &ProbePool::new(1)).unwrap();
+    let mut state_par = base.clone();
+    let trace_par =
+        quantize_search(&trainer, &mut state_par, &cfg, &ProbePool::new(4)).unwrap();
+
+    assert_eq!(trace_seq.precisions, trace_par.precisions);
+    assert_eq!(trace_seq.bits_after, trace_par.bits_after);
+    assert_eq!(
+        trace_seq.base_accuracy.to_bits(),
+        trace_par.base_accuracy.to_bits()
+    );
+    assert_eq!(
+        trace_seq.final_accuracy.to_bits(),
+        trace_par.final_accuracy.to_bits()
+    );
+    assert_eq!(state_seq.precisions, state_par.precisions);
+
+    // full probe trace, including accuracy bit patterns
+    assert_eq!(trace_seq.probes.len(), trace_par.probes.len());
+    for (a, b) in trace_seq.probes.iter().zip(&trace_par.probes) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.layer, b.layer);
+        assert_eq!(a.tried, b.tried);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.accepted, b.accepted);
+    }
+
+    // accepted-probe sets match exactly
+    let accepted = |t: &metaml::quant::QuantTrace| -> Vec<(usize, usize, u32, u32)> {
+        t.probes
+            .iter()
+            .filter(|p| p.accepted)
+            .map(|p| (p.round, p.layer, p.tried.total_bits, p.tried.int_bits))
+            .collect()
+    };
+    assert_eq!(accepted(&trace_seq), accepted(&trace_par));
+
+    // the search actually shrank something (the test would be vacuous
+    // against a search that never accepts)
+    assert!(trace_seq.bits_after < trace_seq.bits_before);
+}
+
+#[test]
+fn eval_cache_never_changes_results() {
+    let (runtime, exec, data, mut state) = trained_setup();
+    let trainer = Trainer::new(&runtime, &exec, &data);
+    for p in state.precisions.iter_mut() {
+        *p = Precision::new(9, 4);
+    }
+
+    let direct = trainer.evaluate(&state).unwrap();
+    let pool = ProbePool::new(2);
+
+    // first time through the pool: fresh evaluation, equal to direct
+    let first = pool
+        .evaluate_batch(&trainer, &[ProbeRequest::new(0, state.clone())])
+        .unwrap();
+    assert!(!first[0].cached);
+    assert_eq!(first[0].eval.loss.to_bits(), direct.loss.to_bits());
+    assert_eq!(first[0].eval.accuracy.to_bits(), direct.accuracy.to_bits());
+    assert_eq!(first[0].eval.n, direct.n);
+
+    // second time: served from the cache, bit-identical
+    let second = pool
+        .evaluate_batch(&trainer, &[ProbeRequest::new(1, state.clone())])
+        .unwrap();
+    assert!(second[0].cached);
+    assert_eq!(second[0].eval.loss.to_bits(), direct.loss.to_bits());
+    assert_eq!(second[0].eval.accuracy.to_bits(), direct.accuracy.to_bits());
+    assert_eq!(pool.cache().hits(), 1);
+
+    // duplicates inside one batch collapse onto one evaluation
+    let mut other = state.clone();
+    other.precisions[0] = Precision::new(8, 4);
+    let batch = pool
+        .evaluate_batch(
+            &trainer,
+            &[
+                ProbeRequest::new(0, other.clone()),
+                ProbeRequest::new(1, other.clone()),
+            ],
+        )
+        .unwrap();
+    assert!(!batch[0].cached);
+    assert!(batch[1].cached);
+    assert_eq!(
+        batch[0].eval.accuracy.to_bits(),
+        batch[1].eval.accuracy.to_bits()
+    );
+}
+
+#[test]
+fn autoprune_is_jobs_invariant() {
+    let (runtime, exec, data, base) = trained_setup();
+    let trainer = Trainer::new(&runtime, &exec, &data);
+    let cfg = AutopruneConfig {
+        tolerate_acc_loss: 0.05,
+        rate_threshold: 0.1, // 4 binary-search steps keeps the test fast
+        train_epochs: 1,
+        seed: 23,
+    };
+
+    let mut state_seq = base.clone();
+    let trace_seq =
+        autoprune(&trainer, &mut state_seq, &cfg, &ProbePool::new(1)).unwrap();
+    let mut state_par = base.clone();
+    let trace_par =
+        autoprune(&trainer, &mut state_par, &cfg, &ProbePool::new(4)).unwrap();
+
+    assert_eq!(trace_seq.best_rate.to_bits(), trace_par.best_rate.to_bits());
+    assert_eq!(
+        trace_seq.best_accuracy.to_bits(),
+        trace_par.best_accuracy.to_bits()
+    );
+    assert_eq!(trace_seq.probes.len(), trace_par.probes.len());
+    for (a, b) in trace_seq.probes.iter().zip(&trace_par.probes) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.rate.to_bits(), b.rate.to_bits());
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.layer_nnz, b.layer_nnz);
+    }
+    // the accepted states are bit-identical (params, masks, precisions)
+    assert_eq!(state_seq.params, state_par.params);
+    assert_eq!(state_seq.masks, state_par.masks);
+}
+
+#[test]
+fn scale_search_is_jobs_invariant() {
+    // a 3-point scale grid so the speculative walk has work to do
+    let manifest = Manifest::from_variants(vec![
+        mlp_variant(1.0, "dse_mlp_s1000", 16, 8),
+        mlp_variant(0.75, "dse_mlp_s0750", 12, 6),
+        mlp_variant(0.5, "dse_mlp_s0500", 8, 4),
+    ]);
+    let session = Session::with_backend(Runtime::reference(), manifest);
+
+    // baseline at full scale
+    let (base_state, exec, data) = {
+        let variant = session.manifest.variant("dse_mlp", 1.0).unwrap();
+        let exec = session.executable(&variant.tag).unwrap();
+        let data = session.dataset("dse_mlp").unwrap();
+        let mut state = ModelState::init(variant, 29);
+        let trainer = Trainer::new(&session.runtime, &exec, &data);
+        trainer
+            .fit(&mut state, &TrainConfig { epochs: 2, seed: 29, ..Default::default() })
+            .unwrap();
+        (state, exec, data)
+    };
+    let trainer = Trainer::new(&session.runtime, &exec, &data);
+    let base_acc = trainer.evaluate(&base_state).unwrap().accuracy;
+
+    let cfg = ScaleConfig {
+        tolerate_acc_loss: 0.10, // generous: descend at least one point
+        train_epochs: 2,
+        seed: 29,
+        ..Default::default()
+    };
+
+    let (trace_seq, state_seq, scale_seq) =
+        scale_search(&session, "dse_mlp", 1.0, base_acc, &cfg, &ProbePool::new(1))
+            .unwrap();
+    let (trace_par, state_par, scale_par) =
+        scale_search(&session, "dse_mlp", 1.0, base_acc, &cfg, &ProbePool::new(4))
+            .unwrap();
+
+    assert_eq!(scale_seq.to_bits(), scale_par.to_bits());
+    assert_eq!(
+        trace_seq.best_accuracy.to_bits(),
+        trace_par.best_accuracy.to_bits()
+    );
+    assert_eq!(trace_seq.probes.len(), trace_par.probes.len());
+    for (a, b) in trace_seq.probes.iter().zip(&trace_par.probes) {
+        assert_eq!(a.trial, b.trial);
+        assert_eq!(a.scale.to_bits(), b.scale.to_bits());
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.params, b.params);
+    }
+    assert_eq!(state_seq.params, state_par.params);
+    assert_eq!(state_seq.masks, state_par.masks);
+}
