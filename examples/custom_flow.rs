@@ -5,14 +5,17 @@
 //! surviving weights to a small codebook (power-of-two clustering), which
 //! lets the synthesizer fold multiplies into shifts — register it
 //! alongside the built-ins, and run PRUNING → WEIGHT-CLUSTER → HLS4ML →
-//! VIVADO-HLS.
+//! VIVADO-HLS.  Clustering only pays off when pruning kept the model
+//! accurate, so the cluster step hangs off a **conditional edge**: if
+//! pruned accuracy is below the bar, the flow bypasses WEIGHT-CLUSTER
+//! straight to HLS4ML (both decisions land in the LOG).
 //!
 //!     cargo run --release --example custom_flow
 
 use metaml::error::Result;
 use metaml::flow::{
-    Engine, FlowGraph, ParamSpec, PipeTask, Session, TaskCtx, TaskOutcome,
-    TaskRegistry, TaskRole,
+    CmpOp, EdgeGuard, Engine, FlowGraph, ParamSpec, PipeTask, Session, TaskCtx,
+    TaskOutcome, TaskRegistry, TaskRole,
 };
 use metaml::metamodel::{Abstraction, MetaModel, ModelPayload};
 use metaml::train::Trainer;
@@ -116,7 +119,18 @@ fn main() -> Result<()> {
     let hls = flow.add_task("hls4ml", "HLS4ML");
     let synth = flow.add_task("synth", "VIVADO-HLS");
     flow.connect(gen, prune)?;
-    flow.connect(prune, cluster)?;
+    // conditional: cluster only a model that pruned well, else bypass
+    let acc_bar = 0.5;
+    flow.connect_when(
+        prune,
+        cluster,
+        EdgeGuard { metric: "prune.accuracy".into(), op: CmpOp::Ge, value: acc_bar },
+    )?;
+    flow.connect_when(
+        prune,
+        hls,
+        EdgeGuard { metric: "prune.accuracy".into(), op: CmpOp::Lt, value: acc_bar },
+    )?;
     flow.connect(cluster, hls)?;
     flow.connect(hls, synth)?;
 

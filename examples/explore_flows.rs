@@ -1,0 +1,52 @@
+//! Multi-flow exploration demo: run four flow *architectures*
+//! concurrently from one spec and print the (accuracy, DSP, LUT)
+//! Pareto front.
+//!
+//! Uses the in-memory synthetic jet manifest (scale grid included), so
+//! it runs on any machine — no `make artifacts` needed:
+//!
+//!     cargo run --release --example explore_flows
+//!
+//! The equivalent CLI invocation:
+//!
+//!     cargo run --release -- explore \
+//!         --flow examples/specs/explore_jet.json --synthetic
+
+use metaml::bench_support::synthetic_jet_manifest_scales;
+use metaml::config::FlowSpec;
+use metaml::error::Result;
+use metaml::flow::explore::{expand_variants, explore_variants, front_table};
+use metaml::flow::{Session, TaskRegistry};
+use metaml::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let spec = FlowSpec::load("examples/specs/explore_jet.json")?;
+    let session = Session::with_backend(
+        Runtime::cpu()?,
+        synthetic_jet_manifest_scales(&[1.0, 0.75, 0.5]),
+    );
+    let registry = TaskRegistry::builtin();
+    let jobs = metaml::dse::default_jobs();
+
+    let variants = expand_variants(&spec)?;
+    println!("exploring {} flow variants (jobs={jobs}):", variants.len());
+    for v in &variants {
+        println!("  - {}", v.label);
+    }
+
+    let outcome = explore_variants(&session, &registry, &variants, &[], jobs)?;
+
+    println!("\n{}", front_table(&outcome).render());
+    println!("Pareto front:");
+    for &i in &outcome.front {
+        let r = &outcome.results[i];
+        println!(
+            "  * {} (acc {:.4}, {} DSP, {} LUT)",
+            r.label,
+            r.metric("accuracy").unwrap_or(0.0),
+            r.metric("dsp").unwrap_or(0.0) as u64,
+            r.metric("lut").unwrap_or(0.0) as u64,
+        );
+    }
+    Ok(())
+}

@@ -59,22 +59,20 @@ pub fn dense_layer(name: &str, activation: &str, in_dim: usize, out_dim: usize, 
     }
 }
 
-/// In-memory manifest describing the paper's jet-tagging MLP
-/// (16 → 64 → 32 → 32 → 5, the hls4ml benchmark architecture) for the
-/// reference interpreter.  Lets benches exercise the real `jet_dnn`
-/// probe hot path on machines where `make artifacts` has not run.
-pub fn synthetic_jet_manifest() -> Manifest {
-    let dims = [16usize, 64, 32, 32, 5];
+/// An MLP-chain variant (`dims[0] → … → dims.last()`) for a model
+/// family, tagged `"{model}_s{scale*1000:04}"` like the AOT exporter.
+pub fn mlp_chain_variant(model: &str, scale: f64, dims: &[usize]) -> ModelVariant {
+    let n_layers = dims.len() - 1;
     let mut param_shapes = Vec::new();
     let mut mask_shapes = Vec::new();
     let mut layers = Vec::new();
-    for l in 0..4 {
+    for l in 0..n_layers {
         let (d_in, d_out) = (dims[l], dims[l + 1]);
         let param_w = (2 * l) as i64;
         param_shapes.push((format!("w{l}"), vec![d_in, d_out]));
         param_shapes.push((format!("b{l}"), vec![d_out]));
         mask_shapes.push((2 * l, vec![d_in, d_out]));
-        let activation = if l == 3 { "linear" } else { "relu" };
+        let activation = if l == n_layers - 1 { "linear" } else { "relu" };
         layers.push(dense_layer(
             &format!("fc{}", l + 1),
             activation,
@@ -84,21 +82,71 @@ pub fn synthetic_jet_manifest() -> Manifest {
             l as i64,
         ));
     }
-    Manifest::from_variants(vec![ModelVariant {
-        model: "jet_dnn".into(),
-        scale: 1.0,
-        tag: "jet_dnn_s1000".into(),
-        input_shape: vec![16],
-        n_classes: 5,
+    ModelVariant {
+        model: model.into(),
+        scale,
+        tag: format!("{model}_s{:04}", (scale * 1000.0).round() as usize),
+        input_shape: vec![dims[0]],
+        n_classes: *dims.last().unwrap(),
         train_batch: 64,
         eval_batch: 256,
         param_shapes,
         mask_shapes,
-        qcfg_rows: 4,
+        qcfg_rows: n_layers,
         layers,
         train_artifact: "unused".into(),
         eval_artifact: "unused".into(),
-    }])
+    }
+}
+
+/// Hidden layer widths of the jet MLP at a scale (floor 2 units).
+fn jet_dims(dims: &[usize], scale: f64) -> Vec<usize> {
+    let last = dims.len() - 1;
+    dims.iter()
+        .enumerate()
+        .map(|(i, &d)| {
+            if i == 0 || i == last {
+                d
+            } else {
+                ((d as f64 * scale).round() as usize).max(2)
+            }
+        })
+        .collect()
+}
+
+/// In-memory manifest describing the paper's jet-tagging MLP
+/// (16 → 64 → 32 → 32 → 5, the hls4ml benchmark architecture) for the
+/// reference interpreter.  Lets benches exercise the real `jet_dnn`
+/// probe hot path on machines where `make artifacts` has not run.
+pub fn synthetic_jet_manifest() -> Manifest {
+    synthetic_jet_manifest_scales(&[1.0])
+}
+
+/// Jet manifest with a scale grid (hidden widths scaled per variant)
+/// so SCALING has something to walk without AOT artifacts — used by the
+/// `metaml explore --synthetic` path and the flow-control tests.
+pub fn synthetic_jet_manifest_scales(scales: &[f64]) -> Manifest {
+    let dims = [16usize, 64, 32, 32, 5];
+    Manifest::from_variants(
+        scales
+            .iter()
+            .map(|&s| mlp_chain_variant("jet_dnn", s, &jet_dims(&dims, s)))
+            .collect(),
+    )
+}
+
+/// A shrunken jet-style family ("jet_mini", 16 → 16 → 8 → 5) with a
+/// scale grid: the same flow semantics as `jet_dnn` at a fraction of
+/// the FLOPs, so flow-control and explorer tests stay fast in debug
+/// builds.
+pub fn synthetic_jet_mini_manifest() -> Manifest {
+    let dims = [16usize, 16, 8, 5];
+    Manifest::from_variants(
+        [1.0, 0.75, 0.5]
+            .iter()
+            .map(|&s| mlp_chain_variant("jet_mini", s, &jet_dims(&dims, s)))
+            .collect(),
+    )
 }
 
 /// Train a fresh base model for a (model, scale) variant; returns the

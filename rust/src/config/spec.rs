@@ -7,7 +7,7 @@
 //! ```json
 //! {
 //!   "name": "s_p_q",
-//!   "cfg": { "model": "jet_dnn", "pruning.tolerate_acc_loss": 0.02 },
+//!   "cfg": { "model": "jet_dnn", "prune.tolerate_acc_loss": 0.02 },
 //!   "tasks": [
 //!     {"id": "gen",   "type": "KERAS-MODEL-GEN"},
 //!     {"id": "scale", "type": "SCALING"},
@@ -17,19 +17,210 @@
 //!   "back_edges": [{"from": "prune", "to": "scale", "max_iters": 2}]
 //! }
 //! ```
+//!
+//! The composable-IR extensions:
+//!
+//! * **Conditional edges** — an edge may be an object with a `when`
+//!   guard over meta-model metrics; the edge is taken only when the
+//!   predicate holds at runtime:
+//!   `{"from": "prune", "to": "quantize",
+//!     "when": {"metric": "prune.accuracy", "op": ">=", "value": 0.72}}`
+//! * **Strategy (S-task) nodes** — a task entry with a `strategy` key
+//!   declares arms (each a child flow, optionally guarded); exactly one
+//!   arm is selected and executed at runtime:
+//!   `{"id": "opt", "strategy": {"arms": [
+//!      {"name": "aggressive", "when": {...}, "flow": {...}},
+//!      {"name": "light", "flow": {...}}]}}`
+//! * **Sub-flows** — a task entry with a `flow` key embeds a child flow,
+//!   flattened at parse time with `"<id>."`-prefixed instance names;
+//!   edges touching the composite id attach to the child's entry
+//!   (no internal in-edge) / exit (no internal out-edge) nodes:
+//!   `{"id": "opt", "flow": {"tasks": [...], "edges": [...]}}`
+//! * **Variant grids** — an `explore` section declares task-order
+//!   permutations and/or CFG value grids for the multi-flow explorer
+//!   (see [`crate::flow::explore`]):
+//!   `"explore": {"orders": [["gen","scale","prune"], ...],
+//!                "cfg_grid": {"prune.tolerate_acc_loss": [0.01, 0.03]}}`
 
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
+use crate::flow::explore::ExploreSpec;
+use crate::flow::graph::{CmpOp, EdgeGuard, FlowPlan, StrategyArm};
 use crate::flow::{FlowGraph, NodeId};
 use crate::json::{self, Value};
 use crate::metamodel::Cfg;
 
-/// A parsed flow spec: graph + CFG entries.
+/// A parsed flow spec: graph + CFG entries + optional variant grid,
+/// with the validation plan computed once at parse time (the engine's
+/// `run_spec` reuses it instead of re-validating).
 #[derive(Debug, Clone)]
 pub struct FlowSpec {
     pub graph: FlowGraph,
     pub cfg_entries: Vec<(String, Value)>,
+    pub explore: Option<ExploreSpec>,
+    plan: FlowPlan,
+}
+
+/// What a task id resolves to after sub-flow flattening.
+enum Resolved {
+    Single(NodeId),
+    Composite { entries: Vec<NodeId>, exits: Vec<NodeId> },
+}
+
+impl Resolved {
+    fn entries(&self) -> Vec<NodeId> {
+        match self {
+            Resolved::Single(id) => vec![*id],
+            Resolved::Composite { entries, .. } => entries.clone(),
+        }
+    }
+
+    fn exits(&self) -> Vec<NodeId> {
+        match self {
+            Resolved::Single(id) => vec![*id],
+            Resolved::Composite { exits, .. } => exits.clone(),
+        }
+    }
+}
+
+/// Parse `{"metric": ..., "op": ..., "value": ...}` into a guard.
+pub fn parse_guard(v: &Value) -> Result<EdgeGuard> {
+    Ok(EdgeGuard {
+        metric: v.req_str("metric")?.to_string(),
+        op: CmpOp::parse(v.req_str("op")?)?,
+        value: v.req_f64("value")?,
+    })
+}
+
+/// Parse one `{tasks, edges, back_edges?}` object into a fresh graph
+/// (used for the top level and for strategy-arm flows).
+fn parse_flow_graph(name: &str, obj: &Value) -> Result<FlowGraph> {
+    let mut graph = FlowGraph::new(name);
+    let mut ids: BTreeMap<String, Resolved> = BTreeMap::new();
+    parse_scope(&mut graph, obj, "", &mut ids)?;
+    Ok(graph)
+}
+
+/// Parse the tasks + edges of one scope into `graph`, prefixing
+/// instance names with `prefix` (sub-flow flattening) and recording
+/// what each id resolves to in `ids`.
+fn parse_scope(
+    graph: &mut FlowGraph,
+    obj: &Value,
+    prefix: &str,
+    ids: &mut BTreeMap<String, Resolved>,
+) -> Result<()> {
+    for t in obj.req_array("tasks")? {
+        let id = t.req_str("id")?.to_string();
+        let full = format!("{prefix}{id}");
+        let resolved = if let Some(strat) = t.get("strategy") {
+            let arms = parse_arms(strat)?;
+            Resolved::Single(graph.add_strategy(full.clone(), arms)?)
+        } else if let Some(child) = t.get("flow") {
+            let before = graph.nodes().len();
+            parse_scope(graph, child, &format!("{full}."), ids)?;
+            let child_nodes: Vec<NodeId> = (before..graph.nodes().len()).collect();
+            if child_nodes.is_empty() {
+                return Err(Error::Config(format!("sub-flow {full:?} has no tasks")));
+            }
+            // At this point the graph holds exactly the child's internal
+            // edges (outer edges are added after all tasks of the outer
+            // scope parse), so degree-0 identifies entries/exits —
+            // computed in one pass each, not per node.
+            let (in_deg, out_deg) = (graph.in_degrees(), graph.out_degrees());
+            let entries: Vec<NodeId> =
+                child_nodes.iter().copied().filter(|&n| in_deg[n] == 0).collect();
+            let exits: Vec<NodeId> =
+                child_nodes.iter().copied().filter(|&n| out_deg[n] == 0).collect();
+            Resolved::Composite { entries, exits }
+        } else {
+            let ty = t.req_str("type")?.to_string();
+            Resolved::Single(graph.add_task(full.clone(), ty))
+        };
+        if ids.insert(full.clone(), resolved).is_some() {
+            return Err(Error::Config(format!(
+                "duplicate task id {full:?} (after sub-flow flattening)"
+            )));
+        }
+    }
+
+    let resolve = |ids: &BTreeMap<String, Resolved>, name: &str| -> Result<(Vec<NodeId>, Vec<NodeId>)> {
+        let full = format!("{prefix}{name}");
+        ids.get(&full)
+            .map(|r| (r.entries(), r.exits()))
+            .ok_or_else(|| Error::Config(format!("unknown task id {full:?}")))
+    };
+
+    for e in obj.req_array("edges")? {
+        let (from, to, guard) = if let Some(pair) = e.as_array() {
+            if pair.len() != 2 {
+                return Err(Error::Config("edge must be [from, to]".into()));
+            }
+            let ends: Vec<&str> = pair
+                .iter()
+                .map(|p| {
+                    p.as_str().ok_or_else(|| {
+                        Error::Config("edge endpoint must be a string".into())
+                    })
+                })
+                .collect::<Result<_>>()?;
+            (ends[0], ends[1], None)
+        } else {
+            let guard = match e.get("when") {
+                Some(w) => Some(parse_guard(w)?),
+                None => None,
+            };
+            (e.req_str("from")?, e.req_str("to")?, guard)
+        };
+        let (_, from_exits) = resolve(ids, from)?;
+        let (to_entries, _) = resolve(ids, to)?;
+        for &f in &from_exits {
+            for &t in &to_entries {
+                match &guard {
+                    Some(g) => graph.connect_when(f, t, g.clone())?,
+                    None => graph.connect(f, t)?,
+                }
+            }
+        }
+    }
+
+    if let Some(Value::Array(back)) = obj.get("back_edges") {
+        for b in back {
+            let (from_name, to_name) = (b.req_str("from")?, b.req_str("to")?);
+            let (_, from_exits) = resolve(ids, from_name)?;
+            let (to_entries, _) = resolve(ids, to_name)?;
+            // a back edge must bind exactly one (source, target) pair —
+            // fanning out over a multi-entry/exit composite would
+            // multiply the declared max_iters budget
+            if from_exits.len() != 1 || to_entries.len() != 1 {
+                return Err(Error::Config(format!(
+                    "back edge {from_name:?} -> {to_name:?} must resolve to a \
+                     single node pair (composite endpoint has {} exits / {} \
+                     entries)",
+                    from_exits.len(),
+                    to_entries.len()
+                )));
+            }
+            graph.connect_back(from_exits[0], to_entries[0], b.req_usize("max_iters")?)?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse `{"arms": [{"name", "when"?, "flow"}]}` strategy declarations.
+fn parse_arms(strat: &Value) -> Result<Vec<StrategyArm>> {
+    let mut arms = Vec::new();
+    for a in strat.req_array("arms")? {
+        let name = a.req_str("name")?.to_string();
+        let when = match a.get("when") {
+            Some(w) => Some(parse_guard(w)?),
+            None => None,
+        };
+        let flow = parse_flow_graph(&name, a.req("flow")?)?;
+        arms.push(StrategyArm { name, when, flow });
+    }
+    Ok(arms)
 }
 
 impl FlowSpec {
@@ -37,48 +228,7 @@ impl FlowSpec {
     pub fn parse(text: &str) -> Result<FlowSpec> {
         let root = json::parse(text)?;
         let name = root.req_str("name")?.to_string();
-        let mut graph = FlowGraph::new(name);
-        let mut ids: BTreeMap<String, NodeId> = BTreeMap::new();
-
-        for t in root.req_array("tasks")? {
-            let id = t.req_str("id")?.to_string();
-            let ty = t.req_str("type")?.to_string();
-            if ids.contains_key(&id) {
-                return Err(Error::Config(format!("duplicate task id {id:?}")));
-            }
-            let node = graph.add_task(id.clone(), ty);
-            ids.insert(id, node);
-        }
-
-        let resolve = |name: &str| -> Result<NodeId> {
-            ids.get(name)
-                .copied()
-                .ok_or_else(|| Error::Config(format!("unknown task id {name:?}")))
-        };
-
-        for e in root.req_array("edges")? {
-            let pair = e
-                .as_array()
-                .filter(|p| p.len() == 2)
-                .ok_or_else(|| Error::Config("edge must be [from, to]".into()))?;
-            let from = pair[0]
-                .as_str()
-                .ok_or_else(|| Error::Config("edge endpoint must be a string".into()))?;
-            let to = pair[1]
-                .as_str()
-                .ok_or_else(|| Error::Config("edge endpoint must be a string".into()))?;
-            graph.connect(resolve(from)?, resolve(to)?)?;
-        }
-
-        if let Some(Value::Array(back)) = root.get("back_edges") {
-            for b in back {
-                graph.connect_back(
-                    resolve(b.req_str("from")?)?,
-                    resolve(b.req_str("to")?)?,
-                    b.req_usize("max_iters")?,
-                )?;
-            }
-        }
+        let graph = parse_flow_graph(&name, &root)?;
 
         let mut cfg_entries = Vec::new();
         if let Some(Value::Object(map)) = root.get("cfg") {
@@ -87,13 +237,36 @@ impl FlowSpec {
             }
         }
 
-        graph.validate()?;
-        Ok(FlowSpec { graph, cfg_entries })
+        let explore = match root.get("explore") {
+            Some(v) => Some(ExploreSpec::parse(v, &graph)?),
+            None => None,
+        };
+
+        let plan = graph.validate()?;
+        Ok(FlowSpec { graph, cfg_entries, explore, plan })
     }
 
     pub fn load(path: &str) -> Result<FlowSpec> {
         let text = std::fs::read_to_string(path)?;
         Self::parse(&text)
+    }
+
+    /// The validation plan computed at parse time (topo order, position
+    /// map, split in-degrees).
+    pub fn plan(&self) -> &FlowPlan {
+        &self.plan
+    }
+
+    /// Rebuild a spec around a replacement graph, revalidating once
+    /// (used by the explorer's order permutations).
+    pub fn with_graph(&self, graph: FlowGraph) -> Result<FlowSpec> {
+        let plan = graph.validate()?;
+        Ok(FlowSpec {
+            graph,
+            cfg_entries: self.cfg_entries.clone(),
+            explore: None,
+            plan,
+        })
     }
 
     pub fn apply_cfg(&self, cfg: &mut Cfg) {
@@ -168,6 +341,7 @@ pub fn builtin_flow(name: &str) -> Result<FlowSpec> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::flow::graph::NodeKind;
 
     #[test]
     fn parse_minimal_spec() {
@@ -178,6 +352,8 @@ mod tests {
         .unwrap();
         assert_eq!(spec.graph.nodes().len(), 1);
         assert!(spec.cfg_entries.is_empty());
+        assert!(spec.explore.is_none());
+        assert_eq!(spec.plan().order, vec![0]);
     }
 
     #[test]
@@ -214,6 +390,112 @@ mod tests {
     }
 
     #[test]
+    fn parses_conditional_edges() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                "edges": [{"from": "a", "to": "b",
+                           "when": {"metric": "a.accuracy", "op": ">=", "value": 0.72}}]}"#,
+        )
+        .unwrap();
+        let guards: Vec<_> = spec.graph.guarded_edges().collect();
+        assert_eq!(guards.len(), 1);
+        let g = guards[0].2.unwrap();
+        assert_eq!(g.metric, "a.accuracy");
+        assert_eq!(g.op, CmpOp::Ge);
+        assert_eq!(g.value, 0.72);
+        // bad op rejected
+        assert!(FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                "edges": [{"from": "a", "to": "b",
+                           "when": {"metric": "a.x", "op": "~=", "value": 1}}]}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_strategy_tasks() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [
+                  {"id": "gen", "type": "KERAS-MODEL-GEN"},
+                  {"id": "opt", "strategy": {"arms": [
+                     {"name": "agg",
+                      "when": {"metric": "gen.accuracy", "op": ">=", "value": 0.7},
+                      "flow": {"tasks": [{"id": "prune", "type": "PRUNING"}],
+                               "edges": []}},
+                     {"name": "light",
+                      "flow": {"tasks": [{"id": "scale", "type": "SCALING"}],
+                               "edges": []}}]}}
+                ],
+                "edges": [["gen", "opt"]]}"#,
+        )
+        .unwrap();
+        let opt = spec.graph.node_by_instance("opt").unwrap();
+        let node = spec.graph.node(opt).unwrap();
+        match &node.kind {
+            NodeKind::Strategy { arms } => {
+                assert_eq!(arms.len(), 2);
+                assert_eq!(arms[0].name, "agg");
+                assert!(arms[0].when.is_some());
+                assert!(arms[1].when.is_none());
+                assert_eq!(arms[1].flow.nodes().len(), 1);
+            }
+            _ => panic!("opt should be a strategy node"),
+        }
+    }
+
+    #[test]
+    fn flattens_sub_flows_with_namespacing() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [
+                  {"id": "gen", "type": "KERAS-MODEL-GEN"},
+                  {"id": "opt", "flow": {
+                     "tasks": [{"id": "prune", "type": "PRUNING"},
+                               {"id": "quantize", "type": "QUANTIZATION"}],
+                     "edges": [["prune", "quantize"]]}},
+                  {"id": "hls", "type": "HLS4ML"}
+                ],
+                "edges": [["gen", "opt"], ["opt", "hls"]]}"#,
+        )
+        .unwrap();
+        let names: Vec<&str> =
+            spec.graph.nodes().iter().map(|n| n.instance.as_str()).collect();
+        assert_eq!(names, vec!["gen", "opt.prune", "opt.quantize", "hls"]);
+        // outer edges attach to the composite's entry/exit nodes
+        let gen = spec.graph.node_by_instance("gen").unwrap();
+        let prune = spec.graph.node_by_instance("opt.prune").unwrap();
+        let quant = spec.graph.node_by_instance("opt.quantize").unwrap();
+        let hls = spec.graph.node_by_instance("hls").unwrap();
+        let edges: Vec<(NodeId, NodeId)> = spec.graph.edges().collect();
+        assert!(edges.contains(&(gen, prune)));
+        assert!(edges.contains(&(prune, quant)));
+        assert!(edges.contains(&(quant, hls)));
+        assert_eq!(edges.len(), 3);
+    }
+
+    #[test]
+    fn sub_flow_namespace_collision_rejected() {
+        // explicit task "opt.prune" collides with flattened sub-flow node
+        let err = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [
+                  {"id": "opt.prune", "type": "PRUNING"},
+                  {"id": "opt", "flow": {
+                     "tasks": [{"id": "prune", "type": "PRUNING"}],
+                     "edges": []}}
+                ],
+                "edges": []}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("opt.prune"), "{err}");
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
     fn builtins_build_and_validate() {
         for name in builtin_flow_names() {
             let spec = builtin_flow(name).unwrap();
@@ -223,7 +505,7 @@ mod tests {
                 .graph
                 .nodes()
                 .iter()
-                .any(|n| n.task_type == "VIVADO-HLS"));
+                .any(|n| n.task_type() == "VIVADO-HLS"));
         }
         assert!(builtin_flow("nope").is_err());
     }
@@ -234,7 +516,7 @@ mod tests {
         let order = spec.graph.topo_order().unwrap();
         let types: Vec<&str> = order
             .iter()
-            .map(|&id| spec.graph.node(id).unwrap().task_type.as_str())
+            .map(|&id| spec.graph.node(id).unwrap().task_type())
             .collect();
         assert_eq!(
             types,

@@ -12,7 +12,7 @@
 //! atomic cursor, and write results into per-index slots.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::dse::cache::{EvalCache, EvalKey};
 use crate::error::{Error, Result};
@@ -48,13 +48,24 @@ pub struct ProbeResult {
 /// per O-task run from [`crate::flow::TaskCtx::jobs`]).
 pub struct ProbePool {
     jobs: usize,
-    cache: EvalCache,
+    /// `Arc` so one memo can be shared across pools (the multi-flow
+    /// explorer deduplicates identical probes across flow variants);
+    /// a pool created via [`ProbePool::new`] owns a private memo.
+    cache: Arc<EvalCache>,
 }
 
 impl ProbePool {
-    /// Pool with an explicit worker count (clamped to >= 1).
+    /// Pool with an explicit worker count (clamped to >= 1) and a
+    /// private eval memo.
     pub fn new(jobs: usize) -> Self {
-        ProbePool { jobs: jobs.max(1), cache: EvalCache::new() }
+        Self::with_cache(jobs, Arc::new(EvalCache::new()))
+    }
+
+    /// Pool sharing an existing eval memo.  Sharing never changes
+    /// results (a key incorporates every evaluation input), only how
+    /// often a probe is recomputed.
+    pub fn with_cache(jobs: usize, cache: Arc<EvalCache>) -> Self {
+        ProbePool { jobs: jobs.max(1), cache }
     }
 
     /// Pool sized by `METAML_JOBS` / available parallelism

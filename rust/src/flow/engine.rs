@@ -1,18 +1,32 @@
-//! The flow execution engine.
+//! The flow execution engine: a small control-flow VM over the flow IR.
 //!
-//! Executes a validated flow graph against a meta-model: forward edges in
-//! deterministic topological order, back edges as bounded iteration of
-//! their enclosed sub-path.  Task orchestration stays on the coordinator
-//! thread (tasks mutate the shared meta-model), while O-tasks fan their
-//! candidate probes out across the [`crate::dse::ProbePool`] worker
-//! threads.  Determinism is part of the contract regardless of worker
-//! count — re-running a flow with the same CFG and seed reproduces the
-//! LOG bit for bit.
+//! Executes a validated flow graph against a meta-model.  The VM walks
+//! the deterministic topological order with:
+//!
+//! * **guarded successor selection** — a node runs iff it is a source
+//!   or at least one incoming forward edge is *taken* (its origin ran
+//!   and its guard, if any, holds against the meta-model metrics);
+//!   otherwise the node is skipped, and skipping propagates downstream;
+//! * **strategy (S-task) nodes** — the first arm whose `when` guard
+//!   passes (or the first unguarded arm) is selected and its child flow
+//!   is executed inline with `"{instance}."`-prefixed task names;
+//! * **bounded back edges** — per-edge re-execution budgets, with
+//!   O(1) jump targets via the precomputed topo-position map.
+//!
+//! Every control decision (guard evaluation, skip, arm selection,
+//! iteration) is recorded in the LOG, so runs stay bit-for-bit
+//! reproducible: task orchestration is sequential on the coordinator
+//! thread, O-tasks fan probes out across the [`crate::dse::ProbePool`],
+//! and wall-clock data (durations) goes to the LOG side-note table,
+//! never the event stream.
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::config::FlowSpec;
+use crate::dse::EvalCache;
 use crate::error::{Error, Result};
-use crate::flow::graph::{FlowGraph, NodeId};
+use crate::flow::graph::{EdgeGuard, FlowGraph, FlowPlan, NodeId, NodeKind, StrategyArm};
 use crate::flow::registry::TaskRegistry;
 use crate::flow::session::Session;
 use crate::flow::task::{TaskCtx, TaskOutcome};
@@ -21,42 +35,74 @@ use crate::metamodel::{LogEvent, MetaModel};
 pub struct Engine<'a> {
     pub session: &'a Session,
     pub registry: &'a TaskRegistry,
+    /// When set (multi-flow exploration), every O-task probe pool in
+    /// this engine shares one memoizing eval cache, deduplicating
+    /// identical candidate evaluations across flow variants.
+    shared_cache: Option<Arc<EvalCache>>,
 }
 
 impl<'a> Engine<'a> {
     pub fn new(session: &'a Session, registry: &'a TaskRegistry) -> Self {
-        Engine { session, registry }
+        Engine { session, registry, shared_cache: None }
+    }
+
+    /// Engine whose tasks share `cache` for probe memoization (used by
+    /// [`crate::flow::explore`] to deduplicate across variants).
+    pub fn with_cache(
+        session: &'a Session,
+        registry: &'a TaskRegistry,
+        cache: Arc<EvalCache>,
+    ) -> Self {
+        Engine { session, registry, shared_cache: Some(cache) }
     }
 
     /// Execute `graph` against `meta`. Returns the per-node outcomes of
-    /// the final pass over each node.
+    /// the final pass over each node (default outcomes for skipped
+    /// nodes).  Validates the graph once; callers holding a parsed
+    /// [`FlowSpec`] should prefer [`run_spec`](Self::run_spec), which
+    /// reuses the plan computed at parse time.
     pub fn run(&self, graph: &FlowGraph, meta: &mut MetaModel) -> Result<Vec<TaskOutcome>> {
-        let order = graph.validate()?;
-        // multiplicity check: a task demanding k inputs must have k
-        // incoming forward edges (0-to-1 tasks are sources, etc.).
-        // In-degrees are computed once for the whole graph (one pass over
-        // the edge set) rather than per node.
-        let in_degrees = graph.in_degrees();
-        for node in graph.nodes() {
-            let task = self.registry.create(&node.task_type)?;
-            let (want_in, _) = task.multiplicity();
-            let have = in_degrees[node.id];
-            if have != want_in {
-                return Err(Error::Flow(format!(
-                    "task {} ({}) is {}-input but has {} incoming edges",
-                    node.instance,
-                    node.task_type,
-                    want_in,
-                    have
-                )));
-            }
+        let plan = graph.validate()?;
+        self.run_graph(graph, &plan, meta, "")
+    }
+
+    /// Execute a parsed spec, reusing its parse-time validation plan
+    /// (no re-validation, no topo recomputation).  A graph mutated
+    /// after parsing (`spec.graph` is public) is detected by the
+    /// plan's node/edge counts and replanned instead of running
+    /// against stale positions.
+    pub fn run_spec(&self, spec: &FlowSpec, meta: &mut MetaModel) -> Result<Vec<TaskOutcome>> {
+        if !spec.plan().matches(&spec.graph) {
+            return self.run(&spec.graph, meta);
+        }
+        self.run_graph(&spec.graph, spec.plan(), meta, "")
+    }
+
+    /// The VM proper.  `prefix` namespaces task instances of nested
+    /// strategy-arm flows ("opt.prune").
+    fn run_graph(
+        &self,
+        graph: &FlowGraph,
+        plan: &FlowPlan,
+        meta: &mut MetaModel,
+        prefix: &str,
+    ) -> Result<Vec<TaskOutcome>> {
+        self.check_multiplicity(graph, plan, !prefix.is_empty())?;
+
+        let flow_name = format!("{prefix}{}", graph.name);
+        meta.log.push(LogEvent::FlowStarted { flow: flow_name.clone() });
+
+        let n = graph.nodes().len();
+        // incoming forward edges per node, in deterministic (from, to)
+        // order — one pass over the edge map
+        let mut in_edges: Vec<Vec<(NodeId, Option<&EdgeGuard>)>> = vec![Vec::new(); n];
+        for (f, t, g) in graph.guarded_edges() {
+            in_edges[t].push((f, g));
         }
 
-        meta.log.push(LogEvent::FlowStarted { flow: graph.name.clone() });
-        let mut outcomes: Vec<TaskOutcome> =
-            vec![TaskOutcome::default(); graph.nodes().len()];
-
-        let mut pc = 0usize; // index into topo order
+        let mut outcomes: Vec<TaskOutcome> = vec![TaskOutcome::default(); n];
+        // ran[v]: v executed (not skipped) in the current pass
+        let mut ran = vec![false; n];
         // remaining re-execution budget per back edge: max_iters bounds
         // how many times the enclosed sub-path is *re*-executed, so a
         // max_iters == 1 edge fires exactly once (the initial pass is
@@ -64,9 +110,47 @@ impl<'a> Engine<'a> {
         let mut budgets: Vec<usize> =
             graph.back_edges().iter().map(|b| b.max_iters).collect();
 
-        while pc < order.len() {
-            let node_id = order[pc];
-            let outcome = self.run_node(graph, meta, node_id)?;
+        let mut pc = 0usize; // index into topo order
+        while pc < plan.order.len() {
+            let node_id = plan.order[pc];
+            let node = graph.node(node_id)?;
+            let instance = format!("{prefix}{}", node.instance);
+
+            // guarded successor selection: evaluate EVERY in-edge whose
+            // origin ran (no short-circuit — each decision is logged)
+            let mut enabled = in_edges[node_id].is_empty();
+            for &(from, guard) in &in_edges[node_id] {
+                if !ran[from] {
+                    continue;
+                }
+                match guard {
+                    None => enabled = true,
+                    Some(g) => {
+                        let value = eval_guard(meta, prefix, g)?;
+                        let taken = g.op.apply(value, g.value);
+                        meta.log.push(LogEvent::EdgeEvaluated {
+                            from: format!("{prefix}{}", graph.node(from)?.instance),
+                            to: instance.clone(),
+                            metric: g.metric.clone(),
+                            value,
+                            taken,
+                        });
+                        enabled = enabled || taken;
+                    }
+                }
+            }
+
+            if !enabled {
+                meta.log.push(LogEvent::TaskSkipped { task: instance });
+                // a node skipped on a back-edge re-pass must not keep
+                // the outcome of a superseded earlier pass
+                outcomes[node_id] = TaskOutcome::default();
+                pc += 1;
+                continue;
+            }
+
+            let outcome = self.run_node(meta, node, &instance, prefix)?;
+            ran[node_id] = true;
             let iterate = outcome.request_iteration;
             outcomes[node_id] = outcome;
 
@@ -77,15 +161,17 @@ impl<'a> Engine<'a> {
                 for (i, be) in graph.back_edges().iter().enumerate() {
                     if be.from == node_id && budgets[i] > 0 {
                         budgets[i] -= 1;
-                        let target_pos = order
-                            .iter()
-                            .position(|&n| n == be.to)
-                            .expect("validated back edge");
                         meta.log.push(LogEvent::IterationAdvanced {
-                            task: graph.node(node_id)?.instance.clone(),
+                            task: instance.clone(),
                             iteration: be.max_iters - budgets[i],
                         });
-                        pc = target_pos;
+                        // O(1) jump via the precomputed position map;
+                        // the re-executed range starts a fresh pass
+                        let target = plan.pos[be.to];
+                        for &v in &plan.order[target..=pc] {
+                            ran[v] = false;
+                        }
+                        pc = target;
                         jumped = true;
                         break;
                     }
@@ -96,33 +182,165 @@ impl<'a> Engine<'a> {
             }
         }
 
-        meta.log.push(LogEvent::FlowFinished { flow: graph.name.clone() });
+        meta.log.push(LogEvent::FlowFinished { flow: flow_name });
         Ok(outcomes)
+    }
+
+    /// Multiplicity check against the plan's split in-degrees.  A task
+    /// demanding k inputs must have exactly k unguarded incoming edges;
+    /// when conditional edges are present the check relaxes to a range
+    /// (every unguarded edge is always an input, and enough guarded
+    /// edges must exist to possibly satisfy k).  Strategy nodes are
+    /// exempt (their arms are checked when executed), and in a `nested`
+    /// (strategy-arm) flow the entry nodes are too — they consume the
+    /// outer flow's models through the shared meta-model.
+    fn check_multiplicity(&self, graph: &FlowGraph, plan: &FlowPlan, nested: bool) -> Result<()> {
+        for node in graph.nodes() {
+            let task_type = match &node.kind {
+                NodeKind::Task { task_type } => task_type,
+                NodeKind::Strategy { .. } => continue,
+            };
+            let task = self.registry.create(task_type)?;
+            let (want_in, _) = task.multiplicity();
+            let plain = plan.in_plain[node.id];
+            let guarded = plan.in_guarded[node.id];
+            if nested && plain == 0 && guarded == 0 {
+                continue;
+            }
+            let ok = if guarded == 0 {
+                plain == want_in
+            } else {
+                plain <= want_in && plain + guarded >= want_in
+            };
+            if !ok {
+                return Err(Error::Flow(format!(
+                    "task {} ({}) is {}-input but has {} unconditional and {} conditional incoming edges",
+                    node.instance, task_type, want_in, plain, guarded
+                )));
+            }
+        }
+        Ok(())
     }
 
     fn run_node(
         &self,
-        graph: &FlowGraph,
         meta: &mut MetaModel,
-        node_id: NodeId,
+        node: &crate::flow::graph::FlowNode,
+        instance: &str,
+        prefix: &str,
     ) -> Result<TaskOutcome> {
-        let node = graph.node(node_id)?.clone();
-        let task = self.registry.create(&node.task_type)?;
-        meta.log.push(LogEvent::TaskStarted { task: node.instance.clone() });
+        meta.log.push(LogEvent::TaskStarted { task: instance.to_string() });
         let t0 = Instant::now();
-        let mut ctx = TaskCtx {
-            meta,
-            session: self.session,
-            instance: node.instance.clone(),
+        let outcome = match &node.kind {
+            NodeKind::Task { task_type } => {
+                let task = self.registry.create(task_type)?;
+                let mut ctx = TaskCtx {
+                    meta,
+                    session: self.session,
+                    instance: instance.to_string(),
+                    shared_cache: self.shared_cache.clone(),
+                };
+                task.run(&mut ctx).map_err(|e| Error::Task {
+                    task: instance.to_string(),
+                    msg: e.to_string(),
+                })?
+            }
+            NodeKind::Strategy { arms } => self.run_strategy(meta, instance, prefix, arms)?,
         };
-        let outcome = task.run(&mut ctx).map_err(|e| Error::Task {
-            task: node.instance.clone(),
-            msg: e.to_string(),
-        })?;
-        meta.log.push(LogEvent::TaskFinished {
-            task: node.instance.clone(),
-            secs: t0.elapsed().as_secs_f64(),
-        });
+        // duration is wall-clock: side table, never the event stream
+        meta.log.note(instance, "secs", t0.elapsed().as_secs_f64());
+        meta.log.push(LogEvent::TaskFinished { task: instance.to_string() });
         Ok(outcome)
     }
+
+    /// Select and run one strategy arm.  Arms are tried in declaration
+    /// order; every guard evaluation is logged, the first passing (or
+    /// first unguarded) arm wins, and its flow runs inline with
+    /// `"{instance}."`-prefixed task names.
+    fn run_strategy(
+        &self,
+        meta: &mut MetaModel,
+        instance: &str,
+        prefix: &str,
+        arms: &[StrategyArm],
+    ) -> Result<TaskOutcome> {
+        let mut selected: Option<&StrategyArm> = None;
+        for arm in arms {
+            match &arm.when {
+                None => {
+                    selected = Some(arm);
+                    break;
+                }
+                Some(g) => {
+                    let value = eval_guard(meta, prefix, g)?;
+                    let taken = g.op.apply(value, g.value);
+                    meta.log.push(LogEvent::EdgeEvaluated {
+                        from: instance.to_string(),
+                        to: arm.name.clone(),
+                        metric: g.metric.clone(),
+                        value,
+                        taken,
+                    });
+                    if taken {
+                        selected = Some(arm);
+                        break;
+                    }
+                }
+            }
+        }
+        let arm = selected.ok_or_else(|| {
+            Error::Task {
+                task: instance.to_string(),
+                msg: "no strategy arm selected (all guards false and no default arm)"
+                    .into(),
+            }
+        })?;
+        meta.log.push(LogEvent::StrategySelected {
+            task: instance.to_string(),
+            arm: arm.name.clone(),
+        });
+
+        let plan = arm.flow.validate()?;
+        let sub_prefix = format!("{instance}.");
+        let sub_outcomes = self.run_graph(&arm.flow, &plan, meta, &sub_prefix)?;
+        // an iteration request left over after the arm's own (bounded)
+        // back edges bubbles up, so outer back edges sourced at the
+        // strategy node keep the documented re-execution semantics
+        Ok(TaskOutcome {
+            request_iteration: sub_outcomes.iter().any(|o| o.request_iteration),
+            produced: sub_outcomes.iter().flat_map(|o| o.produced.clone()).collect(),
+        })
+    }
+}
+
+/// Resolve a guard's metric against the meta-model: the latest LOG
+/// metric of the referenced task (prefixed instance first, then the
+/// bare name for cross-scope references), falling back to model-space
+/// artifact metrics by producer.  A missing metric is a hard error —
+/// guards over never-recorded metrics are spec bugs, not silent skips.
+fn eval_guard(meta: &MetaModel, prefix: &str, guard: &EdgeGuard) -> Result<f64> {
+    let (task, name) = guard.metric.rsplit_once('.').ok_or_else(|| {
+        Error::Flow(format!(
+            "guard metric {:?} must be \"<task>.<metric>\"",
+            guard.metric
+        ))
+    })?;
+    // current scope (prefixed) fully shadows the outer scope: LOG then
+    // model-space under the prefix, and only then the bare-name
+    // cross-scope fallbacks
+    let prefixed = format!("{prefix}{task}");
+    let nested = !prefix.is_empty();
+    let value = meta
+        .log
+        .latest_metric(&prefixed, name)
+        .or_else(|| meta.space.latest_metric(&prefixed, name))
+        .or_else(|| if nested { meta.log.latest_metric(task, name) } else { None })
+        .or_else(|| if nested { meta.space.latest_metric(task, name) } else { None });
+    value.ok_or_else(|| {
+        Error::Flow(format!(
+            "guard metric {:?} not found (no LOG metric or model-space metric \
+             named {name:?} recorded by task {task:?})",
+            guard.metric
+        ))
+    })
 }

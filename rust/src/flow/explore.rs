@@ -1,0 +1,538 @@
+//! Multi-flow exploration: run many design-flow *architectures*
+//! concurrently from one spec and report a Pareto front.
+//!
+//! The paper's O-tasks explore per-task candidate spaces; the wins that
+//! remain (cf. "Software-defined Design Space Exploration") come from
+//! exploring *alternative flow architectures* — different task orders,
+//! different tolerance settings — against each other.  A spec declares a
+//! variant grid in its `explore` section:
+//!
+//! ```json
+//! "explore": {
+//!   "orders": [["gen","scale","prune","hls4ml","quantize","synth"],
+//!              ["gen","prune","scale","hls4ml","quantize","synth"]],
+//!   "cfg_grid": {"prune.tolerate_acc_loss": [0.01, 0.03]}
+//! }
+//! ```
+//!
+//! [`expand_variants`] takes the cartesian product (orders ×
+//! cfg-grid points), [`explore`] runs every variant's full flow
+//! concurrently on a [`ProbePool`] — cloned `MetaModel`s against the
+//! shared `Send + Sync` [`Session`], one shared [`EvalCache`] so
+//! identical candidate evaluations dedupe across variants — and
+//! [`pareto_front`] reports the non-dominated set over
+//! (accuracy ↑, DSP ↓, LUT ↓) pulled from each variant's final RTL
+//! report ([`crate::synth::estimate`]).
+//!
+//! **Determinism:** variants expand in declaration order, results come
+//! back in request order whatever the worker interleaving, every
+//! variant's flow itself produces a jobs-invariant LOG, and cache
+//! sharing can only skip recomputation of bit-identical results — so
+//! the printed front is identical for every `--jobs` value.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::FlowSpec;
+use crate::dse::{EvalCache, ProbePool};
+use crate::error::{Error, Result};
+use crate::flow::graph::{FlowGraph, NodeKind};
+use crate::flow::registry::TaskRegistry;
+use crate::flow::session::Session;
+use crate::flow::Engine;
+use crate::json::Value;
+use crate::metamodel::{Abstraction, LogEvent, MetaModel};
+use crate::report::{CsvWriter, Table};
+
+/// The `explore` section of a spec: task-order permutations and/or CFG
+/// value grids.  Empty lists mean "just the base flow".
+#[derive(Debug, Clone, Default)]
+pub struct ExploreSpec {
+    /// Each entry is a complete linear order over the flow's task
+    /// instances; the variant replaces the base edges with that chain.
+    pub orders: Vec<Vec<String>>,
+    /// CFG key → candidate values; variants take the cartesian product.
+    pub cfg_grid: Vec<(String, Vec<Value>)>,
+}
+
+impl ExploreSpec {
+    /// Parse and validate against the flow's node set: every order must
+    /// be a permutation of all task instances.
+    pub fn parse(v: &Value, graph: &FlowGraph) -> Result<ExploreSpec> {
+        let mut orders = Vec::new();
+        if let Some(Value::Array(os)) = v.get("orders") {
+            let mut all: Vec<&str> =
+                graph.nodes().iter().map(|n| n.instance.as_str()).collect();
+            all.sort_unstable();
+            for o in os {
+                let order: Vec<String> = o
+                    .as_array()
+                    .ok_or_else(|| Error::Config("explore order must be an array".into()))?
+                    .iter()
+                    .map(|e| {
+                        e.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::Config("explore order entries must be task ids".into())
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                let mut sorted: Vec<&str> = order.iter().map(String::as_str).collect();
+                sorted.sort_unstable();
+                if sorted != all {
+                    return Err(Error::Config(format!(
+                        "explore order {order:?} is not a permutation of the flow's \
+                         tasks {all:?}"
+                    )));
+                }
+                orders.push(order);
+            }
+        }
+        let mut cfg_grid = Vec::new();
+        if let Some(Value::Object(map)) = v.get("cfg_grid") {
+            for (k, vals) in map {
+                let vals = vals.as_array().ok_or_else(|| {
+                    Error::Config(format!("explore cfg_grid {k:?} must be an array"))
+                })?;
+                if vals.is_empty() {
+                    return Err(Error::Config(format!(
+                        "explore cfg_grid {k:?} must not be empty"
+                    )));
+                }
+                cfg_grid.push((k.clone(), vals.to_vec()));
+            }
+        }
+        Ok(ExploreSpec { orders, cfg_grid })
+    }
+
+    /// Number of variants the grid expands to.
+    pub fn n_variants(&self) -> usize {
+        self.orders.len().max(1)
+            * self.cfg_grid.iter().map(|(_, vs)| vs.len()).product::<usize>()
+    }
+}
+
+/// One flow architecture to evaluate: a concrete graph + CFG overrides.
+#[derive(Debug, Clone)]
+pub struct FlowVariant {
+    pub label: String,
+    pub spec: FlowSpec,
+    pub cfg: Vec<(String, Value)>,
+}
+
+/// The outcome of running one variant's full flow.
+#[derive(Debug, Clone)]
+pub struct VariantResult {
+    pub label: String,
+    /// Metrics of the final RTL artifact (accuracy, dsp, lut,
+    /// latency_ns, power_w, …).
+    pub metrics: BTreeMap<String, f64>,
+    /// Number of models the flow stored in the model space.
+    pub n_models: usize,
+    /// The variant's replay-comparable LOG event stream.
+    pub events: Vec<LogEvent>,
+}
+
+impl VariantResult {
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.get(name).copied()
+    }
+
+    fn objectives(&self) -> Result<(f64, f64, f64)> {
+        let m = |name: &str| {
+            self.metric(name).ok_or_else(|| {
+                Error::Flow(format!(
+                    "variant {:?} has no {name:?} metric on its RTL artifact",
+                    self.label
+                ))
+            })
+        };
+        Ok((m("accuracy")?, m("dsp")?, m("lut")?))
+    }
+}
+
+/// Everything one exploration run produced.
+#[derive(Debug, Clone)]
+pub struct ExploreOutcome {
+    /// Per-variant results, in deterministic grid-expansion order.
+    pub results: Vec<VariantResult>,
+    /// Indices into `results` on the Pareto front (ascending).
+    pub front: Vec<usize>,
+}
+
+fn render_value(v: &Value) -> String {
+    match v {
+        Value::String(s) => s.clone(),
+        Value::Number(n) => format!("{n}"),
+        Value::Bool(b) => format!("{b}"),
+        other => crate::json::to_string_pretty(other),
+    }
+}
+
+/// Expand the spec's variant grid into concrete flow variants, in
+/// deterministic declaration order (orders outer, cfg-grid points
+/// inner, grid keys in BTree order).
+pub fn expand_variants(spec: &FlowSpec) -> Result<Vec<FlowVariant>> {
+    let explore = spec.explore.clone().unwrap_or_default();
+
+    // cartesian product over the cfg grid, first key varying slowest
+    let mut points: Vec<Vec<(String, Value)>> = vec![Vec::new()];
+    for (key, vals) in &explore.cfg_grid {
+        let mut next = Vec::with_capacity(points.len() * vals.len());
+        for p in &points {
+            for v in vals {
+                let mut q = p.clone();
+                q.push((key.clone(), v.clone()));
+                next.push(q);
+            }
+        }
+        points = next;
+    }
+
+    // order variants are plain chains: silently discarding the base
+    // flow's guards or back edges would compare architectures the user
+    // never declared, so reject the combination outright
+    if !explore.orders.is_empty() {
+        if spec.graph.guarded_edges().any(|(_, _, g)| g.is_some()) {
+            return Err(Error::Config(
+                "explore orders cannot permute a flow with conditional edges \
+                 (order variants are plain chains; drop the guards or the orders)"
+                    .into(),
+            ));
+        }
+        if !spec.graph.back_edges().is_empty() {
+            return Err(Error::Config(
+                "explore orders cannot permute a flow with back edges \
+                 (order variants are plain chains; drop the back edges or the orders)"
+                    .into(),
+            ));
+        }
+    }
+
+    let mut variants = Vec::new();
+    let order_slots: Vec<Option<&Vec<String>>> = if explore.orders.is_empty() {
+        vec![None]
+    } else {
+        explore.orders.iter().map(Some).collect()
+    };
+    for order in order_slots {
+        let (order_label, variant_spec) = match order {
+            None => (None, spec.clone()),
+            Some(order) => {
+                let label = order.join("-");
+                (Some(label.clone()), spec.with_graph(chain_graph(spec, order, &label)?)?)
+            }
+        };
+        for point in &points {
+            let mut parts = Vec::new();
+            if let Some(ol) = &order_label {
+                parts.push(ol.clone());
+            }
+            for (k, v) in point {
+                parts.push(format!("{k}={}", render_value(v)));
+            }
+            let label = if parts.is_empty() {
+                spec.graph.name.clone()
+            } else {
+                parts.join(" ")
+            };
+            variants.push(FlowVariant {
+                label,
+                spec: variant_spec.clone(),
+                cfg: point.clone(),
+            });
+        }
+    }
+    Ok(variants)
+}
+
+/// Rebuild the spec's graph as a linear chain in `order` (same nodes,
+/// chain edges; guards/back edges in the base flow were already
+/// rejected by [`expand_variants`]).
+fn chain_graph(spec: &FlowSpec, order: &[String], label: &str) -> Result<FlowGraph> {
+    let mut g = FlowGraph::new(format!("{}[{label}]", spec.graph.name));
+    let mut ids = Vec::with_capacity(order.len());
+    for inst in order {
+        let base_id = spec.graph.node_by_instance(inst).ok_or_else(|| {
+            Error::Config(format!("explore order references unknown task {inst:?}"))
+        })?;
+        let node = spec.graph.node(base_id)?;
+        let id = match &node.kind {
+            NodeKind::Task { task_type } => g.add_task(inst.clone(), task_type.clone()),
+            NodeKind::Strategy { arms } => g.add_strategy(inst.clone(), arms.clone())?,
+        };
+        ids.push(id);
+    }
+    for w in ids.windows(2) {
+        g.connect(w[0], w[1])?;
+    }
+    Ok(g)
+}
+
+/// Expand the spec's grid and run it (see [`explore_variants`]).
+pub fn explore(
+    session: &Session,
+    registry: &TaskRegistry,
+    spec: &FlowSpec,
+    extra_cfg: &[(String, Value)],
+    jobs: usize,
+) -> Result<ExploreOutcome> {
+    explore_variants(session, registry, &expand_variants(spec)?, extra_cfg, jobs)
+}
+
+/// Run every variant's full flow concurrently and compute the Pareto
+/// front.  Takes an already-expanded variant list so callers that
+/// printed the grid don't expand it twice.  `extra_cfg` is applied to
+/// every variant (CLI `--model` / `-c` overrides); `jobs` bounds
+/// concurrent variants, with the leftover worker budget handed to each
+/// variant's inner probe pools.
+pub fn explore_variants(
+    session: &Session,
+    registry: &TaskRegistry,
+    variants: &[FlowVariant],
+    extra_cfg: &[(String, Value)],
+    jobs: usize,
+) -> Result<ExploreOutcome> {
+    if variants.is_empty() {
+        return Err(Error::Flow("explore: no variants to run".into()));
+    }
+    // identical variants (duplicate grid entries) run once — keyed by
+    // full structural identity (graph nodes/edges/guards, base cfg and
+    // typed cfg point), never the rendered label, so caller-supplied
+    // variants that merely share a name stay distinct
+    let mut unique: Vec<usize> = Vec::new();
+    let mut first_of: BTreeMap<String, usize> = BTreeMap::new();
+    let mut source: Vec<usize> = Vec::with_capacity(variants.len());
+    for (i, v) in variants.iter().enumerate() {
+        let sig = format!("{:?} {:?} {:?}", v.spec.graph, v.spec.cfg_entries, v.cfg);
+        match first_of.get(&sig) {
+            Some(&slot) => source.push(slot),
+            None => {
+                first_of.insert(sig, unique.len());
+                source.push(unique.len());
+                unique.push(i);
+            }
+        }
+    }
+
+    // split the worker budget over the *unique* variants: `concurrent`
+    // flows run at once, each O-task inside fans out over the leftover
+    // share (results are jobs-invariant either way; this only balances
+    // wall-clock)
+    let jobs = jobs.max(1);
+    let concurrent = jobs.min(unique.len()).max(1);
+    let inner_jobs = (jobs / concurrent).max(1);
+
+    let shared = Arc::new(EvalCache::new());
+    let pool = ProbePool::with_cache(concurrent, shared.clone());
+    let ran: Vec<VariantResult> = pool.run_batch(unique.len(), |slot| {
+        let variant = &variants[unique[slot]];
+        let engine = Engine::with_cache(session, registry, shared.clone());
+        let mut meta = MetaModel::new();
+        variant.spec.apply_cfg(&mut meta.cfg);
+        for (k, v) in extra_cfg {
+            meta.cfg.set(k.clone(), v.clone());
+        }
+        for (k, v) in &variant.cfg {
+            meta.cfg.set(k.clone(), v.clone());
+        }
+        if meta.cfg.get("jobs").is_none() {
+            meta.cfg.set("jobs", inner_jobs);
+        }
+        engine.run_spec(&variant.spec, &mut meta).map_err(|e| {
+            Error::Flow(format!("variant {:?}: {e}", variant.label))
+        })?;
+        let rtl = meta.space.latest(Abstraction::Rtl).ok_or_else(|| {
+            Error::Flow(format!(
+                "variant {:?} produced no RTL artifact (explored flows must \
+                 end in VIVADO-HLS)",
+                variant.label
+            ))
+        })?;
+        Ok(VariantResult {
+            label: variant.label.clone(),
+            metrics: rtl.metrics.clone(),
+            n_models: meta.space.len(),
+            events: meta.log.events().cloned().collect(),
+        })
+    })?;
+
+    let results: Vec<VariantResult> =
+        source.into_iter().map(|slot| ran[slot].clone()).collect();
+    let objectives = results
+        .iter()
+        .map(|r| r.objectives())
+        .collect::<Result<Vec<_>>>()?;
+    let front = pareto_front(&objectives);
+    Ok(ExploreOutcome { results, front })
+}
+
+/// Non-dominated set over (accuracy ↑, DSP ↓, LUT ↓), as ascending
+/// indices.  A point is dominated when another is no worse on every
+/// objective and strictly better on at least one.
+pub fn pareto_front(points: &[(f64, f64, f64)]) -> Vec<usize> {
+    let dominates = |a: &(f64, f64, f64), b: &(f64, f64, f64)| {
+        a.0 >= b.0
+            && a.1 <= b.1
+            && a.2 <= b.2
+            && (a.0 > b.0 || a.1 < b.1 || a.2 < b.2)
+    };
+    (0..points.len())
+        .filter(|&i| !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i])))
+        .collect()
+}
+
+/// Aligned table of all variants, front members marked.
+pub fn front_table(out: &ExploreOutcome) -> Table {
+    let mut t = Table::new(&["variant", "accuracy", "DSP", "LUT", "latency_ns", "power_w", "front"]);
+    for (i, r) in out.results.iter().enumerate() {
+        let g = |name: &str| {
+            r.metric(name).map(|v| format!("{v:.4}")).unwrap_or_default()
+        };
+        t.row(&[
+            r.label.clone(),
+            g("accuracy"),
+            r.metric("dsp").map(|v| format!("{v:.0}")).unwrap_or_default(),
+            r.metric("lut").map(|v| format!("{v:.0}")).unwrap_or_default(),
+            g("latency_ns"),
+            g("power_w"),
+            if out.front.contains(&i) { "*".into() } else { String::new() },
+        ]);
+    }
+    t
+}
+
+/// CSV of all variants for the `report/` directory.
+pub fn front_csv(out: &ExploreOutcome) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "variant",
+        "accuracy",
+        "dsp",
+        "lut",
+        "latency_ns",
+        "power_w",
+        "on_front",
+    ]);
+    for (i, r) in out.results.iter().enumerate() {
+        let g = |name: &str| r.metric(name).map(|v| format!("{v}")).unwrap_or_default();
+        w.row(&[
+            r.label.clone(),
+            g("accuracy"),
+            g("dsp"),
+            g("lut"),
+            g("latency_ns"),
+            g("power_w"),
+            if out.front.contains(&i) { "1".into() } else { "0".into() },
+        ]);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_front_basics() {
+        // (acc, dsp, lut)
+        let pts = vec![
+            (0.76, 100.0, 5000.0), // on front (best acc)
+            (0.75, 40.0, 2000.0),  // on front (cheap, nearly as good)
+            (0.74, 120.0, 6000.0), // dominated by 0 and 1
+            (0.70, 40.0, 2000.0),  // dominated by 1
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1]);
+    }
+
+    #[test]
+    fn pareto_front_keeps_ties() {
+        let pts = vec![(0.5, 10.0, 10.0), (0.5, 10.0, 10.0)];
+        assert_eq!(pareto_front(&pts), vec![0, 1]);
+        assert!(pareto_front(&[]).is_empty());
+        assert_eq!(pareto_front(&[(0.1, 1.0, 1.0)]), vec![0]);
+    }
+
+    #[test]
+    fn expand_variants_cartesian_product() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                "edges": [["a", "b"]],
+                "explore": {
+                  "orders": [["a", "b"], ["b", "a"]],
+                  "cfg_grid": {"k": [1, 2]}
+                }}"#,
+        )
+        .unwrap();
+        let variants = expand_variants(&spec).unwrap();
+        assert_eq!(variants.len(), 4);
+        assert_eq!(spec.explore.as_ref().unwrap().n_variants(), 4);
+        let labels: Vec<&str> = variants.iter().map(|v| v.label.as_str()).collect();
+        assert_eq!(labels, vec!["a-b k=1", "a-b k=2", "b-a k=1", "b-a k=2"]);
+        // order variants are chains in the given order
+        let ba = &variants[2].spec.graph;
+        let order = ba.topo_order().unwrap();
+        let names: Vec<&str> =
+            order.iter().map(|&i| ba.node(i).unwrap().instance.as_str()).collect();
+        assert_eq!(names, vec!["b", "a"]);
+        // cfg points carried per variant
+        assert_eq!(variants[1].cfg.len(), 1);
+        assert_eq!(variants[1].cfg[0].1.as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn expand_without_explore_is_single_base_variant() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "solo", "tasks": [{"id": "a", "type": "X"}], "edges": []}"#,
+        )
+        .unwrap();
+        let variants = expand_variants(&spec).unwrap();
+        assert_eq!(variants.len(), 1);
+        assert_eq!(variants[0].label, "solo");
+        assert!(variants[0].cfg.is_empty());
+    }
+
+    #[test]
+    fn orders_reject_guards_and_back_edges() {
+        // silently flattening guards into plain chains would compare
+        // architectures the user never declared
+        let err = expand_variants(
+            &FlowSpec::parse(
+                r#"{"name": "t",
+                    "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                    "edges": [{"from": "a", "to": "b",
+                               "when": {"metric": "a.acc", "op": ">=", "value": 0.5}}],
+                    "explore": {"orders": [["a", "b"]]}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("conditional edges"), "{err}");
+
+        let err = expand_variants(
+            &FlowSpec::parse(
+                r#"{"name": "t",
+                    "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                    "edges": [["a", "b"]],
+                    "back_edges": [{"from": "b", "to": "a", "max_iters": 2}],
+                    "explore": {"orders": [["a", "b"]]}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("back edges"), "{err}");
+    }
+
+    #[test]
+    fn order_must_be_permutation() {
+        let err = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                "edges": [["a", "b"]],
+                "explore": {"orders": [["a"]]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("permutation"), "{err}");
+    }
+}

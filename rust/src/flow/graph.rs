@@ -1,4 +1,20 @@
-//! The design-flow graph: task instances + dependency edges (+ back edges).
+//! The design-flow graph IR: task instances + dependency edges (+ back
+//! edges), extended with **conditional edges** and **S-task (strategy)
+//! nodes** so one spec can describe alternative control paths.
+//!
+//! * Forward edges may carry an [`EdgeGuard`] — a predicate over
+//!   meta-model metrics (`"prune.accuracy" >= 0.72`).  An unguarded
+//!   edge is always taken; a guarded edge is taken only when its
+//!   predicate holds at the moment the engine reaches the target node.
+//! * A [`NodeKind::Strategy`] node holds a list of [`StrategyArm`]s —
+//!   child flows of which exactly one is selected and executed at
+//!   runtime (first arm whose `when` guard passes; an arm without a
+//!   guard is the unconditional default).
+//! * Back edges are unchanged: bounded re-execution of a sub-path.
+//!
+//! The graph is pure structure; all evaluation (guards, arm selection,
+//! skipping) happens in [`crate::flow::Engine`], which logs every
+//! decision so runs stay reproducible.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -6,14 +22,119 @@ use crate::error::{Error, Result};
 
 pub type NodeId = usize;
 
-/// A task instance in a flow.
+/// Comparison operator of an [`EdgeGuard`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    /// Parse the spec-JSON operator spelling ("<", "<=", ">", ">=",
+    /// "==", "!=").
+    pub fn parse(s: &str) -> Result<CmpOp> {
+        Ok(match s {
+            "<" => CmpOp::Lt,
+            "<=" => CmpOp::Le,
+            ">" => CmpOp::Gt,
+            ">=" => CmpOp::Ge,
+            "==" => CmpOp::Eq,
+            "!=" => CmpOp::Ne,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown guard op {other:?} (expected <, <=, >, >=, ==, !=)"
+                )))
+            }
+        })
+    }
+
+    /// Apply `lhs OP rhs`.
+    pub fn apply(self, lhs: f64, rhs: f64) -> bool {
+        match self {
+            CmpOp::Lt => lhs < rhs,
+            CmpOp::Le => lhs <= rhs,
+            CmpOp::Gt => lhs > rhs,
+            CmpOp::Ge => lhs >= rhs,
+            CmpOp::Eq => lhs == rhs,
+            CmpOp::Ne => lhs != rhs,
+        }
+    }
+}
+
+impl std::fmt::Display for CmpOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+            CmpOp::Eq => "==",
+            CmpOp::Ne => "!=",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A predicate over meta-model metrics: `metric OP value`, where
+/// `metric` is `"<task-instance>.<metric-name>"` (the engine reads the
+/// latest LOG value, falling back to model-space artifact metrics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeGuard {
+    pub metric: String,
+    pub op: CmpOp,
+    pub value: f64,
+}
+
+impl std::fmt::Display for EdgeGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {} {}", self.metric, self.op, self.value)
+    }
+}
+
+/// One alternative of a strategy node: a named child flow plus an
+/// optional selection guard.  Arms are tried in declaration order; the
+/// first whose guard passes (or the first unguarded arm) is executed.
+#[derive(Debug, Clone)]
+pub struct StrategyArm {
+    pub name: String,
+    pub when: Option<EdgeGuard>,
+    pub flow: FlowGraph,
+}
+
+/// What a flow node is.
+#[derive(Debug, Clone)]
+pub enum NodeKind {
+    /// A pipe-task instance resolved against the registry.
+    Task { task_type: String },
+    /// An S-task: selects and runs exactly one arm at runtime.
+    Strategy { arms: Vec<StrategyArm> },
+}
+
+/// A node in a flow.
 #[derive(Debug, Clone)]
 pub struct FlowNode {
     pub id: NodeId,
     /// Instance name, unique per flow ("pruning", "pruning2", …).
     pub instance: String,
-    /// Task type name resolved against the registry ("PRUNING", …).
-    pub task_type: String,
+    pub kind: NodeKind,
+}
+
+impl FlowNode {
+    /// Task type name for task nodes; `"S-TASK"` for strategy nodes.
+    pub fn task_type(&self) -> &str {
+        match &self.kind {
+            NodeKind::Task { task_type } => task_type,
+            NodeKind::Strategy { .. } => "S-TASK",
+        }
+    }
+
+    pub fn is_strategy(&self) -> bool {
+        matches!(self.kind, NodeKind::Strategy { .. })
+    }
 }
 
 /// A back edge enabling iteration (cyclic design flows, paper §III).
@@ -25,13 +146,76 @@ pub struct BackEdge {
     pub max_iters: usize,
 }
 
+/// Everything the engine precomputes from one validation pass: the
+/// deterministic topological order, the order-position of every node
+/// (O(1) back-edge jumps), and the split forward in-degrees used by
+/// the multiplicity check.
+#[derive(Debug, Clone)]
+pub struct FlowPlan {
+    pub order: Vec<NodeId>,
+    /// `pos[node]` = index of `node` in `order`.
+    pub pos: Vec<usize>,
+    /// Unguarded forward in-degree per node.
+    pub in_plain: Vec<usize>,
+    /// Guarded (conditional) forward in-degree per node.
+    pub in_guarded: Vec<usize>,
+    /// Edge/back-edge counts at validation time — lets the engine
+    /// detect a graph mutated after its plan was computed.
+    pub n_edges: usize,
+    pub n_back_edges: usize,
+}
+
+impl FlowPlan {
+    /// Does this plan fully describe `graph`?  A structural check in
+    /// O(V + E) — order is a permutation positioned by `pos`, every
+    /// forward edge points forward in it, split in-degrees match, and
+    /// back edges are backward with positive budgets — so a graph
+    /// swapped or mutated after validation (even preserving counts)
+    /// can never run against a stale plan.
+    pub fn matches(&self, graph: &FlowGraph) -> bool {
+        let n = graph.nodes().len();
+        if self.order.len() != n
+            || self.pos.len() != n
+            || self.n_back_edges != graph.back_edges().len()
+        {
+            return false;
+        }
+        for (i, &node) in self.order.iter().enumerate() {
+            if node >= n || self.pos[node] != i {
+                return false;
+            }
+        }
+        let mut n_edges = 0usize;
+        let mut in_plain = vec![0usize; n];
+        let mut in_guarded = vec![0usize; n];
+        for (f, t, guard) in graph.guarded_edges() {
+            n_edges += 1;
+            if self.pos[f] >= self.pos[t] {
+                return false;
+            }
+            if guard.is_some() {
+                in_guarded[t] += 1;
+            } else {
+                in_plain[t] += 1;
+            }
+        }
+        n_edges == self.n_edges
+            && in_plain == self.in_plain
+            && in_guarded == self.in_guarded
+            && graph
+                .back_edges()
+                .iter()
+                .all(|be| self.pos[be.to] <= self.pos[be.from] && be.max_iters >= 1)
+    }
+}
+
 /// Directed flow graph.  Forward edges must be acyclic (validated); back
 /// edges may close cycles and drive iteration.
 #[derive(Debug, Default, Clone)]
 pub struct FlowGraph {
     pub name: String,
     nodes: Vec<FlowNode>,
-    edges: BTreeSet<(NodeId, NodeId)>,
+    edges: BTreeMap<(NodeId, NodeId), Option<EdgeGuard>>,
     back_edges: Vec<BackEdge>,
 }
 
@@ -46,19 +230,61 @@ impl FlowGraph {
         self.nodes.push(FlowNode {
             id,
             instance: instance.into(),
-            task_type: task_type.into(),
+            kind: NodeKind::Task { task_type: task_type.into() },
         });
         id
     }
 
-    /// Add a dependency edge from → to ("from completes before to").
+    /// Add a strategy (S-task) node selecting one of `arms` at runtime.
+    pub fn add_strategy(
+        &mut self,
+        instance: impl Into<String>,
+        arms: Vec<StrategyArm>,
+    ) -> Result<NodeId> {
+        let instance = instance.into();
+        if arms.is_empty() {
+            return Err(Error::Flow(format!("strategy {instance:?} has no arms")));
+        }
+        let mut seen = BTreeSet::new();
+        for arm in &arms {
+            if !seen.insert(arm.name.clone()) {
+                return Err(Error::Flow(format!(
+                    "strategy {instance:?} has duplicate arm {:?}",
+                    arm.name
+                )));
+            }
+        }
+        let id = self.nodes.len();
+        self.nodes.push(FlowNode { id, instance, kind: NodeKind::Strategy { arms } });
+        Ok(id)
+    }
+
+    /// Add an unconditional dependency edge from → to.
     pub fn connect(&mut self, from: NodeId, to: NodeId) -> Result<()> {
+        self.insert_edge(from, to, None)
+    }
+
+    /// Add a conditional edge: taken only when `guard` holds at the
+    /// moment the engine reaches `to`.
+    pub fn connect_when(&mut self, from: NodeId, to: NodeId, guard: EdgeGuard) -> Result<()> {
+        self.insert_edge(from, to, Some(guard))
+    }
+
+    fn insert_edge(&mut self, from: NodeId, to: NodeId, guard: Option<EdgeGuard>) -> Result<()> {
         self.check_node(from)?;
         self.check_node(to)?;
         if from == to {
             return Err(Error::Flow(format!("self edge on node {from}")));
         }
-        self.edges.insert((from, to));
+        // one edge per (from, to): silently last-winning guards would
+        // change control flow; route alternatives through distinct nodes
+        if self.edges.contains_key(&(from, to)) {
+            return Err(Error::Flow(format!(
+                "duplicate edge {from} -> {to} (one edge per node pair; \
+                 guards cannot be stacked)"
+            )));
+        }
+        self.edges.insert((from, to), guard);
         Ok(())
     }
 
@@ -85,8 +311,20 @@ impl FlowGraph {
         self.nodes.get(id).ok_or_else(|| Error::Flow(format!("unknown node {id}")))
     }
 
+    /// Node id by instance name.
+    pub fn node_by_instance(&self, instance: &str) -> Option<NodeId> {
+        self.nodes.iter().find(|n| n.instance == instance).map(|n| n.id)
+    }
+
     pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
-        self.edges.iter().copied()
+        self.edges.keys().copied()
+    }
+
+    /// Forward edges with their guards.
+    pub fn guarded_edges(
+        &self,
+    ) -> impl Iterator<Item = (NodeId, NodeId, Option<&EdgeGuard>)> + '_ {
+        self.edges.iter().map(|(&(f, t), g)| (f, t, g.as_ref()))
     }
 
     pub fn back_edges(&self) -> &[BackEdge] {
@@ -95,7 +333,7 @@ impl FlowGraph {
 
     /// In-degree over forward edges (multiplicity checking).
     pub fn in_degree(&self, id: NodeId) -> usize {
-        self.edges.iter().filter(|(_, t)| *t == id).count()
+        self.edges.keys().filter(|(_, t)| *t == id).count()
     }
 
     /// All forward-edge in-degrees, indexable by [`NodeId`], computed in
@@ -105,26 +343,37 @@ impl FlowGraph {
     /// [`in_degree`]: FlowGraph::in_degree
     pub fn in_degrees(&self) -> Vec<usize> {
         let mut deg = vec![0usize; self.nodes.len()];
-        for &(_, t) in &self.edges {
+        for &(_, t) in self.edges.keys() {
             deg[t] += 1;
         }
         deg
     }
 
     pub fn out_degree(&self, id: NodeId) -> usize {
-        self.edges.iter().filter(|(f, _)| *f == id).count()
+        self.edges.keys().filter(|(f, _)| *f == id).count()
+    }
+
+    /// All forward-edge out-degrees in one pass (counterpart of
+    /// [`in_degrees`](FlowGraph::in_degrees); sub-flow exit detection).
+    pub fn out_degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.nodes.len()];
+        for &(f, _) in self.edges.keys() {
+            deg[f] += 1;
+        }
+        deg
     }
 
     /// Deterministic topological order over the forward edges.
     ///
     /// Kahn's algorithm with the lowest-id tie-break, so the same graph
-    /// always executes in the same order (the engine is single-threaded
-    /// by design — the PJRT client is not Sync; parallel branches are
-    /// interleaved deterministically instead).
+    /// always executes in the same order (task orchestration is
+    /// single-threaded by design; parallelism lives in the DSE probe
+    /// pool and the multi-flow explorer, both of which preserve
+    /// deterministic traces).
     pub fn topo_order(&self) -> Result<Vec<NodeId>> {
         let mut indeg: BTreeMap<NodeId, usize> =
             self.nodes.iter().map(|n| (n.id, 0)).collect();
-        for (_, t) in &self.edges {
+        for (_, t) in self.edges.keys() {
             *indeg.get_mut(t).unwrap() += 1;
         }
         let mut ready: BTreeSet<NodeId> = indeg
@@ -136,7 +385,7 @@ impl FlowGraph {
         while let Some(&id) = ready.iter().next() {
             ready.remove(&id);
             order.push(id);
-            for (f, t) in &self.edges {
+            for (f, t) in self.edges.keys() {
                 if *f == id {
                     let d = indeg.get_mut(t).unwrap();
                     *d -= 1;
@@ -155,13 +404,18 @@ impl FlowGraph {
         Ok(order)
     }
 
-    /// Validate back edges: target must precede source in topo order.
-    pub fn validate(&self) -> Result<Vec<NodeId>> {
+    /// Validate the whole graph once and return the engine's
+    /// [`FlowPlan`]: topo order + position map + split in-degrees.
+    /// Checks back edges (target must precede source, positive budget)
+    /// and recursively validates every strategy arm's child flow.
+    pub fn validate(&self) -> Result<FlowPlan> {
         let order = self.topo_order()?;
-        let pos: BTreeMap<NodeId, usize> =
-            order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        let mut pos = vec![0usize; self.nodes.len()];
+        for (i, &n) in order.iter().enumerate() {
+            pos[n] = i;
+        }
         for be in &self.back_edges {
-            if pos[&be.to] > pos[&be.from] {
+            if pos[be.to] > pos[be.from] {
                 return Err(Error::Flow(format!(
                     "back edge {} -> {} does not point backwards",
                     be.from, be.to
@@ -171,7 +425,35 @@ impl FlowGraph {
                 return Err(Error::Flow("back edge max_iters must be >= 1".into()));
             }
         }
-        Ok(order)
+        let mut in_plain = vec![0usize; self.nodes.len()];
+        let mut in_guarded = vec![0usize; self.nodes.len()];
+        for (&(_, t), guard) in &self.edges {
+            if guard.is_some() {
+                in_guarded[t] += 1;
+            } else {
+                in_plain[t] += 1;
+            }
+        }
+        for node in &self.nodes {
+            if let NodeKind::Strategy { arms } = &node.kind {
+                for arm in arms {
+                    arm.flow.validate().map_err(|e| {
+                        Error::Flow(format!(
+                            "strategy {:?} arm {:?}: {e}",
+                            node.instance, arm.name
+                        ))
+                    })?;
+                }
+            }
+        }
+        Ok(FlowPlan {
+            order,
+            pos,
+            in_plain,
+            in_guarded,
+            n_edges: self.edges.len(),
+            n_back_edges: self.back_edges.len(),
+        })
     }
 }
 
@@ -187,6 +469,10 @@ mod tests {
         g.connect(a, b).unwrap();
         g.connect(b, c).unwrap();
         g
+    }
+
+    fn guard(metric: &str, op: CmpOp, value: f64) -> EdgeGuard {
+        EdgeGuard { metric: metric.into(), op, value }
     }
 
     #[test]
@@ -224,6 +510,21 @@ mod tests {
         let mut g = FlowGraph::new("s");
         let a = g.add_task("a", "T");
         assert!(g.connect(a, a).is_err());
+    }
+
+    #[test]
+    fn duplicate_edge_rejected() {
+        let mut g = FlowGraph::new("dup");
+        let a = g.add_task("a", "T");
+        let b = g.add_task("b", "T");
+        g.connect(a, b).unwrap();
+        // a second edge on the same pair must not silently replace the
+        // first one's guard
+        let err = g
+            .connect_when(a, b, guard("a.acc", CmpOp::Ge, 0.5))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate edge"), "{err}");
     }
 
     #[test]
@@ -277,5 +578,131 @@ mod tests {
         let a = g.add_task("a", "T");
         assert!(g.connect(a, 99).is_err());
         assert!(g.node(99).is_err());
+    }
+
+    #[test]
+    fn plan_pos_matches_order() {
+        let g = chain();
+        let plan = g.validate().unwrap();
+        for (i, &n) in plan.order.iter().enumerate() {
+            assert_eq!(plan.pos[n], i);
+        }
+    }
+
+    #[test]
+    fn plan_detects_post_validation_mutation() {
+        let mut g = chain();
+        let plan = g.validate().unwrap();
+        assert!(plan.matches(&g));
+        let d = g.add_task("extra", "T");
+        assert!(!plan.matches(&g));
+        let plan2 = g.validate().unwrap();
+        assert!(plan2.matches(&g));
+        g.connect(0, d).unwrap();
+        assert!(!plan2.matches(&g));
+        let plan3 = g.validate().unwrap();
+        g.connect_back(d, 0, 1).unwrap();
+        assert!(!plan3.matches(&g));
+    }
+
+    #[test]
+    fn out_degrees_matches_per_node_scan() {
+        let mut g = FlowGraph::new("fan");
+        let a = g.add_task("a", "T");
+        let b = g.add_task("b", "T");
+        let c = g.add_task("c", "T");
+        g.connect(a, b).unwrap();
+        g.connect(a, c).unwrap();
+        let degs = g.out_degrees();
+        assert_eq!(degs, vec![2, 0, 0]);
+        for id in 0..3 {
+            assert_eq!(degs[id], g.out_degree(id));
+        }
+    }
+
+    #[test]
+    fn plan_splits_guarded_in_degrees() {
+        let mut g = FlowGraph::new("guarded");
+        let a = g.add_task("a", "T");
+        let b = g.add_task("b", "T");
+        let c = g.add_task("c", "T");
+        g.connect(a, c).unwrap();
+        g.connect(a, b).unwrap();
+        g.connect_when(b, c, guard("a.acc", CmpOp::Ge, 0.5)).unwrap();
+        let plan = g.validate().unwrap();
+        assert_eq!(plan.in_plain[c], 1);
+        assert_eq!(plan.in_guarded[c], 1);
+        assert_eq!(plan.in_plain[b], 1);
+        assert_eq!(plan.in_guarded[b], 0);
+    }
+
+    #[test]
+    fn cmp_op_parse_apply_roundtrip() {
+        for (s, lhs, rhs, expect) in [
+            ("<", 1.0, 2.0, true),
+            ("<=", 2.0, 2.0, true),
+            (">", 1.0, 2.0, false),
+            (">=", 2.0, 2.0, true),
+            ("==", 3.0, 3.0, true),
+            ("!=", 3.0, 3.0, false),
+        ] {
+            let op = CmpOp::parse(s).unwrap();
+            assert_eq!(op.apply(lhs, rhs), expect, "{s}");
+            assert_eq!(op.to_string(), s);
+        }
+        assert!(CmpOp::parse("~=").is_err());
+    }
+
+    #[test]
+    fn strategy_node_validation() {
+        let mut arm_flow = FlowGraph::new("arm");
+        arm_flow.add_task("p", "PRUNING");
+        let mut g = FlowGraph::new("strat");
+        let gen = g.add_task("gen", "GEN");
+        let s = g
+            .add_strategy(
+                "opt",
+                vec![
+                    StrategyArm {
+                        name: "agg".into(),
+                        when: Some(guard("gen.accuracy", CmpOp::Ge, 0.7)),
+                        flow: arm_flow.clone(),
+                    },
+                    StrategyArm { name: "light".into(), when: None, flow: arm_flow.clone() },
+                ],
+            )
+            .unwrap();
+        g.connect(gen, s).unwrap();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.node(s).unwrap().task_type(), "S-TASK");
+        assert!(g.node(s).unwrap().is_strategy());
+
+        // empty arms rejected
+        assert!(g.add_strategy("s2", vec![]).is_err());
+        // duplicate arm names rejected
+        assert!(g
+            .add_strategy(
+                "s3",
+                vec![
+                    StrategyArm { name: "x".into(), when: None, flow: arm_flow.clone() },
+                    StrategyArm { name: "x".into(), when: None, flow: arm_flow },
+                ],
+            )
+            .is_err());
+
+        // a strategy whose arm contains a cyclic flow fails validation
+        let mut bad_arm = FlowGraph::new("bad");
+        let x = bad_arm.add_task("x", "T");
+        let y = bad_arm.add_task("y", "T");
+        bad_arm.connect(x, y).unwrap();
+        bad_arm.connect(y, x).unwrap();
+        let mut g2 = FlowGraph::new("strat2");
+        g2.add_strategy(
+            "opt",
+            vec![StrategyArm { name: "only".into(), when: None, flow: bad_arm }],
+        )
+        .unwrap();
+        let err = g2.validate().unwrap_err().to_string();
+        assert!(err.contains("opt") && err.contains("only"), "{err}");
     }
 }

@@ -10,15 +10,22 @@
 //! Tasks communicate exclusively through the [crate::metamodel::MetaModel],
 //! never directly — that is what makes flows recomposable (Fig 2: swapping
 //! the order of SCALING/PRUNING/QUANTIZATION is an edge-list change).
+//!
+//! The composable-IR extensions (conditional edges, strategy nodes,
+//! sub-flow flattening) live in [graph] and [crate::config::spec]; the
+//! [engine] is a small control-flow VM over that IR, and [explore] runs
+//! many flow *architectures* concurrently and reports a Pareto front.
 
 pub mod engine;
+pub mod explore;
 pub mod graph;
 pub mod registry;
 pub mod session;
 pub mod task;
 
 pub use engine::Engine;
-pub use graph::{FlowGraph, NodeId};
+pub use explore::{ExploreOutcome, ExploreSpec, FlowVariant, VariantResult};
+pub use graph::{CmpOp, EdgeGuard, FlowGraph, FlowPlan, NodeId, NodeKind, StrategyArm};
 pub use registry::TaskRegistry;
 pub use session::Session;
 pub use task::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};

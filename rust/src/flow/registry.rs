@@ -10,7 +10,10 @@ use std::collections::BTreeMap;
 use crate::error::{Error, Result};
 use crate::flow::task::PipeTask;
 
-type Ctor = Box<dyn Fn() -> Box<dyn PipeTask>>;
+// Constructors are `Send + Sync` so one registry serves every worker
+// of the multi-flow explorer (task objects themselves are created and
+// used within a single worker thread).
+type Ctor = Box<dyn Fn() -> Box<dyn PipeTask> + Send + Sync>;
 
 #[derive(Default)]
 pub struct TaskRegistry {
@@ -38,7 +41,7 @@ impl TaskRegistry {
     pub fn register(
         &mut self,
         name: impl Into<String>,
-        ctor: impl Fn() -> Box<dyn PipeTask> + 'static,
+        ctor: impl Fn() -> Box<dyn PipeTask> + Send + Sync + 'static,
     ) {
         self.ctors.insert(name.into(), Box::new(ctor));
     }

@@ -1,5 +1,8 @@
 //! The pipe task abstraction (paper §III–IV, Table I).
 
+use std::sync::Arc;
+
+use crate::dse::{EvalCache, ProbePool};
 use crate::error::Result;
 use crate::flow::session::Session;
 use crate::metamodel::MetaModel;
@@ -53,6 +56,10 @@ pub struct TaskCtx<'a> {
     pub session: &'a Session,
     /// Task-instance id (CFG namespace and LOG attribution).
     pub instance: String,
+    /// Engine-provided eval memo shared across the whole run (set by
+    /// the multi-flow explorer so identical probes dedupe across
+    /// variants); `None` = each task memoizes privately.
+    pub shared_cache: Option<Arc<EvalCache>>,
 }
 
 impl<'a> TaskCtx<'a> {
@@ -90,6 +97,16 @@ impl<'a> TaskCtx<'a> {
             .unwrap_or_else(crate::dse::default_jobs)
     }
 
+    /// The DSE probe pool for this task run: sized by [`Self::jobs`],
+    /// backed by the engine's shared eval cache when one is active
+    /// (multi-flow exploration) or a private memo otherwise.
+    pub fn probe_pool(&self) -> ProbePool {
+        match &self.shared_cache {
+            Some(cache) => ProbePool::with_cache(self.jobs(), cache.clone()),
+            None => ProbePool::new(self.jobs()),
+        }
+    }
+
     pub fn log_metric(&mut self, name: &str, value: f64) {
         let instance = self.instance.clone();
         self.meta.log.metric(&instance, name, value);
@@ -98,6 +115,14 @@ impl<'a> TaskCtx<'a> {
     pub fn log_message(&mut self, text: impl Into<String>) {
         let instance = self.instance.clone();
         self.meta.log.message(&instance, text);
+    }
+
+    /// Record a wall-clock-dependent measurement (duration, cache hit
+    /// count) in the LOG side table — never the replay-comparable
+    /// event stream.
+    pub fn log_note(&mut self, name: &str, value: f64) {
+        let instance = self.instance.clone();
+        self.meta.log.note(&instance, name, value);
     }
 }
 

@@ -36,6 +36,13 @@
 //! fan their candidate probes out across the [dse::ProbePool] — a
 //! scoped-thread worker pool with a memoizing eval cache that keeps
 //! results bit-identical to sequential execution (see [dse]).
+//!
+//! The flow layer is a composable IR: specs declare conditional edges
+//! (guards over meta-model metrics), strategy (S-task) nodes selecting
+//! among child flows at runtime, and embedded sub-flows; the engine is
+//! a small control-flow VM logging every branch decision, and
+//! [flow::explore] runs whole *flow-architecture* grids concurrently,
+//! reporting a deterministic (accuracy, DSP, LUT) Pareto front.
 
 pub mod baselines;
 pub mod bench_support;

@@ -4,9 +4,14 @@
 //!   `list-tasks`                       Table I task registry
 //!   `train --model jet_dnn`            KERAS-MODEL-GEN equivalent
 //!   `run-flow --flow <spec.json>`      execute a design flow from config
+//!   `explore --flow <spec.json>`       run the spec's variant grid + Pareto front
 //!   `synth --model jet_dnn`            HLS4ML + VIVADO-HLS report only
 //!   `smoke`                            runtime round-trip check
+//!
+//! Unknown options are rejected with a hint (a typo like `--job 4`
+//! must not silently change a run).
 
+use metaml::json::Value;
 use metaml::Result;
 
 fn main() {
@@ -20,10 +25,11 @@ fn main() {
 fn dispatch(args: &[String]) -> Result<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
-        "smoke" => cmd_smoke(),
+        "smoke" => cmd_smoke(&args[1..]),
         "train" => cmd_train(&args[1..]),
-        "list-tasks" => cmd_list_tasks(),
+        "list-tasks" => cmd_list_tasks(&args[1..]),
         "run-flow" => cmd_run_flow(&args[1..]),
+        "explore" => cmd_explore(&args[1..]),
         "synth" => cmd_synth(&args[1..]),
         _ => {
             print_help();
@@ -42,9 +48,17 @@ COMMANDS:
   smoke                         verify the execution backend + artifacts
   train       --model <name> [--scale S] [--epochs N]   train via AOT step
   list-tasks                    print the pipe-task registry (Table I)
-  run-flow    --flow <spec.json> [--model <name>] [--jobs N]
-                                execute a design flow; --jobs sets the DSE
-                                probe worker count for all O-tasks
+  run-flow    --flow <spec.json> [--model <name>] [--jobs N] [--synthetic]
+              [-c k=v]...       execute a design flow; --jobs sets the DSE
+                                probe worker count for all O-tasks;
+                                --synthetic uses the in-memory jet manifest
+  explore     --flow <spec.json> [--model <name>] [--jobs N] [--synthetic]
+              [-c k=v]...       expand the spec's `explore` variant grid,
+                                run every flow variant concurrently and
+                                print the (accuracy, DSP, LUT) Pareto
+                                front; --synthetic uses the in-memory jet
+                                manifest (no artifacts needed); a CSV of
+                                the front lands in report/
   synth       --model <name> [--scale S]                HLS+RTL report
   help                          this message
 
@@ -52,7 +66,7 @@ Artifacts are read from ./artifacts (build with `make artifacts`).
 The execution backend is selected by METAML_BACKEND: `reference`
 (default, pure-Rust interpreter) or `xla` (PJRT, needs --features xla).
 DSE probe workers: --jobs > METAML_JOBS > available parallelism; search
-results are bit-identical for every worker count.",
+results and flow LOGs are bit-identical for every worker count.",
         metaml::version()
     );
 }
@@ -62,6 +76,10 @@ fn opt(args: &[String], name: &str) -> Option<String> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .cloned()
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 /// Parse an optional `--flag value` argument, turning malformed values
@@ -86,11 +104,136 @@ fn parse_jobs(args: &[String]) -> Result<Option<usize>> {
     }
 }
 
+/// Strict option validation: every token must be a known flag (with its
+/// value, when it takes one).  Typos fail loudly with a best-effort
+/// "did you mean" hint instead of being silently ignored.
+fn check_flags(cmd: &str, args: &[String], allowed: &[(&str, bool)]) -> Result<()> {
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if let Some((name, takes_value)) = allowed.iter().find(|(n, _)| *n == a) {
+            if *takes_value {
+                // another option is not a value: `--model --synthetic`
+                // must fail here, or the naive opt()/flag() scans would
+                // double-interpret the token ("-"-prefixed numbers stay
+                // legal values)
+                match args.get(i + 1) {
+                    None => {
+                        return Err(metaml::Error::other(format!(
+                            "option {name} expects a value"
+                        )));
+                    }
+                    Some(v) if v.starts_with("--") => {
+                        return Err(metaml::Error::other(format!(
+                            "option {name} expects a value, got option {v:?}"
+                        )));
+                    }
+                    Some(_) => {}
+                }
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        let valid = allowed
+            .iter()
+            .map(|(n, _)| *n)
+            .collect::<Vec<_>>()
+            .join(", ");
+        let msg = if a.starts_with('-') {
+            let hint = allowed
+                .iter()
+                .map(|(n, _)| *n)
+                .min_by_key(|n| edit_distance(a, n))
+                .filter(|n| edit_distance(a, n) <= 2)
+                .map(|n| format!(" (did you mean {n:?}?)"))
+                .unwrap_or_default();
+            if valid.is_empty() {
+                format!("unknown option {a:?}: {cmd} takes no options")
+            } else {
+                format!("unknown option {a:?} for {cmd}{hint}; valid options: {valid}")
+            }
+        } else {
+            format!("unexpected argument {a:?} for {cmd}")
+        };
+        return Err(metaml::Error::other(msg));
+    }
+    Ok(())
+}
+
+/// Plain Levenshtein distance (tiny inputs; used only for CLI hints).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// Collect `-c key=value` overrides (numbers become Number values).
+/// A `-c` argument without `=` is an error, not a silent no-op.
+fn cfg_overrides(args: &[String]) -> Result<Vec<(String, Value)>> {
+    let mut out = Vec::new();
+    for i in 0..args.len() {
+        if args[i] == "-c" {
+            let kv = args.get(i + 1).ok_or_else(|| {
+                metaml::Error::other("option -c expects a value")
+            })?;
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                metaml::Error::other(format!(
+                    "malformed -c override {kv:?} (expected key=value)"
+                ))
+            })?;
+            let value = match v.parse::<f64>() {
+                Ok(n) => Value::Number(n),
+                Err(_) => Value::String(v.to_string()),
+            };
+            out.push((k.to_string(), value));
+        }
+    }
+    Ok(out)
+}
+
 fn artifacts_dir() -> String {
     std::env::var("METAML_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
 }
 
-fn cmd_smoke() -> Result<()> {
+fn report_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("METAML_REPORT_OUT").unwrap_or_else(|_| "report".into()),
+    )
+}
+
+/// Load a flow spec: a JSON path or a builtin name.
+fn load_spec(flow_arg: &str) -> Result<metaml::config::FlowSpec> {
+    if flow_arg.ends_with(".json") {
+        metaml::config::FlowSpec::load(flow_arg)
+    } else {
+        metaml::config::builtin_flow(flow_arg)
+    }
+}
+
+/// Session over real artifacts, or the in-memory synthetic jet manifest
+/// (scale grid included) when `--synthetic` is given.
+fn open_session(synthetic: bool) -> Result<metaml::flow::Session> {
+    use metaml::flow::Session;
+    if synthetic {
+        let manifest = metaml::bench_support::synthetic_jet_manifest_scales(&[1.0, 0.75, 0.5]);
+        Ok(Session::with_backend(metaml::runtime::Runtime::cpu()?, manifest))
+    } else {
+        Session::open(&artifacts_dir())
+    }
+}
+
+fn cmd_smoke(args: &[String]) -> Result<()> {
+    check_flags("smoke", args, &[])?;
     use metaml::data::{Dataset, DatasetSpec};
     use metaml::model::ModelState;
     use metaml::runtime::{Manifest, ModelExecutable, Runtime};
@@ -125,6 +268,11 @@ fn cmd_smoke() -> Result<()> {
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
+    check_flags(
+        "train",
+        args,
+        &[("--model", true), ("--scale", true), ("--epochs", true)],
+    )?;
     use metaml::data::{Dataset, DatasetSpec};
     use metaml::model::ModelState;
     use metaml::runtime::{Manifest, ModelExecutable, Runtime};
@@ -152,7 +300,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_list_tasks() -> Result<()> {
+fn cmd_list_tasks(args: &[String]) -> Result<()> {
+    check_flags("list-tasks", args, &[])?;
     let registry = metaml::flow::TaskRegistry::builtin();
     println!("Implemented pipe tasks (paper Table I):\n");
     print!("{}", registry.table());
@@ -161,18 +310,24 @@ fn cmd_list_tasks() -> Result<()> {
 }
 
 fn cmd_run_flow(args: &[String]) -> Result<()> {
-    use metaml::config::{builtin_flow, FlowSpec};
-    use metaml::flow::{Engine, Session, TaskRegistry};
+    check_flags(
+        "run-flow",
+        args,
+        &[
+            ("--flow", true),
+            ("--model", true),
+            ("--jobs", true),
+            ("--synthetic", false),
+            ("-c", true),
+        ],
+    )?;
+    use metaml::flow::{Engine, TaskRegistry};
     use metaml::metamodel::MetaModel;
 
     let flow_arg = opt(args, "--flow").unwrap_or_else(|| "pruning".into());
-    let spec = if flow_arg.ends_with(".json") {
-        FlowSpec::load(&flow_arg)?
-    } else {
-        builtin_flow(&flow_arg)?
-    };
+    let spec = load_spec(&flow_arg)?;
 
-    let session = Session::open(&artifacts_dir())?;
+    let session = open_session(flag(args, "--synthetic"))?;
     let registry = TaskRegistry::builtin();
     let mut meta = MetaModel::new();
     meta.log.echo = true;
@@ -185,24 +340,13 @@ fn cmd_run_flow(args: &[String]) -> Result<()> {
     if let Some(jobs) = parse_jobs(args)? {
         meta.cfg.set("jobs", jobs);
     }
-    // pass-through -c key=value overrides
-    for i in 0..args.len() {
-        if args[i] == "-c" {
-            if let Some(kv) = args.get(i + 1) {
-                if let Some((k, v)) = kv.split_once('=') {
-                    if let Ok(n) = v.parse::<f64>() {
-                        meta.cfg.set(k, n);
-                    } else {
-                        meta.cfg.set(k, v);
-                    }
-                }
-            }
-        }
+    for (k, v) in cfg_overrides(args)? {
+        meta.cfg.set(k, v);
     }
 
     println!("running flow '{}'", spec.graph.name);
     let engine = Engine::new(&session, &registry);
-    engine.run(&spec.graph, &mut meta)?;
+    engine.run_spec(&spec, &mut meta)?;
 
     println!("\nmodel space ({} artifacts):", meta.space.len());
     for m in meta.space.iter() {
@@ -223,26 +367,184 @@ fn cmd_run_flow(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_explore(args: &[String]) -> Result<()> {
+    check_flags(
+        "explore",
+        args,
+        &[
+            ("--flow", true),
+            ("--model", true),
+            ("--jobs", true),
+            ("--synthetic", false),
+            ("-c", true),
+        ],
+    )?;
+    use metaml::flow::explore::{expand_variants, explore_variants, front_csv, front_table};
+    use metaml::flow::TaskRegistry;
+
+    let flow_arg = opt(args, "--flow").unwrap_or_else(|| "s_p_q".into());
+    let spec = load_spec(&flow_arg)?;
+    let session = open_session(flag(args, "--synthetic"))?;
+    let registry = TaskRegistry::builtin();
+    let jobs = parse_jobs(args)?.unwrap_or_else(metaml::dse::default_jobs);
+
+    let mut extra = Vec::new();
+    if let Some(model) = opt(args, "--model") {
+        extra.push(("model".to_string(), Value::String(model)));
+    }
+    extra.extend(cfg_overrides(args)?);
+
+    let variants = expand_variants(&spec)?;
+    println!(
+        "exploring {} flow variant{} of '{}' (jobs={jobs})",
+        variants.len(),
+        if variants.len() == 1 { "" } else { "s" },
+        spec.graph.name
+    );
+    for v in &variants {
+        println!("  - {}", v.label);
+    }
+
+    let outcome = explore_variants(&session, &registry, &variants, &extra, jobs)?;
+
+    println!("\nPareto front over (accuracy, DSP, LUT):\n");
+    print!("{}", front_table(&outcome).render());
+    println!(
+        "\n{} of {} variants on the front:",
+        outcome.front.len(),
+        outcome.results.len()
+    );
+    for &i in &outcome.front {
+        let r = &outcome.results[i];
+        println!(
+            "  * {} (acc {:.4}, {} DSP, {} LUT)",
+            r.label,
+            r.metric("accuracy").unwrap_or(0.0),
+            r.metric("dsp").unwrap_or(0.0) as u64,
+            r.metric("lut").unwrap_or(0.0) as u64,
+        );
+    }
+
+    let csv_path = report_dir().join(format!("explore_{}.csv", spec.graph.name));
+    front_csv(&outcome).save(&csv_path)?;
+    println!("\nwrote {}", csv_path.display());
+    Ok(())
+}
+
 fn cmd_synth(args: &[String]) -> Result<()> {
-    use metaml::flow::{Engine, Session, TaskRegistry};
+    check_flags(
+        "synth",
+        args,
+        &[("--model", true), ("--scale", true), ("--device", true)],
+    )?;
+    use metaml::flow::{Engine, TaskRegistry};
     use metaml::metamodel::MetaModel;
 
     let model = opt(args, "--model").unwrap_or_else(|| "jet_dnn".into());
     let scale: f64 = parse_opt(args, "--scale")?.unwrap_or(1.0);
     let device = opt(args, "--device").unwrap_or_else(|| "vu9p".into());
 
-    let session = Session::open(&artifacts_dir())?;
+    let session = metaml::flow::Session::open(&artifacts_dir())?;
     let registry = TaskRegistry::builtin();
     let mut meta = MetaModel::new();
     meta.cfg.set("model", model);
     meta.cfg.set("scale", scale);
     meta.cfg.set("FPGA_part_number", device);
     let spec = metaml::config::builtin_flow("baseline")?;
-    Engine::new(&session, &registry).run(&spec.graph, &mut meta)?;
+    Engine::new(&session, &registry).run_spec(&spec, &mut meta)?;
     let rtl = meta
         .space
         .latest(metaml::metamodel::Abstraction::Rtl)
         .ok_or_else(|| metaml::Error::other("no RTL artifact produced"))?;
     println!("{}", metaml::synth::report::render(rtl.rtl()?));
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    const RUN_FLOW: &[(&str, bool)] = &[
+        ("--flow", true),
+        ("--model", true),
+        ("--jobs", true),
+        ("--synthetic", false),
+        ("-c", true),
+    ];
+
+    #[test]
+    fn known_flags_pass() {
+        let args = s(&["--flow", "s_p_q", "--jobs", "4", "-c", "prune.jobs=2", "--synthetic"]);
+        assert!(check_flags("run-flow", &args, RUN_FLOW).is_ok());
+    }
+
+    #[test]
+    fn unknown_flag_rejected_with_hint() {
+        let err = check_flags("run-flow", &s(&["--job", "4"]), RUN_FLOW)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--job"), "{err}");
+        assert!(err.contains("--jobs"), "{err}");
+        assert!(err.contains("valid options"), "{err}");
+    }
+
+    #[test]
+    fn positional_garbage_rejected() {
+        let err = check_flags("run-flow", &s(&["wat"]), RUN_FLOW)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unexpected argument"), "{err}");
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let err = check_flags("run-flow", &s(&["--flow"]), RUN_FLOW)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expects a value"), "{err}");
+    }
+
+    #[test]
+    fn option_as_value_rejected() {
+        // `--model --synthetic` must not set model="--synthetic" AND
+        // turn the synthetic session on
+        let err = check_flags("run-flow", &s(&["--model", "--synthetic"]), RUN_FLOW)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expects a value"), "{err}");
+    }
+
+    #[test]
+    fn option_on_optionless_command_rejected() {
+        let err = check_flags("smoke", &s(&["--fast"]), &[]).unwrap_err().to_string();
+        assert!(err.contains("takes no options"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_sane() {
+        assert_eq!(edit_distance("--job", "--jobs"), 1);
+        assert_eq!(edit_distance("--jobs", "--jobs"), 0);
+        assert!(edit_distance("--flow", "--jobs") > 2);
+    }
+
+    #[test]
+    fn cfg_overrides_parse_numbers_and_strings() {
+        let args = s(&["-c", "prune.tolerate_acc_loss=0.05", "-c", "model=jet_dnn"]);
+        let over = cfg_overrides(&args).unwrap();
+        assert_eq!(over.len(), 2);
+        assert_eq!(over[0].1.as_f64(), Some(0.05));
+        assert_eq!(over[1].1.as_str(), Some("jet_dnn"));
+    }
+
+    #[test]
+    fn cfg_override_without_equals_rejected() {
+        let err = cfg_overrides(&s(&["-c", "prune.tolerate_acc_loss"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("key=value"), "{err}");
+    }
 }

@@ -1,4 +1,14 @@
 //! LOG section: the runtime execution trace of a design flow.
+//!
+//! **Determinism contract:** the event stream ([`ExecLog::events`]) is
+//! bit-for-bit reproducible — two runs of the same flow with the same
+//! CFG and seed produce identical `LogEvent` sequences for any worker
+//! count.  Anything wall-clock-dependent (task durations, cache hit
+//! counters) therefore lives in a parallel *side-note table*
+//! ([`ExecLog::note`] / [`ExecLog::side_notes`]), never in the event
+//! stream.  The per-entry `at_secs` timestamps are display-only
+//! decoration for [`ExecLog::render_trace`]; replay comparisons use
+//! [`ExecLog::events`] or [`ExecLog::render_events`].
 
 use std::time::Instant;
 
@@ -8,20 +18,39 @@ pub enum LogEvent {
     FlowStarted { flow: String },
     FlowFinished { flow: String },
     TaskStarted { task: String },
-    TaskFinished { task: String, secs: f64 },
+    /// Wall-clock duration intentionally absent: timings are side notes.
+    TaskFinished { task: String },
+    /// The engine skipped a node (no incoming edge was taken).
+    TaskSkipped { task: String },
     /// A named scalar a task measured (accuracy, pruning rate, DSP count…).
     Metric { task: String, name: String, value: f64 },
     /// Free-form progress message.
     Message { task: String, text: String },
     ModelStored { task: String, model_id: u64, abstraction: String },
     IterationAdvanced { task: String, iteration: usize },
+    /// A guard was evaluated: a conditional edge (`from -> to`) or a
+    /// strategy arm check (`from` = strategy instance, `to` = arm name).
+    EdgeEvaluated { from: String, to: String, metric: String, value: f64, taken: bool },
+    /// A strategy node committed to an arm.
+    StrategySelected { task: String, arm: String },
 }
 
 #[derive(Debug, Clone)]
 pub struct LogEntry {
     pub seq: usize,
+    /// Wall-clock offset for human-readable traces; NOT part of the
+    /// reproducibility contract.
     pub at_secs: f64,
     pub event: LogEvent,
+}
+
+/// A wall-clock-dependent measurement attached to a task, kept out of
+/// the replay-comparable event stream (durations, cache hit counts…).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SideNote {
+    pub task: String,
+    pub name: String,
+    pub value: f64,
 }
 
 /// Append-only execution trace.
@@ -29,13 +58,19 @@ pub struct LogEntry {
 pub struct ExecLog {
     started: Instant,
     entries: Vec<LogEntry>,
+    side: Vec<SideNote>,
     /// Mirror entries to stdout as they arrive.
     pub echo: bool,
 }
 
 impl Default for ExecLog {
     fn default() -> Self {
-        ExecLog { started: Instant::now(), entries: Vec::new(), echo: false }
+        ExecLog {
+            started: Instant::now(),
+            entries: Vec::new(),
+            side: Vec::new(),
+            echo: false,
+        }
     }
 }
 
@@ -68,8 +103,27 @@ impl ExecLog {
         self.push(LogEvent::Message { task: task.to_string(), text: text.into() });
     }
 
+    /// Record a wall-clock-dependent measurement in the side table
+    /// (never in the event stream).
+    pub fn note(&mut self, task: &str, name: &str, value: f64) {
+        self.side.push(SideNote {
+            task: task.to_string(),
+            name: name.to_string(),
+            value,
+        });
+    }
+
     pub fn entries(&self) -> &[LogEntry] {
         &self.entries
+    }
+
+    /// The replay-comparable event stream (no timestamps, no side notes).
+    pub fn events(&self) -> impl Iterator<Item = &LogEvent> {
+        self.entries.iter().map(|e| &e.event)
+    }
+
+    pub fn side_notes(&self) -> &[SideNote] {
+        &self.side
     }
 
     /// All metric values named `name` recorded by `task`, in order.
@@ -87,11 +141,34 @@ impl ExecLog {
             .collect()
     }
 
-    /// Render the full trace as text (debugging aid per the paper).
+    /// Latest metric value named `name` recorded by `task`.
+    pub fn latest_metric(&self, task: &str, name: &str) -> Option<f64> {
+        self.entries.iter().rev().find_map(|e| match &e.event {
+            LogEvent::Metric { task: t, name: n, value } if t == task && n == name => {
+                Some(*value)
+            }
+            _ => None,
+        })
+    }
+
+    /// Render the full trace as text (debugging aid per the paper),
+    /// including wall-clock timestamps.  Not replay-comparable — use
+    /// [`render_events`](Self::render_events) for that.
     pub fn render_trace(&self) -> String {
         let mut out = String::new();
         for e in &self.entries {
             out.push_str(&format!("[{:>9.3}s] {}\n", e.at_secs, render(&e.event)));
+        }
+        out
+    }
+
+    /// Deterministic render of the event stream alone: identical runs
+    /// produce identical strings, for any worker count.
+    pub fn render_events(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            out.push_str(&render(&e.event));
+            out.push('\n');
         }
         out
     }
@@ -102,9 +179,8 @@ fn render(event: &LogEvent) -> String {
         LogEvent::FlowStarted { flow } => format!("flow {flow}: started"),
         LogEvent::FlowFinished { flow } => format!("flow {flow}: finished"),
         LogEvent::TaskStarted { task } => format!("{task}: started"),
-        LogEvent::TaskFinished { task, secs } => {
-            format!("{task}: finished in {secs:.3}s")
-        }
+        LogEvent::TaskFinished { task } => format!("{task}: finished"),
+        LogEvent::TaskSkipped { task } => format!("{task}: skipped"),
         LogEvent::Metric { task, name, value } => {
             format!("{task}: {name} = {value:.6}")
         }
@@ -114,6 +190,15 @@ fn render(event: &LogEvent) -> String {
         }
         LogEvent::IterationAdvanced { task, iteration } => {
             format!("{task}: iteration {iteration}")
+        }
+        LogEvent::EdgeEvaluated { from, to, metric, value, taken } => {
+            format!(
+                "{from} -> {to}: guard {metric} = {value:.6} => {}",
+                if *taken { "taken" } else { "not taken" }
+            )
+        }
+        LogEvent::StrategySelected { task, arm } => {
+            format!("{task}: selected arm {arm:?}")
         }
     }
 }
@@ -127,7 +212,7 @@ mod tests {
         let mut log = ExecLog::new();
         log.push(LogEvent::TaskStarted { task: "a".into() });
         log.metric("a", "acc", 0.75);
-        log.push(LogEvent::TaskFinished { task: "a".into(), secs: 0.1 });
+        log.push(LogEvent::TaskFinished { task: "a".into() });
         assert_eq!(log.entries().len(), 3);
         assert_eq!(log.entries()[1].seq, 1);
     }
@@ -141,6 +226,8 @@ mod tests {
         log.metric("other", "rate", 0.1);
         assert_eq!(log.metric_series("prune", "rate"), vec![0.5, 0.75]);
         assert!(log.metric_series("prune", "missing").is_empty());
+        assert_eq!(log.latest_metric("prune", "rate"), Some(0.75));
+        assert_eq!(log.latest_metric("prune", "missing"), None);
     }
 
     #[test]
@@ -152,5 +239,44 @@ mod tests {
         assert!(trace.contains("hello"));
         assert!(trace.contains("x = 1"));
         assert_eq!(trace.lines().count(), 2);
+    }
+
+    #[test]
+    fn side_notes_stay_out_of_event_stream() {
+        let mut log = ExecLog::new();
+        log.push(LogEvent::TaskStarted { task: "a".into() });
+        log.note("a", "secs", 0.123);
+        log.push(LogEvent::TaskFinished { task: "a".into() });
+        assert_eq!(log.entries().len(), 2);
+        assert_eq!(log.side_notes().len(), 1);
+        assert_eq!(log.side_notes()[0].name, "secs");
+        assert!(!log.render_events().contains("0.123"));
+    }
+
+    #[test]
+    fn event_streams_of_identical_logs_compare_equal() {
+        let build = || {
+            let mut log = ExecLog::new();
+            log.push(LogEvent::FlowStarted { flow: "f".into() });
+            log.push(LogEvent::TaskStarted { task: "a".into() });
+            log.metric("a", "acc", 0.5);
+            // wall-clock-dependent data goes to the side table only
+            log.note("a", "secs", 42.0);
+            log.push(LogEvent::TaskFinished { task: "a".into() });
+            log.push(LogEvent::EdgeEvaluated {
+                from: "a".into(),
+                to: "b".into(),
+                metric: "a.acc".into(),
+                value: 0.5,
+                taken: true,
+            });
+            log.push(LogEvent::FlowFinished { flow: "f".into() });
+            log
+        };
+        let (a, b) = (build(), build());
+        let ev_a: Vec<&LogEvent> = a.events().collect();
+        let ev_b: Vec<&LogEvent> = b.events().collect();
+        assert_eq!(ev_a, ev_b);
+        assert_eq!(a.render_events(), b.render_events());
     }
 }

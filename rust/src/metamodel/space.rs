@@ -186,6 +186,17 @@ impl ModelSpace {
         self.items.iter().rev().find(|m| m.abstraction() == abstraction)
     }
 
+    /// Latest value of `metric` among artifacts stored by `producer`
+    /// (guard-predicate fallback when a task recorded a metric on its
+    /// artifact but not in the LOG).
+    pub fn latest_metric(&self, producer: &str, metric: &str) -> Option<f64> {
+        self.items
+            .iter()
+            .rev()
+            .filter(|m| m.producer == producer)
+            .find_map(|m| m.metric(metric))
+    }
+
     /// Ancestry chain of a model, oldest first (lineage for reports).
     pub fn lineage(&self, id: ModelId) -> Result<Vec<ModelId>> {
         let mut chain = vec![id];
@@ -234,6 +245,21 @@ mod tests {
         let b = sp.store("m1", "prune", Some(a), dnn_payload());
         assert_eq!(sp.latest(Abstraction::Dnn).unwrap().id, b);
         assert!(sp.latest(Abstraction::Rtl).is_none());
+    }
+
+    #[test]
+    fn latest_metric_by_producer() {
+        let mut sp = ModelSpace::new();
+        let a = sp.store("m0", "gen", None, dnn_payload());
+        sp.set_metric(a, "accuracy", 0.7).unwrap();
+        let b = sp.store("m1", "gen", Some(a), dnn_payload());
+        sp.set_metric(b, "accuracy", 0.75).unwrap();
+        let c = sp.store("m2", "prune", Some(b), dnn_payload());
+        sp.set_metric(c, "accuracy", 0.74).unwrap();
+        assert_eq!(sp.latest_metric("gen", "accuracy"), Some(0.75));
+        assert_eq!(sp.latest_metric("prune", "accuracy"), Some(0.74));
+        assert_eq!(sp.latest_metric("gen", "missing"), None);
+        assert_eq!(sp.latest_metric("nope", "accuracy"), None);
     }
 
     #[test]

@@ -47,7 +47,7 @@ impl PipeTask for PruningTask {
         let data = ctx.session.dataset(&variant.model)?;
         let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
 
-        let pool = crate::dse::ProbePool::new(ctx.jobs());
+        let pool = ctx.probe_pool();
         let trace = autoprune(&trainer, &mut state, &cfg, &pool)?;
         for p in &trace.probes {
             ctx.log_metric("probe_rate", p.rate);

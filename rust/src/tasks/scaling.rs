@@ -59,7 +59,7 @@ impl PipeTask for ScalingTask {
             inherit_pruning_rate: input.metric("pruning_rate").unwrap_or(0.0),
         };
 
-        let pool = crate::dse::ProbePool::new(ctx.jobs());
+        let pool = ctx.probe_pool();
         let (trace, state, new_scale) =
             scale_search(ctx.session, &variant.model, variant.scale, base_acc, &cfg, &pool)?;
         for p in &trace.probes {

@@ -5,8 +5,7 @@
 //! error attribution, and (via the mini property harness) invariants
 //! over randomly generated DAGs.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use metaml::flow::{
     Engine, FlowGraph, ParamSpec, PipeTask, Session, TaskCtx, TaskOutcome,
@@ -18,7 +17,7 @@ use metaml::testutil::check;
 
 /// Mock task that appends its instance name to a shared trace.
 struct TraceTask {
-    trace: Rc<RefCell<Vec<String>>>,
+    trace: Arc<Mutex<Vec<String>>>,
     inputs: usize,
     iterate_times: usize,
     fail: bool,
@@ -41,10 +40,10 @@ impl PipeTask for TraceTask {
         if self.fail {
             return Err(metaml::Error::other("boom"));
         }
-        self.trace.borrow_mut().push(ctx.instance.clone());
+        self.trace.lock().unwrap().push(ctx.instance.clone());
         let count = self
             .trace
-            .borrow()
+            .lock().unwrap()
             .iter()
             .filter(|t| **t == ctx.instance)
             .count();
@@ -56,7 +55,7 @@ impl PipeTask for TraceTask {
 }
 
 fn registry_with(
-    trace: &Rc<RefCell<Vec<String>>>,
+    trace: &Arc<Mutex<Vec<String>>>,
     inputs_by_type: &[(&'static str, usize, usize, bool)],
 ) -> TaskRegistry {
     let mut r = TaskRegistry::empty();
@@ -80,7 +79,7 @@ fn session() -> Session {
 
 #[test]
 fn chain_executes_in_order() {
-    let trace = Rc::new(RefCell::new(Vec::new()));
+    let trace = Arc::new(Mutex::new(Vec::new()));
     let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("MID", 1, 0, false)]);
     let mut g = FlowGraph::new("chain");
     let a = g.add_task("a", "SRC");
@@ -92,7 +91,7 @@ fn chain_executes_in_order() {
     let session = session();
     let mut meta = MetaModel::new();
     Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
-    assert_eq!(*trace.borrow(), vec!["a", "b", "c"]);
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "b", "c"]);
 
     // LOG contains started/finished pairs per task + flow markers
     let events = meta.log.entries();
@@ -107,7 +106,7 @@ fn chain_executes_in_order() {
 
 #[test]
 fn multiplicity_violations_rejected() {
-    let trace = Rc::new(RefCell::new(Vec::new()));
+    let trace = Arc::new(Mutex::new(Vec::new()));
     let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("MID", 1, 0, false)]);
     // MID with zero inputs
     let mut g = FlowGraph::new("bad");
@@ -129,7 +128,7 @@ fn multiplicity_violations_rejected() {
 
 #[test]
 fn back_edge_iterates_subpath_bounded() {
-    let trace = Rc::new(RefCell::new(Vec::new()));
+    let trace = Arc::new(Mutex::new(Vec::new()));
     // "b" asks for iteration twice; the budget of 3 re-executions is
     // not the binding limit here
     let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("LOOP", 1, 2, false)]);
@@ -143,7 +142,7 @@ fn back_edge_iterates_subpath_bounded() {
     let mut meta = MetaModel::new();
     Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
     // a,b then back to a,b then a,b — 3 passes of the subpath
-    assert_eq!(*trace.borrow(), vec!["a", "b", "a", "b", "a", "b"]);
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "b", "a", "b", "a", "b"]);
     let iter_events = meta
         .log
         .entries()
@@ -155,7 +154,7 @@ fn back_edge_iterates_subpath_bounded() {
 
 #[test]
 fn back_edge_budget_caps_runaway_iteration() {
-    let trace = Rc::new(RefCell::new(Vec::new()));
+    let trace = Arc::new(Mutex::new(Vec::new()));
     // task ALWAYS asks to iterate: budget must stop it
     let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("LOOP", 1, 999, false)]);
     let mut g = FlowGraph::new("runaway");
@@ -169,7 +168,7 @@ fn back_edge_budget_caps_runaway_iteration() {
     Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
     // max_iters bounds RE-executions: initial pass + 4 re-executions
     // = 5 passes x 2 tasks
-    assert_eq!(trace.borrow().len(), 10);
+    assert_eq!(trace.lock().unwrap().len(), 10);
     let iter_events = meta
         .log
         .entries()
@@ -184,7 +183,7 @@ fn back_edge_budget_caps_runaway_iteration() {
 /// no-op because the budget check required a budget strictly above 1).
 #[test]
 fn back_edge_with_unit_budget_reexecutes_exactly_once() {
-    let trace = Rc::new(RefCell::new(Vec::new()));
+    let trace = Arc::new(Mutex::new(Vec::new()));
     // task ALWAYS asks to iterate, so only the budget limits re-execution
     let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("LOOP", 1, 999, false)]);
     let mut g = FlowGraph::new("single-iteration");
@@ -197,7 +196,7 @@ fn back_edge_with_unit_budget_reexecutes_exactly_once() {
     let mut meta = MetaModel::new();
     Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
     // initial pass + exactly one re-execution of the a..b sub-path
-    assert_eq!(*trace.borrow(), vec!["a", "b", "a", "b"]);
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "b", "a", "b"]);
     let iter_events = meta
         .log
         .entries()
@@ -209,7 +208,7 @@ fn back_edge_with_unit_budget_reexecutes_exactly_once() {
 
 #[test]
 fn task_errors_are_attributed() {
-    let trace = Rc::new(RefCell::new(Vec::new()));
+    let trace = Arc::new(Mutex::new(Vec::new()));
     let registry = registry_with(&trace, &[("SRC", 0, 0, false), ("FAIL", 1, 0, true)]);
     let mut g = FlowGraph::new("failing");
     let a = g.add_task("ok", "SRC");
@@ -229,7 +228,7 @@ fn task_errors_are_attributed() {
 #[test]
 fn property_random_dags_execute_all_nodes_in_topo_order() {
     check(60, |rng| {
-        let trace = Rc::new(RefCell::new(Vec::new()));
+        let trace = Arc::new(Mutex::new(Vec::new()));
         let registry =
             registry_with(&trace, &[("SRC", 0, 0, false), ("MID", 1, 0, false)]);
 
@@ -258,7 +257,7 @@ fn property_random_dags_execute_all_nodes_in_topo_order() {
             .run(&g, &mut meta)
             .map_err(|e| e.to_string())?;
 
-        let executed = trace.borrow();
+        let executed = trace.lock().unwrap();
         prop_assert!(
             executed.len() == n,
             "executed {} of {n} nodes",

@@ -1,0 +1,636 @@
+//! Flow-control semantics of the composable design-flow IR.
+//!
+//! Covers: conditional-edge truth tables (every comparison operator),
+//! skip propagation, relaxed multiplicity under guarded edges,
+//! LOG-determinism of identical runs, S-task (strategy) selection and
+//! its jobs-invariance on a real mini flow, nested sub-flow
+//! namespacing, and the multi-flow explorer's golden Pareto front for
+//! `s_p_q`-vs-`p_s_q`-style order variants on the synthetic mini jet
+//! manifest.
+
+use std::sync::{Arc, Mutex};
+
+use metaml::bench_support::synthetic_jet_mini_manifest;
+use metaml::config::FlowSpec;
+use metaml::flow::explore::{expand_variants, explore};
+use metaml::flow::{
+    CmpOp, EdgeGuard, Engine, FlowGraph, ParamSpec, PipeTask, Session, TaskCtx,
+    TaskOutcome, TaskRegistry, TaskRole,
+};
+use metaml::metamodel::{LogEvent, MetaModel, ModelPayload};
+use metaml::model::state::Precision;
+use metaml::model::ModelState;
+use metaml::runtime::Runtime;
+
+/// Mock task: appends its instance to a shared trace and logs a fixed
+/// `score` metric.
+struct ScoreTask {
+    trace: Arc<Mutex<Vec<String>>>,
+    inputs: usize,
+    score: f64,
+}
+
+impl PipeTask for ScoreTask {
+    fn name(&self) -> &str {
+        "SCORE"
+    }
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+    fn multiplicity(&self) -> (usize, usize) {
+        (self.inputs, 1)
+    }
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![]
+    }
+    fn run(&self, ctx: &mut TaskCtx) -> metaml::Result<TaskOutcome> {
+        self.trace.lock().unwrap().push(ctx.instance.clone());
+        let score = self.score;
+        ctx.log_metric("score", score);
+        Ok(TaskOutcome::default())
+    }
+}
+
+/// Mock task recording a metric only on its model-space artifact (not
+/// in the LOG) — exercises the guard's model-space fallback.
+struct SpaceMetricTask {
+    score: f64,
+}
+
+impl PipeTask for SpaceMetricTask {
+    fn name(&self) -> &str {
+        "SPACE-METRIC"
+    }
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+    fn multiplicity(&self) -> (usize, usize) {
+        (0, 1)
+    }
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![]
+    }
+    fn run(&self, ctx: &mut TaskCtx) -> metaml::Result<TaskOutcome> {
+        let id = ctx.meta.space.store(
+            "m",
+            ctx.instance.clone(),
+            None,
+            ModelPayload::Dnn(ModelState {
+                tag: "t".into(),
+                params: vec![],
+                masks: vec![],
+                precisions: vec![Precision::DISABLED],
+                weight_param_idx: vec![],
+            }),
+        );
+        ctx.meta.space.set_metric(id, "score", self.score)?;
+        Ok(TaskOutcome::produced([id]))
+    }
+}
+
+fn score_registry(trace: &Arc<Mutex<Vec<String>>>, score: f64) -> TaskRegistry {
+    let mut r = TaskRegistry::empty();
+    let t = trace.clone();
+    r.register("SRC", move || {
+        Box::new(ScoreTask { trace: t.clone(), inputs: 0, score })
+    });
+    let t = trace.clone();
+    r.register("MID", move || {
+        Box::new(ScoreTask { trace: t.clone(), inputs: 1, score })
+    });
+    r.register("SPACE", move || Box::new(SpaceMetricTask { score }));
+    r
+}
+
+fn session() -> Session {
+    Session::without_artifacts().expect("reference backend session")
+}
+
+fn guard(metric: &str, op: CmpOp, value: f64) -> EdgeGuard {
+    EdgeGuard { metric: metric.into(), op, value }
+}
+
+// ---------------------------------------------------------------------------
+// conditional-edge truth tables
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conditional_edge_truth_table() {
+    // source logs score = 0.5; table: (op, threshold, edge taken?)
+    let cases = [
+        (CmpOp::Lt, 0.6, true),
+        (CmpOp::Lt, 0.5, false),
+        (CmpOp::Le, 0.5, true),
+        (CmpOp::Le, 0.4, false),
+        (CmpOp::Gt, 0.4, true),
+        (CmpOp::Gt, 0.5, false),
+        (CmpOp::Ge, 0.5, true),
+        (CmpOp::Ge, 0.6, false),
+        (CmpOp::Eq, 0.5, true),
+        (CmpOp::Eq, 0.4, false),
+        (CmpOp::Ne, 0.4, true),
+        (CmpOp::Ne, 0.5, false),
+    ];
+    for (op, threshold, expect_taken) in cases {
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let registry = score_registry(&trace, 0.5);
+        let mut g = FlowGraph::new("truth");
+        let a = g.add_task("a", "SRC");
+        let b = g.add_task("b", "MID");
+        g.connect_when(a, b, guard("a.score", op, threshold)).unwrap();
+
+        let session = session();
+        let mut meta = MetaModel::new();
+        Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+
+        let expected: Vec<String> = if expect_taken {
+            vec!["a".into(), "b".into()]
+        } else {
+            vec!["a".into()]
+        };
+        assert_eq!(*trace.lock().unwrap(), expected, "{op} {threshold}");
+
+        // the decision is in the LOG, with the observed value
+        let eval = meta
+            .log
+            .events()
+            .find_map(|e| match e {
+                LogEvent::EdgeEvaluated { from, to, metric, value, taken } => {
+                    Some((from.clone(), to.clone(), metric.clone(), *value, *taken))
+                }
+                _ => None,
+            })
+            .expect("EdgeEvaluated logged");
+        assert_eq!(eval, ("a".into(), "b".into(), "a.score".into(), 0.5, expect_taken));
+        let skipped = meta
+            .log
+            .events()
+            .any(|e| matches!(e, LogEvent::TaskSkipped { task } if task == "b"));
+        assert_eq!(skipped, !expect_taken);
+    }
+}
+
+#[test]
+fn skipping_propagates_downstream() {
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let registry = score_registry(&trace, 0.5);
+    // a -> b (guard false) -> c (plain): b and c both skipped
+    let mut g = FlowGraph::new("prop");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "MID");
+    let c = g.add_task("c", "MID");
+    g.connect_when(a, b, guard("a.score", CmpOp::Gt, 0.9)).unwrap();
+    g.connect(b, c).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    assert_eq!(*trace.lock().unwrap(), vec!["a"]);
+    let skipped: Vec<String> = meta
+        .log
+        .events()
+        .filter_map(|e| match e {
+            LogEvent::TaskSkipped { task } => Some(task.clone()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(skipped, vec!["b", "c"]);
+    // no guard evaluation is logged for the edge out of a skipped node
+    let evals = meta
+        .log
+        .events()
+        .filter(|e| matches!(e, LogEvent::EdgeEvaluated { .. }))
+        .count();
+    assert_eq!(evals, 1);
+}
+
+#[test]
+fn branch_merge_runs_target_when_any_edge_taken() {
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let registry = score_registry(&trace, 0.5);
+    // a -> {b if score > 0.9 (false), c if score <= 0.9 (true)} -> d
+    let mut g = FlowGraph::new("merge");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "MID");
+    let c = g.add_task("c", "MID");
+    let d = g.add_task("d", "MID");
+    g.connect_when(a, b, guard("a.score", CmpOp::Gt, 0.9)).unwrap();
+    g.connect_when(a, c, guard("a.score", CmpOp::Le, 0.9)).unwrap();
+    g.connect_when(b, d, guard("b.score", CmpOp::Ge, 0.0)).unwrap();
+    g.connect_when(c, d, guard("c.score", CmpOp::Ge, 0.0)).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "c", "d"]);
+}
+
+#[test]
+fn guard_falls_back_to_model_space_metrics() {
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let registry = score_registry(&trace, 0.8);
+    let mut g = FlowGraph::new("space-fallback");
+    let a = g.add_task("a", "SPACE");
+    let b = g.add_task("b", "MID");
+    g.connect_when(a, b, guard("a.score", CmpOp::Ge, 0.7)).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    assert_eq!(*trace.lock().unwrap(), vec!["b"]);
+}
+
+#[test]
+fn missing_guard_metric_is_a_hard_error() {
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let registry = score_registry(&trace, 0.5);
+    let mut g = FlowGraph::new("missing");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "MID");
+    g.connect_when(a, b, guard("a.nonexistent", CmpOp::Ge, 0.5)).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    let err = Engine::new(&session, &registry)
+        .run(&g, &mut meta)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("nonexistent"), "{err}");
+}
+
+#[test]
+fn multiplicity_relaxed_for_guarded_edges() {
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let registry = score_registry(&trace, 0.5);
+    // 1-input b with TWO guarded in-edges is legal (range check) …
+    let mut g = FlowGraph::new("relaxed");
+    let a = g.add_task("a", "SRC");
+    let a2 = g.add_task("a2", "SRC");
+    let b = g.add_task("b", "MID");
+    g.connect_when(a, b, guard("a.score", CmpOp::Ge, 0.9)).unwrap();
+    g.connect_when(a2, b, guard("a2.score", CmpOp::Lt, 0.9)).unwrap();
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "a2", "b"]);
+
+    // … but a 1-input task with no in-edges at all is still rejected
+    let mut g2 = FlowGraph::new("strict");
+    g2.add_task("b", "MID");
+    let mut meta2 = MetaModel::new();
+    let err = Engine::new(&session, &registry)
+        .run(&g2, &mut meta2)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("1-input"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// LOG determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn identical_runs_produce_identical_logs() {
+    let run = || {
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let registry = score_registry(&trace, 0.5);
+        let mut g = FlowGraph::new("det");
+        let a = g.add_task("a", "SRC");
+        let b = g.add_task("b", "MID");
+        let c = g.add_task("c", "MID");
+        g.connect(a, b).unwrap();
+        g.connect_when(b, c, guard("b.score", CmpOp::Ge, 0.4)).unwrap();
+        let session = session();
+        let mut meta = MetaModel::new();
+        Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+        let events: Vec<LogEvent> = meta.log.events().cloned().collect();
+        let notes = meta.log.side_notes().len();
+        (events, notes)
+    };
+    let (ev1, notes1) = run();
+    let (ev2, _) = run();
+    // wall-clock durations live in the side table, so the event streams
+    // of two identical runs compare bit-for-bit equal
+    assert_eq!(ev1, ev2);
+    // …and the engine did record one duration note per executed task
+    assert_eq!(notes1, 3);
+    assert!(!ev1.iter().any(|e| matches!(
+        e,
+        LogEvent::Metric { name, .. } if name == "secs"
+    )));
+}
+
+/// Mock task that always requests iteration.
+struct IterTask {
+    trace: Arc<Mutex<Vec<String>>>,
+}
+
+impl PipeTask for IterTask {
+    fn name(&self) -> &str {
+        "ITER"
+    }
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+    fn multiplicity(&self) -> (usize, usize) {
+        (0, 1)
+    }
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![]
+    }
+    fn run(&self, ctx: &mut TaskCtx) -> metaml::Result<TaskOutcome> {
+        self.trace.lock().unwrap().push(ctx.instance.clone());
+        Ok(TaskOutcome { produced: vec![], request_iteration: true })
+    }
+}
+
+#[test]
+fn strategy_node_propagates_iteration_requests_to_back_edges() {
+    use metaml::flow::StrategyArm;
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let mut registry = score_registry(&trace, 0.5);
+    let t = trace.clone();
+    registry.register("ITER", move || Box::new(IterTask { trace: t.clone() }));
+
+    let mut arm_flow = FlowGraph::new("loop-arm");
+    arm_flow.add_task("it", "ITER");
+    let mut g = FlowGraph::new("strategy-loop");
+    let a = g.add_task("a", "SRC");
+    let s = g
+        .add_strategy(
+            "opt",
+            vec![StrategyArm { name: "only".into(), when: None, flow: arm_flow }],
+        )
+        .unwrap();
+    g.connect(a, s).unwrap();
+    g.connect_back(s, a, 1).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    // the arm task's iteration request bubbles out of the S-task, so
+    // the back edge re-executes the sub-path exactly once (budget 1)
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "opt.it", "a", "opt.it"]);
+}
+
+#[test]
+fn run_spec_replans_after_graph_mutation() {
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let registry = score_registry(&trace, 0.5);
+    let mut spec = FlowSpec::parse(
+        r#"{"name": "mut", "tasks": [{"id": "a", "type": "SRC"}], "edges": []}"#,
+    )
+    .unwrap();
+    // mutate the graph after parsing: the cached plan is stale, and
+    // run_spec must replan instead of indexing out of bounds
+    let a = spec.graph.node_by_instance("a").unwrap();
+    let b = spec.graph.add_task("b", "MID");
+    spec.graph.connect(a, b).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run_spec(&spec, &mut meta).unwrap();
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "b"]);
+}
+
+// ---------------------------------------------------------------------------
+// real mini flows: S-task selection + conditional bypass, jobs-invariant
+// ---------------------------------------------------------------------------
+
+fn mini_session() -> Session {
+    Session::with_backend(Runtime::reference(), synthetic_jet_mini_manifest())
+}
+
+/// A strategy + conditional-edge spec over the mini jet family: the
+/// S-task picks a quantization arm from the trained accuracy, and the
+/// `refine` task is bypassed via a conditional edge pair.
+fn strategy_spec() -> FlowSpec {
+    FlowSpec::parse(
+        r#"{
+  "name": "mini_strategy",
+  "cfg": {
+    "model": "jet_mini",
+    "gen.train_epochs": 1,
+    "opt.qa.start_precision": "ap_fixed<8,4>",
+    "opt.qa.min_bits": 7,
+    "opt.ql.start_precision": "ap_fixed<8,4>",
+    "opt.ql.min_bits": 7,
+    "refine.start_precision": "ap_fixed<8,4>",
+    "refine.min_bits": 7
+  },
+  "tasks": [
+    {"id": "gen", "type": "KERAS-MODEL-GEN"},
+    {"id": "opt", "strategy": {"arms": [
+      {"name": "aggressive",
+       "when": {"metric": "gen.accuracy", "op": ">=", "value": 0.995},
+       "flow": {"tasks": [{"id": "qa", "type": "QUANTIZATION"}], "edges": []}},
+      {"name": "light",
+       "flow": {"tasks": [{"id": "ql", "type": "QUANTIZATION"}], "edges": []}}
+    ]}},
+    {"id": "refine", "type": "QUANTIZATION"},
+    {"id": "hls", "type": "HLS4ML"},
+    {"id": "synth", "type": "VIVADO-HLS"}
+  ],
+  "edges": [
+    ["gen", "opt"],
+    {"from": "opt", "to": "refine",
+     "when": {"metric": "gen.accuracy", "op": "<", "value": 0.995}},
+    {"from": "opt", "to": "hls",
+     "when": {"metric": "gen.accuracy", "op": ">=", "value": 0.995}},
+    ["refine", "hls"],
+    ["hls", "synth"]
+  ]
+}"#,
+    )
+    .unwrap()
+}
+
+fn run_strategy_flow(jobs: usize) -> (Vec<LogEvent>, MetaModel) {
+    let session = mini_session();
+    let registry = TaskRegistry::builtin();
+    let spec = strategy_spec();
+    let mut meta = MetaModel::new();
+    spec.apply_cfg(&mut meta.cfg);
+    meta.cfg.set("jobs", jobs);
+    Engine::new(&session, &registry).run_spec(&spec, &mut meta).unwrap();
+    let events = meta.log.events().cloned().collect();
+    (events, meta)
+}
+
+#[test]
+fn strategy_selection_and_conditional_bypass_on_real_flow() {
+    let (events, meta) = run_strategy_flow(1);
+
+    // the 1-epoch model is nowhere near 0.995 accuracy => "light" arm
+    let selected = events
+        .iter()
+        .find_map(|e| match e {
+            LogEvent::StrategySelected { task, arm } => Some((task.clone(), arm.clone())),
+            _ => None,
+        })
+        .expect("strategy selection logged");
+    assert_eq!(selected, ("opt".into(), "light".into()));
+
+    // every branch decision is in the LOG: the rejected arm guard, the
+    // taken refine edge and the bypass edge that was not taken
+    let evals: Vec<(String, String, bool)> = events
+        .iter()
+        .filter_map(|e| match e {
+            LogEvent::EdgeEvaluated { from, to, taken, .. } => {
+                Some((from.clone(), to.clone(), *taken))
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(evals.contains(&("opt".into(), "aggressive".into(), false)), "{evals:?}");
+    assert!(evals.contains(&("opt".into(), "refine".into(), true)), "{evals:?}");
+    assert!(evals.contains(&("opt".into(), "hls".into(), false)), "{evals:?}");
+
+    // the arm's tasks ran under the strategy namespace
+    assert!(events.iter().any(|e| matches!(
+        e,
+        LogEvent::TaskStarted { task } if task == "opt.ql"
+    )));
+    // nested sub-flow markers carry the namespaced flow name
+    assert!(events.iter().any(|e| matches!(
+        e,
+        LogEvent::FlowStarted { flow } if flow == "opt.light"
+    )));
+    // refine ran (not skipped), and the flow reached RTL
+    assert!(!events
+        .iter()
+        .any(|e| matches!(e, LogEvent::TaskSkipped { task } if task == "refine")));
+    assert!(meta
+        .space
+        .latest(metaml::metamodel::Abstraction::Rtl)
+        .is_some());
+    // the quantization searches actually applied the CFG'd start
+    // precision (namespaced key reached the arm task)
+    let bits = meta.log.metric_series("opt.ql", "bits_total");
+    assert_eq!(bits.len(), 1);
+    assert!(bits[0] <= 3.0 * 8.0, "start precision not applied: {bits:?}");
+}
+
+#[test]
+fn strategy_flow_log_is_jobs_invariant() {
+    let (ev1, _) = run_strategy_flow(1);
+    let (ev4, _) = run_strategy_flow(4);
+    assert_eq!(ev1.len(), ev4.len());
+    for (a, b) in ev1.iter().zip(&ev4) {
+        assert_eq!(a, b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// multi-flow explorer golden test: order variants on the mini jet manifest
+// ---------------------------------------------------------------------------
+
+/// `s_p_q`-vs-`p_s_q`-style order permutations × two pruning
+/// tolerances on the synthetic mini jet manifest.
+fn explorer_spec() -> FlowSpec {
+    FlowSpec::parse(
+        r#"{
+  "name": "mini_explore",
+  "cfg": {
+    "model": "jet_mini",
+    "gen.train_epochs": 1,
+    "prune.train_epochs": 1,
+    "prune.pruning_rate_thresh": 0.25,
+    "scale.train_epochs": 1,
+    "scale.tolerate_acc_loss": 0.05,
+    "scale.max_trials_num": 2,
+    "quantize.start_precision": "ap_fixed<8,4>",
+    "quantize.min_bits": 7
+  },
+  "tasks": [
+    {"id": "gen", "type": "KERAS-MODEL-GEN"},
+    {"id": "scale", "type": "SCALING"},
+    {"id": "prune", "type": "PRUNING"},
+    {"id": "hls", "type": "HLS4ML"},
+    {"id": "quantize", "type": "QUANTIZATION"},
+    {"id": "synth", "type": "VIVADO-HLS"}
+  ],
+  "edges": [["gen", "scale"], ["scale", "prune"], ["prune", "hls"],
+             ["hls", "quantize"], ["quantize", "synth"]],
+  "explore": {
+    "orders": [
+      ["gen", "scale", "prune", "hls", "quantize", "synth"],
+      ["gen", "prune", "scale", "hls", "quantize", "synth"]
+    ],
+    "cfg_grid": {"prune.tolerate_acc_loss": [0.02, 0.05]}
+  }
+}"#,
+    )
+    .unwrap()
+}
+
+#[test]
+fn explorer_pareto_front_is_deterministic_and_jobs_invariant() {
+    let registry = TaskRegistry::builtin();
+    let spec = explorer_spec();
+
+    let variants = expand_variants(&spec).unwrap();
+    let labels: Vec<&str> = variants.iter().map(|v| v.label.as_str()).collect();
+    assert_eq!(
+        labels,
+        vec![
+            "gen-scale-prune-hls-quantize-synth prune.tolerate_acc_loss=0.02",
+            "gen-scale-prune-hls-quantize-synth prune.tolerate_acc_loss=0.05",
+            "gen-prune-scale-hls-quantize-synth prune.tolerate_acc_loss=0.02",
+            "gen-prune-scale-hls-quantize-synth prune.tolerate_acc_loss=0.05",
+        ]
+    );
+
+    let run = |jobs: usize| {
+        let session = mini_session();
+        explore(&session, &registry, &spec, &[], jobs).unwrap()
+    };
+    let seq = run(1);
+    let par = run(4);
+
+    // ≥ 4 variants ran, every one reached RTL with the three objectives
+    assert_eq!(seq.results.len(), 4);
+    for r in &seq.results {
+        assert!(r.metric("accuracy").is_some(), "{}", r.label);
+        assert!(r.metric("dsp").is_some(), "{}", r.label);
+        assert!(r.metric("lut").is_some(), "{}", r.label);
+        assert!(r.n_models >= 5, "{}: {} models", r.label, r.n_models);
+    }
+
+    // golden determinism: front and all per-variant results identical
+    // for jobs=1 vs jobs=4, including the complete LOG event streams
+    assert_eq!(seq.front, par.front);
+    assert!(!seq.front.is_empty());
+    for (a, b) in seq.results.iter().zip(&par.results) {
+        assert_eq!(a.label, b.label);
+        for (k, v) in &a.metrics {
+            let w = b.metrics.get(k).copied().unwrap_or(f64::NAN);
+            assert_eq!(v.to_bits(), w.to_bits(), "{}: {k}", a.label);
+        }
+        assert_eq!(a.events.len(), b.events.len(), "{}", a.label);
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x, y, "{}", a.label);
+        }
+    }
+
+    // the front is the non-dominated set: nothing on it is dominated
+    let obj = |r: &metaml::flow::VariantResult| {
+        (
+            r.metric("accuracy").unwrap(),
+            r.metric("dsp").unwrap(),
+            r.metric("lut").unwrap(),
+        )
+    };
+    for &i in &seq.front {
+        let (ai, di, li) = obj(&seq.results[i]);
+        for (j, other) in seq.results.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            let (aj, dj, lj) = obj(other);
+            let dominates =
+                aj >= ai && dj <= di && lj <= li && (aj > ai || dj < di || lj < li);
+            assert!(!dominates, "front member {i} dominated by {j}");
+        }
+    }
+}
