@@ -8,6 +8,9 @@
 //!   * DSE probe throughput, sequential vs parallel (1 / 2 / max
 //!     workers), plus an end-to-end `quantize_search` jobs comparison
 //!     that asserts the parallel trace is bit-identical;
+//!   * hardware (synthesis) probe throughput through the same pool —
+//!     reuse-factor candidate batches at 1 / 2 / max workers — plus a
+//!     sequential-vs-parallel `reuse_search` trace-identity assertion;
 //!   * literal marshaling overhead (host→device→host round trip);
 //!   * flow-engine overhead (no-op task graph traversal).
 //!
@@ -267,6 +270,124 @@ fn main() -> metaml::Result<()> {
             "s",
         );
         rec.record("dse_quant_search_speedup", "jet_dnn", speedup, "x");
+    }
+
+    // hardware (synthesis) probe throughput: the FPGA-stage probe kind
+    // through the same pool — per-layer reuse-factor candidates at
+    // 1 / 2 / max workers (fresh pool each, cache-cold), plus the
+    // end-to-end reuse_search sequential-vs-parallel comparison
+    {
+        use metaml::dse::HwProbeRequest;
+        use metaml::hls::{HlsModel, HlsTransform, SetLayerReuse};
+        use metaml::synth::{reuse_search, FpgaDevice, ReuseConfig, ReuseTrace};
+
+        let variant = session.manifest.variant("jet_dnn", 1.0)?.clone();
+        // ~60% density, what a pruned jet model hands the FPGA stage
+        let nnz: Vec<usize> = variant
+            .mask_shapes
+            .iter()
+            .map(|(_, shape)| shape.iter().product::<usize>() * 6 / 10)
+            .collect();
+        let base = HlsModel::from_nnz(
+            &variant,
+            &nnz,
+            Precision::new(12, 6),
+            "vu9p",
+            5.0,
+        )?;
+        let device = FpgaDevice::by_name("vu9p").unwrap();
+
+        // per-layer reuse candidates (every compute layer x RF grid)
+        let layer_names: Vec<String> =
+            base.compute_layers().map(|l| l.name.clone()).collect();
+        let mut requests: Vec<HwProbeRequest> = Vec::new();
+        for (li, name) in layer_names.iter().enumerate() {
+            for (ri, rf) in [2usize, 4, 8, 16].iter().enumerate() {
+                let mut m = base.clone();
+                SetLayerReuse { layer: name.clone(), reuse_factor: *rf }
+                    .apply(&mut m)?;
+                requests.push(HwProbeRequest::new(li * 4 + ri, m));
+            }
+        }
+
+        let max_jobs = metaml::dse::default_jobs();
+        let mut worker_counts = vec![1usize, 2];
+        if max_jobs > 2 {
+            worker_counts.push(max_jobs);
+        }
+        let mut baseline: Option<Vec<(usize, usize, usize)>> = None;
+        for &jobs in &worker_counts {
+            let pool = ProbePool::new(jobs);
+            let t0 = Instant::now();
+            let results = pool.estimate_batch(device, 200.0, &requests)?;
+            let secs = t0.elapsed().as_secs_f64();
+            let probes_s = requests.len() as f64 / secs;
+            let sums: Vec<(usize, usize, usize)> = results
+                .iter()
+                .map(|r| (r.eval.dsp, r.eval.lut, r.eval.latency_cycles))
+                .collect();
+            match &baseline {
+                None => baseline = Some(sums),
+                Some(b) => {
+                    if *b != sums {
+                        return Err(metaml::Error::other(format!(
+                            "hw_probe: jobs={jobs} results diverged from sequential"
+                        )));
+                    }
+                }
+            }
+            table.row_strs(&[
+                &format!("hw probe batch (jobs={jobs})"),
+                "jet_dnn",
+                &format!("{:.0} probes/s", probes_s),
+            ]);
+            rec.record(&format!("hw_probe_jobs{jobs}"), "jet_dnn", probes_s, "probes/s");
+        }
+
+        // end-to-end reuse search, sequential vs parallel: the
+        // REUSE_SEARCH determinism contract (trace bit-identity)
+        let rcfg = ReuseConfig { latency_budget_ns: Some(200.0) };
+        let t0 = Instant::now();
+        let (seq_model, seq_trace) =
+            reuse_search(&base, device, 200.0, &rcfg, &ProbePool::new(1))?;
+        let seq_secs = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let (par_model, par_trace) =
+            reuse_search(&base, device, 200.0, &rcfg, &ProbePool::new(max_jobs))?;
+        let par_secs = t0.elapsed().as_secs_f64();
+
+        let reuse_traces_identical = |a: &ReuseTrace, b: &ReuseTrace| {
+            a.reuse == b.reuse
+                && a.probes == b.probes
+                && a.final_eval == b.final_eval
+        };
+        let rfs = |m: &HlsModel| -> Vec<usize> {
+            m.layers.iter().map(|l| l.reuse_factor).collect()
+        };
+        if !reuse_traces_identical(&seq_trace, &par_trace)
+            || rfs(&seq_model) != rfs(&par_model)
+        {
+            return Err(metaml::Error::other(
+                "hw_probe: parallel reuse_search trace diverged from sequential",
+            ));
+        }
+        table.row_strs(&[
+            "reuse_search jobs=1",
+            "jet_dnn",
+            &format!("{:.4} s ({} probes)", seq_secs, seq_trace.probes.len()),
+        ]);
+        table.row_strs(&[
+            &format!("reuse_search jobs={max_jobs}"),
+            "jet_dnn",
+            &format!("{:.4} s (bit-identical)", par_secs),
+        ]);
+        rec.record("hw_reuse_search_jobs1_s", "jet_dnn", seq_secs, "s");
+        rec.record(
+            &format!("hw_reuse_search_jobs{max_jobs}_s"),
+            "jet_dnn",
+            par_secs,
+            "s",
+        );
     }
 
     // literal marshaling: tensor -> literal -> tensor round trip

@@ -1,5 +1,5 @@
 //! Multi-flow exploration demo: run four flow *architectures*
-//! concurrently from one spec and print the (accuracy, DSP, LUT)
+//! concurrently from one spec and print the (accuracy, DSP, LUT, latency)
 //! Pareto front.
 //!
 //! Uses the in-memory synthetic jet manifest (scale grid included), so

@@ -25,6 +25,12 @@
 //!   predicate holds at runtime:
 //!   `{"from": "prune", "to": "quantize",
 //!     "when": {"metric": "prune.accuracy", "op": ">=", "value": 0.72}}`
+//! * **Guarded back edges** — a back edge may also carry a `when`
+//!   guard; it then fires (bounded by `max_iters`) whenever the
+//!   predicate holds after the source task runs, which is how specs
+//!   express cross-stage feedback from the hardware stage:
+//!   `{"from": "synth", "to": "quantize", "max_iters": 2,
+//!     "when": {"metric": "synth.dsp", "op": ">", "value": 64}}`
 //! * **Strategy (S-task) nodes** — a task entry with a `strategy` key
 //!   declares arms (each a child flow, optionally guarded); exactly one
 //!   arm is selected and executed at runtime:
@@ -202,7 +208,19 @@ fn parse_scope(
                     to_entries.len()
                 )));
             }
-            graph.connect_back(from_exits[0], to_entries[0], b.req_usize("max_iters")?)?;
+            let max_iters = b.req_usize("max_iters")?;
+            // an optional `when` guard turns the edge metric-driven:
+            // it fires while the predicate holds (bounded by max_iters)
+            // instead of waiting for a task iteration request
+            match b.get("when") {
+                Some(w) => graph.connect_back_when(
+                    from_exits[0],
+                    to_entries[0],
+                    max_iters,
+                    parse_guard(w)?,
+                )?,
+                None => graph.connect_back(from_exits[0], to_entries[0], max_iters)?,
+            }
         }
     }
     Ok(())
@@ -369,7 +387,29 @@ mod tests {
         .unwrap();
         assert_eq!(spec.graph.nodes().len(), 2);
         assert_eq!(spec.graph.back_edges().len(), 1);
+        assert!(spec.graph.back_edges()[0].when.is_none());
         assert_eq!(spec.cfg_entries.len(), 2);
+    }
+
+    #[test]
+    fn parses_guarded_back_edges() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [{"id": "quantize", "type": "QUANTIZATION"},
+                           {"id": "synth", "type": "VIVADO-HLS"}],
+                "edges": [["quantize", "synth"]],
+                "back_edges": [{"from": "synth", "to": "quantize",
+                                "max_iters": 2,
+                                "when": {"metric": "synth.dsp", "op": ">",
+                                         "value": 64}}]}"#,
+        )
+        .unwrap();
+        let be = &spec.graph.back_edges()[0];
+        assert_eq!(be.max_iters, 2);
+        let g = be.when.as_ref().expect("guard parsed");
+        assert_eq!(g.metric, "synth.dsp");
+        assert_eq!(g.op, CmpOp::Gt);
+        assert_eq!(g.value, 64.0);
     }
 
     #[test]

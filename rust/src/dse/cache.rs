@@ -1,4 +1,15 @@
-//! Memoizing evaluation cache for design-space-exploration probes.
+//! Memoizing caches for design-space-exploration probes.
+//!
+//! A DSE probe is not always "train-and-eval": the FPGA-stage searches
+//! probe the synthesis estimator instead.  Both probe kinds share one
+//! memo abstraction — [`ProbeCache`], a generic thread-safe map from a
+//! complete-input key to a result — instantiated twice:
+//!
+//! * [`EvalCache`] (training probes), keyed by [`EvalKey`]: variant
+//!   tag + per-layer precisions + a fingerprint of params/masks/dataset;
+//! * [`crate::dse::HwCache`] (hardware probes), keyed by
+//!   [`crate::dse::HwKey`]: device + clock + per-layer reuse factors +
+//!   a fingerprint of the full HLS configuration.
 //!
 //! The memo is strictly correctness-first: a key incorporates *every*
 //! input the evaluation depends on, so a hit can only ever replace a
@@ -29,6 +40,7 @@
 //! the full-test-split evaluation it guards.
 
 use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, PoisonError};
 
@@ -39,19 +51,20 @@ use crate::train::EvalResult;
 
 /// Incremental FNV-1a-style mix: one xor-multiply per 64-bit word
 /// (coarser than byte-wise FNV, ample for a cache guarded by exact
-/// tag + precisions).
-struct Fnv(u64);
+/// tag + precisions).  `pub(crate)` so the hardware-probe key
+/// ([`crate::dse::HwKey`]) fingerprints with the same function.
+pub(crate) struct Fnv(pub(crate) u64);
 
 impl Fnv {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Fnv(0xcbf2_9ce4_8422_2325)
     }
 
-    fn word(&mut self, w: u64) {
+    pub(crate) fn word(&mut self, w: u64) {
         self.0 = (self.0 ^ w).wrapping_mul(0x100_0000_01b3);
     }
 
-    fn bytes(&mut self, bs: &[u8]) {
+    pub(crate) fn bytes(&mut self, bs: &[u8]) {
         self.word(bs.len() as u64);
         for &b in bs {
             self.word(b as u64);
@@ -132,26 +145,43 @@ impl EvalKey {
     }
 }
 
-/// Thread-safe memo table for probe evaluations.
-#[derive(Debug, Default)]
-pub struct EvalCache {
-    map: Mutex<HashMap<EvalKey, EvalResult>>,
+/// Thread-safe memo table for one kind of DSE probe, generic over the
+/// key (the probe kind's complete-input identity) and the result.
+///
+/// The probe-kind abstraction: training probes and hardware-synthesis
+/// probes differ only in what identifies an evaluation and what it
+/// yields; the memoization semantics (exact-key hit, hit/miss
+/// accounting, shared-across-pools correctness) are identical and live
+/// here once.
+#[derive(Debug)]
+pub struct ProbeCache<K, V> {
+    map: Mutex<HashMap<K, V>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
 
-impl EvalCache {
+impl<K, V> Default for ProbeCache<K, V> {
+    fn default() -> Self {
+        ProbeCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl<K: Eq + Hash, V: Clone> ProbeCache<K, V> {
     pub fn new() -> Self {
         Self::default()
     }
 
     /// Look up a key, counting the hit/miss.
-    pub fn get(&self, key: &EvalKey) -> Option<EvalResult> {
+    pub fn get(&self, key: &K) -> Option<V> {
         let map = self.map.lock().unwrap_or_else(PoisonError::into_inner);
         match map.get(key) {
             Some(r) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(*r)
+                Some(r.clone())
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -160,7 +190,7 @@ impl EvalCache {
         }
     }
 
-    pub fn insert(&self, key: EvalKey, result: EvalResult) {
+    pub fn insert(&self, key: K, result: V) {
         self.map
             .lock()
             .unwrap_or_else(PoisonError::into_inner)
@@ -183,6 +213,9 @@ impl EvalCache {
         self.misses.load(Ordering::Relaxed)
     }
 }
+
+/// Memo for training probes (the original probe kind).
+pub type EvalCache = ProbeCache<EvalKey, EvalResult>;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,201 @@
+//! The hardware (synthesis) probe kind.
+//!
+//! FPGA-stage searches (REUSE_SEARCH, device/IO grid exploration) probe
+//! the synthesis estimator instead of the trainer.  A hardware probe is
+//! identified by its complete HLS configuration — not by DNN parameter
+//! buffers — so its memo key is an *HLS-config fingerprint*: the target
+//! device and clock, the per-compute-layer reuse factors kept exact
+//! (they are the axis the reuse search moves along), and a fingerprint
+//! folding in everything else the estimator reads (layer shapes,
+//! precisions, nnz, IO type).
+//!
+//! Estimation is a pure function of exactly these inputs, so a key
+//! match is a result match and sharing an [`HwCache`] across pools or
+//! explorer variants can only skip recomputation of bit-identical
+//! results — the same contract as the training-probe [`super::EvalCache`].
+
+use crate::dse::cache::{Fnv, ProbeCache};
+use crate::hls::ir::{HlsLayerKind, HlsModel, IoType};
+use crate::synth::{FpgaDevice, SynthReport};
+
+/// Memo for hardware probes.
+pub type HwCache = ProbeCache<HwKey, HwEval>;
+
+/// Cache key identifying one synthesis estimation: device + clock +
+/// exact per-compute-layer reuse factors + a fingerprint of the rest of
+/// the HLS configuration.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct HwKey {
+    pub device: String,
+    /// Bit pattern of the clock frequency (MHz).
+    pub clock_mhz_bits: u64,
+    /// Reuse factor per compute layer, exact.
+    pub reuse: Vec<usize>,
+    /// Fingerprint over IO type, layer shapes, precisions and nnz.
+    pub fingerprint: u64,
+}
+
+impl HwKey {
+    /// Key for estimating `model` on `device` at `clock_mhz`.
+    pub fn of(model: &HlsModel, device: &FpgaDevice, clock_mhz: f64) -> HwKey {
+        let mut h = Fnv::new();
+        h.word(match model.io_type {
+            IoType::Parallel => 0x10,
+            IoType::Stream => 0x51,
+        });
+        h.word(model.layers.len() as u64);
+        for l in &model.layers {
+            h.word(match l.kind {
+                HlsLayerKind::Dense => 1,
+                HlsLayerKind::Conv2D => 2,
+                HlsLayerKind::MaxPool2 => 3,
+                HlsLayerKind::Flatten => 4,
+                HlsLayerKind::ResidualAdd => 5,
+            });
+            h.bytes(l.name.as_bytes());
+            h.word(l.n_in as u64);
+            h.word(l.n_out as u64);
+            h.word(l.kernel as u64);
+            h.word(l.h as u64);
+            h.word(l.w as u64);
+            h.word(l.precision.total_bits as u64);
+            h.word(l.precision.int_bits as u64);
+            h.word(u64::from(l.precision.enabled()));
+            h.word(l.total_weights as u64);
+            h.word(l.nnz as u64);
+        }
+        HwKey {
+            device: device.name.to_string(),
+            clock_mhz_bits: clock_mhz.to_bits(),
+            reuse: model
+                .layers
+                .iter()
+                .filter(|l| l.is_compute())
+                .map(|l| l.reuse_factor)
+                .collect(),
+            fingerprint: h.0,
+        }
+    }
+}
+
+/// The memoized outcome of one synthesis estimation: the whole-design
+/// numbers a hardware search selects on (a compact [`SynthReport`]
+/// summary; the full per-layer report is re-derived only for the
+/// finally stored artifact).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwEval {
+    pub dsp: usize,
+    pub lut: usize,
+    pub ff: usize,
+    pub bram_18k: usize,
+    pub latency_cycles: usize,
+    pub latency_ns: f64,
+    pub ii: usize,
+    pub power_w: f64,
+    pub fits: bool,
+}
+
+impl HwEval {
+    pub fn from_report(r: &SynthReport) -> HwEval {
+        HwEval {
+            dsp: r.dsp,
+            lut: r.lut,
+            ff: r.ff,
+            bram_18k: r.bram_18k,
+            latency_cycles: r.latency_cycles,
+            latency_ns: r.latency_ns,
+            ii: r.ii,
+            power_w: r.dynamic_power_w,
+            fits: r.fits(),
+        }
+    }
+}
+
+/// One candidate HLS configuration to estimate.
+pub struct HwProbeRequest {
+    /// Caller-side tag echoed on the matching [`HwProbeResult`].
+    pub id: usize,
+    pub model: HlsModel,
+}
+
+impl HwProbeRequest {
+    pub fn new(id: usize, model: HlsModel) -> Self {
+        HwProbeRequest { id, model }
+    }
+}
+
+/// Estimation of one candidate, in request order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwProbeResult {
+    pub id: usize,
+    pub eval: HwEval,
+    /// Served from the memo (or a duplicate earlier in the batch).
+    pub cached: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::ir::tests::toy_model;
+    use crate::hls::transform::{HlsTransform, SetPrecision, SetReuseFactor};
+    use crate::model::state::Precision;
+
+    fn vu9p() -> &'static FpgaDevice {
+        FpgaDevice::by_name("vu9p").unwrap()
+    }
+
+    #[test]
+    fn identical_configs_share_a_key() {
+        let a = toy_model();
+        let b = toy_model();
+        assert_eq!(HwKey::of(&a, vu9p(), 200.0), HwKey::of(&b, vu9p(), 200.0));
+    }
+
+    #[test]
+    fn key_distinguishes_reuse_precision_device_clock_io() {
+        let base = toy_model();
+        let k0 = HwKey::of(&base, vu9p(), 200.0);
+
+        let mut rf = base.clone();
+        SetReuseFactor(4).apply(&mut rf).unwrap();
+        assert_ne!(HwKey::of(&rf, vu9p(), 200.0), k0, "reuse change");
+
+        let mut q = base.clone();
+        SetPrecision::all(Precision::new(8, 3)).apply(&mut q).unwrap();
+        assert_ne!(HwKey::of(&q, vu9p(), 200.0), k0, "precision change");
+
+        let mut io = base.clone();
+        io.io_type = IoType::Stream;
+        assert_ne!(HwKey::of(&io, vu9p(), 200.0), k0, "io type change");
+
+        let u250 = FpgaDevice::by_name("u250").unwrap();
+        assert_ne!(HwKey::of(&base, u250, 200.0), k0, "device change");
+        assert_ne!(HwKey::of(&base, vu9p(), 100.0), k0, "clock change");
+
+        let mut nnz = base.clone();
+        nnz.layers[0].nnz -= 1;
+        assert_ne!(HwKey::of(&nnz, vu9p(), 200.0), k0, "nnz change");
+    }
+
+    #[test]
+    fn hw_cache_round_trip() {
+        let cache = HwCache::new();
+        let key = HwKey::of(&toy_model(), vu9p(), 200.0);
+        assert!(cache.get(&key).is_none());
+        let eval = HwEval {
+            dsp: 10,
+            lut: 100,
+            ff: 50,
+            bram_18k: 0,
+            latency_cycles: 7,
+            latency_ns: 35.0,
+            ii: 1,
+            power_w: 0.05,
+            fits: true,
+        };
+        cache.insert(key.clone(), eval);
+        assert_eq!(cache.get(&key), Some(eval));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+}

@@ -9,11 +9,23 @@
 //! end to end (see [`crate::runtime::ExecBackend`]), so this module
 //! fans them out across a scoped-thread worker pool:
 //!
+//! A probe is no longer synonymous with "train-and-eval": the pool is
+//! generic over *probe kinds*.  Training probes (candidate
+//! `ModelState`s through the trainer) and hardware probes (candidate
+//! HLS configurations through the synthesis estimator) share the same
+//! batch executor, ordering guarantees and memoization machinery —
+//! they differ only in what identifies an evaluation ([`EvalKey`]
+//! fingerprints params/masks/dataset, [`HwKey`] fingerprints the HLS
+//! config) and what it yields.
+//!
 //! * [`ProbePool`] — deterministic batch executor
-//!   (`std::thread::scope`, no external dependencies) plus the shared
-//!   memoizing [`EvalCache`];
-//! * [`ProbeRequest`] / [`ProbeResult`] — the batch evaluation API for
-//!   candidate states;
+//!   (`std::thread::scope`, no external dependencies) plus one shared
+//!   memo per probe kind ([`EvalCache`], [`HwCache`]);
+//! * [`ProbeRequest`] / [`ProbeResult`] — the training-probe batch API;
+//! * [`HwProbeRequest`] / [`HwProbeResult`] — the hardware-probe batch
+//!   API ([`ProbePool::estimate_batch`]);
+//! * [`DseCaches`] — the bundle of shared memos the engine threads
+//!   through explorer variants;
 //! * [`default_jobs`] — worker-count resolution.
 //!
 //! **Determinism contract:** results are bit-identical for every
@@ -30,10 +42,34 @@
 //! 3. `std::thread::available_parallelism()`.
 
 pub mod cache;
+pub mod hw;
 pub mod pool;
 
-pub use cache::{EvalCache, EvalKey};
+pub use cache::{EvalCache, EvalKey, ProbeCache};
+pub use hw::{HwCache, HwEval, HwKey, HwProbeRequest, HwProbeResult};
 pub use pool::{ProbePool, ProbeRequest, ProbeResult};
+
+use std::sync::Arc;
+
+/// One shared memo per probe kind — what the engine hands to every
+/// O-task probe pool during multi-flow exploration so identical probes
+/// (training *and* hardware) dedupe across flow variants.
+#[derive(Debug, Clone, Default)]
+pub struct DseCaches {
+    pub eval: Arc<EvalCache>,
+    pub hw: Arc<HwCache>,
+}
+
+impl DseCaches {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A pool over these shared memos.
+    pub fn pool(&self, jobs: usize) -> ProbePool {
+        ProbePool::with_caches(jobs, self.eval.clone(), self.hw.clone())
+    }
+}
 
 /// Worker count from `METAML_JOBS`, when set to a positive integer.
 pub fn env_jobs() -> Option<usize> {

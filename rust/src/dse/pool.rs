@@ -11,12 +11,15 @@
 //! borrow the caller's state directly, claim indices from a shared
 //! atomic cursor, and write results into per-index slots.
 
+use std::hash::Hash;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
-use crate::dse::cache::{EvalCache, EvalKey};
+use crate::dse::cache::{EvalCache, EvalKey, ProbeCache};
+use crate::dse::hw::{HwCache, HwEval, HwKey, HwProbeRequest, HwProbeResult};
 use crate::error::{Error, Result};
 use crate::model::ModelState;
+use crate::synth::{self, FpgaDevice};
 use crate::train::{EvalResult, Trainer};
 
 /// One candidate model to evaluate.
@@ -44,28 +47,36 @@ pub struct ProbeResult {
     pub cached: bool,
 }
 
-/// A worker pool + eval memo shared by one search (typically created
-/// per O-task run from [`crate::flow::TaskCtx::jobs`]).
+/// A worker pool + one memo per probe kind, shared by one search
+/// (typically created per O-task run from [`crate::flow::TaskCtx::jobs`]).
 pub struct ProbePool {
     jobs: usize,
     /// `Arc` so one memo can be shared across pools (the multi-flow
     /// explorer deduplicates identical probes across flow variants);
-    /// a pool created via [`ProbePool::new`] owns a private memo.
+    /// a pool created via [`ProbePool::new`] owns private memos.
     cache: Arc<EvalCache>,
+    /// Hardware-probe memo (synthesis estimations), keyed by
+    /// HLS-config fingerprint instead of params fingerprint.
+    hw_cache: Arc<HwCache>,
 }
 
 impl ProbePool {
-    /// Pool with an explicit worker count (clamped to >= 1) and a
-    /// private eval memo.
+    /// Pool with an explicit worker count (clamped to >= 1) and
+    /// private memos for both probe kinds.
     pub fn new(jobs: usize) -> Self {
-        Self::with_cache(jobs, Arc::new(EvalCache::new()))
+        Self::with_caches(jobs, Arc::new(EvalCache::new()), Arc::new(HwCache::new()))
     }
 
-    /// Pool sharing an existing eval memo.  Sharing never changes
-    /// results (a key incorporates every evaluation input), only how
-    /// often a probe is recomputed.
+    /// Pool sharing an existing eval memo (private hardware memo).
+    /// Sharing never changes results (a key incorporates every
+    /// evaluation input), only how often a probe is recomputed.
     pub fn with_cache(jobs: usize, cache: Arc<EvalCache>) -> Self {
-        ProbePool { jobs: jobs.max(1), cache }
+        Self::with_caches(jobs, cache, Arc::new(HwCache::new()))
+    }
+
+    /// Pool sharing existing memos for both probe kinds.
+    pub fn with_caches(jobs: usize, cache: Arc<EvalCache>, hw_cache: Arc<HwCache>) -> Self {
+        ProbePool { jobs: jobs.max(1), cache, hw_cache }
     }
 
     /// Pool sized by `METAML_JOBS` / available parallelism
@@ -80,6 +91,10 @@ impl ProbePool {
 
     pub fn cache(&self) -> &EvalCache {
         &self.cache
+    }
+
+    pub fn hw_cache(&self) -> &HwCache {
+        &self.hw_cache
     }
 
     /// Run `f(0..n)` across the pool's workers; results come back in
@@ -126,37 +141,39 @@ impl ProbePool {
             .collect()
     }
 
-    /// Evaluate a batch of candidate model states concurrently through
-    /// `trainer`, memoizing by [`EvalKey`].
+    /// Memoized batch execution — the shared core of every probe kind.
     ///
     /// Deterministic by construction: cache resolution happens
-    /// sequentially in request order, duplicate requests inside the
-    /// batch collapse onto the first occurrence, and fresh evaluations
-    /// are pure per-candidate work fanned out via [`Self::run_batch`].
-    pub fn evaluate_batch(
+    /// sequentially in request order, duplicate keys inside the batch
+    /// collapse onto the first occurrence, and fresh computations are
+    /// pure per-candidate work fanned out via [`Self::run_batch`]
+    /// (`compute(i)` computes request `i`).  Returns `(result, cached)`
+    /// per request, in request order.
+    pub fn memo_batch<K, V, F>(
         &self,
-        trainer: &Trainer,
-        requests: &[ProbeRequest],
-    ) -> Result<Vec<ProbeResult>> {
-        let keys: Vec<EvalKey> = requests
-            .iter()
-            .map(|r| EvalKey::of(&r.state, &trainer.data.spec))
-            .collect();
-
+        cache: &ProbeCache<K, V>,
+        keys: &[K],
+        compute: F,
+    ) -> Result<Vec<(V, bool)>>
+    where
+        K: Clone + Eq + Hash,
+        V: Clone + Send,
+        F: Fn(usize) -> Result<V> + Sync,
+    {
         // Resolve each request: cached, to-compute, or duplicate of an
         // earlier to-compute entry (mapped to its position in the
         // compute list).
-        enum Resolution {
-            Cached(EvalResult),
+        enum Resolution<V> {
+            Cached(V),
             Compute(usize),
             Duplicate(usize),
         }
-        let mut first_compute: std::collections::HashMap<&EvalKey, usize> =
+        let mut first_compute: std::collections::HashMap<&K, usize> =
             std::collections::HashMap::new();
         let mut compute_idx: Vec<usize> = Vec::new();
-        let mut resolved: Vec<Resolution> = Vec::with_capacity(requests.len());
+        let mut resolved: Vec<Resolution<V>> = Vec::with_capacity(keys.len());
         for (i, key) in keys.iter().enumerate() {
-            if let Some(hit) = self.cache.get(key) {
+            if let Some(hit) = cache.get(key) {
                 resolved.push(Resolution::Cached(hit));
             } else if let Some(&slot) = first_compute.get(key) {
                 resolved.push(Resolution::Duplicate(slot));
@@ -167,27 +184,65 @@ impl ProbePool {
             }
         }
 
-        let fresh: Vec<EvalResult> = self.run_batch(compute_idx.len(), |slot| {
-            trainer.evaluate(&requests[compute_idx[slot]].state)
-        })?;
+        let fresh: Vec<V> =
+            self.run_batch(compute_idx.len(), |slot| compute(compute_idx[slot]))?;
         for (slot, &i) in compute_idx.iter().enumerate() {
-            self.cache.insert(keys[i].clone(), fresh[slot]);
+            cache.insert(keys[i].clone(), fresh[slot].clone());
         }
 
+        Ok(resolved
+            .into_iter()
+            .map(|res| match res {
+                Resolution::Cached(v) => (v, true),
+                Resolution::Compute(slot) => (fresh[slot].clone(), false),
+                Resolution::Duplicate(slot) => (fresh[slot].clone(), true),
+            })
+            .collect())
+    }
+
+    /// Evaluate a batch of candidate model states concurrently through
+    /// `trainer`, memoizing by [`EvalKey`] (the training probe kind).
+    pub fn evaluate_batch(
+        &self,
+        trainer: &Trainer,
+        requests: &[ProbeRequest],
+    ) -> Result<Vec<ProbeResult>> {
+        let keys: Vec<EvalKey> = requests
+            .iter()
+            .map(|r| EvalKey::of(&r.state, &trainer.data.spec))
+            .collect();
+        let out = self.memo_batch(&self.cache, &keys, |i| {
+            trainer.evaluate(&requests[i].state)
+        })?;
         Ok(requests
             .iter()
-            .zip(&resolved)
-            .map(|(req, res)| match *res {
-                Resolution::Cached(eval) => {
-                    ProbeResult { id: req.id, eval, cached: true }
-                }
-                Resolution::Compute(slot) => {
-                    ProbeResult { id: req.id, eval: fresh[slot], cached: false }
-                }
-                Resolution::Duplicate(slot) => {
-                    ProbeResult { id: req.id, eval: fresh[slot], cached: true }
-                }
-            })
+            .zip(out)
+            .map(|(req, (eval, cached))| ProbeResult { id: req.id, eval, cached })
+            .collect())
+    }
+
+    /// Estimate a batch of candidate HLS configurations on `device` at
+    /// `clock_mhz`, memoizing by [`HwKey`] (the hardware probe kind).
+    /// Same pool, same ordering guarantees, same determinism contract
+    /// as [`Self::evaluate_batch`] — only the probe kind differs.
+    pub fn estimate_batch(
+        &self,
+        device: &FpgaDevice,
+        clock_mhz: f64,
+        requests: &[HwProbeRequest],
+    ) -> Result<Vec<HwProbeResult>> {
+        let keys: Vec<HwKey> = requests
+            .iter()
+            .map(|r| HwKey::of(&r.model, device, clock_mhz))
+            .collect();
+        let out = self.memo_batch(&self.hw_cache, &keys, |i| {
+            synth::estimate(&requests[i].model, device, clock_mhz)
+                .map(|r| HwEval::from_report(&r))
+        })?;
+        Ok(requests
+            .iter()
+            .zip(out)
+            .map(|(req, (eval, cached))| HwProbeResult { id: req.id, eval, cached })
             .collect())
     }
 }
@@ -234,5 +289,29 @@ mod tests {
     fn jobs_clamped_to_at_least_one() {
         assert_eq!(ProbePool::new(0).jobs(), 1);
         assert_eq!(ProbePool::new(3).jobs(), 3);
+    }
+
+    #[test]
+    fn memo_batch_dedupes_and_memoizes_generically() {
+        let pool = ProbePool::new(4);
+        let cache: ProbeCache<u32, u64> = ProbeCache::new();
+        let calls = AtomicUsize::new(0);
+        let keys = vec![1u32, 2, 1, 3, 2];
+        let out = pool
+            .memo_batch(&cache, &keys, |i| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                Ok(keys[i] as u64 * 10)
+            })
+            .unwrap();
+        assert_eq!(
+            out,
+            vec![(10, false), (20, false), (10, true), (30, false), (20, true)]
+        );
+        // duplicates collapsed onto one computation each
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        assert_eq!(cache.len(), 3);
+        // a second pass is served entirely from the memo
+        let again = pool.memo_batch(&cache, &[1u32], |_| unreachable!()).unwrap();
+        assert_eq!(again, vec![(10, true)]);
     }
 }

@@ -20,11 +20,10 @@
 //! and wall-clock data (durations) goes to the LOG side-note table,
 //! never the event stream.
 
-use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::FlowSpec;
-use crate::dse::EvalCache;
+use crate::dse::DseCaches;
 use crate::error::{Error, Result};
 use crate::flow::graph::{EdgeGuard, FlowGraph, FlowPlan, NodeId, NodeKind, StrategyArm};
 use crate::flow::registry::TaskRegistry;
@@ -36,9 +35,10 @@ pub struct Engine<'a> {
     pub session: &'a Session,
     pub registry: &'a TaskRegistry,
     /// When set (multi-flow exploration), every O-task probe pool in
-    /// this engine shares one memoizing eval cache, deduplicating
-    /// identical candidate evaluations across flow variants.
-    shared_cache: Option<Arc<EvalCache>>,
+    /// this engine shares one memo per probe kind (training *and*
+    /// hardware), deduplicating identical candidate evaluations across
+    /// flow variants.
+    shared_cache: Option<DseCaches>,
 }
 
 impl<'a> Engine<'a> {
@@ -46,14 +46,14 @@ impl<'a> Engine<'a> {
         Engine { session, registry, shared_cache: None }
     }
 
-    /// Engine whose tasks share `cache` for probe memoization (used by
+    /// Engine whose tasks share `caches` for probe memoization (used by
     /// [`crate::flow::explore`] to deduplicate across variants).
     pub fn with_cache(
         session: &'a Session,
         registry: &'a TaskRegistry,
-        cache: Arc<EvalCache>,
+        caches: DseCaches,
     ) -> Self {
-        Engine { session, registry, shared_cache: Some(cache) }
+        Engine { session, registry, shared_cache: Some(caches) }
     }
 
     /// Execute `graph` against `meta`. Returns the per-node outcomes of
@@ -155,27 +155,47 @@ impl<'a> Engine<'a> {
             outcomes[node_id] = outcome;
 
             // back edge whose source is this node and which still has
-            // budget fires if the task requested iteration
+            // budget: an unguarded edge fires when the task requested
+            // iteration; a guarded edge fires when its predicate holds
+            // against the meta-model — the cross-stage feedback path
+            // ("VIVADO-HLS → QUANTIZATION when synth.dsp > budget")
             let mut jumped = false;
-            if iterate {
-                for (i, be) in graph.back_edges().iter().enumerate() {
-                    if be.from == node_id && budgets[i] > 0 {
-                        budgets[i] -= 1;
-                        meta.log.push(LogEvent::IterationAdvanced {
-                            task: instance.clone(),
-                            iteration: be.max_iters - budgets[i],
-                        });
-                        // O(1) jump via the precomputed position map;
-                        // the re-executed range starts a fresh pass
-                        let target = plan.pos[be.to];
-                        for &v in &plan.order[target..=pc] {
-                            ran[v] = false;
-                        }
-                        pc = target;
-                        jumped = true;
-                        break;
-                    }
+            for (i, be) in graph.back_edges().iter().enumerate() {
+                if be.from != node_id || budgets[i] == 0 {
+                    continue;
                 }
+                let fire = match &be.when {
+                    None => iterate,
+                    Some(g) => {
+                        let value = eval_guard(meta, prefix, g)?;
+                        let taken = g.op.apply(value, g.value);
+                        meta.log.push(LogEvent::EdgeEvaluated {
+                            from: instance.clone(),
+                            to: format!("{prefix}{}", graph.node(be.to)?.instance),
+                            metric: g.metric.clone(),
+                            value,
+                            taken,
+                        });
+                        taken
+                    }
+                };
+                if !fire {
+                    continue;
+                }
+                budgets[i] -= 1;
+                meta.log.push(LogEvent::IterationAdvanced {
+                    task: instance.clone(),
+                    iteration: be.max_iters - budgets[i],
+                });
+                // O(1) jump via the precomputed position map;
+                // the re-executed range starts a fresh pass
+                let target = plan.pos[be.to];
+                for &v in &plan.order[target..=pc] {
+                    ran[v] = false;
+                }
+                pc = target;
+                jumped = true;
+                break;
             }
             if !jumped {
                 pc += 1;

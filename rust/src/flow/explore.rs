@@ -17,12 +17,14 @@
 //!
 //! [`expand_variants`] takes the cartesian product (orders ×
 //! cfg-grid points), [`explore`] runs every variant's full flow
-//! concurrently on a [`ProbePool`] — cloned `MetaModel`s against the
-//! shared `Send + Sync` [`Session`], one shared [`EvalCache`] so
-//! identical candidate evaluations dedupe across variants — and
+//! concurrently on a [`crate::dse::ProbePool`] — cloned `MetaModel`s
+//! against the shared `Send + Sync` [`Session`], one shared memo per
+//! probe kind ([`DseCaches`]) so identical candidate evaluations —
+//! training probes and hardware-synthesis probes alike — dedupe across
+//! variants — and
 //! [`pareto_front`] reports the non-dominated set over
-//! (accuracy ↑, DSP ↓, LUT ↓) pulled from each variant's final RTL
-//! report ([`crate::synth::estimate`]).
+//! (accuracy ↑, DSP ↓, LUT ↓, latency ↓) pulled from each variant's
+//! final RTL report ([`crate::synth::estimate`]).
 //!
 //! **Determinism:** variants expand in declaration order, results come
 //! back in request order whatever the worker interleaving, every
@@ -31,10 +33,9 @@
 //! the printed front is identical for every `--jobs` value.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
 
 use crate::config::FlowSpec;
-use crate::dse::{EvalCache, ProbePool};
+use crate::dse::DseCaches;
 use crate::error::{Error, Result};
 use crate::flow::graph::{FlowGraph, NodeKind};
 use crate::flow::registry::TaskRegistry;
@@ -136,7 +137,7 @@ impl VariantResult {
         self.metrics.get(name).copied()
     }
 
-    fn objectives(&self) -> Result<(f64, f64, f64)> {
+    fn objectives(&self) -> Result<(f64, f64, f64, f64)> {
         let m = |name: &str| {
             self.metric(name).ok_or_else(|| {
                 Error::Flow(format!(
@@ -145,7 +146,7 @@ impl VariantResult {
                 ))
             })
         };
-        Ok((m("accuracy")?, m("dsp")?, m("lut")?))
+        Ok((m("accuracy")?, m("dsp")?, m("lut")?, m("latency_ns")?))
     }
 }
 
@@ -321,8 +322,8 @@ pub fn explore_variants(
     let concurrent = jobs.min(unique.len()).max(1);
     let inner_jobs = (jobs / concurrent).max(1);
 
-    let shared = Arc::new(EvalCache::new());
-    let pool = ProbePool::with_cache(concurrent, shared.clone());
+    let shared = DseCaches::new();
+    let pool = shared.pool(concurrent);
     let ran: Vec<VariantResult> = pool.run_batch(unique.len(), |slot| {
         let variant = &variants[unique[slot]];
         let engine = Engine::with_cache(session, registry, shared.clone());
@@ -365,15 +366,20 @@ pub fn explore_variants(
     Ok(ExploreOutcome { results, front })
 }
 
-/// Non-dominated set over (accuracy ↑, DSP ↓, LUT ↓), as ascending
-/// indices.  A point is dominated when another is no worse on every
-/// objective and strictly better on at least one.
-pub fn pareto_front(points: &[(f64, f64, f64)]) -> Vec<usize> {
-    let dominates = |a: &(f64, f64, f64), b: &(f64, f64, f64)| {
+/// Non-dominated set over (accuracy ↑, DSP ↓, LUT ↓, latency ↓), as
+/// ascending indices.  A point is dominated when another is no worse on
+/// every objective and strictly better on at least one.  Latency is an
+/// objective in its own right: hardware grid dimensions (reuse factors,
+/// IO architectures) trade resources *against* latency at identical
+/// accuracy, a trade a resource-only front would collapse to its
+/// cheapest point.
+pub fn pareto_front(points: &[(f64, f64, f64, f64)]) -> Vec<usize> {
+    let dominates = |a: &(f64, f64, f64, f64), b: &(f64, f64, f64, f64)| {
         a.0 >= b.0
             && a.1 <= b.1
             && a.2 <= b.2
-            && (a.0 > b.0 || a.1 < b.1 || a.2 < b.2)
+            && a.3 <= b.3
+            && (a.0 > b.0 || a.1 < b.1 || a.2 < b.2 || a.3 < b.3)
     };
     (0..points.len())
         .filter(|&i| !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i])))
@@ -432,22 +438,30 @@ mod tests {
 
     #[test]
     fn pareto_front_basics() {
-        // (acc, dsp, lut)
+        // (acc, dsp, lut, latency_ns)
         let pts = vec![
-            (0.76, 100.0, 5000.0), // on front (best acc)
-            (0.75, 40.0, 2000.0),  // on front (cheap, nearly as good)
-            (0.74, 120.0, 6000.0), // dominated by 0 and 1
-            (0.70, 40.0, 2000.0),  // dominated by 1
+            (0.76, 100.0, 5000.0, 50.0), // on front (best acc)
+            (0.75, 40.0, 2000.0, 50.0),  // on front (cheap, nearly as good)
+            (0.74, 120.0, 6000.0, 60.0), // dominated by 0 and 1
+            (0.70, 40.0, 2000.0, 50.0),  // dominated by 1
         ];
         assert_eq!(pareto_front(&pts), vec![0, 1]);
     }
 
     #[test]
+    fn pareto_front_keeps_latency_tradeoff() {
+        // identical accuracy: a high-reuse variant (cheap, slow) and a
+        // fully-unrolled one (expensive, fast) are both non-dominated
+        let pts = vec![(0.75, 200.0, 9000.0, 40.0), (0.75, 30.0, 1500.0, 160.0)];
+        assert_eq!(pareto_front(&pts), vec![0, 1]);
+    }
+
+    #[test]
     fn pareto_front_keeps_ties() {
-        let pts = vec![(0.5, 10.0, 10.0), (0.5, 10.0, 10.0)];
+        let pts = vec![(0.5, 10.0, 10.0, 1.0), (0.5, 10.0, 10.0, 1.0)];
         assert_eq!(pareto_front(&pts), vec![0, 1]);
         assert!(pareto_front(&[]).is_empty());
-        assert_eq!(pareto_front(&[(0.1, 1.0, 1.0)]), vec![0]);
+        assert_eq!(pareto_front(&[(0.1, 1.0, 1.0, 1.0)]), vec![0]);
     }
 
     #[test]

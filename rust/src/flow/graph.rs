@@ -10,7 +10,10 @@
 //!   child flows of which exactly one is selected and executed at
 //!   runtime (first arm whose `when` guard passes; an arm without a
 //!   guard is the unconditional default).
-//! * Back edges are unchanged: bounded re-execution of a sub-path.
+//! * Back edges drive bounded re-execution of a sub-path; a guarded
+//!   back edge fires on its metric predicate instead of a task-side
+//!   iteration request (cross-stage feedback, e.g. hardware results
+//!   re-triggering a DNN-stage search).
 //!
 //! The graph is pure structure; all evaluation (guards, arm selection,
 //! skipping) happens in [`crate::flow::Engine`], which logs every
@@ -138,12 +141,21 @@ impl FlowNode {
 }
 
 /// A back edge enabling iteration (cyclic design flows, paper §III).
-#[derive(Debug, Clone, Copy)]
+///
+/// An unguarded back edge fires when its source task requests another
+/// pass (`TaskOutcome::request_iteration`).  A guarded back edge fires
+/// when its predicate holds against the meta-model after the source
+/// node runs — the spec-level way to express cross-stage feedback like
+/// "VIVADO-HLS → QUANTIZATION while `synth.dsp` exceeds the budget".
+/// Both are bounded by `max_iters`.
+#[derive(Debug, Clone)]
 pub struct BackEdge {
     pub from: NodeId,
     pub to: NodeId,
     /// Hard bound on re-executions of the enclosed sub-path.
     pub max_iters: usize,
+    /// Optional firing predicate (metric-driven iteration).
+    pub when: Option<EdgeGuard>,
 }
 
 /// Everything the engine precomputes from one validation pass: the
@@ -292,7 +304,23 @@ impl FlowGraph {
     pub fn connect_back(&mut self, from: NodeId, to: NodeId, max_iters: usize) -> Result<()> {
         self.check_node(from)?;
         self.check_node(to)?;
-        self.back_edges.push(BackEdge { from, to, max_iters });
+        self.back_edges.push(BackEdge { from, to, max_iters, when: None });
+        Ok(())
+    }
+
+    /// Add a guarded back edge: fires (while budget remains) whenever
+    /// `guard` holds after the source node runs, independent of the
+    /// task's own iteration request.
+    pub fn connect_back_when(
+        &mut self,
+        from: NodeId,
+        to: NodeId,
+        max_iters: usize,
+        guard: EdgeGuard,
+    ) -> Result<()> {
+        self.check_node(from)?;
+        self.check_node(to)?;
+        self.back_edges.push(BackEdge { from, to, max_iters, when: Some(guard) });
         Ok(())
     }
 

@@ -34,6 +34,7 @@ impl TaskRegistry {
         r.register("SCALING", || Box::new(tasks::ScalingTask));
         r.register("QUANTIZATION", || Box::new(tasks::QuantizationTask));
         r.register("HLS4ML", || Box::new(tasks::Hls4mlTask));
+        r.register("REUSE_SEARCH", || Box::new(tasks::ReuseSearchTask));
         r.register("VIVADO-HLS", || Box::new(tasks::VivadoHlsTask));
         r
     }
@@ -128,6 +129,7 @@ mod tests {
             "SCALING",
             "QUANTIZATION",
             "HLS4ML",
+            "REUSE_SEARCH",
             "VIVADO-HLS",
         ] {
             assert!(r.create(name).is_ok(), "{name} missing");

@@ -1,8 +1,6 @@
 //! The pipe task abstraction (paper §III–IV, Table I).
 
-use std::sync::Arc;
-
-use crate::dse::{EvalCache, ProbePool};
+use crate::dse::{DseCaches, ProbePool};
 use crate::error::Result;
 use crate::flow::session::Session;
 use crate::metamodel::MetaModel;
@@ -56,10 +54,11 @@ pub struct TaskCtx<'a> {
     pub session: &'a Session,
     /// Task-instance id (CFG namespace and LOG attribution).
     pub instance: String,
-    /// Engine-provided eval memo shared across the whole run (set by
-    /// the multi-flow explorer so identical probes dedupe across
-    /// variants); `None` = each task memoizes privately.
-    pub shared_cache: Option<Arc<EvalCache>>,
+    /// Engine-provided probe memos (one per probe kind) shared across
+    /// the whole run (set by the multi-flow explorer so identical
+    /// probes dedupe across variants); `None` = each task memoizes
+    /// privately.
+    pub shared_cache: Option<DseCaches>,
 }
 
 impl<'a> TaskCtx<'a> {
@@ -98,13 +97,24 @@ impl<'a> TaskCtx<'a> {
     }
 
     /// The DSE probe pool for this task run: sized by [`Self::jobs`],
-    /// backed by the engine's shared eval cache when one is active
-    /// (multi-flow exploration) or a private memo otherwise.
+    /// backed by the engine's shared probe memos when they are active
+    /// (multi-flow exploration) or private memos otherwise.
     pub fn probe_pool(&self) -> ProbePool {
         match &self.shared_cache {
-            Some(cache) => ProbePool::with_cache(self.jobs(), cache.clone()),
+            Some(caches) => caches.pool(self.jobs()),
             None => ProbePool::new(self.jobs()),
         }
+    }
+
+    /// How many times this task instance has started in the current
+    /// flow run, counting the in-progress execution (>= 1 inside
+    /// [`PipeTask::run`]).  Lets tasks escalate their configuration on
+    /// back-edge re-executions — e.g. QUANTIZATION widening α_q each
+    /// time a VIVADO-HLS → QUANTIZATION back edge fires — while staying
+    /// stateless and replay-deterministic (the count is derived from
+    /// the LOG event stream, never from wall-clock state).
+    pub fn runs_started(&self) -> usize {
+        self.meta.log.count_task_started(&self.instance)
     }
 
     pub fn log_metric(&mut self, name: &str, value: f64) {

@@ -60,6 +60,42 @@ impl HlsLayer {
         matches!(self.kind, HlsLayerKind::Dense | HlsLayerKind::Conv2D)
     }
 
+    /// MAC fan-in of the layer: inputs accumulated per output element
+    /// (kernel²·channels for conv, n_in for dense).
+    pub fn fan_in(&self) -> usize {
+        match self.kind {
+            HlsLayerKind::Conv2D => (self.kernel * self.kernel * self.n_in).max(1),
+            _ => self.n_in.max(1),
+        }
+    }
+
+    /// Is `rf` a legal reuse factor for this layer?  hls4ml's rule:
+    /// the MAC loop is split into `rf` equal passes, so `rf` must
+    /// divide the fan-in exactly (RF = 1 is always legal).
+    pub fn reuse_legal(&self, rf: usize) -> bool {
+        rf >= 1 && self.fan_in() % rf == 0
+    }
+
+    /// All legal reuse factors, ascending (the divisors of the fan-in).
+    pub fn legal_reuse_factors(&self) -> Vec<usize> {
+        let fan = self.fan_in();
+        (1..=fan).filter(|rf| fan % rf == 0).collect()
+    }
+
+    /// Next larger legal reuse factor after the current one, if any
+    /// (the reuse search's per-layer step).
+    pub fn next_reuse_factor(&self) -> Option<usize> {
+        let fan = self.fan_in();
+        (self.reuse_factor + 1..=fan).find(|&rf| fan % rf == 0)
+    }
+
+    /// Largest legal reuse factor <= `want` (>= 1) — how requested
+    /// factors snap onto the legality grid.
+    pub fn snap_reuse_factor(&self, want: usize) -> usize {
+        let fan = self.fan_in();
+        (1..=want.max(1).min(fan)).rev().find(|&rf| fan % rf == 0).unwrap_or(1)
+    }
+
     /// Effective multiplier count: one multiplier per nonzero weight.
     ///
     /// Dense RF=1 fully unrolls (hls4ml io_parallel).  Conv instantiates
@@ -224,6 +260,36 @@ impl HlsModel {
         })
     }
 
+    /// Validate the hardware configuration: every compute layer's
+    /// reuse factor must be >= 1 and divide its fan-in.  An IR built
+    /// directly (bypassing the snapping transforms) with RF = 0 would
+    /// otherwise reach the estimator's divisions unchecked.
+    pub fn validate(&self) -> Result<()> {
+        for l in self.compute_layers() {
+            if l.reuse_factor == 0 {
+                return Err(Error::Synth(format!(
+                    "layer {:?}: reuse_factor must be >= 1",
+                    l.name
+                )));
+            }
+            if !l.reuse_legal(l.reuse_factor) {
+                return Err(Error::Synth(format!(
+                    "layer {:?}: reuse_factor {} does not divide fan-in {}",
+                    l.name,
+                    l.reuse_factor,
+                    l.fan_in()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Largest reuse factor across compute layers (the design's
+    /// initiation interval under II = RF pipelining).
+    pub fn max_reuse_factor(&self) -> usize {
+        self.compute_layers().map(|l| l.reuse_factor).max().unwrap_or(1)
+    }
+
     pub fn compute_layers(&self) -> impl Iterator<Item = &HlsLayer> {
         self.layers.iter().filter(|l| l.is_compute())
     }
@@ -295,5 +361,33 @@ pub(crate) mod tests {
         assert_eq!(m.total_multipliers(), 1024 + 160);
         assert_eq!(m.layers[1].density(), 0.5);
         assert_eq!(m.compute_layer_indices(), vec![0, 1]);
+    }
+
+    #[test]
+    fn reuse_factor_legality_is_divisors_of_fan_in() {
+        let m = toy_model();
+        let fc1 = &m.layers[0]; // fan-in 16
+        assert_eq!(fc1.fan_in(), 16);
+        assert_eq!(fc1.legal_reuse_factors(), vec![1, 2, 4, 8, 16]);
+        assert!(fc1.reuse_legal(4));
+        assert!(!fc1.reuse_legal(3));
+        assert!(!fc1.reuse_legal(0));
+        assert_eq!(fc1.next_reuse_factor(), Some(2));
+        assert_eq!(fc1.snap_reuse_factor(3), 2);
+        assert_eq!(fc1.snap_reuse_factor(100), 16);
+        assert_eq!(fc1.snap_reuse_factor(0), 1);
+    }
+
+    #[test]
+    fn validate_rejects_zero_and_non_divisor_reuse() {
+        let mut m = toy_model();
+        assert!(m.validate().is_ok());
+        m.layers[0].reuse_factor = 0;
+        assert!(m.validate().is_err());
+        m.layers[0].reuse_factor = 3; // does not divide 16
+        assert!(m.validate().is_err());
+        m.layers[0].reuse_factor = 8;
+        assert!(m.validate().is_ok());
+        assert_eq!(m.max_reuse_factor(), 8);
     }
 }

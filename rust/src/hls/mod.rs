@@ -17,4 +17,6 @@ pub mod ir;
 pub mod transform;
 
 pub use ir::{HlsLayer, HlsLayerKind, HlsModel, IoType};
-pub use transform::{FoldZeroWeights, HlsTransform, PassManager, SetPrecision, SetReuseFactor};
+pub use transform::{
+    FoldZeroWeights, HlsTransform, PassManager, SetLayerReuse, SetPrecision, SetReuseFactor,
+};

@@ -102,6 +102,9 @@ impl HlsTransform for FoldZeroWeights {
 }
 
 /// Set the reuse factor (time-multiplexing) of all compute layers.
+/// The requested factor snaps per layer onto the legality grid (the
+/// largest divisor of the layer's fan-in that is <= the request, >= 1)
+/// — hls4ml's "closest valid reuse factor" behaviour.
 pub struct SetReuseFactor(pub usize);
 
 impl HlsTransform for SetReuseFactor {
@@ -112,8 +115,32 @@ impl HlsTransform for SetReuseFactor {
     fn apply(&self, model: &mut HlsModel) -> Result<usize> {
         let mut n = 0;
         for l in model.layers.iter_mut().filter(|l| l.is_compute()) {
-            l.reuse_factor = self.0.max(1);
+            l.reuse_factor = l.snap_reuse_factor(self.0);
             n += 1;
+        }
+        Ok(n)
+    }
+}
+
+/// Set one layer's reuse factor (snapped to its legality grid) — the
+/// per-layer rewrite the REUSE_SEARCH O-task applies to its winner.
+pub struct SetLayerReuse {
+    pub layer: String,
+    pub reuse_factor: usize,
+}
+
+impl HlsTransform for SetLayerReuse {
+    fn name(&self) -> &str {
+        "set-layer-reuse"
+    }
+
+    fn apply(&self, model: &mut HlsModel) -> Result<usize> {
+        let mut n = 0;
+        for l in model.layers.iter_mut().filter(|l| l.is_compute()) {
+            if l.name == self.layer {
+                l.reuse_factor = l.snap_reuse_factor(self.reuse_factor);
+                n += 1;
+            }
         }
         Ok(n)
     }
@@ -161,5 +188,28 @@ mod tests {
         assert_eq!(log.len(), 2);
         assert_eq!(log[0], ("set-precision".to_string(), 2));
         assert!(m.layers.iter().all(|l| l.reuse_factor == 4));
+    }
+
+    #[test]
+    fn set_reuse_snaps_to_legal_divisors() {
+        let mut m = toy_model(); // fan-ins 16 and 64
+        SetReuseFactor(6).apply(&mut m).unwrap();
+        assert_eq!(m.layers[0].reuse_factor, 4); // largest divisor of 16 <= 6
+        assert_eq!(m.layers[1].reuse_factor, 4); // largest divisor of 64 <= 6
+        SetReuseFactor(0).apply(&mut m).unwrap();
+        assert!(m.layers.iter().all(|l| l.reuse_factor == 1));
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn set_layer_reuse_targets_one_layer() {
+        let mut m = toy_model();
+        let n = SetLayerReuse { layer: "out".into(), reuse_factor: 64 }
+            .apply(&mut m)
+            .unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(m.layers[0].reuse_factor, 1);
+        assert_eq!(m.layers[1].reuse_factor, 64);
+        assert!(m.validate().is_ok());
     }
 }

@@ -10,7 +10,9 @@
 //!
 //! * **O-tasks** optimize a model: [tasks::PruningTask] (auto binary-search
 //!   magnitude pruning), [tasks::ScalingTask] (layer-width search),
-//!   [tasks::QuantizationTask] (HLS-level mixed-precision walk);
+//!   [tasks::QuantizationTask] (HLS-level mixed-precision walk) in the DNN
+//!   stage, and [tasks::ReuseSearchTask] (per-layer reuse-factor search
+//!   against the synthesis estimator) in the FPGA stage;
 //! * **λ-tasks** transform between abstractions: [tasks::ModelGenTask]
 //!   (train a DNN via the PJRT runtime), [tasks::Hls4mlTask] (DNN → HLS
 //!   C++ model), [tasks::VivadoHlsTask] (HLS → RTL resource/latency report).
@@ -34,15 +36,17 @@
 //!
 //! The substrate is `Send + Sync` end to end, and the O-task searches
 //! fan their candidate probes out across the [dse::ProbePool] — a
-//! scoped-thread worker pool with a memoizing eval cache that keeps
-//! results bit-identical to sequential execution (see [dse]).
+//! scoped-thread worker pool generic over probe kinds (training probes
+//! through the trainer, hardware probes through the synthesis
+//! estimator), each with a memoizing cache that keeps results
+//! bit-identical to sequential execution (see [dse]).
 //!
 //! The flow layer is a composable IR: specs declare conditional edges
 //! (guards over meta-model metrics), strategy (S-task) nodes selecting
 //! among child flows at runtime, and embedded sub-flows; the engine is
 //! a small control-flow VM logging every branch decision, and
 //! [flow::explore] runs whole *flow-architecture* grids concurrently,
-//! reporting a deterministic (accuracy, DSP, LUT) Pareto front.
+//! reporting a deterministic (accuracy, DSP, LUT, latency) Pareto front.
 
 pub mod baselines;
 pub mod bench_support;

@@ -55,11 +55,15 @@ COMMANDS:
   explore     --flow <spec.json> [--model <name>] [--jobs N] [--synthetic]
               [-c k=v]...       expand the spec's `explore` variant grid,
                                 run every flow variant concurrently and
-                                print the (accuracy, DSP, LUT) Pareto
+                                print the (accuracy, DSP, LUT,
+                                latency) Pareto
                                 front; --synthetic uses the in-memory jet
                                 manifest (no artifacts needed); a CSV of
                                 the front lands in report/
-  synth       --model <name> [--scale S]                HLS+RTL report
+  synth       --model <name> [--scale S] [--device D] [--clock NS]
+              [--reuse RF]   HLS+RTL report with fit/utilization; --clock
+                             sets the target period (ns), --reuse the
+                             initial reuse factor (snapped per layer)
   help                          this message
 
 Artifacts are read from ./artifacts (build with `make artifacts`).
@@ -407,7 +411,7 @@ fn cmd_explore(args: &[String]) -> Result<()> {
 
     let outcome = explore_variants(&session, &registry, &variants, &extra, jobs)?;
 
-    println!("\nPareto front over (accuracy, DSP, LUT):\n");
+    println!("\nPareto front over (accuracy, DSP, LUT, latency):\n");
     print!("{}", front_table(&outcome).render());
     println!(
         "\n{} of {} variants on the front:",
@@ -435,7 +439,13 @@ fn cmd_synth(args: &[String]) -> Result<()> {
     check_flags(
         "synth",
         args,
-        &[("--model", true), ("--scale", true), ("--device", true)],
+        &[
+            ("--model", true),
+            ("--scale", true),
+            ("--device", true),
+            ("--clock", true),
+            ("--reuse", true),
+        ],
     )?;
     use metaml::flow::{Engine, TaskRegistry};
     use metaml::metamodel::MetaModel;
@@ -443,6 +453,18 @@ fn cmd_synth(args: &[String]) -> Result<()> {
     let model = opt(args, "--model").unwrap_or_else(|| "jet_dnn".into());
     let scale: f64 = parse_opt(args, "--scale")?.unwrap_or(1.0);
     let device = opt(args, "--device").unwrap_or_else(|| "vu9p".into());
+    // hardware-stage overrides: target clock period (ns) and initial
+    // reuse factor (snapped per layer to a legal divisor of the fan-in)
+    let clock: Option<f64> = parse_opt(args, "--clock")?;
+    if let Some(c) = clock {
+        if c <= 0.0 {
+            return Err(metaml::Error::other("--clock must be a positive period in ns"));
+        }
+    }
+    let reuse: Option<usize> = parse_opt(args, "--reuse")?;
+    if reuse == Some(0) {
+        return Err(metaml::Error::other("--reuse must be at least 1"));
+    }
 
     let session = metaml::flow::Session::open(&artifacts_dir())?;
     let registry = TaskRegistry::builtin();
@@ -450,13 +472,29 @@ fn cmd_synth(args: &[String]) -> Result<()> {
     meta.cfg.set("model", model);
     meta.cfg.set("scale", scale);
     meta.cfg.set("FPGA_part_number", device);
+    if let Some(c) = clock {
+        meta.cfg.set("clock_period", c);
+    }
+    if let Some(r) = reuse {
+        meta.cfg.set("reuse_factor", r);
+    }
     let spec = metaml::config::builtin_flow("baseline")?;
     Engine::new(&session, &registry).run_spec(&spec, &mut meta)?;
     let rtl = meta
         .space
         .latest(metaml::metamodel::Abstraction::Rtl)
         .ok_or_else(|| metaml::Error::other("no RTL artifact produced"))?;
-    println!("{}", metaml::synth::report::render(rtl.rtl()?));
+    let report = rtl.rtl()?;
+    println!("{}", metaml::synth::report::render(report));
+    println!(
+        "fit: {}  (DSP {:.1}%, LUT {:.1}%, FF {:.1}%, BRAM {:.1}%)  II = {}",
+        if report.fits() { "YES" } else { "NO" },
+        report.dsp_pct(),
+        report.lut_pct(),
+        report.ff_pct(),
+        report.bram_pct(),
+        report.ii,
+    );
     Ok(())
 }
 
@@ -522,6 +560,24 @@ mod tests {
     fn option_on_optionless_command_rejected() {
         let err = check_flags("smoke", &s(&["--fast"]), &[]).unwrap_err().to_string();
         assert!(err.contains("takes no options"), "{err}");
+    }
+
+    #[test]
+    fn synth_hw_flags_validate_with_hint() {
+        const SYNTH: &[(&str, bool)] = &[
+            ("--model", true),
+            ("--scale", true),
+            ("--device", true),
+            ("--clock", true),
+            ("--reuse", true),
+        ];
+        let ok = s(&["--device", "zynq7020", "--clock", "10", "--reuse", "4"]);
+        assert!(check_flags("synth", &ok, SYNTH).is_ok());
+        // typo gets the did-you-mean hint like every other subcommand
+        let err = check_flags("synth", &s(&["--reus", "4"]), SYNTH)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--reuse"), "{err}");
     }
 
     #[test]

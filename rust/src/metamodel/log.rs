@@ -141,6 +141,17 @@ impl ExecLog {
             .collect()
     }
 
+    /// How many times `task` has started in this flow run (back-edge
+    /// re-executions increment it).  Derived purely from the
+    /// replay-comparable event stream, so tasks that escalate their
+    /// configuration per iteration stay deterministic.
+    pub fn count_task_started(&self, task: &str) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| matches!(&e.event, LogEvent::TaskStarted { task: t } if t == task))
+            .count()
+    }
+
     /// Latest metric value named `name` recorded by `task`.
     pub fn latest_metric(&self, task: &str, name: &str) -> Option<f64> {
         self.entries.iter().rev().find_map(|e| match &e.event {

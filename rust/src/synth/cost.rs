@@ -83,17 +83,73 @@ pub fn ff_estimate(luts: f64, dsps: f64) -> f64 {
 /// compressed 6:1 accumulation tree over the *effective* (post-pruning)
 /// fan-in — this is what makes latency drop as pruning/scaling progress
 /// (Table II: 14 cycles baseline → 9 cycles after S→P→Q).
-pub fn layer_cycles(p: Precision, fan_in: usize, density: f64, spatial_iters: usize) -> usize {
+///
+/// `reuse_factor` time-multiplexes the MAC array: the fan-in is split
+/// into RF equal passes issued back-to-back (II = RF), each reducing
+/// `fan_in / RF` products through a correspondingly shallower tree, so
+/// latency grows (weakly) monotonically with RF while the multiplier
+/// count shrinks.  RF = 1 reproduces the fully-unrolled depth exactly.
+pub fn layer_cycles(
+    p: Precision,
+    fan_in: usize,
+    density: f64,
+    spatial_iters: usize,
+    reuse_factor: usize,
+) -> usize {
     let eff_fan = ((fan_in as f64 * density).ceil() as usize).max(1);
+    let rf = reuse_factor.max(1);
+    let per_pass = eff_fan.div_ceil(rf);
     let mult = if effective_bits(p) > 18 { 2 } else { 1 };
-    let tree = if eff_fan <= 1 {
+    let tree = if per_pass <= 1 {
         0
     } else {
-        ((eff_fan as f64).log2() / 6.0_f64.log2()).ceil() as usize
+        ((per_pass as f64).log2() / 6.0_f64.log2()).ceil() as usize
     };
-    // conv reuses the MAC array across positions: II=1 pipeline, the
-    // positions overlap, adding their count once to the layer's depth
-    mult + tree + spatial_iters.saturating_sub(1)
+    // RF serial passes; each pass costs at least the partial-sum
+    // accumulation cycle even when its tree is degenerate
+    let acc = if rf > 1 { rf * tree.max(1) } else { tree };
+    // conv reuses the MAC array across positions: the positions overlap
+    // in an II=RF pipeline, so each extra position re-issues every RF
+    // cycles (one extra cycle each when fully unrolled)
+    mult + acc + spatial_iters.saturating_sub(1) * rf
+}
+
+/// Extra LUTs for the partial-sum accumulators a time-multiplexed
+/// (RF > 1) layer needs: one `acc_bits`-wide accumulating adder per
+/// output, packed ~2 bits/LUT (fully-unrolled RF = 1 designs fold the
+/// accumulation into the tree and pay nothing).
+///
+/// This fixed per-output cost means the "RF ↑ ⇒ LUT ↓" trend holds for
+/// dense and moderately-pruned layers (where halving the multiplier
+/// and adder-tree counts dominates) but can invert for heavily-pruned
+/// DSP-mapped layers, whose per-multiplier LUT share is only the small
+/// interconnect constant — on such layers raising RF buys little and
+/// the greedy reuse search correctly declines to step.
+pub fn lut_partial_sum(n_out: usize, acc_bits: u32, reuse_factor: usize) -> f64 {
+    if reuse_factor > 1 {
+        n_out as f64 * (acc_bits as f64 / 2.0)
+    } else {
+        0.0
+    }
+}
+
+/// BRAM18K blocks for weight storage of a time-multiplexed layer.
+/// Fully-unrolled (RF = 1) layers bake weights into the fabric as
+/// constants; at RF > 1 the surviving weights live in block RAM and are
+/// streamed into the MAC array pass by pass.
+pub fn bram_weights(nnz: usize, bits: u32, reuse_factor: usize) -> f64 {
+    if reuse_factor > 1 {
+        ((nnz as f64 * bits as f64) / 18_432.0).ceil()
+    } else {
+        0.0
+    }
+}
+
+/// BRAM18K blocks for one `io_stream` FIFO edge carrying `words`
+/// elements of `bits` each (hls4ml dataflow FIFOs; at least one block
+/// per stream).  `io_parallel` designs pay nothing here.
+pub fn bram_stream_fifo(words: usize, bits: u32) -> f64 {
+    ((words.max(1) as f64 * bits as f64) / 18_432.0).ceil().max(1.0)
 }
 
 /// Cycles for the softmax head (hls4ml table-based softmax).
@@ -137,10 +193,10 @@ mod tests {
     #[test]
     fn latency_drops_with_pruning() {
         let p = Precision::new(18, 8);
-        let full = layer_cycles(p, 64, 1.0, 1);
-        let pruned = layer_cycles(p, 64, 0.1, 1);
+        let full = layer_cycles(p, 64, 1.0, 1, 1);
+        let pruned = layer_cycles(p, 64, 0.1, 1, 1);
         assert!(pruned < full, "{pruned} !< {full}");
-        assert!(layer_cycles(p, 1, 1.0, 1) >= 1);
+        assert!(layer_cycles(p, 1, 1.0, 1, 1) >= 1);
     }
 
     #[test]
@@ -150,10 +206,34 @@ mod tests {
         let p = Precision::new(18, 8);
         let total: usize = [16usize, 64, 32, 32]
             .iter()
-            .map(|&f| layer_cycles(p, f, 1.0, 1))
+            .map(|&f| layer_cycles(p, f, 1.0, 1, 1))
             .sum::<usize>()
             + SOFTMAX_CYCLES;
         assert!((13..=16).contains(&total), "total {total}");
+    }
+
+    #[test]
+    fn reuse_grows_latency_monotonically() {
+        let p = Precision::new(18, 8);
+        let mut prev = 0usize;
+        for rf in [1usize, 2, 4, 8, 16, 32, 64] {
+            let c = layer_cycles(p, 64, 1.0, 1, rf);
+            assert!(c >= prev, "rf {rf}: {c} < {prev}");
+            prev = c;
+        }
+        // strictly deeper than fully unrolled at high RF
+        assert!(layer_cycles(p, 64, 1.0, 1, 64) > layer_cycles(p, 64, 1.0, 1, 1));
+    }
+
+    #[test]
+    fn reuse_side_costs_only_above_one() {
+        assert_eq!(lut_partial_sum(10, 22, 1), 0.0);
+        assert!(lut_partial_sum(10, 22, 2) > 0.0);
+        assert_eq!(bram_weights(1024, 18, 1), 0.0);
+        assert!(bram_weights(1024, 18, 4) >= 1.0);
+        // a stream FIFO always costs at least one block
+        assert!(bram_stream_fifo(1, 8) >= 1.0);
+        assert!(bram_stream_fifo(4096, 18) > bram_stream_fifo(16, 18));
     }
 
     #[test]
@@ -171,6 +251,12 @@ mod tests {
     #[test]
     fn conv_spatial_iters_add_depth() {
         let p = Precision::new(18, 8);
-        assert!(layer_cycles(p, 72, 1.0, 64) > layer_cycles(p, 72, 1.0, 1) + 60);
+        assert!(layer_cycles(p, 72, 1.0, 64, 1) > layer_cycles(p, 72, 1.0, 1, 1) + 60);
+        // positions re-issue every II = RF cycles: the spatial term
+        // scales with the reuse factor, consistent with the emitted
+        // PIPELINE II pragma
+        let rf8 = layer_cycles(p, 72, 1.0, 64, 8);
+        assert!(rf8 >= 63 * 8, "conv spatial term must scale with RF: {rf8}");
+        assert!(rf8 > layer_cycles(p, 72, 1.0, 64, 1));
     }
 }

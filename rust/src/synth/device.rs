@@ -57,6 +57,26 @@ impl FpgaDevice {
     pub fn by_name(name: &str) -> Option<&'static FpgaDevice> {
         DEVICES.iter().find(|d| d.name == name || d.part == name)
     }
+
+    /// Resolve an HLS model's synthesis target: its device record and
+    /// clock frequency (MHz) derived from the clock period.  The single
+    /// source of truth for every FPGA-stage task (VIVADO-HLS,
+    /// REUSE_SEARCH), including the `clock_period_ns <= 0` edge that a
+    /// bare `1000.0 / period` would turn into an infinite clock.
+    pub fn target_of(
+        model: &crate::hls::HlsModel,
+    ) -> crate::error::Result<(&'static FpgaDevice, f64)> {
+        let device = FpgaDevice::by_name(&model.fpga_part).ok_or_else(|| {
+            crate::error::Error::Synth(format!("unknown device {}", model.fpga_part))
+        })?;
+        if model.clock_period_ns <= 0.0 {
+            return Err(crate::error::Error::Synth(format!(
+                "bad clock period {} ns",
+                model.clock_period_ns
+            )));
+        }
+        Ok((device, 1000.0 / model.clock_period_ns))
+    }
 }
 
 #[cfg(test)]
@@ -71,6 +91,20 @@ mod tests {
             "zynq7020"
         );
         assert!(FpgaDevice::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn target_of_resolves_device_and_rejects_bad_clock() {
+        let mut m = crate::hls::ir::tests::toy_model();
+        m.fpga_part = "vu9p".into();
+        let (d, mhz) = FpgaDevice::target_of(&m).unwrap();
+        assert_eq!(d.name, "vu9p");
+        assert!((mhz - 200.0).abs() < 1e-9);
+        m.clock_period_ns = 0.0;
+        assert!(FpgaDevice::target_of(&m).is_err());
+        m.clock_period_ns = 5.0;
+        m.fpga_part = "nonexistent".into();
+        assert!(FpgaDevice::target_of(&m).is_err());
     }
 
     #[test]

@@ -61,10 +61,18 @@ impl SynthReport {
 }
 
 /// Estimate a full HLS design on a device.
+///
+/// The hardware configuration is validated first: a reuse factor of 0
+/// (or one that does not divide the layer fan-in) is an
+/// [`Error::Synth`], never a silent division artifact — an IR built
+/// directly (bypassing the snapping transforms) cannot reach the
+/// per-layer divisions below with an illegal RF.
 pub fn estimate(model: &HlsModel, device: &FpgaDevice, clock_mhz: f64) -> Result<SynthReport> {
     if clock_mhz <= 0.0 {
         return Err(Error::Synth(format!("bad clock {clock_mhz} MHz")));
     }
+    model.validate()?;
+    let stream = model.io_type == crate::hls::ir::IoType::Stream;
     let mut layers = Vec::new();
     let (mut dsp, mut lut, mut ff, mut bram) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
     let mut cycles = 0usize;
@@ -72,34 +80,50 @@ pub fn estimate(model: &HlsModel, device: &FpgaDevice, clock_mhz: f64) -> Result
     for l in &model.layers {
         match l.kind {
             HlsLayerKind::Dense | HlsLayerKind::Conv2D => {
-                let fan_in = if l.kind == HlsLayerKind::Conv2D {
-                    l.kernel * l.kernel * l.n_in
-                } else {
-                    l.n_in
-                };
+                let fan_in = l.fan_in();
+                let rf = l.reuse_factor;
+                let bits = cost::effective_bits(l.precision);
                 // reuse factor time-multiplexes the MAC array
-                let mults = (l.multipliers() as f64 / l.reuse_factor as f64).ceil();
+                let mults = (l.multipliers() as f64 / rf as f64).ceil();
                 let l_dsp = mults * cost::dsp_per_mult(l.precision);
                 let mut l_lut = mults * cost::lut_per_mult(l.precision);
                 let n_adds = (l.multipliers()).saturating_sub(l.n_out);
+                let acc_bits = cost::acc_bits(l.precision, fan_in);
                 l_lut += cost::lut_adder_tree(
-                    (n_adds as f64 / l.reuse_factor as f64).ceil() as usize,
-                    cost::acc_bits(l.precision, fan_in),
+                    (n_adds as f64 / rf as f64).ceil() as usize,
+                    acc_bits,
                 );
+                // outputs whose weights were all pruned away need no
+                // accumulator, hence the cap at nnz
+                l_lut += cost::lut_partial_sum(l.n_out.min(l.nnz), acc_bits, rf);
                 let l_ff = cost::ff_estimate(l_lut, l_dsp);
                 // conv line buffers: (kernel-1) rows of (width*channels)
-                let l_bram = if l.kind == HlsLayerKind::Conv2D {
-                    let bits_per_row = l.w * l.n_in * cost::effective_bits(l.precision) as usize;
+                let mut l_bram = if l.kind == HlsLayerKind::Conv2D {
+                    let bits_per_row = l.w * l.n_in * bits as usize;
                     ((l.kernel.saturating_sub(1) * bits_per_row) as f64 / 18_432.0).ceil()
                 } else {
                     0.0
                 };
+                // RF > 1 streams weights from block RAM instead of
+                // baking them into the fabric
+                l_bram += cost::bram_weights(l.nnz, bits, rf);
+                // io_stream inserts a dataflow FIFO on the layer's
+                // output edge (io_parallel wires layers directly)
+                if stream {
+                    let words = if l.kind == HlsLayerKind::Conv2D {
+                        l.h * l.w * l.n_out
+                    } else {
+                        l.n_out
+                    };
+                    l_bram += cost::bram_stream_fifo(words, bits);
+                }
                 let l_cycles = cost::layer_cycles(
                     l.precision,
                     fan_in,
                     l.density(),
                     l.spatial_iters(),
-                ) * l.reuse_factor;
+                    rf,
+                );
                 layers.push(LayerUsage {
                     name: l.name.clone(),
                     dsp: l_dsp,
@@ -142,7 +166,9 @@ pub fn estimate(model: &HlsModel, device: &FpgaDevice, clock_mhz: f64) -> Result
         latency_cycles: cycles,
         latency_ns,
         dynamic_power_w: power,
-        ii: 1,
+        // the pipelined MAC loops re-issue every RF cycles (II = RF at
+        // the deepest layer; II = 1 when fully unrolled)
+        ii: model.max_reuse_factor(),
     })
 }
 
@@ -204,20 +230,70 @@ mod tests {
     }
 
     #[test]
-    fn reuse_factor_trades_area_for_latency() {
-        let m = toy_model();
-        let rf1 = estimate(&m, vu9p(), 200.0).unwrap();
-        let mut m4 = m.clone();
-        for l in m4.layers.iter_mut() {
-            l.reuse_factor = 4;
-        }
-        let rf4 = estimate(&m4, vu9p(), 200.0).unwrap();
-        assert!(rf4.dsp < rf1.dsp);
-        assert!(rf4.latency_cycles > rf1.latency_cycles);
+    fn rejects_bad_clock() {
+        assert!(estimate(&toy_model(), vu9p(), 0.0).is_err());
     }
 
     #[test]
-    fn rejects_bad_clock() {
-        assert!(estimate(&toy_model(), vu9p(), 0.0).is_err());
+    fn rejects_zero_reuse_factor_as_synth_error() {
+        // an IR built directly (not via the snapping transforms) with
+        // RF = 0 must be a clean error, not a division artifact
+        let mut m = toy_model();
+        m.layers[0].reuse_factor = 0;
+        match estimate(&m, vu9p(), 200.0) {
+            Err(crate::error::Error::Synth(msg)) => {
+                assert!(msg.contains("reuse_factor"), "{msg}")
+            }
+            other => panic!("expected Error::Synth, got {other:?}"),
+        }
+        // a non-divisor RF is rejected the same way
+        m.layers[0].reuse_factor = 3;
+        assert!(estimate(&m, vu9p(), 200.0).is_err());
+    }
+
+    #[test]
+    fn reuse_trades_resources_for_latency_monotonically() {
+        let m = toy_model(); // fan-ins 16 and 64: 1/2/4/8/16 legal everywhere
+        let mut prev: Option<SynthReport> = None;
+        for rf in [1usize, 2, 4, 8, 16] {
+            let mut cand = m.clone();
+            for l in cand.layers.iter_mut() {
+                l.reuse_factor = rf;
+            }
+            let r = estimate(&cand, vu9p(), 200.0).unwrap();
+            assert_eq!(r.ii, rf);
+            if let Some(p) = &prev {
+                assert!(r.dsp <= p.dsp, "rf {rf}: dsp {} > {}", r.dsp, p.dsp);
+                assert!(r.lut <= p.lut, "rf {rf}: lut {} > {}", r.lut, p.lut);
+                assert!(
+                    r.latency_cycles >= p.latency_cycles,
+                    "rf {rf}: cycles {} < {}",
+                    r.latency_cycles,
+                    p.latency_cycles
+                );
+            }
+            prev = Some(r);
+        }
+        // the whole sweep is a real trade, not a plateau
+        let rf1 = estimate(&m, vu9p(), 200.0).unwrap();
+        let last = prev.unwrap();
+        assert!(last.dsp < rf1.dsp && last.lut < rf1.lut);
+        assert!(last.latency_cycles > rf1.latency_cycles);
+        // time-multiplexed weights move into block RAM
+        assert!(last.bram_18k > rf1.bram_18k);
+    }
+
+    #[test]
+    fn io_stream_adds_fifo_bram_io_parallel_does_not() {
+        use crate::hls::ir::IoType;
+        let m = toy_model();
+        let parallel = estimate(&m, vu9p(), 200.0).unwrap();
+        let mut streamed = m.clone();
+        streamed.io_type = IoType::Stream;
+        let stream = estimate(&streamed, vu9p(), 200.0).unwrap();
+        assert_eq!(parallel.bram_18k, 0);
+        assert!(stream.bram_18k >= 2, "one FIFO per compute layer");
+        // FIFOs cost memory, not arithmetic
+        assert_eq!(parallel.dsp, stream.dsp);
     }
 }

@@ -17,6 +17,8 @@ pub mod cost;
 pub mod device;
 pub mod estimate;
 pub mod report;
+pub mod reuse;
 
 pub use device::{FpgaDevice, DEVICES};
 pub use estimate::{estimate, LayerUsage, SynthReport};
+pub use reuse::{reuse_search, ReuseConfig, ReuseProbe, ReuseTrace};

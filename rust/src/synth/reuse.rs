@@ -1,0 +1,236 @@
+//! The REUSE_SEARCH O-task's per-layer reuse-factor search — the
+//! FPGA-stage counterpart of the DNN-stage searches (quantize, prune,
+//! scale), probing the synthesis estimator instead of the trainer.
+//!
+//! Greedy ascent over the per-layer reuse-factor legality grids
+//! (divisors of each layer's fan-in): starting from the current
+//! configuration, repeatedly raise the single layer reuse factor whose
+//! increase buys the largest resource reduction, while the design stays
+//! inside the latency budget.  Two objectives, selected by the config:
+//!
+//! * **latency budget set** — minimize DSP then LUT subject to
+//!   `latency_ns <= budget`;
+//! * **no budget** — maximize throughput under the device-fit
+//!   constraint: stop at the first (smallest-reuse, hence
+//!   lowest-latency) configuration that fits; raise reuse factors only
+//!   while the design does not fit.
+//!
+//! Each round's candidates (one next-legal-step per layer) are
+//! independent, so they are submitted as one batch through the
+//! [`ProbePool`]'s hardware probe kind ([`ProbePool::estimate_batch`],
+//! memoized by HLS-config fingerprint).  Selection is deterministic for
+//! any worker count: the full batch is scanned in candidate order with
+//! an explicit tie-break — lowest DSP, then lowest LUT, then lowest
+//! layer index — so the trace is bit-identical to sequential execution
+//! (the same jobs-invariance contract as `quantize_search`).
+
+use crate::dse::{HwEval, HwProbeRequest, ProbePool};
+use crate::error::Result;
+use crate::hls::ir::HlsModel;
+use crate::synth::device::FpgaDevice;
+
+#[derive(Debug, Clone, Default)]
+pub struct ReuseConfig {
+    /// Latency ceiling (ns).  `None` switches to the fit objective.
+    pub latency_budget_ns: Option<f64>,
+}
+
+/// One evaluated candidate: compute layer `layer` stepped to reuse
+/// factor `rf`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReuseProbe {
+    pub round: usize,
+    /// Compute-layer index (position among compute layers).
+    pub layer: usize,
+    pub rf: usize,
+    pub dsp: usize,
+    pub lut: usize,
+    pub latency_ns: f64,
+    pub fits: bool,
+    /// Admissible and resource-improving (the round's winner is chosen
+    /// among accepted probes).
+    pub accepted: bool,
+}
+
+#[derive(Debug)]
+pub struct ReuseTrace {
+    /// Whole-design estimate before the search.
+    pub base: HwEval,
+    /// Whole-design estimate of the chosen configuration.
+    pub final_eval: HwEval,
+    /// Final reuse factor per compute layer.
+    pub reuse: Vec<usize>,
+    pub probes: Vec<ReuseProbe>,
+}
+
+/// Run the reuse-factor search, returning the rewritten model and the
+/// trace.  The input model is not mutated.
+pub fn reuse_search(
+    model: &HlsModel,
+    device: &FpgaDevice,
+    clock_mhz: f64,
+    cfg: &ReuseConfig,
+    pool: &ProbePool,
+) -> Result<(HlsModel, ReuseTrace)> {
+    let mut cur = model.clone();
+    let idxs = cur.compute_layer_indices();
+    let base = pool
+        .estimate_batch(device, clock_mhz, &[HwProbeRequest::new(0, cur.clone())])?[0]
+        .eval;
+    let mut cur_eval = base;
+
+    let mut probes = Vec::new();
+    let mut round = 0usize;
+    loop {
+        // fit objective: the smallest reuse configuration that fits is
+        // the throughput-optimal one — stop as soon as we are there
+        if cfg.latency_budget_ns.is_none() && cur_eval.fits {
+            break;
+        }
+        round += 1;
+        // candidates in fixed order: compute layer ascending, each
+        // stepped to its next legal (divisor-of-fan-in) reuse factor
+        let mut cands: Vec<(usize, usize)> = Vec::new();
+        for (ci, &ir) in idxs.iter().enumerate() {
+            if let Some(rf) = cur.layers[ir].next_reuse_factor() {
+                cands.push((ci, rf));
+            }
+        }
+        if cands.is_empty() {
+            break; // every layer is fully time-multiplexed
+        }
+
+        let requests: Vec<HwProbeRequest> = cands
+            .iter()
+            .enumerate()
+            .map(|(i, &(ci, rf))| {
+                let mut m = cur.clone();
+                m.layers[idxs[ci]].reuse_factor = rf;
+                HwProbeRequest::new(i, m)
+            })
+            .collect();
+        let results = pool.estimate_batch(device, clock_mhz, &requests)?;
+
+        // keep the best admissible resource reduction; in fit mode a
+        // candidate that makes the design fit outranks any amount of
+        // further resource saving (otherwise the greedy DSP/LUT walk
+        // could step past a fitting configuration it already probed and
+        // strand itself behind monotonically growing weight BRAM); ties
+        // break to the lowest layer index (scan order makes this
+        // deterministic for every worker count)
+        let fit_mode = cfg.latency_budget_ns.is_none();
+        let mut best: Option<(usize, usize, HwEval)> = None;
+        for (&(ci, rf), r) in cands.iter().zip(&results) {
+            let e = r.eval;
+            let within = cfg.latency_budget_ns.map_or(true, |b| e.latency_ns <= b);
+            let improves = e.dsp < cur_eval.dsp
+                || (e.dsp == cur_eval.dsp && e.lut < cur_eval.lut);
+            let ok = within && (improves || (fit_mode && e.fits));
+            probes.push(ReuseProbe {
+                round,
+                layer: ci,
+                rf,
+                dsp: e.dsp,
+                lut: e.lut,
+                latency_ns: e.latency_ns,
+                fits: e.fits,
+                accepted: ok,
+            });
+            if !ok {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((bci, _, be)) => {
+                    (fit_mode && e.fits && !be.fits)
+                        || ((e.fits == be.fits || !fit_mode)
+                            && (e.dsp < be.dsp
+                                || (e.dsp == be.dsp
+                                    && (e.lut < be.lut
+                                        || (e.lut == be.lut && ci < *bci)))))
+                }
+            };
+            if better {
+                best = Some((ci, rf, e));
+            }
+        }
+        match best {
+            Some((ci, rf, e)) => {
+                cur.layers[idxs[ci]].reuse_factor = rf;
+                cur_eval = e;
+            }
+            None => break, // no step keeps the budget / improves resources
+        }
+    }
+
+    let reuse = idxs.iter().map(|&i| cur.layers[i].reuse_factor).collect();
+    Ok((cur, ReuseTrace { base, final_eval: cur_eval, reuse, probes }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::ir::tests::toy_model;
+
+    fn vu9p() -> &'static FpgaDevice {
+        FpgaDevice::by_name("vu9p").unwrap()
+    }
+
+    #[test]
+    fn fit_mode_is_noop_when_design_already_fits() {
+        let pool = ProbePool::new(2);
+        let (out, trace) =
+            reuse_search(&toy_model(), vu9p(), 200.0, &ReuseConfig::default(), &pool)
+                .unwrap();
+        assert!(trace.base.fits);
+        assert_eq!(trace.reuse, vec![1, 1]);
+        assert!(trace.probes.is_empty());
+        assert_eq!(out.max_reuse_factor(), 1);
+    }
+
+    #[test]
+    fn budget_mode_trades_resources_within_latency() {
+        let pool = ProbePool::new(2);
+        let cfg = ReuseConfig { latency_budget_ns: Some(100.0) };
+        let (out, trace) =
+            reuse_search(&toy_model(), vu9p(), 200.0, &cfg, &pool).unwrap();
+        assert!(trace.final_eval.lut < trace.base.lut);
+        assert!(trace.final_eval.dsp <= trace.base.dsp);
+        assert!(trace.final_eval.latency_ns <= 100.0);
+        assert!(out.max_reuse_factor() > 1);
+        // every reuse factor the search chose is legal
+        assert!(out.validate().is_ok());
+        assert!(!trace.probes.is_empty());
+    }
+
+    #[test]
+    fn impossible_budget_leaves_model_unchanged() {
+        let pool = ProbePool::new(1);
+        // RF = 1 is already the latency floor; a budget below it means
+        // no admissible step exists
+        let cfg = ReuseConfig { latency_budget_ns: Some(1.0) };
+        let (out, trace) =
+            reuse_search(&toy_model(), vu9p(), 200.0, &cfg, &pool).unwrap();
+        assert_eq!(trace.reuse, vec![1, 1]);
+        assert_eq!(out.max_reuse_factor(), 1);
+        assert_eq!(trace.final_eval, trace.base);
+    }
+
+    #[test]
+    fn search_is_jobs_invariant() {
+        let cfg = ReuseConfig { latency_budget_ns: Some(120.0) };
+        let run = |jobs| {
+            reuse_search(&toy_model(), vu9p(), 200.0, &cfg, &ProbePool::new(jobs))
+                .unwrap()
+        };
+        let (m1, t1) = run(1);
+        let (m4, t4) = run(4);
+        assert_eq!(t1.reuse, t4.reuse);
+        assert_eq!(t1.probes, t4.probes);
+        assert_eq!(t1.final_eval, t4.final_eval);
+        let rfs = |m: &HlsModel| -> Vec<usize> {
+            m.layers.iter().map(|l| l.reuse_factor).collect()
+        };
+        assert_eq!(rfs(&m1), rfs(&m4));
+    }
+}

@@ -2,7 +2,7 @@
 
 use crate::error::Result;
 use crate::flow::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};
-use crate::hls::{codegen, HlsModel, IoType};
+use crate::hls::{codegen, HlsModel, HlsTransform, IoType, SetReuseFactor};
 use crate::metamodel::ModelPayload;
 
 pub struct Hls4mlTask;
@@ -26,6 +26,7 @@ impl PipeTask for Hls4mlTask {
             ParamSpec { name: "IOType", description: "io_parallel | io_stream", default: Some("io_parallel") },
             ParamSpec { name: "FPGA_part_number", description: "target device (name or part)", default: Some("vu9p") },
             ParamSpec { name: "clock_period", description: "target clock period (ns)", default: Some("5.0") },
+            ParamSpec { name: "reuse_factor", description: "initial reuse factor (snapped per layer to a divisor of the fan-in)", default: Some("1") },
             ParamSpec { name: "test_dataset", description: "dataset for co-simulation", default: Some("per-model") },
         ]
     }
@@ -44,18 +45,26 @@ impl PipeTask for Hls4mlTask {
         };
         let part = ctx.cfg_str("FPGA_part_number", "vu9p");
         let clock_ns = ctx.cfg_f64("clock_period", 5.0);
+        let reuse = ctx.cfg_usize("reuse_factor", 1);
 
-        let hls =
+        let mut hls =
             HlsModel::from_dnn(&variant, state, precision, io_type, &part, clock_ns)?;
+        if reuse > 1 {
+            // hardware grid dimension: an explore spec ranging over
+            // `hls.reuse_factor` lands here (snapped to legality)
+            SetReuseFactor(reuse).apply(&mut hls)?;
+        }
         let mults = hls.total_multipliers();
         ctx.log_metric("multipliers", mults as f64);
+        ctx.log_metric("reuse_factor", hls.max_reuse_factor() as f64);
         ctx.log_message(format!(
-            "translated {} to HLS: {} layers, {} multipliers, {} @ {} ns",
+            "translated {} to HLS: {} layers, {} multipliers, {} @ {} ns, RF {}",
             variant.tag,
             hls.layers.len(),
             mults,
             io_type,
-            clock_ns
+            clock_ns,
+            hls.max_reuse_factor()
         ));
 
         let files = codegen::emit(&hls);

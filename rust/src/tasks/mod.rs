@@ -1,6 +1,7 @@
 //! The reusable pipe-task library (paper §IV, Table I).
 //!
-//! O-tasks (optimization): [PruningTask], [ScalingTask], [QuantizationTask].
+//! O-tasks (optimization): [PruningTask], [ScalingTask],
+//! [QuantizationTask] (DNN stage) and [ReuseSearchTask] (FPGA stage).
 //! λ-tasks (transformation): [ModelGenTask] (KERAS-MODEL-GEN), [Hls4mlTask],
 //! [VivadoHlsTask].
 //!
@@ -11,6 +12,7 @@ mod hls4ml;
 mod model_gen;
 mod pruning;
 mod quantization;
+mod reuse;
 mod scaling;
 mod vivado_hls;
 
@@ -18,6 +20,7 @@ pub use hls4ml::Hls4mlTask;
 pub use model_gen::ModelGenTask;
 pub use pruning::PruningTask;
 pub use quantization::QuantizationTask;
+pub use reuse::ReuseSearchTask;
 pub use scaling::ScalingTask;
 pub use vivado_hls::VivadoHlsTask;
 

@@ -36,6 +36,7 @@ impl PipeTask for QuantizationTask {
     fn params(&self) -> Vec<ParamSpec> {
         vec![
             ParamSpec { name: "tolerate_acc_loss", description: "α_q: accepted accuracy drop", default: Some("0.01") },
+            ParamSpec { name: "tolerate_acc_loss_step", description: "α_q widening per back-edge re-execution (cross-stage feedback)", default: Some("0.0") },
             ParamSpec { name: "start_precision", description: "starting ap_fixed type", default: Some("ap_fixed<18,8>") },
             ParamSpec { name: "min_bits", description: "floor on per-layer total bits", default: Some("2") },
             ParamSpec { name: "train_test_dataset", description: "dataset (synthetic substitute)", default: Some("per-model") },
@@ -48,13 +49,22 @@ impl PipeTask for QuantizationTask {
         let mut state = input.dnn()?.clone();
         let variant = ctx.session.manifest.get(&state.tag)?.clone();
 
+        // each back-edge re-execution (e.g. VIVADO-HLS → QUANTIZATION
+        // while the design misses its resource budget) widens α_q by
+        // `tolerate_acc_loss_step`, so the re-run searches deeper
+        // instead of reproducing the previous result; the iteration
+        // index comes from the LOG, keeping the task stateless
+        let iteration = ctx.runs_started().saturating_sub(1);
+        let alpha = ctx.cfg_f64("tolerate_acc_loss", 0.01)
+            + ctx.cfg_f64("tolerate_acc_loss_step", 0.0) * iteration as f64;
         let cfg = QuantConfig {
-            tolerate_acc_loss: ctx.cfg_f64("tolerate_acc_loss", 0.01),
+            tolerate_acc_loss: alpha,
             start: super::util::parse_precision(
                 &ctx.cfg_str("start_precision", "ap_fixed<18,8>"),
             )?,
             min_bits: ctx.cfg_usize("min_bits", 2) as u32,
         };
+        ctx.log_metric("tolerate_acc_loss", alpha);
 
         let exec = ctx.session.executable(&variant.tag)?;
         let data = ctx.session.dataset(&variant.model)?;

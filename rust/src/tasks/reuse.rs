@@ -1,0 +1,123 @@
+//! REUSE_SEARCH O-task: FPGA-stage per-layer reuse-factor search.
+//!
+//! The first hardware-stage optimization task: where QUANTIZATION /
+//! PRUNING / SCALING search the DNN stage by probing the trainer, this
+//! task searches the FPGA stage by probing the synthesis estimator —
+//! raising per-layer reuse factors (hls4ml time-multiplexing) to
+//! minimize DSP/LUT under a latency budget, or to make an
+//! over-provisioned design fit its device at maximum throughput.
+//! Probes go through the same [`crate::dse::ProbePool`] as the DNN
+//! searches, memoized by HLS-config fingerprint.
+
+use crate::error::{Error, Result};
+use crate::flow::{ParamSpec, PipeTask, TaskCtx, TaskOutcome, TaskRole};
+use crate::hls::codegen;
+use crate::metamodel::{Abstraction, ModelPayload};
+use crate::synth::{reuse_search, FpgaDevice, ReuseConfig};
+
+pub struct ReuseSearchTask;
+
+impl PipeTask for ReuseSearchTask {
+    fn name(&self) -> &str {
+        "REUSE_SEARCH"
+    }
+
+    fn role(&self) -> TaskRole {
+        TaskRole::Optimization
+    }
+
+    fn multiplicity(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec {
+                name: "latency_budget_ns",
+                description: "latency ceiling; unset = fit the device at max throughput",
+                default: Some("none"),
+            },
+            ParamSpec {
+                name: "jobs",
+                description: "DSE probe workers (default METAML_JOBS/auto)",
+                default: Some("auto"),
+            },
+        ]
+    }
+
+    fn run(&self, ctx: &mut TaskCtx) -> Result<TaskOutcome> {
+        let input = ctx
+            .meta
+            .space
+            .latest(Abstraction::HlsCpp)
+            .cloned()
+            .ok_or_else(|| Error::other("no HLS model in the model space"))?;
+        let hls = input.hls()?.clone();
+
+        let (device, clock_mhz) = FpgaDevice::target_of(&hls)?;
+        let cfg = ReuseConfig {
+            latency_budget_ns: ctx.meta.cfg.get_f64(&ctx.instance, "latency_budget_ns"),
+        };
+
+        let pool = ctx.probe_pool();
+        let (model, trace) = reuse_search(&hls, device, clock_mhz, &cfg, &pool)?;
+        for p in &trace.probes {
+            ctx.log_metric("probe_layer", p.layer as f64);
+            ctx.log_metric("probe_rf", p.rf as f64);
+            ctx.log_metric("probe_dsp", p.dsp as f64);
+            ctx.log_metric("probe_lut", p.lut as f64);
+            ctx.log_metric("probe_latency_ns", p.latency_ns);
+            ctx.log_metric("probe_accepted", if p.accepted { 1.0 } else { 0.0 });
+        }
+        // hit counts depend on pool sharing/timing: side note, never
+        // the replay-comparable event stream
+        ctx.log_note("hw_cache_hits", pool.hw_cache().hits() as f64);
+        let e = &trace.final_eval;
+        ctx.log_metric("dsp", e.dsp as f64);
+        ctx.log_metric("lut", e.lut as f64);
+        ctx.log_metric("bram", e.bram_18k as f64);
+        ctx.log_metric("latency_ns", e.latency_ns);
+        ctx.log_metric("ii", e.ii as f64);
+        ctx.log_metric("fits", if e.fits { 1.0 } else { 0.0 });
+        ctx.log_message(format!(
+            "reuse search ({}): RF {:?}, {} -> {} DSP, {} -> {} LUT, {:.0} -> {:.0} ns ({} probes)",
+            match cfg.latency_budget_ns {
+                Some(b) => format!("budget {b:.0} ns"),
+                None => "fit".to_string(),
+            },
+            trace.reuse,
+            trace.base.dsp,
+            e.dsp,
+            trace.base.lut,
+            e.lut,
+            trace.base.latency_ns,
+            e.latency_ns,
+            trace.probes.len(),
+        ));
+
+        let files = codegen::emit(&model);
+        let id = ctx.meta.space.store(
+            format!("{}_reused", hls.name),
+            ctx.instance.clone(),
+            Some(input.id),
+            ModelPayload::Hls(model),
+        );
+        for (name, content) in files {
+            ctx.meta.space.add_supporting(id, name, content)?;
+        }
+        ctx.meta.space.set_metric(id, "dsp", e.dsp as f64)?;
+        ctx.meta.space.set_metric(id, "lut", e.lut as f64)?;
+        ctx.meta.space.set_metric(id, "latency_ns", e.latency_ns)?;
+        ctx.meta.space.set_metric(id, "ii", e.ii as f64)?;
+        ctx.meta
+            .space
+            .set_metric(id, "fits", if e.fits { 1.0 } else { 0.0 })?;
+        // carry model-quality metrics forward for the final RTL row
+        for key in ["accuracy", "pruning_rate", "scale", "bits_total"] {
+            if let Some(v) = input.metric(key) {
+                ctx.meta.space.set_metric(id, key, v)?;
+            }
+        }
+        Ok(TaskOutcome::produced([id]))
+    }
+}

@@ -37,9 +37,7 @@ impl PipeTask for VivadoHlsTask {
             .ok_or_else(|| Error::other("no HLS model in the model space"))?;
         let hls = input.hls()?.clone();
 
-        let device = FpgaDevice::by_name(&hls.fpga_part)
-            .ok_or_else(|| Error::Synth(format!("unknown device {}", hls.fpga_part)))?;
-        let clock_mhz = 1000.0 / hls.clock_period_ns;
+        let (device, clock_mhz) = FpgaDevice::target_of(&hls)?;
         let report = synth::estimate(&hls, device, clock_mhz)?;
 
         ctx.log_metric("dsp", report.dsp as f64);
@@ -49,6 +47,14 @@ impl PipeTask for VivadoHlsTask {
         ctx.log_metric("latency_cycles", report.latency_cycles as f64);
         ctx.log_metric("latency_ns", report.latency_ns);
         ctx.log_metric("power_w", report.dynamic_power_w);
+        ctx.log_metric("ii", report.ii as f64);
+        // guardable fit/utilization metrics: edge predicates (forward
+        // or back) can condition on device fit and headroom
+        ctx.log_metric("fits", if report.fits() { 1.0 } else { 0.0 });
+        ctx.log_metric("dsp_pct", report.dsp_pct());
+        ctx.log_metric("lut_pct", report.lut_pct());
+        ctx.log_metric("ff_pct", report.ff_pct());
+        ctx.log_metric("bram_pct", report.bram_pct());
         ctx.log_message(format!(
             "synthesized {}: {} DSP ({:.1}%), {} LUT ({:.1}%), {} cycles = {:.0} ns, {}",
             report.design,
@@ -74,6 +80,7 @@ impl PipeTask for VivadoHlsTask {
             ("latency_cycles", report.latency_cycles as f64),
             ("latency_ns", report.latency_ns),
             ("power_w", report.dynamic_power_w),
+            ("ii", report.ii as f64),
             ("fits", if report.fits() { 1.0 } else { 0.0 }),
         ];
         let id = ctx.meta.space.store(

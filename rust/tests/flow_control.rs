@@ -374,6 +374,62 @@ fn strategy_node_propagates_iteration_requests_to_back_edges() {
 }
 
 #[test]
+fn guarded_back_edge_fires_on_metric_until_budget_exhausted() {
+    // score 0.5 > 0.4: the guarded back edge fires on the metric alone
+    // (no task iteration request), bounded by max_iters = 2
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let registry = score_registry(&trace, 0.5);
+    let mut g = FlowGraph::new("metric-loop");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "MID");
+    g.connect(a, b).unwrap();
+    g.connect_back_when(b, a, 2, guard("b.score", CmpOp::Gt, 0.4)).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "b", "a", "b", "a", "b"]);
+
+    // every firing decision is in the LOG: two taken evaluations, and
+    // none once the budget is exhausted
+    let evals: Vec<bool> = meta
+        .log
+        .events()
+        .filter_map(|e| match e {
+            LogEvent::EdgeEvaluated { from, to, taken, .. }
+                if from == "b" && to == "a" =>
+            {
+                Some(*taken)
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(evals, vec![true, true]);
+}
+
+#[test]
+fn guarded_back_edge_does_not_fire_when_predicate_fails() {
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let registry = score_registry(&trace, 0.3);
+    let mut g = FlowGraph::new("metric-noloop");
+    let a = g.add_task("a", "SRC");
+    let b = g.add_task("b", "MID");
+    g.connect(a, b).unwrap();
+    g.connect_back_when(b, a, 2, guard("b.score", CmpOp::Gt, 0.4)).unwrap();
+
+    let session = session();
+    let mut meta = MetaModel::new();
+    Engine::new(&session, &registry).run(&g, &mut meta).unwrap();
+    assert_eq!(*trace.lock().unwrap(), vec!["a", "b"]);
+    // the rejection is logged (guard evaluated, not taken)
+    assert!(meta.log.events().any(|e| matches!(
+        e,
+        LogEvent::EdgeEvaluated { from, to, taken, .. }
+            if from == "b" && to == "a" && !*taken
+    )));
+}
+
+#[test]
 fn run_spec_replans_after_graph_mutation() {
     let trace = Arc::new(Mutex::new(Vec::new()));
     let registry = score_registry(&trace, 0.5);
@@ -613,23 +669,28 @@ fn explorer_pareto_front_is_deterministic_and_jobs_invariant() {
         }
     }
 
-    // the front is the non-dominated set: nothing on it is dominated
+    // the front is the non-dominated set over (accuracy ↑, DSP ↓,
+    // LUT ↓, latency ↓): nothing on it is dominated
     let obj = |r: &metaml::flow::VariantResult| {
         (
             r.metric("accuracy").unwrap(),
             r.metric("dsp").unwrap(),
             r.metric("lut").unwrap(),
+            r.metric("latency_ns").unwrap(),
         )
     };
     for &i in &seq.front {
-        let (ai, di, li) = obj(&seq.results[i]);
+        let (ai, di, li, ti) = obj(&seq.results[i]);
         for (j, other) in seq.results.iter().enumerate() {
             if j == i {
                 continue;
             }
-            let (aj, dj, lj) = obj(other);
-            let dominates =
-                aj >= ai && dj <= di && lj <= li && (aj > ai || dj < di || lj < li);
+            let (aj, dj, lj, tj) = obj(other);
+            let dominates = aj >= ai
+                && dj <= di
+                && lj <= li
+                && tj <= ti
+                && (aj > ai || dj < di || lj < li || tj < ti);
             assert!(!dominates, "front member {i} dominated by {j}");
         }
     }

@@ -1,0 +1,316 @@
+//! Hardware-stage DSE contract tests.
+//!
+//! Covers: the estimator's physical invariants under reuse-factor
+//! sweeps (RF↑ ⇒ DSP/LUT↓, latency↑; DSP threshold; io_stream FIFO
+//! BRAM), the codegen golden snapshot pinning reuse-factor/precision
+//! emission for the mini-jet model, the REUSE_SEARCH O-task's
+//! jobs-invariant LOG contract on a full cross-stage flow (guarded
+//! VIVADO-HLS → QUANTIZATION back edge with α_q escalation), and the
+//! explorer's hardware grid dimension (`hls.reuse_factor`) golden
+//! Pareto front.
+
+use metaml::bench_support::{mlp_chain_variant, synthetic_jet_mini_manifest};
+use metaml::config::FlowSpec;
+use metaml::flow::explore::explore;
+use metaml::flow::{Engine, Session, TaskRegistry};
+use metaml::hls::{codegen, HlsModel, HlsTransform, SetPrecision, SetReuseFactor};
+use metaml::metamodel::{Abstraction, LogEvent, MetaModel};
+use metaml::model::state::Precision;
+use metaml::runtime::Runtime;
+use metaml::synth::{estimate, FpgaDevice};
+
+/// The mini-jet HLS model (16 → 16 → 8 → 5) at full density.
+fn mini_jet_hls(precision: Precision) -> HlsModel {
+    let variant = mlp_chain_variant("jet_mini", 1.0, &[16, 16, 8, 5]);
+    HlsModel::from_nnz(&variant, &[], precision, "vu9p", 5.0).unwrap()
+}
+
+fn vu9p() -> &'static FpgaDevice {
+    FpgaDevice::by_name("vu9p").unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// estimator physical invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reuse_sweep_trades_resources_for_latency_monotonically() {
+    let m = mini_jet_hls(Precision::new(18, 8));
+    let mut prev_dsp = usize::MAX;
+    let mut prev_lut = usize::MAX;
+    let mut prev_cycles = 0usize;
+    for rf in [1usize, 2, 4, 8] {
+        let mut cand = m.clone();
+        SetReuseFactor(rf).apply(&mut cand).unwrap();
+        let r = estimate(&cand, vu9p(), 200.0).unwrap();
+        assert!(r.dsp <= prev_dsp, "rf {rf}: dsp {} > {prev_dsp}", r.dsp);
+        assert!(r.lut <= prev_lut, "rf {rf}: lut {} > {prev_lut}", r.lut);
+        assert!(
+            r.latency_cycles >= prev_cycles,
+            "rf {rf}: cycles {} < {prev_cycles}",
+            r.latency_cycles
+        );
+        (prev_dsp, prev_lut, prev_cycles) = (r.dsp, r.lut, r.latency_cycles);
+    }
+    // the sweep is a real trade overall
+    let rf1 = estimate(&m, vu9p(), 200.0).unwrap();
+    assert!(prev_dsp < rf1.dsp);
+    assert!(prev_lut < rf1.lut);
+    assert!(prev_cycles > rf1.latency_cycles);
+}
+
+#[test]
+fn below_threshold_precision_uses_no_dsp() {
+    // bits <= DSP_THRESHOLD_BITS (10): every multiply maps to fabric
+    let m = mini_jet_hls(Precision::new(8, 3));
+    let r = estimate(&m, vu9p(), 200.0).unwrap();
+    assert_eq!(r.dsp, 0);
+    assert!(r.lut > 0);
+    // one bit above the threshold brings DSPs back
+    let m11 = mini_jet_hls(Precision::new(11, 4));
+    assert!(estimate(&m11, vu9p(), 200.0).unwrap().dsp > 0);
+}
+
+#[test]
+fn io_stream_adds_bram_io_parallel_does_not() {
+    use metaml::hls::IoType;
+    let m = mini_jet_hls(Precision::new(18, 8));
+    let parallel = estimate(&m, vu9p(), 200.0).unwrap();
+    let mut streamed = m.clone();
+    streamed.io_type = IoType::Stream;
+    let stream = estimate(&streamed, vu9p(), 200.0).unwrap();
+    assert_eq!(parallel.bram_18k, 0);
+    assert!(stream.bram_18k >= 3, "one FIFO per compute layer");
+}
+
+#[test]
+fn zero_reuse_factor_is_a_synth_error_not_a_panic() {
+    let mut m = mini_jet_hls(Precision::new(18, 8));
+    m.layers[0].reuse_factor = 0;
+    let err = estimate(&m, vu9p(), 200.0).unwrap_err().to_string();
+    assert!(err.contains("synthesis error"), "{err}");
+    assert!(err.contains("reuse_factor"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// codegen golden snapshot (mini-jet): reuse factor + precision emission
+// ---------------------------------------------------------------------------
+
+#[test]
+fn codegen_golden_pins_reuse_and_precision_emission() {
+    let mut m = mini_jet_hls(Precision::new(8, 3));
+    SetPrecision::all(Precision::new(8, 3)).apply(&mut m).unwrap();
+    SetReuseFactor(4).apply(&mut m).unwrap();
+    let files = codegen::emit(&m);
+
+    let parameters = &files
+        .iter()
+        .find(|(name, _)| name == "parameters.h")
+        .expect("parameters.h emitted")
+        .1;
+    let golden = "\
+#ifndef PARAMETERS_H_
+#define PARAMETERS_H_
+
+#include \"defines.h\"
+
+struct config_fc1 {
+    static const unsigned n_in = 16;
+    static const unsigned n_out = 16;
+    static const unsigned reuse_factor = 4;
+    static const unsigned n_zeros = 0;  // folded by the compiler
+};
+
+struct config_fc2 {
+    static const unsigned n_in = 16;
+    static const unsigned n_out = 8;
+    static const unsigned reuse_factor = 4;
+    static const unsigned n_zeros = 0;  // folded by the compiler
+};
+
+struct config_fc3 {
+    static const unsigned n_in = 8;
+    static const unsigned n_out = 5;
+    static const unsigned reuse_factor = 4;
+    static const unsigned n_zeros = 0;  // folded by the compiler
+};
+
+#endif
+";
+    assert_eq!(parameters, golden);
+
+    let defines = &files.iter().find(|(n, _)| n == "defines.h").unwrap().1;
+    assert!(defines.contains("typedef ap_fixed<8,3> fc1_t;"), "{defines}");
+    assert!(defines.contains("ap_fixed<12,7> fc1_acc_t"), "{defines}");
+    assert!(defines.contains("ap_fixed<11,6> fc3_acc_t"), "{defines}");
+
+    let top = &files.iter().find(|(n, _)| n.ends_with(".cpp")).unwrap().1;
+    assert!(top.contains("#pragma HLS PIPELINE II=4"), "{top}");
+}
+
+// ---------------------------------------------------------------------------
+// cross-stage flow: REUSE_SEARCH + guarded VIVADO-HLS -> QUANTIZATION
+// back edge, jobs-invariant LOG
+// ---------------------------------------------------------------------------
+
+fn mini_session() -> Session {
+    Session::with_backend(Runtime::reference(), synthetic_jet_mini_manifest())
+}
+
+fn crossstage_spec() -> FlowSpec {
+    FlowSpec::parse(
+        r#"{
+  "name": "mini_crossstage",
+  "cfg": {
+    "model": "jet_mini",
+    "gen.train_epochs": 1,
+    "hls.FPGA_part_number": "zynq7020",
+    "quantize.start_precision": "ap_fixed<8,4>",
+    "quantize.min_bits": 7,
+    "quantize.tolerate_acc_loss": 0.02,
+    "quantize.tolerate_acc_loss_step": 0.02,
+    "reuse.latency_budget_ns": 200.0
+  },
+  "tasks": [
+    {"id": "gen", "type": "KERAS-MODEL-GEN"},
+    {"id": "hls", "type": "HLS4ML"},
+    {"id": "quantize", "type": "QUANTIZATION"},
+    {"id": "reuse", "type": "REUSE_SEARCH"},
+    {"id": "synth", "type": "VIVADO-HLS"}
+  ],
+  "edges": [["gen", "hls"], ["hls", "quantize"], ["quantize", "reuse"],
+             ["reuse", "synth"]],
+  "back_edges": [
+    {"from": "synth", "to": "quantize", "max_iters": 1,
+     "when": {"metric": "synth.lut", "op": ">", "value": 1.0}}
+  ]
+}"#,
+    )
+    .unwrap()
+}
+
+fn run_crossstage(jobs: usize) -> (Vec<LogEvent>, MetaModel) {
+    let session = mini_session();
+    let registry = TaskRegistry::builtin();
+    let spec = crossstage_spec();
+    let mut meta = MetaModel::new();
+    spec.apply_cfg(&mut meta.cfg);
+    meta.cfg.set("jobs", jobs);
+    Engine::new(&session, &registry).run_spec(&spec, &mut meta).unwrap();
+    let events = meta.log.events().cloned().collect();
+    (events, meta)
+}
+
+#[test]
+fn crossstage_back_edge_fires_and_escalates_quantization() {
+    let (events, meta) = run_crossstage(1);
+
+    // the guarded back edge evaluated true and the sub-path re-ran once
+    assert!(events.iter().any(|e| matches!(
+        e,
+        LogEvent::EdgeEvaluated { from, to, taken, .. }
+            if from == "synth" && to == "quantize" && *taken
+    )));
+    for task in ["quantize", "reuse", "synth"] {
+        assert_eq!(meta.log.count_task_started(task), 2, "{task}");
+    }
+    assert_eq!(meta.log.count_task_started("gen"), 1);
+
+    // the re-run searched with a widened tolerance (cross-stage
+    // feedback actually changed the DNN-stage configuration)
+    let alphas = meta.log.metric_series("quantize", "tolerate_acc_loss");
+    assert_eq!(alphas.len(), 2);
+    assert!((alphas[0] - 0.02).abs() < 1e-12);
+    assert!((alphas[1] - 0.04).abs() < 1e-12);
+
+    // fit/utilization are guardable LOG metrics now
+    for m in ["fits", "dsp_pct", "lut_pct", "ff_pct", "bram_pct", "ii"] {
+        assert!(meta.log.latest_metric("synth", m).is_some(), "{m}");
+    }
+    let fits = meta.log.latest_metric("synth", "fits").unwrap();
+    assert!(fits == 0.0 || fits == 1.0);
+
+    // the reuse search ran against the estimator and logged its result
+    assert!(meta.log.latest_metric("reuse", "lut").is_some());
+    assert!(meta.log.latest_metric("reuse", "latency_ns").is_some());
+
+    // the flow reached RTL and the HLS lineage includes a reused model
+    assert!(meta.space.latest(Abstraction::Rtl).is_some());
+    let hls = meta.space.latest(Abstraction::HlsCpp).unwrap();
+    assert!(hls.name.contains("reused"), "{}", hls.name);
+}
+
+#[test]
+fn crossstage_flow_log_is_jobs_invariant() {
+    let (ev1, _) = run_crossstage(1);
+    let (ev4, _) = run_crossstage(4);
+    assert_eq!(ev1.len(), ev4.len());
+    for (a, b) in ev1.iter().zip(&ev4) {
+        assert_eq!(a, b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// explorer golden: a hardware grid dimension on the Pareto front
+// ---------------------------------------------------------------------------
+
+fn hw_explore_spec() -> FlowSpec {
+    FlowSpec::parse(
+        r#"{
+  "name": "mini_hw_explore",
+  "cfg": {"model": "jet_mini", "gen.train_epochs": 1},
+  "tasks": [
+    {"id": "gen", "type": "KERAS-MODEL-GEN"},
+    {"id": "hls", "type": "HLS4ML"},
+    {"id": "synth", "type": "VIVADO-HLS"}
+  ],
+  "edges": [["gen", "hls"], ["hls", "synth"]],
+  "explore": {"cfg_grid": {"hls.reuse_factor": [1, 8]}}
+}"#,
+    )
+    .unwrap()
+}
+
+#[test]
+fn explore_grid_ranges_over_reuse_factor() {
+    let registry = TaskRegistry::builtin();
+    let spec = hw_explore_spec();
+    let run = |jobs: usize| {
+        let session = mini_session();
+        explore(&session, &registry, &spec, &[], jobs).unwrap()
+    };
+    let seq = run(1);
+    let par = run(4);
+
+    assert_eq!(seq.results.len(), 2);
+    let labels: Vec<&str> = seq.results.iter().map(|r| r.label.as_str()).collect();
+    assert_eq!(labels, vec!["hls.reuse_factor=1", "hls.reuse_factor=8"]);
+
+    // the hardware dimension moved the objectives: same accuracy (same
+    // DNN flow), strictly fewer resources and more latency at RF = 8
+    let (r1, r8) = (&seq.results[0], &seq.results[1]);
+    assert_eq!(
+        r1.metric("accuracy").unwrap().to_bits(),
+        r8.metric("accuracy").unwrap().to_bits()
+    );
+    assert!(r8.metric("dsp").unwrap() < r1.metric("dsp").unwrap());
+    assert!(r8.metric("lut").unwrap() < r1.metric("lut").unwrap());
+    assert!(r8.metric("latency_ns").unwrap() > r1.metric("latency_ns").unwrap());
+
+    // golden front: at equal accuracy the two variants trade resources
+    // against latency, so BOTH are non-dominated — the hardware grid
+    // dimension genuinely widens the front instead of collapsing it to
+    // its cheapest point (latency is a first-class objective)
+    assert_eq!(seq.front, vec![0, 1]);
+
+    // jobs-invariant: front, metrics and full LOG streams identical
+    assert_eq!(seq.front, par.front);
+    for (a, b) in seq.results.iter().zip(&par.results) {
+        assert_eq!(a.label, b.label);
+        for (k, v) in &a.metrics {
+            let w = b.metrics.get(k).copied().unwrap_or(f64::NAN);
+            assert_eq!(v.to_bits(), w.to_bits(), "{}: {k}", a.label);
+        }
+        assert_eq!(a.events, b.events, "{}", a.label);
+    }
+}
