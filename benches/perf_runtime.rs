@@ -11,6 +11,9 @@
 //!   * hardware (synthesis) probe throughput through the same pool —
 //!     reuse-factor candidate batches at 1 / 2 / max workers — plus a
 //!     sequential-vs-parallel `reuse_search` trace-identity assertion;
+//!   * budgeted search: exhaustive vs NSGA-II `evolve` over a hardware
+//!     grid — probes spent and front hypervolume, with an assertion
+//!     that evolution recovers the full front at fewer evaluations;
 //!   * literal marshaling overhead (host→device→host round trip);
 //!   * flow-engine overhead (no-op task graph traversal).
 //!
@@ -388,6 +391,116 @@ fn main() -> metaml::Result<()> {
             par_secs,
             "s",
         );
+    }
+
+    // budgeted search: exhaustive sweep vs NSGA-II evolution over a
+    // pure hardware grid (reuse factor × clock period on the trained
+    // jet model) — probes spent and front hypervolume go into the perf
+    // trajectory; the evolved front must match the full-grid front at
+    // half the evaluations (the clock dimension makes the dominated
+    // half provable, see rust/tests/search_strategies.rs)
+    {
+        use metaml::config::FlowSpec;
+        use metaml::search::pareto::hypervolume;
+        use metaml::search::{run_search, SearchOutcome, SearchSpec};
+
+        let spec = FlowSpec::parse(
+            r#"{
+  "name": "bench_search",
+  "cfg": {"model": "jet_dnn", "gen.train_epochs": 1},
+  "tasks": [
+    {"id": "gen", "type": "KERAS-MODEL-GEN"},
+    {"id": "hls", "type": "HLS4ML"},
+    {"id": "synth", "type": "VIVADO-HLS"}
+  ],
+  "edges": [["gen", "hls"], ["hls", "synth"]],
+  "explore": {"cfg_grid": {
+    "hls.clock_period": [5, 10],
+    "hls.reuse_factor": [1, 2, 4, 8]
+  }},
+  "search": {"strategy": "evolve", "budget": 4, "seed": 7, "prefilter": true}
+}"#,
+        )?;
+        let registry = TaskRegistry::builtin();
+        let jobs = metaml::dse::default_jobs();
+
+        let t0 = Instant::now();
+        let full = run_search(&session, &registry, &spec, &SearchSpec::default(), &[], jobs)?;
+        let full_secs = t0.elapsed().as_secs_f64();
+        let search = spec.search.clone().expect("bench spec declares a search section");
+        let t0 = Instant::now();
+        let evolved = run_search(&session, &registry, &spec, &search, &[], jobs)?;
+        let evolved_secs = t0.elapsed().as_secs_f64();
+
+        // one reference point over both runs so the hypervolumes compare
+        let objs = |out: &SearchOutcome| -> metaml::Result<Vec<Vec<f64>>> {
+            out.outcome.results.iter().map(|r| r.min_objectives()).collect()
+        };
+        let (full_objs, evolved_objs) = (objs(&full)?, objs(&evolved)?);
+        let n_obj = full_objs[0].len();
+        let reference: Vec<f64> = (0..n_obj)
+            .map(|d| {
+                full_objs
+                    .iter()
+                    .chain(&evolved_objs)
+                    .map(|o| o[d])
+                    .fold(f64::NEG_INFINITY, f64::max)
+                    + 1.0
+            })
+            .collect();
+        let full_hv = hypervolume(&full_objs, &reference);
+        let evolved_hv = hypervolume(&evolved_objs, &reference);
+
+        if evolved.evaluations() >= full.evaluations() {
+            return Err(metaml::Error::other(format!(
+                "search: evolve spent {} evaluations, exhaustive {}",
+                evolved.evaluations(),
+                full.evaluations()
+            )));
+        }
+        if (full_hv - evolved_hv).abs() > 1e-9 * full_hv.abs().max(1.0) {
+            return Err(metaml::Error::other(format!(
+                "search: evolved front hypervolume {evolved_hv} != full-grid {full_hv}"
+            )));
+        }
+
+        for (name, out, secs, hv) in [
+            ("exhaustive", &full, full_secs, full_hv),
+            ("evolve", &evolved, evolved_secs, evolved_hv),
+        ] {
+            table.row_strs(&[
+                &format!("search {name}"),
+                "jet_dnn",
+                &format!(
+                    "{:.3} s, {} evals, {} train + {} hw probes, HV {:.3}",
+                    secs,
+                    out.evaluations(),
+                    out.probes.train_issued,
+                    out.probes.hw_issued,
+                    hv
+                ),
+            ]);
+            rec.record(&format!("search_{name}_s"), "jet_dnn", secs, "s");
+            rec.record(
+                &format!("search_{name}_evals"),
+                "jet_dnn",
+                out.evaluations() as f64,
+                "flows",
+            );
+            rec.record(
+                &format!("search_{name}_train_probes"),
+                "jet_dnn",
+                out.probes.train_issued as f64,
+                "probes",
+            );
+            rec.record(
+                &format!("search_{name}_hw_probes"),
+                "jet_dnn",
+                out.probes.hw_issued as f64,
+                "probes",
+            );
+            rec.record(&format!("search_{name}_hypervolume"), "jet_dnn", hv, "hv");
+        }
     }
 
     // literal marshaling: tensor -> literal -> tensor round trip

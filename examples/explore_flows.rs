@@ -1,16 +1,22 @@
-//! Multi-flow exploration demo: run four flow *architectures*
-//! concurrently from one spec and print the (accuracy, DSP, LUT, latency)
-//! Pareto front.
+//! Multi-flow exploration demo, exhaustive and budgeted: run flow
+//! *architectures* concurrently from one spec and print the (accuracy,
+//! DSP, LUT, latency) Pareto front — first the full grid of
+//! `explore_jet.json`, then the budgeted NSGA-II search of
+//! `search_jet.json` (half the evaluations, plus a continuous
+//! clock-period dimension no grid could enumerate).
 //!
 //! Uses the in-memory synthetic jet manifest (scale grid included), so
 //! it runs on any machine — no `make artifacts` needed:
 //!
 //!     cargo run --release --example explore_flows
 //!
-//! The equivalent CLI invocation:
+//! The equivalent CLI invocations:
 //!
 //!     cargo run --release -- explore \
 //!         --flow examples/specs/explore_jet.json --synthetic
+//!     cargo run --release -- explore \
+//!         --flow examples/specs/search_jet.json --synthetic \
+//!         --strategy evolve --budget 4 --seed 7
 
 use metaml::bench_support::synthetic_jet_manifest_scales;
 use metaml::config::FlowSpec;
@@ -18,9 +24,9 @@ use metaml::error::Result;
 use metaml::flow::explore::{expand_variants, explore_variants, front_table};
 use metaml::flow::{Session, TaskRegistry};
 use metaml::runtime::Runtime;
+use metaml::search::run_search;
 
 fn main() -> Result<()> {
-    let spec = FlowSpec::load("examples/specs/explore_jet.json")?;
     let session = Session::with_backend(
         Runtime::cpu()?,
         synthetic_jet_manifest_scales(&[1.0, 0.75, 0.5]),
@@ -28,6 +34,8 @@ fn main() -> Result<()> {
     let registry = TaskRegistry::builtin();
     let jobs = metaml::dse::default_jobs();
 
+    // 1. the exhaustive grid
+    let spec = FlowSpec::load("examples/specs/explore_jet.json")?;
     let variants = expand_variants(&spec)?;
     println!("exploring {} flow variants (jobs={jobs}):", variants.len());
     for v in &variants {
@@ -48,5 +56,29 @@ fn main() -> Result<()> {
             r.metric("lut").unwrap_or(0.0) as u64,
         );
     }
+
+    // 2. the budgeted search: the spec's `search` section asks for
+    // NSGA-II evolution with a hardware-prefiltered seeding generation
+    // and a continuous hls.clock_period range dimension
+    let spec = FlowSpec::load("examples/specs/search_jet.json")?;
+    let search = spec.search.clone().expect("search_jet.json declares a search section");
+    println!(
+        "\nbudgeted search: strategy '{}', budget {}, seed {}",
+        search.strategy,
+        search
+            .budget
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "grid".into()),
+        search.seed,
+    );
+    let out = run_search(&session, &registry, &spec, &search, &[], jobs)?;
+    println!(
+        "evaluated {} of {} grid variants ({} training probes issued, {} hardware)\n",
+        out.evaluations(),
+        out.grid_size,
+        out.probes.train_issued,
+        out.probes.hw_issued,
+    );
+    println!("{}", front_table(&out.outcome).render());
     Ok(())
 }

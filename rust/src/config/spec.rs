@@ -47,6 +47,11 @@
 //!   (see [`crate::flow::explore`]):
 //!   `"explore": {"orders": [["gen","scale","prune"], ...],
 //!                "cfg_grid": {"prune.tolerate_acc_loss": [0.01, 0.03]}}`
+//! * **Budgeted search** — a `search` section selects how the variant
+//!   space is traversed (strategy, evaluation budget, seed, numeric
+//!   range dimensions); see [`crate::search`]:
+//!   `"search": {"strategy": "evolve", "budget": 8, "seed": 7,
+//!               "range": {"hls.clock_period": {"min": 4, "max": 10}}}`
 
 use std::collections::BTreeMap;
 
@@ -56,15 +61,20 @@ use crate::flow::graph::{CmpOp, EdgeGuard, FlowPlan, StrategyArm};
 use crate::flow::{FlowGraph, NodeId};
 use crate::json::{self, Value};
 use crate::metamodel::Cfg;
+use crate::search::SearchSpec;
 
-/// A parsed flow spec: graph + CFG entries + optional variant grid,
-/// with the validation plan computed once at parse time (the engine's
-/// `run_spec` reuses it instead of re-validating).
+/// A parsed flow spec: graph + CFG entries + optional variant grid +
+/// optional budgeted-search section, with the validation plan computed
+/// once at parse time (the engine's `run_spec` reuses it instead of
+/// re-validating).
 #[derive(Debug, Clone)]
 pub struct FlowSpec {
     pub graph: FlowGraph,
     pub cfg_entries: Vec<(String, Value)>,
     pub explore: Option<ExploreSpec>,
+    /// The `search` section: strategy/budget/seed + numeric range
+    /// dimensions for the budgeted search (see [`crate::search`]).
+    pub search: Option<SearchSpec>,
     plan: FlowPlan,
 }
 
@@ -260,8 +270,13 @@ impl FlowSpec {
             None => None,
         };
 
+        let search = match root.get("search") {
+            Some(v) => Some(SearchSpec::parse(v)?),
+            None => None,
+        };
+
         let plan = graph.validate()?;
-        Ok(FlowSpec { graph, cfg_entries, explore, plan })
+        Ok(FlowSpec { graph, cfg_entries, explore, search, plan })
     }
 
     pub fn load(path: &str) -> Result<FlowSpec> {
@@ -283,6 +298,7 @@ impl FlowSpec {
             graph,
             cfg_entries: self.cfg_entries.clone(),
             explore: None,
+            search: None,
             plan,
         })
     }
@@ -410,6 +426,26 @@ mod tests {
         assert_eq!(g.metric, "synth.dsp");
         assert_eq!(g.op, CmpOp::Gt);
         assert_eq!(g.value, 64.0);
+    }
+
+    #[test]
+    fn parses_search_section() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t", "tasks": [{"id": "a", "type": "X"}], "edges": [],
+                "explore": {"cfg_grid": {"k": [1, 2]}},
+                "search": {"strategy": "random", "budget": 3, "seed": 11}}"#,
+        )
+        .unwrap();
+        let s = spec.search.as_ref().expect("search section parsed");
+        assert_eq!(s.strategy, "random");
+        assert_eq!(s.budget, Some(3));
+        assert_eq!(s.seed, 11);
+        // a bad section fails the whole spec parse
+        assert!(FlowSpec::parse(
+            r#"{"name": "t", "tasks": [{"id": "a", "type": "X"}], "edges": [],
+                "search": {"strategy": "nope"}}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -47,17 +47,20 @@ pub mod pool;
 
 pub use cache::{EvalCache, EvalKey, ProbeCache};
 pub use hw::{HwCache, HwEval, HwKey, HwProbeRequest, HwProbeResult};
-pub use pool::{ProbePool, ProbeRequest, ProbeResult};
+pub use pool::{ProbeCounts, ProbePool, ProbeRequest, ProbeResult, ProbeStats};
 
 use std::sync::Arc;
 
 /// One shared memo per probe kind — what the engine hands to every
 /// O-task probe pool during multi-flow exploration so identical probes
-/// (training *and* hardware) dedupe across flow variants.
+/// (training *and* hardware) dedupe across flow variants — plus the
+/// probe-issue counters aggregated across every pool built from the
+/// bundle (the budgeted-search driver reports them per run).
 #[derive(Debug, Clone, Default)]
 pub struct DseCaches {
     pub eval: Arc<EvalCache>,
     pub hw: Arc<HwCache>,
+    pub stats: Arc<ProbeStats>,
 }
 
 impl DseCaches {
@@ -65,9 +68,14 @@ impl DseCaches {
         Self::default()
     }
 
-    /// A pool over these shared memos.
+    /// A pool over these shared memos and counters.
     pub fn pool(&self, jobs: usize) -> ProbePool {
-        ProbePool::with_caches(jobs, self.eval.clone(), self.hw.clone())
+        ProbePool::with_shared(jobs, self.eval.clone(), self.hw.clone(), self.stats.clone())
+    }
+
+    /// Probe totals issued/computed through every pool of this bundle.
+    pub fn probe_counts(&self) -> ProbeCounts {
+        self.stats.snapshot()
     }
 }
 

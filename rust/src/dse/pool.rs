@@ -47,6 +47,47 @@ pub struct ProbeResult {
     pub cached: bool,
 }
 
+/// Probe-issue accounting, shared alongside the memos.  `issued` counts
+/// every request submitted to a batch API (cache hits included): it is
+/// independent of cache state, and deterministic for a *fixed* worker
+/// configuration — but not across worker counts, because some searches
+/// size their speculative batches by `pool.jobs()` (SCALING's grid
+/// waves, PRUNING's look-ahead), so comparisons of issued counts must
+/// pin `jobs`.  `computed` counts fresh evaluations, which additionally
+/// depends on what concurrent batches had already memoized — a
+/// wall-clock-style diagnostic, never a replay-comparable number.
+#[derive(Debug, Default)]
+pub struct ProbeStats {
+    train_issued: AtomicUsize,
+    train_computed: AtomicUsize,
+    hw_issued: AtomicUsize,
+    hw_computed: AtomicUsize,
+}
+
+/// A point-in-time copy of [`ProbeStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProbeCounts {
+    /// Training probes submitted through [`ProbePool::evaluate_batch`].
+    pub train_issued: usize,
+    /// Training probes actually evaluated (cache misses).
+    pub train_computed: usize,
+    /// Hardware probes submitted through [`ProbePool::estimate_batch`].
+    pub hw_issued: usize,
+    /// Hardware probes actually estimated (cache misses).
+    pub hw_computed: usize,
+}
+
+impl ProbeStats {
+    pub fn snapshot(&self) -> ProbeCounts {
+        ProbeCounts {
+            train_issued: self.train_issued.load(Ordering::Relaxed),
+            train_computed: self.train_computed.load(Ordering::Relaxed),
+            hw_issued: self.hw_issued.load(Ordering::Relaxed),
+            hw_computed: self.hw_computed.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// A worker pool + one memo per probe kind, shared by one search
 /// (typically created per O-task run from [`crate::flow::TaskCtx::jobs`]).
 pub struct ProbePool {
@@ -58,6 +99,9 @@ pub struct ProbePool {
     /// Hardware-probe memo (synthesis estimations), keyed by
     /// HLS-config fingerprint instead of params fingerprint.
     hw_cache: Arc<HwCache>,
+    /// Probe-issue accounting (shared with the memos by
+    /// [`crate::dse::DseCaches`] so a whole search aggregates).
+    stats: Arc<ProbeStats>,
 }
 
 impl ProbePool {
@@ -76,7 +120,19 @@ impl ProbePool {
 
     /// Pool sharing existing memos for both probe kinds.
     pub fn with_caches(jobs: usize, cache: Arc<EvalCache>, hw_cache: Arc<HwCache>) -> Self {
-        ProbePool { jobs: jobs.max(1), cache, hw_cache }
+        Self::with_shared(jobs, cache, hw_cache, Arc::new(ProbeStats::default()))
+    }
+
+    /// Pool sharing memos *and* the probe-issue counters (how
+    /// [`crate::dse::DseCaches::pool`] builds the explorer's and the
+    /// search driver's pools).
+    pub fn with_shared(
+        jobs: usize,
+        cache: Arc<EvalCache>,
+        hw_cache: Arc<HwCache>,
+        stats: Arc<ProbeStats>,
+    ) -> Self {
+        ProbePool { jobs: jobs.max(1), cache, hw_cache, stats }
     }
 
     /// Pool sized by `METAML_JOBS` / available parallelism
@@ -95,6 +151,12 @@ impl ProbePool {
 
     pub fn hw_cache(&self) -> &HwCache {
         &self.hw_cache
+    }
+
+    /// Current probe-issue counters (see [`ProbeStats`] for what is and
+    /// is not replay-comparable).
+    pub fn probe_counts(&self) -> ProbeCounts {
+        self.stats.snapshot()
     }
 
     /// Run `f(0..n)` across the pool's workers; results come back in
@@ -211,9 +273,16 @@ impl ProbePool {
             .iter()
             .map(|r| EvalKey::of(&r.state, &trainer.data.spec))
             .collect();
+        // issued is counted up front so a failing batch still shows the
+        // probes it spent; computed needs the per-request cache flags
+        self.stats.train_issued.fetch_add(requests.len(), Ordering::Relaxed);
         let out = self.memo_batch(&self.cache, &keys, |i| {
             trainer.evaluate(&requests[i].state)
         })?;
+        self.stats.train_computed.fetch_add(
+            out.iter().filter(|(_, cached)| !cached).count(),
+            Ordering::Relaxed,
+        );
         Ok(requests
             .iter()
             .zip(out)
@@ -235,10 +304,15 @@ impl ProbePool {
             .iter()
             .map(|r| HwKey::of(&r.model, device, clock_mhz))
             .collect();
+        self.stats.hw_issued.fetch_add(requests.len(), Ordering::Relaxed);
         let out = self.memo_batch(&self.hw_cache, &keys, |i| {
             synth::estimate(&requests[i].model, device, clock_mhz)
                 .map(|r| HwEval::from_report(&r))
         })?;
+        self.stats.hw_computed.fetch_add(
+            out.iter().filter(|(_, cached)| !cached).count(),
+            Ordering::Relaxed,
+        );
         Ok(requests
             .iter()
             .zip(out)

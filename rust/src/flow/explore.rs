@@ -32,7 +32,7 @@
 //! sharing can only skip recomputation of bit-identical results — so
 //! the printed front is identical for every `--jobs` value.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, HashSet};
 
 use crate::config::FlowSpec;
 use crate::dse::DseCaches;
@@ -123,6 +123,9 @@ pub struct FlowVariant {
 #[derive(Debug, Clone)]
 pub struct VariantResult {
     pub label: String,
+    /// The CFG overrides that distinguished this variant (grid point /
+    /// sampled range values), echoed so reports are self-describing.
+    pub cfg: Vec<(String, Value)>,
     /// Metrics of the final RTL artifact (accuracy, dsp, lut,
     /// latency_ns, power_w, …).
     pub metrics: BTreeMap<String, f64>,
@@ -137,7 +140,12 @@ impl VariantResult {
         self.metrics.get(name).copied()
     }
 
-    fn objectives(&self) -> Result<(f64, f64, f64, f64)> {
+    /// The variant's objective vector in the shared minimization
+    /// convention of [`crate::search::pareto`]: accuracy negated, DSP /
+    /// LUT / latency as-is.  Every front in the system — explorer,
+    /// budgeted search, bench hypervolume — is computed over exactly
+    /// this vector.
+    pub fn min_objectives(&self) -> Result<Vec<f64>> {
         let m = |name: &str| {
             self.metric(name).ok_or_else(|| {
                 Error::Flow(format!(
@@ -146,7 +154,7 @@ impl VariantResult {
                 ))
             })
         };
-        Ok((m("accuracy")?, m("dsp")?, m("lut")?, m("latency_ns")?))
+        Ok(vec![-m("accuracy")?, m("dsp")?, m("lut")?, m("latency_ns")?])
     }
 }
 
@@ -188,24 +196,8 @@ pub fn expand_variants(spec: &FlowSpec) -> Result<Vec<FlowVariant>> {
         points = next;
     }
 
-    // order variants are plain chains: silently discarding the base
-    // flow's guards or back edges would compare architectures the user
-    // never declared, so reject the combination outright
     if !explore.orders.is_empty() {
-        if spec.graph.guarded_edges().any(|(_, _, g)| g.is_some()) {
-            return Err(Error::Config(
-                "explore orders cannot permute a flow with conditional edges \
-                 (order variants are plain chains; drop the guards or the orders)"
-                    .into(),
-            ));
-        }
-        if !spec.graph.back_edges().is_empty() {
-            return Err(Error::Config(
-                "explore orders cannot permute a flow with back edges \
-                 (order variants are plain chains; drop the back edges or the orders)"
-                    .into(),
-            ));
-        }
+        reject_unchainable_orders(spec)?;
     }
 
     let mut variants = Vec::new();
@@ -223,26 +215,76 @@ pub fn expand_variants(spec: &FlowSpec) -> Result<Vec<FlowVariant>> {
             }
         };
         for point in &points {
-            let mut parts = Vec::new();
-            if let Some(ol) = &order_label {
-                parts.push(ol.clone());
-            }
-            for (k, v) in point {
-                parts.push(format!("{k}={}", render_value(v)));
-            }
-            let label = if parts.is_empty() {
-                spec.graph.name.clone()
-            } else {
-                parts.join(" ")
-            };
             variants.push(FlowVariant {
-                label,
+                label: variant_label(spec, order_label.as_deref(), point),
                 spec: variant_spec.clone(),
                 cfg: point.clone(),
             });
         }
     }
     Ok(variants)
+}
+
+/// Order variants are plain chains: silently discarding the base
+/// flow's guards or back edges would compare architectures the user
+/// never declared, so any traversal of an order-bearing variant space
+/// ([`expand_variants`] and [`crate::search::SearchSpace`] alike) must
+/// reject the combination outright.
+pub(crate) fn reject_unchainable_orders(spec: &FlowSpec) -> Result<()> {
+    if spec.graph.guarded_edges().any(|(_, _, g)| g.is_some()) {
+        return Err(Error::Config(
+            "explore orders cannot permute a flow with conditional edges \
+             (order variants are plain chains; drop the guards or the orders)"
+                .into(),
+        ));
+    }
+    if !spec.graph.back_edges().is_empty() {
+        return Err(Error::Config(
+            "explore orders cannot permute a flow with back edges \
+             (order variants are plain chains; drop the back edges or the orders)"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+/// The label scheme shared by grid expansion and the budgeted search:
+/// `"<order> <k>=<v> …"`, falling back to the flow's name for the bare
+/// base variant.
+fn variant_label(spec: &FlowSpec, order_label: Option<&str>, cfg: &[(String, Value)]) -> String {
+    let mut parts: Vec<String> = order_label.map(str::to_string).into_iter().collect();
+    for (k, v) in cfg {
+        parts.push(format!("{k}={}", render_value(v)));
+    }
+    if parts.is_empty() {
+        spec.graph.name.clone()
+    } else {
+        parts.join(" ")
+    }
+}
+
+/// Build one concrete [`FlowVariant`] for an optional order permutation
+/// and a CFG point — how [`crate::search`] strategies materialize the
+/// candidates they propose, guaranteed label- and graph-identical to
+/// what [`expand_variants`] would produce for the same coordinates.
+pub fn variant_for(
+    spec: &FlowSpec,
+    order: Option<&[String]>,
+    cfg: Vec<(String, Value)>,
+) -> Result<FlowVariant> {
+    let (order_label, variant_spec) = match order {
+        None => (None, spec.clone()),
+        Some(order) => {
+            let label = order.join("-");
+            let spec = spec.with_graph(chain_graph(spec, order, &label)?)?;
+            (Some(label), spec)
+        }
+    };
+    Ok(FlowVariant {
+        label: variant_label(spec, order_label.as_deref(), &cfg),
+        spec: variant_spec,
+        cfg,
+    })
 }
 
 /// Rebuild the spec's graph as a linear chain in `order` (same nodes,
@@ -295,6 +337,28 @@ pub fn explore_variants(
     if variants.is_empty() {
         return Err(Error::Flow("explore: no variants to run".into()));
     }
+    let shared = DseCaches::new();
+    let results = run_variants(session, registry, variants, extra_cfg, jobs, &shared)?;
+    let front = front_of(&results)?;
+    Ok(ExploreOutcome { results, front })
+}
+
+/// Run a batch of variants concurrently against caller-provided shared
+/// probe memos and return their results in input order — the evaluation
+/// primitive under both [`explore_variants`] (one batch, fresh caches)
+/// and the budgeted [`crate::search`] driver (many batches against one
+/// persistent [`DseCaches`], so probes dedupe across the whole search).
+pub fn run_variants(
+    session: &Session,
+    registry: &TaskRegistry,
+    variants: &[FlowVariant],
+    extra_cfg: &[(String, Value)],
+    jobs: usize,
+    shared: &DseCaches,
+) -> Result<Vec<VariantResult>> {
+    if variants.is_empty() {
+        return Ok(Vec::new());
+    }
     // identical variants (duplicate grid entries) run once — keyed by
     // full structural identity (graph nodes/edges/guards, base cfg and
     // typed cfg point), never the rendered label, so caller-supplied
@@ -322,7 +386,6 @@ pub fn explore_variants(
     let concurrent = jobs.min(unique.len()).max(1);
     let inner_jobs = (jobs / concurrent).max(1);
 
-    let shared = DseCaches::new();
     let pool = shared.pool(concurrent);
     let ran: Vec<VariantResult> = pool.run_batch(unique.len(), |slot| {
         let variant = &variants[unique[slot]];
@@ -350,20 +413,24 @@ pub fn explore_variants(
         })?;
         Ok(VariantResult {
             label: variant.label.clone(),
+            cfg: variant.cfg.clone(),
             metrics: rtl.metrics.clone(),
             n_models: meta.space.len(),
             events: meta.log.events().cloned().collect(),
         })
     })?;
 
-    let results: Vec<VariantResult> =
-        source.into_iter().map(|slot| ran[slot].clone()).collect();
+    Ok(source.into_iter().map(|slot| ran[slot].clone()).collect())
+}
+
+/// The Pareto front (ascending indices) over a result set's
+/// [`VariantResult::min_objectives`] vectors.
+pub fn front_of(results: &[VariantResult]) -> Result<Vec<usize>> {
     let objectives = results
         .iter()
-        .map(|r| r.objectives())
+        .map(|r| r.min_objectives())
         .collect::<Result<Vec<_>>>()?;
-    let front = pareto_front(&objectives);
-    Ok(ExploreOutcome { results, front })
+    Ok(crate::search::pareto::pareto_front_min(&objectives))
 }
 
 /// Non-dominated set over (accuracy ↑, DSP ↓, LUT ↓, latency ↓), as
@@ -373,21 +440,19 @@ pub fn explore_variants(
 /// IO architectures) trade resources *against* latency at identical
 /// accuracy, a trade a resource-only front would collapse to its
 /// cheapest point.
+///
+/// Thin 4-tuple shim over the N-objective
+/// [`crate::search::pareto::pareto_front_min`] kernel (accuracy is
+/// maximized, so it enters negated).
 pub fn pareto_front(points: &[(f64, f64, f64, f64)]) -> Vec<usize> {
-    let dominates = |a: &(f64, f64, f64, f64), b: &(f64, f64, f64, f64)| {
-        a.0 >= b.0
-            && a.1 <= b.1
-            && a.2 <= b.2
-            && a.3 <= b.3
-            && (a.0 > b.0 || a.1 < b.1 || a.2 < b.2 || a.3 < b.3)
-    };
-    (0..points.len())
-        .filter(|&i| !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i])))
-        .collect()
+    let min_points: Vec<Vec<f64>> =
+        points.iter().map(|&(acc, dsp, lut, lat)| vec![-acc, dsp, lut, lat]).collect();
+    crate::search::pareto::pareto_front_min(&min_points)
 }
 
 /// Aligned table of all variants, front members marked.
 pub fn front_table(out: &ExploreOutcome) -> Table {
+    let on_front: HashSet<usize> = out.front.iter().copied().collect();
     let mut t = Table::new(&["variant", "accuracy", "DSP", "LUT", "latency_ns", "power_w", "front"]);
     for (i, r) in out.results.iter().enumerate() {
         let g = |name: &str| {
@@ -400,34 +465,48 @@ pub fn front_table(out: &ExploreOutcome) -> Table {
             r.metric("lut").map(|v| format!("{v:.0}")).unwrap_or_default(),
             g("latency_ns"),
             g("power_w"),
-            if out.front.contains(&i) { "*".into() } else { String::new() },
+            if on_front.contains(&i) { "*".into() } else { String::new() },
         ]);
     }
     t
 }
 
-/// CSV of all variants for the `report/` directory.
+/// CSV of all variants for the `report/` directory.  Each variant's CFG
+/// overrides become their own columns (the sorted union of keys across
+/// the result set), so rows identify their grid point / sampled values
+/// directly instead of only through the rendered label.
 pub fn front_csv(out: &ExploreOutcome) -> CsvWriter {
-    let mut w = CsvWriter::new(&[
-        "variant",
-        "accuracy",
-        "dsp",
-        "lut",
-        "latency_ns",
-        "power_w",
-        "on_front",
-    ]);
+    let on_front: HashSet<usize> = out.front.iter().copied().collect();
+    let cfg_keys: BTreeSet<&str> = out
+        .results
+        .iter()
+        .flat_map(|r| r.cfg.iter().map(|(k, _)| k.as_str()))
+        .collect();
+    let mut header =
+        vec!["variant", "accuracy", "dsp", "lut", "latency_ns", "power_w", "on_front"];
+    header.extend(cfg_keys.iter().copied());
+    let mut w = CsvWriter::new(&header);
     for (i, r) in out.results.iter().enumerate() {
         let g = |name: &str| r.metric(name).map(|v| format!("{v}")).unwrap_or_default();
-        w.row(&[
+        let mut row = vec![
             r.label.clone(),
             g("accuracy"),
             g("dsp"),
             g("lut"),
             g("latency_ns"),
             g("power_w"),
-            if out.front.contains(&i) { "1".into() } else { "0".into() },
-        ]);
+            if on_front.contains(&i) { "1".into() } else { "0".into() },
+        ];
+        for &key in &cfg_keys {
+            row.push(
+                r.cfg
+                    .iter()
+                    .find(|(k, _)| k == key)
+                    .map(|(_, v)| render_value(v))
+                    .unwrap_or_default(),
+            );
+        }
+        w.row(&row);
     }
     w
 }
@@ -490,6 +569,71 @@ mod tests {
         // cfg points carried per variant
         assert_eq!(variants[1].cfg.len(), 1);
         assert_eq!(variants[1].cfg[0].1.as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn variant_for_matches_grid_expansion() {
+        let spec = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                "edges": [["a", "b"]],
+                "explore": {
+                  "orders": [["b", "a"]],
+                  "cfg_grid": {"k": [2]}
+                }}"#,
+        )
+        .unwrap();
+        let all = expand_variants(&spec).unwrap();
+        let expanded = &all[0];
+        let built = variant_for(
+            &spec,
+            Some(&["b".to_string(), "a".to_string()]),
+            vec![("k".to_string(), Value::Number(2.0))],
+        )
+        .unwrap();
+        assert_eq!(built.label, expanded.label);
+        assert_eq!(built.cfg, expanded.cfg);
+        assert_eq!(format!("{:?}", built.spec.graph), format!("{:?}", expanded.spec.graph));
+        // the base variant keeps the flow's name
+        assert_eq!(variant_for(&spec, None, vec![]).unwrap().label, "t");
+    }
+
+    fn fake_result(label: &str, cfg: Vec<(String, Value)>, acc: f64) -> VariantResult {
+        VariantResult {
+            label: label.into(),
+            cfg,
+            metrics: [
+                ("accuracy".to_string(), acc),
+                ("dsp".to_string(), 10.0),
+                ("lut".to_string(), 100.0),
+                ("latency_ns".to_string(), 50.0),
+            ]
+            .into_iter()
+            .collect(),
+            n_models: 1,
+            events: vec![],
+        }
+    }
+
+    #[test]
+    fn front_csv_gains_cfg_override_columns() {
+        let results = vec![
+            fake_result("a k=1", vec![("k".into(), Value::Number(1.0))], 0.9),
+            fake_result("b", vec![("m".into(), Value::String("x".into()))], 0.8),
+        ];
+        let front = front_of(&results).unwrap();
+        assert_eq!(front, vec![0]); // result 1 is dominated (lower accuracy)
+        let csv = front_csv(&ExploreOutcome { results, front }).render();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert_eq!(
+            header,
+            "variant,accuracy,dsp,lut,latency_ns,power_w,on_front,k,m"
+        );
+        let rows: Vec<&str> = lines.collect();
+        assert!(rows[0].starts_with("a k=1,0.9,"), "{}", rows[0]);
+        assert!(rows[0].ends_with(",1,1,"), "{}", rows[0]);
+        assert!(rows[1].ends_with(",0,,x"), "{}", rows[1]);
     }
 
     #[test]

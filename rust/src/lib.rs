@@ -47,6 +47,14 @@
 //! a small control-flow VM logging every branch decision, and
 //! [flow::explore] runs whole *flow-architecture* grids concurrently,
 //! reporting a deterministic (accuracy, DSP, LUT, latency) Pareto front.
+//!
+//! On top of the explorer sits the budgeted [search] subsystem:
+//! pluggable multi-objective [search::SearchStrategy] implementations
+//! (`exhaustive`, seeded `random`, NSGA-II-style `evolve` with an
+//! optional hardware-estimator prefilter) that pick *which* variants of
+//! the joint (orders × grid × numeric ranges) space to evaluate under
+//! an explicit evaluation budget, reusing the same probe pools and
+//! shared memos so results stay deterministic and jobs-invariant.
 
 pub mod baselines;
 pub mod bench_support;
@@ -64,6 +72,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod scale;
+pub mod search;
 pub mod synth;
 pub mod tasks;
 pub mod testutil;

@@ -53,13 +53,17 @@ COMMANDS:
                                 probe worker count for all O-tasks;
                                 --synthetic uses the in-memory jet manifest
   explore     --flow <spec.json> [--model <name>] [--jobs N] [--synthetic]
-              [-c k=v]...       expand the spec's `explore` variant grid,
-                                run every flow variant concurrently and
-                                print the (accuracy, DSP, LUT,
-                                latency) Pareto
-                                front; --synthetic uses the in-memory jet
-                                manifest (no artifacts needed); a CSV of
-                                the front lands in report/
+              [--strategy S] [--budget N] [--seed S] [-c k=v]...
+                                search the spec's variant space and print
+                                the (accuracy, DSP, LUT, latency) Pareto
+                                front; --strategy picks exhaustive |
+                                random | evolve (overriding the spec's
+                                `search` section), --budget bounds the
+                                flow evaluations spent, --seed fixes the
+                                sampler PRNG; --synthetic uses the
+                                in-memory jet manifest (no artifacts
+                                needed); a CSV of the evaluated variants
+                                lands in report/
   synth       --model <name> [--scale S] [--device D] [--clock NS]
               [--reuse RF]   HLS+RTL report with fit/utilization; --clock
                              sets the target period (ns), --reuse the
@@ -380,11 +384,15 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             ("--model", true),
             ("--jobs", true),
             ("--synthetic", false),
+            ("--strategy", true),
+            ("--budget", true),
+            ("--seed", true),
             ("-c", true),
         ],
     )?;
-    use metaml::flow::explore::{expand_variants, explore_variants, front_csv, front_table};
+    use metaml::flow::explore::{front_csv, front_table};
     use metaml::flow::TaskRegistry;
+    use metaml::search::{run_search, strategy_names};
 
     let flow_arg = opt(args, "--flow").unwrap_or_else(|| "s_p_q".into());
     let spec = load_spec(&flow_arg)?;
@@ -398,28 +406,57 @@ fn cmd_explore(args: &[String]) -> Result<()> {
     }
     extra.extend(cfg_overrides(args)?);
 
-    let variants = expand_variants(&spec)?;
-    println!(
-        "exploring {} flow variant{} of '{}' (jobs={jobs})",
-        variants.len(),
-        if variants.len() == 1 { "" } else { "s" },
-        spec.graph.name
-    );
-    for v in &variants {
-        println!("  - {}", v.label);
+    // spec `search` section (default: exhaustive full grid), with CLI
+    // overrides on top
+    let mut search = spec.search.clone().unwrap_or_default();
+    if let Some(strategy) = opt(args, "--strategy") {
+        if !strategy_names().contains(&strategy.as_str()) {
+            return Err(metaml::Error::other(format!(
+                "unknown --strategy {strategy:?} (expected one of: {})",
+                strategy_names().join(", ")
+            )));
+        }
+        search.strategy = strategy;
+    }
+    if let Some(budget) = parse_opt::<usize>(args, "--budget")? {
+        if budget == 0 {
+            return Err(metaml::Error::other("--budget must be at least 1"));
+        }
+        search.budget = Some(budget);
+    }
+    if let Some(seed) = parse_opt::<u64>(args, "--seed")? {
+        search.seed = seed;
     }
 
-    let outcome = explore_variants(&session, &registry, &variants, &extra, jobs)?;
-
-    println!("\nPareto front over (accuracy, DSP, LUT, latency):\n");
-    print!("{}", front_table(&outcome).render());
     println!(
-        "\n{} of {} variants on the front:",
-        outcome.front.len(),
-        outcome.results.len()
+        "exploring '{}' with strategy '{}' (budget {}, seed {}, jobs {jobs})",
+        spec.graph.name,
+        search.strategy,
+        search
+            .budget
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "grid".into()),
+        search.seed,
     );
-    for &i in &outcome.front {
-        let r = &outcome.results[i];
+
+    let out = run_search(&session, &registry, &spec, &search, &extra, jobs)?;
+
+    println!(
+        "evaluated {} of {} grid variants ({} proposals of budget {})\n",
+        out.evaluations(),
+        out.grid_size,
+        out.spent,
+        out.budget
+    );
+    println!("Pareto front over (accuracy, DSP, LUT, latency):\n");
+    print!("{}", front_table(&out.outcome).render());
+    println!(
+        "\n{} of {} evaluated variants on the front:",
+        out.outcome.front.len(),
+        out.outcome.results.len()
+    );
+    for &i in &out.outcome.front {
+        let r = &out.outcome.results[i];
         println!(
             "  * {} (acc {:.4}, {} DSP, {} LUT)",
             r.label,
@@ -428,9 +465,16 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             r.metric("lut").unwrap_or(0.0) as u64,
         );
     }
+    println!(
+        "probes: {} training issued ({} computed), {} hardware issued ({} computed)",
+        out.probes.train_issued,
+        out.probes.train_computed,
+        out.probes.hw_issued,
+        out.probes.hw_computed,
+    );
 
     let csv_path = report_dir().join(format!("explore_{}.csv", spec.graph.name));
-    front_csv(&outcome).save(&csv_path)?;
+    front_csv(&out.outcome).save(&csv_path)?;
     println!("\nwrote {}", csv_path.display());
     Ok(())
 }
@@ -560,6 +604,26 @@ mod tests {
     fn option_on_optionless_command_rejected() {
         let err = check_flags("smoke", &s(&["--fast"]), &[]).unwrap_err().to_string();
         assert!(err.contains("takes no options"), "{err}");
+    }
+
+    #[test]
+    fn explore_search_flags_validate_with_hint() {
+        const EXPLORE: &[(&str, bool)] = &[
+            ("--flow", true),
+            ("--model", true),
+            ("--jobs", true),
+            ("--synthetic", false),
+            ("--strategy", true),
+            ("--budget", true),
+            ("--seed", true),
+            ("-c", true),
+        ];
+        let ok = s(&["--strategy", "evolve", "--budget", "8", "--seed", "7"]);
+        assert!(check_flags("explore", &ok, EXPLORE).is_ok());
+        let err = check_flags("explore", &s(&["--buget", "8"]), EXPLORE)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--budget"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! The propose → evaluate → observe loop behind every search strategy.
+//!
+//! The driver owns everything a strategy must not: the evaluation
+//! budget, the evaluated-candidate memo (an exact repeat is served from
+//! memory, never re-run), variant materialization, the shared
+//! [`DseCaches`] that dedupe training and hardware probes across the
+//! whole search, and the final front.  A strategy only decides *which
+//! points to look at next* — which is what makes the three built-ins
+//! (and user strategies) interchangeable in specs and on the CLI.
+//!
+//! **Determinism contract** (same as the explorer's): for a fixed spec,
+//! strategy, seed and budget, the sequence of evaluated candidates, all
+//! their LOG event streams, and the reported front are bit-identical
+//! for every `--jobs` value.  Strategies see only their own seeded PRNG
+//! and the deterministic observations; worker counts change wall-clock
+//! only.
+//!
+//! **Budget semantics:** `budget` bounds *proposals*.  Every candidate
+//! a strategy proposes consumes one unit, including exact repeats of
+//! already-evaluated points (a strategy that thrashes pays for it),
+//! but a repeat costs no flow execution — it is observed from the memo.
+//! An empty proposal batch ends the search early (space exhausted or
+//! strategy converged).
+
+use std::collections::HashMap;
+
+use crate::config::FlowSpec;
+use crate::dse::{DseCaches, ProbeCounts};
+use crate::error::Result;
+use crate::flow::explore::{run_variants, ExploreOutcome, FlowVariant};
+use crate::flow::registry::TaskRegistry;
+use crate::flow::session::Session;
+use crate::json::Value;
+use crate::search::pareto::pareto_front_min;
+use crate::search::prefilter::HwPrefilter;
+use crate::search::space::{Candidate, CandidateKey, SearchSpace};
+use crate::search::{make_strategy, SearchSpec};
+
+/// What the driver exposes to a strategy while it proposes/observes.
+pub struct SearchCtx<'a> {
+    pub space: &'a SearchSpace,
+    /// Exact points already evaluated (key → index into the result
+    /// list).  Strategies use it to avoid burning budget on repeats.
+    pub evaluated: &'a HashMap<CandidateKey, usize>,
+    /// Hardware-only candidate ranking, when the search enabled it and
+    /// the session could build a baseline model.
+    pub prefilter: Option<&'a HwPrefilter>,
+}
+
+/// One evaluated proposal, in proposal order.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    pub candidate: Candidate,
+    pub label: String,
+    /// Minimization objectives
+    /// ([`crate::flow::VariantResult::min_objectives`]).
+    pub objectives: Vec<f64>,
+    /// True when the proposal repeated an already-evaluated point and
+    /// was served from the memo.
+    pub repeat: bool,
+}
+
+/// A pluggable multi-objective search strategy over the joint variant
+/// space: propose a batch of candidates, observe their results, repeat
+/// until the evaluation budget is exhausted.
+pub trait SearchStrategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `limit` candidates for the next evaluation batch
+    /// (the driver truncates anything beyond it).  An empty batch ends
+    /// the search.
+    fn propose(&mut self, ctx: &SearchCtx<'_>, limit: usize) -> Result<Vec<Candidate>>;
+
+    /// Observe the evaluated batch, in proposal order.
+    fn observe(&mut self, ctx: &SearchCtx<'_>, batch: &[Observation]);
+}
+
+/// Everything one budgeted search produced.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Unique evaluated variants in evaluation order, plus the Pareto
+    /// front over them — the same shape the exhaustive explorer
+    /// reports, so tables/CSVs are shared.
+    pub outcome: ExploreOutcome,
+    pub strategy: String,
+    /// Size of the discrete grid (what `Exhaustive` would evaluate).
+    pub grid_size: usize,
+    pub budget: usize,
+    /// Proposals consumed (unique evaluations + repeats).
+    pub spent: usize,
+    /// Probe totals issued/computed through the search's shared pools.
+    pub probes: ProbeCounts,
+}
+
+impl SearchOutcome {
+    /// Unique flow evaluations actually run.
+    pub fn evaluations(&self) -> usize {
+        self.outcome.results.len()
+    }
+}
+
+/// Run a budgeted search over `spec`'s joint variant space.
+///
+/// `extra_cfg` is applied to every variant (CLI `--model` / `-c`
+/// overrides); `jobs` bounds concurrently running variants per batch
+/// exactly like [`crate::flow::explore::explore_variants`].
+pub fn run_search(
+    session: &Session,
+    registry: &TaskRegistry,
+    spec: &FlowSpec,
+    search: &SearchSpec,
+    extra_cfg: &[(String, Value)],
+    jobs: usize,
+) -> Result<SearchOutcome> {
+    let space = SearchSpace::of(spec, &search.ranges)?;
+    let grid_size = space.grid_size();
+    let budget = search.budget.unwrap_or(grid_size).max(1);
+    let mut strategy = make_strategy(search, &space)?;
+    let shared = DseCaches::new();
+    let prefilter = if search.prefilter {
+        // heuristic accelerator: a session whose manifest can't model
+        // the spec (no such variant) just runs without it
+        HwPrefilter::build(session, spec, extra_cfg, &shared, jobs).ok()
+    } else {
+        None
+    };
+
+    let mut results = Vec::new();
+    let mut objectives: Vec<Vec<f64>> = Vec::new();
+    let mut index: HashMap<CandidateKey, usize> = HashMap::new();
+    let mut spent = 0usize;
+    while spent < budget {
+        let batch = {
+            let ctx = SearchCtx {
+                space: &space,
+                evaluated: &index,
+                prefilter: prefilter.as_ref(),
+            };
+            strategy.propose(&ctx, budget - spent)?
+        };
+        if batch.is_empty() {
+            break;
+        }
+        let batch = &batch[..batch.len().min(budget - spent)];
+        spent += batch.len();
+
+        // resolve each proposal: repeats (incl. batch-internal ones)
+        // are served from the memo, first appearances get the next
+        // result slot, all in proposal order
+        let prior = results.len();
+        let mut slots: Vec<(usize, bool)> = Vec::with_capacity(batch.len());
+        let mut fresh: Vec<FlowVariant> = Vec::new();
+        for c in batch {
+            match index.get(&space.key(c)) {
+                Some(&slot) => slots.push((slot, true)),
+                None => {
+                    let slot = prior + fresh.len();
+                    index.insert(space.key(c), slot);
+                    fresh.push(space.materialize(spec, c)?);
+                    slots.push((slot, false));
+                }
+            }
+        }
+        let ran = run_variants(session, registry, &fresh, extra_cfg, jobs, &shared)?;
+        for r in ran {
+            objectives.push(r.min_objectives()?);
+            results.push(r);
+        }
+
+        let observations: Vec<Observation> = batch
+            .iter()
+            .zip(&slots)
+            .map(|(c, &(slot, repeat))| Observation {
+                candidate: c.clone(),
+                label: results[slot].label.clone(),
+                objectives: objectives[slot].clone(),
+                repeat,
+            })
+            .collect();
+        let ctx = SearchCtx {
+            space: &space,
+            evaluated: &index,
+            prefilter: prefilter.as_ref(),
+        };
+        strategy.observe(&ctx, &observations);
+    }
+
+    let front = pareto_front_min(&objectives);
+    Ok(SearchOutcome {
+        outcome: ExploreOutcome { results, front },
+        strategy: strategy.name().to_string(),
+        grid_size,
+        budget,
+        spent,
+        probes: shared.probe_counts(),
+    })
+}

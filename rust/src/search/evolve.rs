@@ -1,0 +1,236 @@
+//! `Evolve`: NSGA-II-style multi-objective evolutionary search.
+//!
+//! The adaptive strategy: maintain an archive of every observed
+//! (candidate, objectives) pair, rank it by non-dominated sorting +
+//! crowding distance (the shared [`crate::search::pareto`] kernel), and
+//! spend the budget where the front is.
+//!
+//! Per generation:
+//!
+//! 1. **Seeding** (first call): enumerate the whole discrete grid when
+//!    it is small (≤ [`GEN0_ENUM_CAP`] points; range dimensions get
+//!    seeded uniform values), else draw a uniform pool of `4 × P`
+//!    points.  The pool is then *ordered* — by the cheap-estimator
+//!    prefilter when enabled (hardware-only NSGA rank through
+//!    [`crate::dse::ProbePool::estimate_batch`]/`HwCache`, so no
+//!    training probe is spent learning what the synthesis estimator
+//!    already knows), otherwise by a seeded shuffle — and the first
+//!    `min(P, budget left)` points become generation 0.
+//! 2. **Evolution**: binary-tournament parent selection on (rank,
+//!    crowding), uniform per-dimension crossover, mutation with
+//!    probability `1/n_dims` per dimension (categorical dims resample
+//!    uniformly; range dims take a Gaussian step of σ = 20% of the
+//!    interval, snapped back in).  Offspring repeating an evaluated or
+//!    in-batch point are rejected and regenerated (bounded tries).
+//!    With the prefilter on, twice the needed offspring are generated
+//!    and the estimator-ranked best half survive.
+//! 3. **Exhaustion fallback**: when evolution cannot produce a novel
+//!    point (tiny grids late in the run), the first still-unevaluated
+//!    grid points in enumeration order are proposed instead; if none
+//!    remain and there are no range dimensions, the strategy returns an
+//!    empty batch and the search ends early — so `evolve` with budget ≥
+//!    grid size degenerates to full coverage, never an infinite loop.
+//!
+//! Everything is driven by the run's seeded [`Prng`] and the
+//! deterministic observation stream, so a fixed (spec, seed, budget)
+//! reproduces the exact candidate sequence for any worker count.
+
+use std::collections::HashSet;
+
+use crate::error::Result;
+use crate::search::driver::{Observation, SearchCtx, SearchStrategy};
+use crate::search::pareto::nsga_order;
+use crate::search::space::{Candidate, CandidateKey, SearchSpace};
+use crate::util::prng::Prng;
+
+/// Grid sizes up to this are fully enumerated for the seeding pool.
+pub const GEN0_ENUM_CAP: usize = 256;
+/// Default population (overridable via the spec's
+/// `search.population`).
+pub const DEFAULT_POPULATION: usize = 8;
+/// Offspring-generation attempts per needed novel candidate.
+const TRIES_PER_OFFSPRING: usize = 16;
+
+pub struct Evolve {
+    prng: Prng,
+    population: usize,
+    /// Every observed point: (candidate, minimization objectives).
+    archive: Vec<(Candidate, Vec<f64>)>,
+    archive_keys: HashSet<CandidateKey>,
+}
+
+impl Evolve {
+    pub fn new(seed: u64, population: Option<usize>) -> Self {
+        Evolve {
+            prng: Prng::new(seed),
+            population: population.unwrap_or(DEFAULT_POPULATION).max(2),
+            archive: Vec::new(),
+            archive_keys: HashSet::new(),
+        }
+    }
+
+    /// Order a candidate pool best-first: prefilter rank when
+    /// available (falling back on estimator errors), else a seeded
+    /// shuffle.
+    fn order_pool(&mut self, ctx: &SearchCtx<'_>, pool: Vec<Candidate>) -> Vec<Candidate> {
+        if let Some(pf) = ctx.prefilter {
+            if let Ok(order) = pf.rank(ctx.space, &pool) {
+                return order.into_iter().map(|i| pool[i].clone()).collect();
+            }
+        }
+        let mut shuffled = pool;
+        self.prng.shuffle(&mut shuffled);
+        shuffled
+    }
+
+    /// Generation-0 candidate pool over the joint space.
+    fn seed_pool(&mut self, space: &SearchSpace) -> Vec<Candidate> {
+        let n = space.grid_size();
+        if n <= GEN0_ENUM_CAP {
+            return (0..n).map(|i| space.nth_grid_point(i, &mut self.prng)).collect();
+        }
+        let want = 4 * self.population;
+        let mut seen = HashSet::new();
+        let mut pool = Vec::new();
+        let mut tries = want * TRIES_PER_OFFSPRING;
+        while pool.len() < want && tries > 0 {
+            tries -= 1;
+            let c = space.sample(&mut self.prng);
+            if seen.insert(space.key(&c)) {
+                pool.push(c);
+            }
+        }
+        pool
+    }
+
+    /// Binary tournament on the NSGA survivor ordering: the parent at
+    /// the better (smaller) position wins.
+    fn tournament(&mut self, positions: &[usize]) -> usize {
+        let a = self.prng.below(positions.len());
+        let b = self.prng.below(positions.len());
+        if positions[a] <= positions[b] {
+            a
+        } else {
+            b
+        }
+    }
+
+    /// Uniform crossover + per-dimension mutation.
+    fn offspring(&mut self, space: &SearchSpace, pa: &Candidate, pb: &Candidate) -> Candidate {
+        let pick = |prng: &mut Prng| prng.below(2) == 0;
+        let mut child = Candidate {
+            order: if pick(&mut self.prng) { pa.order } else { pb.order },
+            grid: pa
+                .grid
+                .iter()
+                .zip(&pb.grid)
+                .map(|(&a, &b)| if pick(&mut self.prng) { a } else { b })
+                .collect(),
+            range: pa
+                .range
+                .iter()
+                .zip(&pb.range)
+                .map(|(&a, &b)| if pick(&mut self.prng) { a } else { b })
+                .collect(),
+        };
+        let n_dims = space.n_dims() as f64;
+        if self.prng.uniform() < 1.0 / n_dims {
+            child.order = self.prng.below(space.orders.len());
+        }
+        for (i, (_, vals)) in space.grid.iter().enumerate() {
+            if self.prng.uniform() < 1.0 / n_dims {
+                child.grid[i] = self.prng.below(vals.len());
+            }
+        }
+        for (i, (_, dim)) in space.ranges.iter().enumerate() {
+            if self.prng.uniform() < 1.0 / n_dims {
+                let step = self.prng.normal() * 0.2 * (dim.hi - dim.lo);
+                child.range[i] = dim.snap(child.range[i] + step);
+            }
+        }
+        child
+    }
+
+    /// First still-unevaluated grid points in enumeration order (the
+    /// deterministic fallback when evolution goes dry).
+    fn unevaluated_sweep(&mut self, ctx: &SearchCtx<'_>, want: usize) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for i in 0..ctx.space.grid_size() {
+            if out.len() >= want {
+                break;
+            }
+            let c = ctx.space.nth_grid_point(i, &mut self.prng);
+            if !ctx.evaluated.contains_key(&ctx.space.key(&c)) {
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+impl SearchStrategy for Evolve {
+    fn name(&self) -> &'static str {
+        "evolve"
+    }
+
+    fn propose(&mut self, ctx: &SearchCtx<'_>, limit: usize) -> Result<Vec<Candidate>> {
+        let want = self.population.min(limit);
+        if want == 0 {
+            return Ok(Vec::new());
+        }
+
+        if self.archive.is_empty() {
+            let pool = self.seed_pool(ctx.space);
+            let ordered = self.order_pool(ctx, pool);
+            return Ok(ordered
+                .into_iter()
+                .filter(|c| !ctx.evaluated.contains_key(&ctx.space.key(c)))
+                .take(want)
+                .collect());
+        }
+
+        // parent ordering: position in the NSGA survivor order
+        let objectives: Vec<Vec<f64>> =
+            self.archive.iter().map(|(_, o)| o.clone()).collect();
+        let order = nsga_order(&objectives);
+        let mut positions = vec![0usize; self.archive.len()];
+        for (pos, &i) in order.iter().enumerate() {
+            positions[i] = pos;
+        }
+
+        // generate novel offspring (surplus ×2 when the prefilter can
+        // rank the extras away)
+        let surplus = if ctx.prefilter.is_some() { 2 * want } else { want };
+        let mut taken: HashSet<CandidateKey> = HashSet::new();
+        let mut pool = Vec::new();
+        let mut tries = surplus * TRIES_PER_OFFSPRING;
+        while pool.len() < surplus && tries > 0 {
+            tries -= 1;
+            let pa = self.tournament(&positions);
+            let pb = self.tournament(&positions);
+            let (pa, pb) = (self.archive[pa].0.clone(), self.archive[pb].0.clone());
+            let child = self.offspring(ctx.space, &pa, &pb);
+            let key = ctx.space.key(&child);
+            if !ctx.evaluated.contains_key(&key) && !taken.contains(&key) {
+                taken.insert(key);
+                pool.push(child);
+            }
+        }
+        if pool.is_empty() {
+            // evolution is dry (taken is empty too): cover what's left
+            // of the grid instead
+            return Ok(self.unevaluated_sweep(ctx, want));
+        }
+        let ordered = self.order_pool(ctx, pool);
+        Ok(ordered.into_iter().take(want).collect())
+    }
+
+    fn observe(&mut self, ctx: &SearchCtx<'_>, batch: &[Observation]) {
+        for obs in batch {
+            let key = ctx.space.key(&obs.candidate);
+            if self.archive_keys.insert(key) {
+                self.archive.push((obs.candidate.clone(), obs.objectives.clone()));
+            }
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! `Exhaustive`: the full discrete grid, in declaration order.
+//!
+//! Wraps the legacy explorer behavior as a [`SearchStrategy`]: with the
+//! default budget (= grid size) it proposes every (order × cfg-grid)
+//! point exactly once, in the same order [`crate::flow::explore::
+//! expand_variants`] enumerates, so fronts, labels and CSVs match the
+//! pre-search explorer bit-for-bit.  A smaller budget truncates the
+//! sweep (a prefix scan, not a sample — use `random`/`evolve` when the
+//! budget can't cover the grid).
+//!
+//! Numeric `range` dimensions have no finite enumeration; constructing
+//! `Exhaustive` over a space that declares them is a config error
+//! (enforced by [`crate::search::make_strategy`]).
+
+use crate::error::Result;
+use crate::search::driver::{Observation, SearchCtx, SearchStrategy};
+use crate::search::space::Candidate;
+use crate::util::prng::Prng;
+
+#[derive(Debug, Default)]
+pub struct Exhaustive {
+    cursor: usize,
+}
+
+impl Exhaustive {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl SearchStrategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn propose(&mut self, ctx: &SearchCtx<'_>, limit: usize) -> Result<Vec<Candidate>> {
+        let n = ctx.space.grid_size();
+        let take = limit.min(n.saturating_sub(self.cursor));
+        // the space has no range dims (make_strategy rejected them), so
+        // decoding consumes no randomness; any seed works
+        let mut prng = Prng::new(0);
+        let batch: Vec<Candidate> = (self.cursor..self.cursor + take)
+            .map(|i| ctx.space.nth_grid_point(i, &mut prng))
+            .collect();
+        self.cursor += take;
+        Ok(batch)
+    }
+
+    fn observe(&mut self, _ctx: &SearchCtx<'_>, _batch: &[Observation]) {}
+}

@@ -1,0 +1,250 @@
+//! Budgeted adaptive search over the joint flow-variant space.
+//!
+//! The exhaustive explorer ([`crate::flow::explore`]) evaluates every
+//! point of a spec's (task orders × CFG grid) — adding one grid value
+//! multiplies runtime.  This subsystem makes the *selection* of points
+//! pluggable: a [`SearchStrategy`] proposes batches of candidates,
+//! observes their multi-objective results, and repeats until an
+//! evaluation **budget** is exhausted, all on top of the same
+//! [`crate::dse::ProbePool`]/[`crate::dse::DseCaches`] dedup machinery
+//! the explorer uses (cf. MetaML-Pro's cross-stage search strategies
+//! and the "Software-defined DSE" line of work: near-optimal fronts at
+//! a fraction of the evaluations).
+//!
+//! Built-in strategies:
+//!
+//! | name         | behavior                                             |
+//! |--------------|------------------------------------------------------|
+//! | `exhaustive` | the full grid in declaration order (legacy explorer) |
+//! | `random`     | seeded uniform sampling of the joint space           |
+//! | `evolve`     | NSGA-II-style evolution (non-dominated sort +        |
+//! |              | crowding; optional hardware-estimator prefilter)     |
+//!
+//! Specs opt in with a `search` section; the CLI can override it:
+//!
+//! ```json
+//! "search": {
+//!   "strategy": "evolve",
+//!   "budget": 8,
+//!   "seed": 7,
+//!   "population": 4,
+//!   "prefilter": true,
+//!   "range": {"hls.clock_period": {"min": 4.0, "max": 10.0}}
+//! }
+//! ```
+//!
+//! `range` adds numeric dimensions the samplers draw from
+//! ([`RangeDim`]); `exhaustive` rejects them (no finite enumeration).
+//! Determinism: for a fixed (spec, strategy, seed, budget) the
+//! candidate sequence, every LOG event stream, and the front are
+//! bit-identical for every `--jobs` value.
+
+pub mod driver;
+pub mod evolve;
+pub mod exhaustive;
+pub mod pareto;
+pub mod prefilter;
+pub mod random;
+pub mod space;
+
+pub use driver::{run_search, Observation, SearchCtx, SearchOutcome, SearchStrategy};
+pub use evolve::Evolve;
+pub use exhaustive::Exhaustive;
+pub use prefilter::HwPrefilter;
+pub use random::RandomSample;
+pub use space::{Candidate, CandidateKey, RangeDim, SearchSpace};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// The built-in strategy names, in help/table order.
+pub fn strategy_names() -> &'static [&'static str] {
+    &["exhaustive", "random", "evolve"]
+}
+
+/// The parsed `search` section of a spec (or its CLI override).
+#[derive(Debug, Clone)]
+pub struct SearchSpec {
+    /// One of [`strategy_names`].
+    pub strategy: String,
+    /// Evaluation budget (proposals); `None` = the discrete grid size.
+    pub budget: Option<usize>,
+    /// PRNG seed for the stochastic strategies.
+    pub seed: u64,
+    /// `evolve` population per generation (`None` = default).
+    pub population: Option<usize>,
+    /// Enable the cheap-estimator hardware prefilter.
+    pub prefilter: bool,
+    /// Numeric search dimensions (samplers only).
+    pub ranges: Vec<(String, RangeDim)>,
+}
+
+impl Default for SearchSpec {
+    fn default() -> Self {
+        SearchSpec {
+            strategy: "exhaustive".into(),
+            budget: None,
+            seed: 0,
+            population: None,
+            prefilter: false,
+            ranges: Vec::new(),
+        }
+    }
+}
+
+impl SearchSpec {
+    /// Parse a spec's `search` object.  Unknown keys are rejected (a
+    /// typo like `"buget"` must not silently run the default sweep).
+    pub fn parse(v: &Value) -> Result<SearchSpec> {
+        let Value::Object(map) = v else {
+            return Err(Error::Config("\"search\" must be an object".into()));
+        };
+        let mut spec = SearchSpec::default();
+        for (key, val) in map {
+            match key.as_str() {
+                "strategy" => {
+                    let name = val.as_str().ok_or_else(|| {
+                        Error::Config("search strategy must be a string".into())
+                    })?;
+                    if !strategy_names().contains(&name) {
+                        return Err(Error::Config(format!(
+                            "unknown search strategy {name:?} (expected one of: {})",
+                            strategy_names().join(", ")
+                        )));
+                    }
+                    spec.strategy = name.to_string();
+                }
+                "budget" => {
+                    let b = val.as_usize().filter(|&b| b >= 1).ok_or_else(|| {
+                        Error::Config("search budget must be a positive integer".into())
+                    })?;
+                    spec.budget = Some(b);
+                }
+                "seed" => {
+                    spec.seed = val.as_usize().ok_or_else(|| {
+                        Error::Config("search seed must be a non-negative integer".into())
+                    })? as u64;
+                }
+                "population" => {
+                    let p = val.as_usize().filter(|&p| p >= 2).ok_or_else(|| {
+                        Error::Config("search population must be an integer >= 2".into())
+                    })?;
+                    spec.population = Some(p);
+                }
+                "prefilter" => {
+                    spec.prefilter = val.as_bool().ok_or_else(|| {
+                        Error::Config("search prefilter must be a bool".into())
+                    })?;
+                }
+                "range" => {
+                    let Value::Object(ranges) = val else {
+                        return Err(Error::Config(
+                            "search range must be an object of {key: {min, max}}".into(),
+                        ));
+                    };
+                    for (rk, rv) in ranges {
+                        spec.ranges.push((rk.clone(), RangeDim::parse(rk, rv)?));
+                    }
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown search key {other:?} (valid: strategy, budget, seed, \
+                         population, prefilter, range)"
+                    )));
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// Instantiate a strategy by name, validating it against the space
+/// (`exhaustive` cannot sweep numeric ranges).
+pub fn make_strategy(
+    spec: &SearchSpec,
+    space: &SearchSpace,
+) -> Result<Box<dyn SearchStrategy>> {
+    match spec.strategy.as_str() {
+        "exhaustive" => {
+            if !space.ranges.is_empty() {
+                return Err(Error::Config(
+                    "exhaustive search cannot enumerate numeric range dimensions \
+                     (use strategy \"random\" or \"evolve\", or move the key into \
+                     explore.cfg_grid)"
+                        .into(),
+                ));
+            }
+            Ok(Box::new(Exhaustive::new()))
+        }
+        "random" => Ok(Box::new(RandomSample::new(spec.seed))),
+        "evolve" => Ok(Box::new(Evolve::new(spec.seed, spec.population))),
+        other => Err(Error::Config(format!(
+            "unknown search strategy {other:?} (expected one of: {})",
+            strategy_names().join(", ")
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn parses_full_search_section() {
+        let v = json::parse(
+            r#"{"strategy": "evolve", "budget": 8, "seed": 7, "population": 4,
+                "prefilter": true,
+                "range": {"hls.clock_period": {"min": 4.0, "max": 10.0}}}"#,
+        )
+        .unwrap();
+        let s = SearchSpec::parse(&v).unwrap();
+        assert_eq!(s.strategy, "evolve");
+        assert_eq!(s.budget, Some(8));
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.population, Some(4));
+        assert!(s.prefilter);
+        assert_eq!(s.ranges.len(), 1);
+        assert_eq!(s.ranges[0].0, "hls.clock_period");
+        assert!(!s.ranges[0].1.integer);
+    }
+
+    #[test]
+    fn defaults_are_exhaustive_full_grid() {
+        let s = SearchSpec::parse(&json::parse("{}").unwrap()).unwrap();
+        assert_eq!(s.strategy, "exhaustive");
+        assert_eq!(s.budget, None);
+        assert_eq!(s.seed, 0);
+        assert!(!s.prefilter);
+    }
+
+    #[test]
+    fn rejects_unknown_strategies_keys_and_bad_values() {
+        let bad = |s: &str| SearchSpec::parse(&json::parse(s).unwrap()).unwrap_err().to_string();
+        assert!(bad(r#"{"strategy": "anneal"}"#).contains("anneal"));
+        assert!(bad(r#"{"buget": 8}"#).contains("buget"));
+        assert!(bad(r#"{"budget": 0}"#).contains("positive"));
+        assert!(bad(r#"{"population": 1}"#).contains(">= 2"));
+        assert!(bad(r#"{"range": {"x": {"min": 5, "max": 1}}}"#).contains("min < max"));
+    }
+
+    #[test]
+    fn exhaustive_rejects_range_dimensions() {
+        let spec = crate::config::FlowSpec::parse(
+            r#"{"name": "t", "tasks": [{"id": "a", "type": "X"}], "edges": []}"#,
+        )
+        .unwrap();
+        let search = SearchSpec {
+            ranges: vec![("k".into(), RangeDim { lo: 0.0, hi: 1.0, integer: false })],
+            ..Default::default()
+        };
+        let space = SearchSpace::of(&spec, &search.ranges).unwrap();
+        let err = make_strategy(&search, &space).unwrap_err().to_string();
+        assert!(err.contains("range"), "{err}");
+        // the samplers accept the same space
+        let mut random = SearchSpec { strategy: "random".into(), ..search.clone() };
+        assert!(make_strategy(&random, &space).is_ok());
+        random.strategy = "evolve".into();
+        assert!(make_strategy(&random, &space).is_ok());
+    }
+}

@@ -1,0 +1,268 @@
+//! N-objective dominance kernel.
+//!
+//! One implementation of Pareto dominance serves every consumer: the
+//! multi-flow explorer's (accuracy, DSP, LUT, latency) front, the
+//! NSGA-II-style [`crate::search::Evolve`] strategy (non-dominated
+//! sorting + crowding distance), the hardware-only prefilter ranking,
+//! and the bench harness's hypervolume trajectory.  All functions take
+//! **minimization** objective vectors — callers negate
+//! maximized metrics (accuracy) before handing points in, which keeps
+//! the kernel free of per-objective sense flags and lets new objectives
+//! (power_w, …) join by just extending the vector.
+//!
+//! Every routine is deterministic: indices come back ascending (or in a
+//! documented stable order), so search traces built on top compare
+//! bit-for-bit across runs and worker counts.
+
+/// Does `a` dominate `b` (minimization)?  True when `a` is no worse on
+/// every objective and strictly better on at least one.  Vectors of
+/// different lengths never dominate each other (callers mixing
+/// objective spaces is a bug this turns into a harmless "no").
+pub fn dominates_min(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x <= y)
+        && a.iter().zip(b).any(|(x, y)| x < y)
+}
+
+/// Non-dominated set over minimization objective vectors, as ascending
+/// indices.  Exact duplicates do not dominate each other, so ties are
+/// all kept (the explorer relies on this to surface equivalent design
+/// points).
+pub fn pareto_front_min(points: &[Vec<f64>]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && dominates_min(p, &points[i]))
+        })
+        .collect()
+}
+
+/// NSGA-II non-dominated sorting: rank 0 is the Pareto front, rank 1
+/// the front after removing rank 0, and so on.  Returns one rank per
+/// point.
+pub fn non_dominated_rank(points: &[Vec<f64>]) -> Vec<usize> {
+    let n = points.len();
+    let mut rank = vec![usize::MAX; n];
+    let mut assigned = 0usize;
+    let mut level = 0usize;
+    while assigned < n {
+        let mut this_level = Vec::new();
+        for i in 0..n {
+            if rank[i] != usize::MAX {
+                continue;
+            }
+            let dominated = (0..n).any(|j| {
+                j != i && rank[j] == usize::MAX && dominates_min(&points[j], &points[i])
+            });
+            if !dominated {
+                this_level.push(i);
+            }
+        }
+        // ties among identical points land in the same level together,
+        // so the peel always makes progress
+        for &i in &this_level {
+            rank[i] = level;
+            assigned += 1;
+        }
+        level += 1;
+    }
+    rank
+}
+
+/// NSGA-II crowding distance over one front (all points assumed to be
+/// mutually non-dominated, though the formula doesn't require it).
+/// Boundary points per objective get `f64::INFINITY`; interior points
+/// accumulate the normalized neighbour gap.  Larger = lonelier =
+/// preferred when truncating a front.
+pub fn crowding_distances(points: &[Vec<f64>]) -> Vec<f64> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let m = points[0].len();
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    let mut dist = vec![0.0f64; n];
+    for obj in 0..m {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| points[a][obj].total_cmp(&points[b][obj]));
+        let lo = points[order[0]][obj];
+        let hi = points[order[n - 1]][obj];
+        if hi <= lo {
+            // degenerate objective: no spread, no boundaries to reward —
+            // skipping it entirely keeps fully-tied groups at distance 0,
+            // so downstream orderings fall back to their index tie-break
+            continue;
+        }
+        dist[order[0]] = f64::INFINITY;
+        dist[order[n - 1]] = f64::INFINITY;
+        for w in 1..n - 1 {
+            let gap = points[order[w + 1]][obj] - points[order[w - 1]][obj];
+            dist[order[w]] += gap / (hi - lo);
+        }
+    }
+    dist
+}
+
+/// Order point indices best-first by (non-dominated rank ascending,
+/// crowding distance descending, index ascending).  The standard
+/// NSGA-II survivor ordering, reused by the hardware prefilter to rank
+/// candidate batches on cheap estimator objectives.
+pub fn nsga_order(points: &[Vec<f64>]) -> Vec<usize> {
+    let ranks = non_dominated_rank(points);
+    let mut crowd = vec![0.0f64; points.len()];
+    let n_levels = ranks.iter().copied().max().map(|r| r + 1).unwrap_or(0);
+    for level in 0..n_levels {
+        let members: Vec<usize> =
+            (0..points.len()).filter(|&i| ranks[i] == level).collect();
+        let level_points: Vec<Vec<f64>> =
+            members.iter().map(|&i| points[i].clone()).collect();
+        let level_crowd = crowding_distances(&level_points);
+        for (slot, &i) in members.iter().enumerate() {
+            crowd[i] = level_crowd[slot];
+        }
+    }
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| {
+        ranks[a]
+            .cmp(&ranks[b])
+            .then(crowd[b].total_cmp(&crowd[a]))
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+/// How many points the hypervolume routine handles exactly (the
+/// inclusion–exclusion sum is `2^front`); larger fronts keep only the
+/// first `HYPERVOLUME_EXACT_CAP` non-dominated points, which
+/// under-reports — callers wanting the exact number should shrink the
+/// front first.
+pub const HYPERVOLUME_EXACT_CAP: usize = 16;
+
+/// Hypervolume (minimization) of the region dominated by `points`
+/// relative to `reference` — the standard front-quality scalar the
+/// bench trajectory tracks.  Points not strictly better than the
+/// reference on some objective contribute nothing.  Exact via
+/// inclusion–exclusion over the non-dominated subset (capped at
+/// [`HYPERVOLUME_EXACT_CAP`] points).
+pub fn hypervolume(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let mut front: Vec<&Vec<f64>> = pareto_front_min(points)
+        .into_iter()
+        .map(|i| &points[i])
+        .filter(|p| p.len() == reference.len() && p.iter().zip(reference).all(|(x, r)| x < r))
+        .collect();
+    front.truncate(HYPERVOLUME_EXACT_CAP);
+    let n = front.len();
+    let m = reference.len();
+    let mut volume = 0.0f64;
+    for subset in 1u32..(1u32 << n) {
+        // intersection of the dominated boxes of the subset's members:
+        // per-objective max of the corner coordinates
+        let mut vol = 1.0f64;
+        for obj in 0..m {
+            let corner = (0..n)
+                .filter(|&i| subset & (1 << i) != 0)
+                .map(|i| front[i][obj])
+                .fold(f64::NEG_INFINITY, f64::max);
+            vol *= (reference[obj] - corner).max(0.0);
+        }
+        if subset.count_ones() % 2 == 1 {
+            volume += vol;
+        } else {
+            volume -= vol;
+        }
+    }
+    volume
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(rows: &[&[f64]]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| r.to_vec()).collect()
+    }
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates_min(&[1.0, 1.0], &[2.0, 1.0]));
+        assert!(!dominates_min(&[1.0, 1.0], &[1.0, 1.0]));
+        assert!(!dominates_min(&[1.0, 2.0], &[2.0, 1.0]));
+        // length mismatch is "no", never a panic
+        assert!(!dominates_min(&[1.0], &[2.0, 1.0]));
+    }
+
+    #[test]
+    fn front_keeps_ties_and_trades() {
+        let p = pts(&[&[1.0, 5.0], &[5.0, 1.0], &[1.0, 5.0], &[6.0, 6.0]]);
+        assert_eq!(pareto_front_min(&p), vec![0, 1, 2]);
+        assert!(pareto_front_min(&[]).is_empty());
+    }
+
+    #[test]
+    fn ranks_peel_fronts() {
+        let p = pts(&[&[0.0, 0.0], &[1.0, 1.0], &[2.0, 2.0], &[0.0, 3.0]]);
+        assert_eq!(non_dominated_rank(&p), vec![0, 1, 2, 0]);
+        // identical points share a rank instead of deadlocking the peel
+        let q = pts(&[&[1.0], &[1.0]]);
+        assert_eq!(non_dominated_rank(&q), vec![0, 0]);
+    }
+
+    #[test]
+    fn crowding_rewards_boundaries_and_spread() {
+        let p = pts(&[&[0.0, 4.0], &[1.0, 2.0], &[2.0, 1.5], &[4.0, 0.0]]);
+        let d = crowding_distances(&p);
+        assert_eq!(d[0], f64::INFINITY);
+        assert_eq!(d[3], f64::INFINITY);
+        assert!(d[1].is_finite() && d[2].is_finite());
+        // point 1 sits in the larger gap on both axes
+        assert!(d[1] > d[2], "{d:?}");
+        assert_eq!(crowding_distances(&pts(&[&[1.0], &[2.0]])), vec![f64::INFINITY; 2]);
+    }
+
+    #[test]
+    fn identical_points_keep_index_order() {
+        // three (or more) exact ties: every objective is degenerate, so
+        // crowding is 0 for all of them and nsga_order falls back to
+        // the index tie-break instead of arbitrarily favouring the
+        // sort's first/last elements
+        let p = pts(&[&[1.0, 2.0], &[1.0, 2.0], &[1.0, 2.0], &[1.0, 2.0]]);
+        assert_eq!(crowding_distances(&p), vec![0.0; 4]);
+        assert_eq!(nsga_order(&p), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn nsga_order_is_rank_then_crowding_then_index() {
+        let p = pts(&[
+            &[0.0, 4.0], // front boundary
+            &[2.0, 2.0], // front interior
+            &[1.0, 2.5], // front interior, lonelier
+            &[4.0, 0.0], // front boundary
+            &[5.0, 5.0], // rank 1
+        ]);
+        let order = nsga_order(&p);
+        assert_eq!(*order.last().unwrap(), 4);
+        // boundaries (inf crowding) come before interiors, stable by index
+        assert_eq!(&order[..2], &[0, 3]);
+    }
+
+    #[test]
+    fn hypervolume_exact_on_small_fronts() {
+        let reference = [4.0, 4.0];
+        // one point: a 2x2 box
+        assert_eq!(hypervolume(&pts(&[&[2.0, 2.0]]), &reference), 4.0);
+        // two trading points: union of boxes, overlap counted once
+        let hv = hypervolume(&pts(&[&[1.0, 3.0], &[3.0, 1.0]]), &reference);
+        assert_eq!(hv, 3.0 + 3.0 - 1.0);
+        // dominated points add nothing; out-of-reference points ignored
+        let hv2 = hypervolume(
+            &pts(&[&[1.0, 3.0], &[3.0, 1.0], &[3.5, 3.5], &[5.0, 0.0]]),
+            &reference,
+        );
+        assert_eq!(hv2, hv);
+        assert_eq!(hypervolume(&[], &reference), 0.0);
+    }
+}

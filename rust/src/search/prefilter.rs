@@ -1,0 +1,162 @@
+//! Cheap-estimator prefilter: rank candidates by hardware-only
+//! objectives before spending full training probes.
+//!
+//! A full variant evaluation trains and searches a model end to end —
+//! seconds to minutes.  A synthesis estimation is microseconds.  When a
+//! strategy generates more candidates than it can afford to evaluate,
+//! the prefilter orders them by what the estimator alone can see: it
+//! applies each candidate's *hardware-stage* CFG overrides
+//! (`reuse_factor`, `clock_period`, `FPGA_part_number`, `IOType`) to a
+//! dense baseline HLS model of the flow's DNN, estimates every
+//! configuration through [`ProbePool::estimate_batch`] (so repeats hit
+//! the shared [`crate::dse::HwCache`] across the whole search), and
+//! orders the batch by NSGA rank over (DSP, LUT, latency_ns) — the
+//! same dominance kernel the real front uses, just on the cheap
+//! objectives.
+//!
+//! It is a *heuristic*: candidates differing only in software-stage
+//! dimensions (pruning tolerance, epochs) estimate identically and
+//! keep their proposal order.  It never changes what a strategy is
+//! allowed to evaluate, only which surplus proposals get cut first,
+//! and it is deterministic for any worker count (batch results come
+//! back in request order).
+
+use crate::config::FlowSpec;
+use crate::dse::{DseCaches, HwProbeRequest, ProbePool};
+use crate::error::Result;
+use crate::flow::Session;
+use crate::hls::{HlsModel, HlsTransform, IoType, SetReuseFactor};
+use crate::json::Value;
+use crate::model::state::Precision;
+use crate::search::pareto::nsga_order;
+use crate::search::space::{Candidate, SearchSpace};
+use crate::synth::FpgaDevice;
+
+/// The baseline model + shared-memo pool behind one search's prefilter.
+pub struct HwPrefilter {
+    base: HlsModel,
+    pool: ProbePool,
+}
+
+/// Last CFG entry whose key is exactly `param` or ends in `".{param}"`
+/// (instance-scoped keys like `hls.clock_period`).
+fn hw_param<'a>(cfg: &'a [(String, Value)], param: &str) -> Option<&'a Value> {
+    let suffix = format!(".{param}");
+    cfg.iter()
+        .rev()
+        .find(|(k, _)| k == param || k.ends_with(&suffix))
+        .map(|(_, v)| v)
+}
+
+impl HwPrefilter {
+    /// Build the baseline: the spec's model (scale 1.0, dense masks,
+    /// default datapath precision) on the spec's hardware defaults.
+    /// Fails cleanly when the session's manifest has no such variant —
+    /// strategies then fall back to their non-prefiltered ordering.
+    pub fn build(
+        session: &Session,
+        spec: &FlowSpec,
+        extra_cfg: &[(String, Value)],
+        shared: &DseCaches,
+        jobs: usize,
+    ) -> Result<HwPrefilter> {
+        let mut defaults: Vec<(String, Value)> = spec.cfg_entries.clone();
+        defaults.extend(extra_cfg.iter().cloned());
+        let model = hw_param(&defaults, "model")
+            .and_then(Value::as_str)
+            .unwrap_or("jet_dnn");
+        let variant = session.manifest.variant(model, 1.0)?.clone();
+        let part = hw_param(&defaults, "FPGA_part_number")
+            .and_then(Value::as_str)
+            .unwrap_or("vu9p")
+            .to_string();
+        let clock_ns = hw_param(&defaults, "clock_period")
+            .and_then(Value::as_f64)
+            .filter(|&c| c > 0.0)
+            .unwrap_or(5.0);
+        // dense baseline: empty nnz list = every mask fully populated
+        let base =
+            HlsModel::from_nnz(&variant, &[], Precision::new(18, 8), &part, clock_ns)?;
+        // validate the default target once so a bad part fails at build
+        // time, not on the first rank() call
+        FpgaDevice::target_of(&base)?;
+        Ok(HwPrefilter { base, pool: shared.pool(jobs) })
+    }
+
+    /// Apply a candidate's hardware-stage overrides to the baseline.
+    fn configure(&self, cfg: &[(String, Value)]) -> Result<HlsModel> {
+        let mut m = self.base.clone();
+        if let Some(part) = hw_param(cfg, "FPGA_part_number").and_then(Value::as_str) {
+            m.fpga_part = part.to_string();
+        }
+        if let Some(clock) = hw_param(cfg, "clock_period").and_then(Value::as_f64) {
+            if clock > 0.0 {
+                m.clock_period_ns = clock;
+            }
+        }
+        if let Some(io) = hw_param(cfg, "IOType").and_then(Value::as_str) {
+            m.io_type = if io == "io_stream" { IoType::Stream } else { IoType::Parallel };
+        }
+        if let Some(rf) = hw_param(cfg, "reuse_factor").and_then(Value::as_usize) {
+            if rf > 1 {
+                SetReuseFactor(rf).apply(&mut m)?;
+            }
+        }
+        Ok(m)
+    }
+
+    /// Order candidate indices best-first by NSGA rank / crowding over
+    /// estimated (DSP, LUT, latency_ns), stable in the input order for
+    /// hardware-identical candidates.
+    pub fn rank(&self, space: &SearchSpace, candidates: &[Candidate]) -> Result<Vec<usize>> {
+        let models: Vec<HlsModel> = candidates
+            .iter()
+            .map(|c| self.configure(&space.candidate_cfg(c)))
+            .collect::<Result<_>>()?;
+        // estimate_batch takes one (device, clock) per batch, so group
+        // candidates by target; results land back in their input slots
+        let mut objectives: Vec<Vec<f64>> = vec![Vec::new(); models.len()];
+        let mut groups: Vec<(String, u64, Vec<usize>)> = Vec::new();
+        for (i, m) in models.iter().enumerate() {
+            let (device, clock_mhz) = FpgaDevice::target_of(m)?;
+            let tag = (device.name.to_string(), clock_mhz.to_bits());
+            match groups.iter_mut().find(|(n, c, _)| *n == tag.0 && *c == tag.1) {
+                Some((_, _, idxs)) => idxs.push(i),
+                None => groups.push((tag.0, tag.1, vec![i])),
+            }
+        }
+        for (name, clock_bits, idxs) in groups {
+            let device = FpgaDevice::by_name(&name).expect("grouped by resolved device");
+            let clock_mhz = f64::from_bits(clock_bits);
+            let requests: Vec<HwProbeRequest> = idxs
+                .iter()
+                .map(|&i| HwProbeRequest::new(i, models[i].clone()))
+                .collect();
+            for r in self.pool.estimate_batch(device, clock_mhz, &requests)? {
+                objectives[r.id] =
+                    vec![r.eval.dsp as f64, r.eval.lut as f64, r.eval.latency_ns];
+            }
+        }
+        Ok(nsga_order(&objectives))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hw_param_matches_global_and_instance_scoped_keys() {
+        let cfg = vec![
+            ("clock_period".to_string(), Value::Number(5.0)),
+            ("hls.clock_period".to_string(), Value::Number(10.0)),
+            ("prune.tolerate_acc_loss".to_string(), Value::Number(0.02)),
+        ];
+        // last match wins (instance-scoped override after the global)
+        assert_eq!(hw_param(&cfg, "clock_period").and_then(Value::as_f64), Some(10.0));
+        assert!(hw_param(&cfg, "reuse_factor").is_none());
+        // a suffix must be a whole dotted segment
+        let odd = vec![("xclock_period".to_string(), Value::Number(1.0))];
+        assert!(hw_param(&odd, "clock_period").is_none());
+    }
+}

@@ -1,0 +1,60 @@
+//! `RandomSample`: seeded uniform sampling of the joint space.
+//!
+//! The baseline budgeted strategy: every proposal is an independent
+//! uniform draw over (orders × grid × ranges) from the run's seeded
+//! [`Prng`], with bounded rejection of points it already proposed or
+//! the driver already evaluated (so small discrete spaces don't burn
+//! the whole budget on repeats, while a genuinely exhausted space still
+//! terminates by paying for one).  No adaptation — it exists as the
+//! statistical control `evolve` must beat, and as the simplest way to
+//! sample range dimensions at all.
+
+use std::collections::HashSet;
+
+use crate::error::Result;
+use crate::search::driver::{Observation, SearchCtx, SearchStrategy};
+use crate::search::space::{Candidate, CandidateKey};
+use crate::util::prng::Prng;
+
+/// Proposals per batch (bounds how speculative a round can be; small
+/// enough that observations steer nothing — there is nothing to steer —
+/// but repeats stay cheap to reject).
+const BATCH: usize = 8;
+/// Rejection attempts per accepted draw.
+const TRIES: usize = 64;
+
+pub struct RandomSample {
+    prng: Prng,
+    proposed: HashSet<CandidateKey>,
+}
+
+impl RandomSample {
+    pub fn new(seed: u64) -> Self {
+        RandomSample { prng: Prng::new(seed), proposed: HashSet::new() }
+    }
+}
+
+impl SearchStrategy for RandomSample {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(&mut self, ctx: &SearchCtx<'_>, limit: usize) -> Result<Vec<Candidate>> {
+        let mut batch = Vec::new();
+        for _ in 0..limit.min(BATCH) {
+            let mut pick = ctx.space.sample(&mut self.prng);
+            for _ in 0..TRIES {
+                let key = ctx.space.key(&pick);
+                if !self.proposed.contains(&key) && !ctx.evaluated.contains_key(&key) {
+                    break;
+                }
+                pick = ctx.space.sample(&mut self.prng);
+            }
+            self.proposed.insert(ctx.space.key(&pick));
+            batch.push(pick);
+        }
+        Ok(batch)
+    }
+
+    fn observe(&mut self, _ctx: &SearchCtx<'_>, _batch: &[Observation]) {}
+}

@@ -1,0 +1,307 @@
+//! The joint design space a budgeted search runs over.
+//!
+//! A [`SearchSpace`] is assembled from a spec's `explore` section (task
+//! orders × discrete CFG grid) plus the `search` section's numeric
+//! `range` dimensions.  A point in the space is a [`Candidate`] —
+//! an order index, one index per discrete grid dimension, and one
+//! value per numeric range dimension — which materializes into a
+//! [`FlowVariant`] through the same label/graph construction the
+//! exhaustive grid expander uses, so a strategy that happens to
+//! enumerate the grid reproduces the legacy explorer bit-for-bit.
+//!
+//! Range dimensions are what distinguish samplers from the grid:
+//! `Exhaustive` rejects them (there is no finite enumeration), while
+//! `RandomSample`/`Evolve` draw real-valued (or integer) points from
+//! them.
+
+use crate::config::FlowSpec;
+use crate::error::{Error, Result};
+use crate::flow::explore::{variant_for, FlowVariant};
+use crate::json::Value;
+use crate::util::prng::Prng;
+
+/// One numeric search dimension: a closed interval, optionally
+/// integer-valued (samples are rounded and clamped).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RangeDim {
+    pub lo: f64,
+    pub hi: f64,
+    pub integer: bool,
+}
+
+impl RangeDim {
+    /// Parse `{"min": x, "max": y, "integer"?: bool}`.
+    pub fn parse(key: &str, v: &Value) -> Result<RangeDim> {
+        let lo = v.req_f64("min")?;
+        let hi = v.req_f64("max")?;
+        if !(lo < hi) || !lo.is_finite() || !hi.is_finite() {
+            return Err(Error::Config(format!(
+                "search range {key:?} needs finite min < max (got {lo}..{hi})"
+            )));
+        }
+        let integer = match v.get("integer") {
+            None => false,
+            Some(b) => b.as_bool().ok_or_else(|| {
+                Error::Config(format!("search range {key:?}: \"integer\" must be a bool"))
+            })?,
+        };
+        // an integer interval must contain one, or snap()'s clamp onto
+        // [ceil(lo), floor(hi)] would have min > max
+        if integer && lo.ceil() > hi.floor() {
+            return Err(Error::Config(format!(
+                "search range {key:?} is integer but {lo}..{hi} contains no integer"
+            )));
+        }
+        Ok(RangeDim { lo, hi, integer })
+    }
+
+    /// Clamp into the interval, rounding integer dimensions.
+    pub fn snap(&self, x: f64) -> f64 {
+        let x = x.clamp(self.lo, self.hi);
+        if self.integer {
+            x.round().clamp(self.lo.ceil(), self.hi.floor())
+        } else {
+            x
+        }
+    }
+
+    /// Seeded uniform draw from the interval.
+    pub fn sample(&self, prng: &mut Prng) -> f64 {
+        self.snap(prng.uniform_in(self.lo, self.hi))
+    }
+}
+
+/// One point of the joint space, in space-relative coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Index into [`SearchSpace::orders`].
+    pub order: usize,
+    /// Index per discrete grid dimension, aligned with
+    /// [`SearchSpace::grid`].
+    pub grid: Vec<usize>,
+    /// Value per numeric dimension, aligned with
+    /// [`SearchSpace::ranges`].
+    pub range: Vec<f64>,
+}
+
+/// Hashable identity of a candidate (range values by bit pattern):
+/// the dedup key for "has this exact point been evaluated".
+pub type CandidateKey = (usize, Vec<usize>, Vec<u64>);
+
+/// The search space: order choices, discrete grid dimensions, numeric
+/// range dimensions.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Order permutations (`None` = the spec's own graph).  Always
+    /// non-empty.
+    pub orders: Vec<Option<Vec<String>>>,
+    /// Discrete dimensions: CFG key → candidate values, in the
+    /// `explore.cfg_grid` declaration (BTree) order.
+    pub grid: Vec<(String, Vec<Value>)>,
+    /// Numeric dimensions from the `search.range` section.
+    pub ranges: Vec<(String, RangeDim)>,
+}
+
+impl SearchSpace {
+    /// Assemble the space from a spec's `explore` grid and the search
+    /// section's range dimensions.  A key may not be both a grid and a
+    /// range dimension.
+    pub fn of(spec: &FlowSpec, ranges: &[(String, RangeDim)]) -> Result<SearchSpace> {
+        let explore = spec.explore.clone().unwrap_or_default();
+        if !explore.orders.is_empty() {
+            // same contract as expand_variants: order variants are plain
+            // chains, so guards/back edges must not be silently dropped
+            crate::flow::explore::reject_unchainable_orders(spec)?;
+        }
+        for (k, _) in ranges {
+            if explore.cfg_grid.iter().any(|(g, _)| g == k) {
+                return Err(Error::Config(format!(
+                    "search range {k:?} collides with an explore cfg_grid dimension"
+                )));
+            }
+        }
+        let orders: Vec<Option<Vec<String>>> = if explore.orders.is_empty() {
+            vec![None]
+        } else {
+            explore.orders.iter().cloned().map(Some).collect()
+        };
+        Ok(SearchSpace { orders, grid: explore.cfg_grid, ranges: ranges.to_vec() })
+    }
+
+    /// Size of the *discrete* part (orders × grid product) — what an
+    /// exhaustive sweep evaluates and what budgets default to.  Range
+    /// dimensions are uncountable and deliberately excluded.
+    pub fn grid_size(&self) -> usize {
+        self.orders.len() * self.grid.iter().map(|(_, vs)| vs.len()).product::<usize>()
+    }
+
+    /// Number of genome dimensions (order + grid + ranges).
+    pub fn n_dims(&self) -> usize {
+        1 + self.grid.len() + self.ranges.len()
+    }
+
+    /// Decode discrete grid point `i` (0 ≤ i < [`Self::grid_size`]) in
+    /// exhaustive enumeration order — orders vary slowest, then grid
+    /// dimensions in declaration order.  Range values are sampled from
+    /// `prng` when dimensions exist (there is no canonical grid value
+    /// for a continuous dimension).
+    pub fn nth_grid_point(&self, i: usize, prng: &mut Prng) -> Candidate {
+        debug_assert!(i < self.grid_size());
+        let mut rem = i;
+        let mut radix: Vec<usize> = vec![self.orders.len()];
+        radix.extend(self.grid.iter().map(|(_, vs)| vs.len()));
+        let mut digits = vec![0usize; radix.len()];
+        for d in (0..radix.len()).rev() {
+            digits[d] = rem % radix[d];
+            rem /= radix[d];
+        }
+        Candidate {
+            order: digits[0],
+            grid: digits[1..].to_vec(),
+            range: self.ranges.iter().map(|(_, r)| r.sample(prng)).collect(),
+        }
+    }
+
+    /// Seeded uniform draw over the whole joint space.
+    pub fn sample(&self, prng: &mut Prng) -> Candidate {
+        Candidate {
+            order: prng.below(self.orders.len()),
+            grid: self.grid.iter().map(|(_, vs)| prng.below(vs.len())).collect(),
+            range: self.ranges.iter().map(|(_, r)| r.sample(prng)).collect(),
+        }
+    }
+
+    /// A candidate's dedup identity.
+    pub fn key(&self, c: &Candidate) -> CandidateKey {
+        (c.order, c.grid.clone(), c.range.iter().map(|v| v.to_bits()).collect())
+    }
+
+    /// The CFG overrides a candidate's coordinates decode to (grid
+    /// dimensions first, then range dimensions, declaration order).
+    pub fn candidate_cfg(&self, c: &Candidate) -> Vec<(String, Value)> {
+        let mut cfg: Vec<(String, Value)> = self
+            .grid
+            .iter()
+            .zip(&c.grid)
+            .map(|((k, vs), &i)| (k.clone(), vs[i].clone()))
+            .collect();
+        cfg.extend(
+            self.ranges
+                .iter()
+                .zip(&c.range)
+                .map(|((k, _), &v)| (k.clone(), Value::Number(v))),
+        );
+        cfg
+    }
+
+    /// Materialize a candidate into a runnable [`FlowVariant`]
+    /// (label-identical to grid expansion for pure-grid candidates).
+    pub fn materialize(&self, spec: &FlowSpec, c: &Candidate) -> Result<FlowVariant> {
+        variant_for(spec, self.orders[c.order].as_deref(), self.candidate_cfg(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::explore::expand_variants;
+
+    fn grid_spec() -> FlowSpec {
+        FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                "edges": [["a", "b"]],
+                "explore": {
+                  "orders": [["a", "b"], ["b", "a"]],
+                  "cfg_grid": {"k": [1, 2], "m": [10, 20, 30]}
+                }}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn enumeration_matches_exhaustive_grid_expansion() {
+        let spec = grid_spec();
+        let space = SearchSpace::of(&spec, &[]).unwrap();
+        assert_eq!(space.grid_size(), 12);
+        assert_eq!(space.n_dims(), 3);
+        let expanded = expand_variants(&spec).unwrap();
+        let mut prng = Prng::new(0);
+        for i in 0..space.grid_size() {
+            let c = space.nth_grid_point(i, &mut prng);
+            let v = space.materialize(&spec, &c).unwrap();
+            assert_eq!(v.label, expanded[i].label, "point {i}");
+            assert_eq!(v.cfg, expanded[i].cfg, "point {i}");
+        }
+    }
+
+    #[test]
+    fn range_dims_parse_sample_and_snap() {
+        let v = crate::json::parse(r#"{"min": 2.0, "max": 8.0, "integer": true}"#).unwrap();
+        let dim = RangeDim::parse("x", &v).unwrap();
+        let mut prng = Prng::new(3);
+        for _ in 0..100 {
+            let s = dim.sample(&mut prng);
+            assert!((2.0..=8.0).contains(&s));
+            assert_eq!(s.fract(), 0.0);
+        }
+        assert_eq!(dim.snap(7.4), 7.0);
+        assert_eq!(dim.snap(100.0), 8.0);
+        // min >= max rejected
+        let bad = crate::json::parse(r#"{"min": 3.0, "max": 3.0}"#).unwrap();
+        assert!(RangeDim::parse("x", &bad).is_err());
+    }
+
+    #[test]
+    fn integer_range_must_contain_an_integer() {
+        let v = crate::json::parse(r#"{"min": 2.1, "max": 2.9, "integer": true}"#).unwrap();
+        let err = RangeDim::parse("x", &v).unwrap_err().to_string();
+        assert!(err.contains("no integer"), "{err}");
+    }
+
+    #[test]
+    fn orders_with_back_edges_rejected_like_grid_expansion() {
+        // the search path must enforce the same plain-chain contract as
+        // expand_variants instead of silently dropping the back edge
+        let spec = FlowSpec::parse(
+            r#"{"name": "t",
+                "tasks": [{"id": "a", "type": "X"}, {"id": "b", "type": "Y"}],
+                "edges": [["a", "b"]],
+                "back_edges": [{"from": "b", "to": "a", "max_iters": 2}],
+                "explore": {"orders": [["a", "b"], ["b", "a"]]}}"#,
+        )
+        .unwrap();
+        let err = SearchSpace::of(&spec, &[]).unwrap_err().to_string();
+        assert!(err.contains("back edges"), "{err}");
+    }
+
+    #[test]
+    fn range_keys_may_not_collide_with_grid_keys() {
+        let spec = grid_spec();
+        let err = SearchSpace::of(
+            &spec,
+            &[("k".to_string(), RangeDim { lo: 0.0, hi: 1.0, integer: false })],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("collides"), "{err}");
+    }
+
+    #[test]
+    fn candidate_keys_identify_exact_points() {
+        let spec = grid_spec();
+        let ranges = vec![("r".to_string(), RangeDim { lo: 0.0, hi: 1.0, integer: false })];
+        let space = SearchSpace::of(&spec, &ranges).unwrap();
+        let a = Candidate { order: 0, grid: vec![1, 2], range: vec![0.5] };
+        let b = Candidate { order: 0, grid: vec![1, 2], range: vec![0.5] };
+        assert_eq!(space.key(&a), space.key(&b));
+        let c = Candidate { order: 0, grid: vec![1, 2], range: vec![0.25] };
+        assert_ne!(space.key(&a), space.key(&c));
+        // cfg decoding covers grid and range dims
+        let cfg = space.candidate_cfg(&a);
+        assert_eq!(cfg.len(), 3);
+        assert_eq!(cfg[0].0, "k");
+        assert_eq!(cfg[0].1.as_f64(), Some(2.0));
+        assert_eq!(cfg[2], ("r".to_string(), Value::Number(0.5)));
+    }
+}
