@@ -1,0 +1,566 @@
+//! Disk-backed probe-result tier: a versioned, corruption-tolerant,
+//! append-only store beneath `--cache-dir`.
+//!
+//! Results are persisted under the same complete-input fingerprint
+//! keys the in-memory memos use ([`EvalKey`] for training probes,
+//! [`HwKey`] for hardware probes), so a hit can only ever replace a
+//! bit-identical recomputation — loading a store never changes a
+//! trace, only skips work.  A second identical `metaml explore
+//! --cache-dir DIR` run therefore issues zero fresh probe
+//! computations.
+//!
+//! ## On-disk format
+//!
+//! One file, `probes.jsonl`, one record per line:
+//!
+//! ```text
+//! v1 <kind> <checksum> <payload>
+//! ```
+//!
+//! where `kind` is `train` or `hw`, `checksum` is the 16-hex-digit
+//! FNV-1a of the payload bytes, and `payload` is a single-line JSON
+//! object `{"key": …, "value": …}`.  Every `f64` and `u64` field is
+//! serialized as the 16-hex-digit string of its bit pattern — the
+//! in-tree JSON number is an `f64`, which cannot hold either
+//! losslessly — so round-trips are bit-exact (including NaN and
+//! `-0.0`).  `usize` counters are plain JSON numbers (all far below
+//! 2^53).
+//!
+//! ## Robustness
+//!
+//! - **Corruption-tolerant load**: truncated, garbage, checksum-failed
+//!   or version-mismatched lines are counted and skipped, never a
+//!   panic or error; valid entries around them still load.  Skipped
+//!   entries are simply recomputed and appended again by the next run.
+//! - **Concurrent writers**: the file is opened in `O_APPEND` mode and
+//!   each record is one `write_all` of one line, so two processes
+//!   sharing a `--cache-dir` interleave whole records, not bytes.
+//!   Duplicate keys are harmless (values are bit-identical by
+//!   construction; last one wins on load).
+//! - **Best-effort writes**: a failing disk drops the write and keeps
+//!   the run going — the store is a cache, not a database.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, PoisonError};
+
+use crate::dse::cache::{EvalKey, Fnv};
+use crate::dse::hw::{HwEval, HwKey};
+use crate::dse::service::ProbeTier;
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::train::EvalResult;
+
+/// Store format version; bump on any codec change so old stores are
+/// skipped (and lazily rewritten), never misread.
+const VERSION: &str = "v1";
+const STORE_FILE: &str = "probes.jsonl";
+
+/// Summary counters for `metaml cache stats` and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Distinct training-probe entries loaded.
+    pub train_entries: usize,
+    /// Distinct hardware-probe entries loaded.
+    pub hw_entries: usize,
+    /// Lines skipped on load (truncated / garbage / version mismatch /
+    /// checksum failure).
+    pub skipped: usize,
+    /// Store file size in bytes (0 if absent).
+    pub bytes: u64,
+}
+
+/// The persistent probe-result tier (see module docs for format and
+/// guarantees).  Cheap lookups come from an in-memory image of the
+/// file loaded once at `open`; `put` appends through an `O_APPEND`
+/// handle.
+#[derive(Debug)]
+pub struct DiskStore {
+    path: PathBuf,
+    file: Mutex<File>,
+    train: Mutex<HashMap<EvalKey, EvalResult>>,
+    hw: Mutex<HashMap<HwKey, HwEval>>,
+    skipped: usize,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) the store beneath `dir`, loading every
+    /// valid record and counting the rest as skipped.
+    pub fn open(dir: &Path) -> Result<DiskStore> {
+        fs::create_dir_all(dir).map_err(Error::Io)?;
+        let path = dir.join(STORE_FILE);
+        let mut train = HashMap::new();
+        let mut hw = HashMap::new();
+        let mut skipped = 0usize;
+        if let Ok(bytes) = fs::read(&path) {
+            let text = String::from_utf8_lossy(&bytes);
+            for line in text.lines() {
+                if line.is_empty() {
+                    continue;
+                }
+                match parse_record(line) {
+                    Some(Record::Train(k, v)) => {
+                        train.insert(k, v);
+                    }
+                    Some(Record::Hw(k, v)) => {
+                        hw.insert(k, v);
+                    }
+                    None => skipped += 1,
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&path)
+            .map_err(Error::Io)?;
+        Ok(DiskStore {
+            path,
+            file: Mutex::new(file),
+            train: Mutex::new(train),
+            hw: Mutex::new(hw),
+            skipped,
+        })
+    }
+
+    /// Read-only stats for `dir` without creating anything (`metaml
+    /// cache stats` must not materialize an empty store).
+    pub fn inspect(dir: &Path) -> StoreStats {
+        let path = dir.join(STORE_FILE);
+        let mut stats = StoreStats::default();
+        let Ok(bytes) = fs::read(&path) else {
+            return stats;
+        };
+        stats.bytes = bytes.len() as u64;
+        let mut train = HashMap::new();
+        let mut hw = HashMap::new();
+        let text = String::from_utf8_lossy(&bytes);
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            match parse_record(line) {
+                Some(Record::Train(k, v)) => {
+                    train.insert(k, v);
+                }
+                Some(Record::Hw(k, v)) => {
+                    hw.insert(k, v);
+                }
+                None => stats.skipped += 1,
+            }
+        }
+        stats.train_entries = train.len();
+        stats.hw_entries = hw.len();
+        stats
+    }
+
+    /// Delete the store file beneath `dir`; returns whether one existed.
+    pub fn clear(dir: &Path) -> Result<bool> {
+        let path = dir.join(STORE_FILE);
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(Error::Io(e)),
+        }
+    }
+
+    /// Stats of this open store (entry counts from the in-memory image,
+    /// bytes from the file).
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            train_entries: self.lock_train().len(),
+            hw_entries: self.lock_hw().len(),
+            skipped: self.skipped,
+            bytes: fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0),
+        }
+    }
+
+    /// Path of the backing `probes.jsonl`.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn get_train(&self, key: &EvalKey) -> Option<EvalResult> {
+        self.lock_train().get(key).copied()
+    }
+
+    pub fn put_train(&self, key: &EvalKey, value: &EvalResult) {
+        // Only a fresh in-memory insert appends: re-putting a key the
+        // store already holds (warm-run back-pressure) writes nothing,
+        // so warm runs leave the file byte-identical.
+        if self.lock_train().insert(key.clone(), *value).is_none() {
+            self.append("train", &train_payload(key, value));
+        }
+    }
+
+    pub fn get_hw(&self, key: &HwKey) -> Option<HwEval> {
+        self.lock_hw().get(key).copied()
+    }
+
+    pub fn put_hw(&self, key: &HwKey, value: &HwEval) {
+        if self.lock_hw().insert(key.clone(), *value).is_none() {
+            self.append("hw", &hw_payload(key, value));
+        }
+    }
+
+    fn lock_train(&self) -> std::sync::MutexGuard<'_, HashMap<EvalKey, EvalResult>> {
+        self.train.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn lock_hw(&self) -> std::sync::MutexGuard<'_, HashMap<HwKey, HwEval>> {
+        self.hw.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Append one record line; errors are swallowed (best-effort cache).
+    fn append(&self, kind: &str, payload: &Value) {
+        let json = json::to_string_compact(payload);
+        let mut sum = Fnv::new();
+        sum.bytes(json.as_bytes());
+        let line = format!("{VERSION} {kind} {} {json}\n", hex64(sum.0));
+        let mut file = self.file.lock().unwrap_or_else(PoisonError::into_inner);
+        let _ = file.write_all(line.as_bytes());
+    }
+}
+
+impl ProbeTier<EvalKey, EvalResult> for DiskStore {
+    fn get(&self, key: &EvalKey) -> Option<EvalResult> {
+        self.get_train(key)
+    }
+
+    fn put(&self, key: &EvalKey, value: &EvalResult) {
+        self.put_train(key, value);
+    }
+}
+
+impl ProbeTier<HwKey, HwEval> for DiskStore {
+    fn get(&self, key: &HwKey) -> Option<HwEval> {
+        self.get_hw(key)
+    }
+
+    fn put(&self, key: &HwKey, value: &HwEval) {
+        self.put_hw(key, value);
+    }
+}
+
+enum Record {
+    Train(EvalKey, EvalResult),
+    Hw(HwKey, HwEval),
+}
+
+/// Parse one store line; `None` on any defect (wrong version, bad
+/// checksum, truncated or malformed payload).
+fn parse_record(line: &str) -> Option<Record> {
+    let mut parts = line.splitn(4, ' ');
+    let version = parts.next()?;
+    let kind = parts.next()?;
+    let checksum = parts.next()?;
+    let payload = parts.next()?;
+    if version != VERSION {
+        return None;
+    }
+    let mut sum = Fnv::new();
+    sum.bytes(payload.as_bytes());
+    if parse_hex64(checksum)? != sum.0 {
+        return None;
+    }
+    let v = json::parse(payload).ok()?;
+    let key = v.get("key")?;
+    let value = v.get("value")?;
+    match kind {
+        "train" => {
+            let (k, r) = parse_train(key, value)?;
+            Some(Record::Train(k, r))
+        }
+        "hw" => {
+            let (k, r) = parse_hw(key, value)?;
+            Some(Record::Hw(k, r))
+        }
+        _ => None,
+    }
+}
+
+fn train_payload(key: &EvalKey, value: &EvalResult) -> Value {
+    let mut k = Value::object();
+    k.set("tag", key.tag.as_str());
+    k.set(
+        "precisions",
+        Value::Array(
+            key.precisions
+                .iter()
+                .map(|&(t, i)| Value::from(vec![t as usize, i as usize]))
+                .collect(),
+        ),
+    );
+    k.set("fingerprint", hex64(key.fingerprint));
+    let mut v = Value::object();
+    v.set("loss", hex64(value.loss.to_bits()));
+    v.set("accuracy", hex64(value.accuracy.to_bits()));
+    v.set("n", value.n);
+    let mut rec = Value::object();
+    rec.set("key", k);
+    rec.set("value", v);
+    rec
+}
+
+fn parse_train(key: &Value, value: &Value) -> Option<(EvalKey, EvalResult)> {
+    let tag = key.get("tag")?.as_str()?.to_string();
+    let precisions = key
+        .get("precisions")?
+        .as_array()?
+        .iter()
+        .map(|p| {
+            let pair = p.as_array()?;
+            if pair.len() != 2 {
+                return None;
+            }
+            Some((pair[0].as_usize()? as u32, pair[1].as_usize()? as u32))
+        })
+        .collect::<Option<Vec<_>>>()?;
+    let fingerprint = hex_field(key, "fingerprint")?;
+    let k = EvalKey { tag, precisions, fingerprint };
+    let r = EvalResult {
+        loss: f64::from_bits(hex_field(value, "loss")?),
+        accuracy: f64::from_bits(hex_field(value, "accuracy")?),
+        n: value.get("n")?.as_usize()?,
+    };
+    Some((k, r))
+}
+
+fn hw_payload(key: &HwKey, value: &HwEval) -> Value {
+    let mut k = Value::object();
+    k.set("device", key.device.as_str());
+    k.set("clock", hex64(key.clock_mhz_bits));
+    k.set("reuse", Value::from(key.reuse.clone()));
+    k.set("fingerprint", hex64(key.fingerprint));
+    let mut v = Value::object();
+    v.set("dsp", value.dsp);
+    v.set("lut", value.lut);
+    v.set("ff", value.ff);
+    v.set("bram", value.bram_18k);
+    v.set("cycles", value.latency_cycles);
+    v.set("latency_ns", hex64(value.latency_ns.to_bits()));
+    v.set("ii", value.ii);
+    v.set("power_w", hex64(value.power_w.to_bits()));
+    v.set("fits", value.fits);
+    let mut rec = Value::object();
+    rec.set("key", k);
+    rec.set("value", v);
+    rec
+}
+
+fn parse_hw(key: &Value, value: &Value) -> Option<(HwKey, HwEval)> {
+    let device = key.get("device")?.as_str()?.to_string();
+    let clock_mhz_bits = hex_field(key, "clock")?;
+    let reuse = key
+        .get("reuse")?
+        .as_array()?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<Option<Vec<_>>>()?;
+    let fingerprint = hex_field(key, "fingerprint")?;
+    let k = HwKey { device, clock_mhz_bits, reuse, fingerprint };
+    let r = HwEval {
+        dsp: value.get("dsp")?.as_usize()?,
+        lut: value.get("lut")?.as_usize()?,
+        ff: value.get("ff")?.as_usize()?,
+        bram_18k: value.get("bram")?.as_usize()?,
+        latency_cycles: value.get("cycles")?.as_usize()?,
+        latency_ns: f64::from_bits(hex_field(value, "latency_ns")?),
+        ii: value.get("ii")?.as_usize()?,
+        power_w: f64::from_bits(hex_field(value, "power_w")?),
+        fits: value.get("fits")?.as_bool()?,
+    };
+    Some((k, r))
+}
+
+/// 16-hex-digit rendering of a bit pattern (`u64` fields and `f64`
+/// bits both travel this way — the in-tree JSON number is an `f64`
+/// and cannot hold either losslessly).
+fn hex64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex64(s: &str) -> Option<u64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn hex_field(v: &Value, key: &str) -> Option<u64> {
+    parse_hex64(v.get(key)?.as_str()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("metaml_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_train() -> (EvalKey, EvalResult) {
+        (
+            EvalKey {
+                tag: "jet dnn \"quoted\"".to_string(),
+                precisions: vec![(8, 4), (16, 6)],
+                fingerprint: 0xdead_beef_cafe_f00d,
+            },
+            EvalResult { loss: 0.125, accuracy: 0.876_543_210_123, n: 1660 },
+        )
+    }
+
+    fn sample_hw() -> (HwKey, HwEval) {
+        (
+            HwKey {
+                device: "xcu250".to_string(),
+                clock_mhz_bits: 200.0f64.to_bits(),
+                reuse: vec![1, 8, 64],
+                fingerprint: 0x0123_4567_89ab_cdef,
+            },
+            HwEval {
+                dsp: 123,
+                lut: 45_678,
+                ff: 9_012,
+                bram_18k: 34,
+                latency_cycles: 567,
+                latency_ns: 2_835.5,
+                ii: 8,
+                power_w: 1.75,
+                fits: true,
+            },
+        )
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let dir = tmpdir("disk_roundtrip");
+        let (ek, er) = sample_train();
+        let (hk, he) = sample_hw();
+        // NaN and -0.0 must survive the hex codec too.
+        let weird = EvalResult { loss: f64::NAN, accuracy: -0.0, n: 0 };
+        let wk = EvalKey { tag: "weird".into(), precisions: vec![], fingerprint: 1 };
+        {
+            let store = DiskStore::open(&dir).unwrap();
+            store.put_train(&ek, &er);
+            store.put_train(&wk, &weird);
+            store.put_hw(&hk, &he);
+            // duplicate put must not append a second record
+            store.put_train(&ek, &er);
+            assert_eq!(store.stats().train_entries, 2);
+        }
+        let store = DiskStore::open(&dir).unwrap();
+        assert_eq!(store.stats().skipped, 0);
+        assert_eq!(store.get_train(&ek), Some(er));
+        assert_eq!(store.get_hw(&hk), Some(he));
+        let w = store.get_train(&wk).unwrap();
+        assert_eq!(w.loss.to_bits(), f64::NAN.to_bits());
+        assert_eq!(w.accuracy.to_bits(), (-0.0f64).to_bits());
+        // exactly three records on disk
+        let text = fs::read_to_string(store.path()).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_lines_are_skipped_not_fatal() {
+        let dir = tmpdir("disk_corrupt");
+        let (ek, er) = sample_train();
+        {
+            let store = DiskStore::open(&dir).unwrap();
+            store.put_train(&ek, &er);
+        }
+        let path = dir.join(STORE_FILE);
+        let good = fs::read_to_string(&path).unwrap();
+        let good_line = good.lines().next().unwrap();
+        // corruption zoo: garbage, truncation, wrong version, bad
+        // checksum, checksummed-but-unparseable payload, unknown kind
+        let bad_checksum = {
+            let mut parts: Vec<&str> = good_line.splitn(4, ' ').collect();
+            parts[2] = "0000000000000000";
+            parts.join(" ")
+        };
+        let mut sum = Fnv::new();
+        sum.bytes(b"{\"not\":\"a record\"}");
+        let valid_sum_bad_payload =
+            format!("v1 train {} {{\"not\":\"a record\"}}", hex64(sum.0));
+        let mut kind_sum = Fnv::new();
+        kind_sum.bytes(b"{}");
+        let unknown_kind = format!("v1 surrogate {} {{}}", hex64(kind_sum.0));
+        let doctored = format!(
+            "not json at all\n{}\nv0 train 0123456789abcdef {{}}\n{}\n{}\n{}\n{}\n",
+            &good_line[..good_line.len() / 2],
+            bad_checksum,
+            valid_sum_bad_payload,
+            unknown_kind,
+            good_line,
+        );
+        fs::write(&path, doctored).unwrap();
+        let store = DiskStore::open(&dir).unwrap();
+        assert_eq!(store.get_train(&ek), Some(er));
+        let stats = store.stats();
+        assert_eq!(stats.train_entries, 1);
+        assert_eq!(stats.skipped, 6);
+        // a fresh put after corruption still works (rewrites happen
+        // lazily, via recomputation)
+        let (hk, he) = sample_hw();
+        store.put_hw(&hk, &he);
+        drop(store);
+        let reopened = DiskStore::open(&dir).unwrap();
+        assert_eq!(reopened.get_hw(&hk), Some(he));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn inspect_does_not_create_and_clear_reports_presence() {
+        let dir = tmpdir("disk_inspect");
+        assert_eq!(DiskStore::inspect(&dir), StoreStats::default());
+        assert!(!dir.join(STORE_FILE).exists());
+        assert!(!DiskStore::clear(&dir).unwrap());
+        {
+            let store = DiskStore::open(&dir).unwrap();
+            let (ek, er) = sample_train();
+            store.put_train(&ek, &er);
+        }
+        let stats = DiskStore::inspect(&dir);
+        assert_eq!(stats.train_entries, 1);
+        assert!(stats.bytes > 0);
+        assert!(DiskStore::clear(&dir).unwrap());
+        assert_eq!(DiskStore::inspect(&dir), StoreStats::default());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_interleave_whole_records() {
+        let dir = tmpdir("disk_concurrent");
+        let a = DiskStore::open(&dir).unwrap();
+        let b = DiskStore::open(&dir).unwrap();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                for i in 0..50u64 {
+                    let (mut k, v) = sample_train();
+                    k.fingerprint = i;
+                    a.put_train(&k, &v);
+                }
+            });
+            scope.spawn(|| {
+                for i in 0..50u64 {
+                    let (mut k, v) = sample_hw();
+                    k.fingerprint = i;
+                    b.put_hw(&k, &v);
+                }
+            });
+        });
+        // both stores' writes land whole; a fresh open sees all of them
+        let merged = DiskStore::open(&dir).unwrap();
+        let stats = merged.stats();
+        assert_eq!(stats.skipped, 0);
+        assert_eq!(stats.train_entries, 50);
+        assert_eq!(stats.hw_entries, 50);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -18,13 +18,16 @@
 //! fingerprints params/masks/dataset, [`HwKey`] fingerprints the HLS
 //! config) and what it yields.
 //!
+//! * [`ProbeService`] — the object-safe trait every probe consumer
+//!   programs against (the seam for remote workers and surrogates);
 //! * [`ProbePool`] — deterministic batch executor
-//!   (`std::thread::scope`, no external dependencies) plus one shared
-//!   memo per probe kind ([`EvalCache`], [`HwCache`]);
+//!   (`std::thread::scope`, no external dependencies) plus a stack of
+//!   cache tiers per probe kind ([`EvalCache`], [`HwCache`], and an
+//!   optional persistent [`DiskStore`]);
 //! * [`ProbeRequest`] / [`ProbeResult`] — the training-probe batch API;
 //! * [`HwProbeRequest`] / [`HwProbeResult`] — the hardware-probe batch
 //!   API ([`ProbePool::estimate_batch`]);
-//! * [`DseCaches`] — the bundle of shared memos the engine threads
+//! * [`ProbeTiers`] — the bundle of shared tiers the engine threads
 //!   through explorer variants;
 //! * [`default_jobs`] — worker-count resolution.
 //!
@@ -42,42 +45,16 @@
 //! 3. `std::thread::available_parallelism()`.
 
 pub mod cache;
+pub mod disk;
 pub mod hw;
 pub mod pool;
+pub mod service;
 
 pub use cache::{EvalCache, EvalKey, ProbeCache};
+pub use disk::{DiskStore, StoreStats};
 pub use hw::{HwCache, HwEval, HwKey, HwProbeRequest, HwProbeResult};
 pub use pool::{ProbeCounts, ProbePool, ProbeRequest, ProbeResult, ProbeStats};
-
-use std::sync::Arc;
-
-/// One shared memo per probe kind — what the engine hands to every
-/// O-task probe pool during multi-flow exploration so identical probes
-/// (training *and* hardware) dedupe across flow variants — plus the
-/// probe-issue counters aggregated across every pool built from the
-/// bundle (the budgeted-search driver reports them per run).
-#[derive(Debug, Clone, Default)]
-pub struct DseCaches {
-    pub eval: Arc<EvalCache>,
-    pub hw: Arc<HwCache>,
-    pub stats: Arc<ProbeStats>,
-}
-
-impl DseCaches {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// A pool over these shared memos and counters.
-    pub fn pool(&self, jobs: usize) -> ProbePool {
-        ProbePool::with_shared(jobs, self.eval.clone(), self.hw.clone(), self.stats.clone())
-    }
-
-    /// Probe totals issued/computed through every pool of this bundle.
-    pub fn probe_counts(&self) -> ProbeCounts {
-        self.stats.snapshot()
-    }
-}
+pub use service::{ProbeService, ProbeServiceExt, ProbeTier, ProbeTiers};
 
 /// Worker count from `METAML_JOBS`, when set to a positive integer.
 pub fn env_jobs() -> Option<usize> {

@@ -16,7 +16,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::dse::cache::{EvalCache, EvalKey, ProbeCache};
+use crate::dse::disk::DiskStore;
 use crate::dse::hw::{HwCache, HwEval, HwKey, HwProbeRequest, HwProbeResult};
+use crate::dse::service::{ProbeTier, ProbeTiers};
 use crate::error::{Error, Result};
 use crate::model::ModelState;
 use crate::synth::{self, FpgaDevice};
@@ -99,8 +101,11 @@ pub struct ProbePool {
     /// Hardware-probe memo (synthesis estimations), keyed by
     /// HLS-config fingerprint instead of params fingerprint.
     hw_cache: Arc<HwCache>,
+    /// Optional persistent tier consulted below the in-memory memos
+    /// (`--cache-dir`); fresh results are written through.
+    disk: Option<Arc<DiskStore>>,
     /// Probe-issue accounting (shared with the memos by
-    /// [`crate::dse::DseCaches`] so a whole search aggregates).
+    /// [`crate::dse::ProbeTiers`] so a whole search aggregates).
     stats: Arc<ProbeStats>,
 }
 
@@ -123,16 +128,27 @@ impl ProbePool {
         Self::with_shared(jobs, cache, hw_cache, Arc::new(ProbeStats::default()))
     }
 
-    /// Pool sharing memos *and* the probe-issue counters (how
-    /// [`crate::dse::DseCaches::pool`] builds the explorer's and the
-    /// search driver's pools).
+    /// Pool sharing memos *and* the probe-issue counters.
     pub fn with_shared(
         jobs: usize,
         cache: Arc<EvalCache>,
         hw_cache: Arc<HwCache>,
         stats: Arc<ProbeStats>,
     ) -> Self {
-        ProbePool { jobs: jobs.max(1), cache, hw_cache, stats }
+        ProbePool { jobs: jobs.max(1), cache, hw_cache, disk: None, stats }
+    }
+
+    /// Pool over a shared [`ProbeTiers`] bundle — memos, optional disk
+    /// tier and counters all shared (how [`ProbeTiers::pool`] builds
+    /// the explorer's and the search driver's pools).
+    pub fn with_tiers(jobs: usize, tiers: &ProbeTiers) -> Self {
+        ProbePool {
+            jobs: jobs.max(1),
+            cache: Arc::clone(&tiers.eval),
+            hw_cache: Arc::clone(&tiers.hw),
+            disk: tiers.disk.clone(),
+            stats: Arc::clone(&tiers.stats),
+        }
     }
 
     /// Pool sized by `METAML_JOBS` / available parallelism
@@ -203,17 +219,43 @@ impl ProbePool {
             .collect()
     }
 
-    /// Memoized batch execution — the shared core of every probe kind.
+    /// Memoized batch execution over a single cache tier.  Thin
+    /// wrapper around [`Self::tiered_batch`], kept for callers that
+    /// memoize ad-hoc probe kinds against one [`ProbeCache`].
+    pub fn memo_batch<K, V, F>(
+        &self,
+        cache: &ProbeCache<K, V>,
+        keys: &[K],
+        compute: F,
+    ) -> Result<Vec<(V, bool)>>
+    where
+        K: Clone + Eq + Hash + Send,
+        V: Clone + Send,
+        F: Fn(usize) -> Result<V> + Sync,
+    {
+        let tiers: [&dyn ProbeTier<K, V>; 1] = [cache];
+        self.tiered_batch(&tiers, keys, compute)
+    }
+
+    /// Memoized batch execution across a stack of cache tiers — the
+    /// shared core of every probe kind.
     ///
-    /// Deterministic by construction: cache resolution happens
+    /// Tiers are consulted top-down in request order; a hit at depth
+    /// `d` back-fills the tiers above it (so an in-memory memo warms
+    /// from the disk tier, while the disk tier — last in the stack —
+    /// never re-absorbs what it already served, keeping warm runs
+    /// append-free).  Fresh results are written through to *every*
+    /// tier.
+    ///
+    /// Deterministic by construction: tier resolution happens
     /// sequentially in request order, duplicate keys inside the batch
     /// collapse onto the first occurrence, and fresh computations are
     /// pure per-candidate work fanned out via [`Self::run_batch`]
     /// (`compute(i)` computes request `i`).  Returns `(result, cached)`
     /// per request, in request order.
-    pub fn memo_batch<K, V, F>(
+    pub fn tiered_batch<K, V, F>(
         &self,
-        cache: &ProbeCache<K, V>,
+        tiers: &[&dyn ProbeTier<K, V>],
         keys: &[K],
         compute: F,
     ) -> Result<Vec<(V, bool)>>
@@ -222,9 +264,9 @@ impl ProbePool {
         V: Clone + Send,
         F: Fn(usize) -> Result<V> + Sync,
     {
-        // Resolve each request: cached, to-compute, or duplicate of an
-        // earlier to-compute entry (mapped to its position in the
-        // compute list).
+        // Resolve each request: cached at some tier, to-compute, or
+        // duplicate of an earlier to-compute entry (mapped to its
+        // position in the compute list).
         enum Resolution<V> {
             Cached(V),
             Compute(usize),
@@ -235,8 +277,15 @@ impl ProbePool {
         let mut compute_idx: Vec<usize> = Vec::new();
         let mut resolved: Vec<Resolution<V>> = Vec::with_capacity(keys.len());
         for (i, key) in keys.iter().enumerate() {
-            if let Some(hit) = cache.get(key) {
-                resolved.push(Resolution::Cached(hit));
+            let hit = tiers
+                .iter()
+                .enumerate()
+                .find_map(|(depth, tier)| tier.get(key).map(|v| (depth, v)));
+            if let Some((depth, v)) = hit {
+                for upper in &tiers[..depth] {
+                    upper.put(key, &v);
+                }
+                resolved.push(Resolution::Cached(v));
             } else if let Some(&slot) = first_compute.get(key) {
                 resolved.push(Resolution::Duplicate(slot));
             } else {
@@ -249,7 +298,9 @@ impl ProbePool {
         let fresh: Vec<V> =
             self.run_batch(compute_idx.len(), |slot| compute(compute_idx[slot]))?;
         for (slot, &i) in compute_idx.iter().enumerate() {
-            cache.insert(keys[i].clone(), fresh[slot].clone());
+            for tier in tiers {
+                tier.put(&keys[i], &fresh[slot]);
+            }
         }
 
         Ok(resolved
@@ -276,7 +327,12 @@ impl ProbePool {
         // issued is counted up front so a failing batch still shows the
         // probes it spent; computed needs the per-request cache flags
         self.stats.train_issued.fetch_add(requests.len(), Ordering::Relaxed);
-        let out = self.memo_batch(&self.cache, &keys, |i| {
+        let mut tiers: Vec<&dyn ProbeTier<EvalKey, EvalResult>> =
+            vec![self.cache.as_ref()];
+        if let Some(disk) = &self.disk {
+            tiers.push(disk.as_ref());
+        }
+        let out = self.tiered_batch(&tiers, &keys, |i| {
             trainer.evaluate(&requests[i].state)
         })?;
         self.stats.train_computed.fetch_add(
@@ -305,7 +361,12 @@ impl ProbePool {
             .map(|r| HwKey::of(&r.model, device, clock_mhz))
             .collect();
         self.stats.hw_issued.fetch_add(requests.len(), Ordering::Relaxed);
-        let out = self.memo_batch(&self.hw_cache, &keys, |i| {
+        let mut tiers: Vec<&dyn ProbeTier<HwKey, HwEval>> =
+            vec![self.hw_cache.as_ref()];
+        if let Some(disk) = &self.disk {
+            tiers.push(disk.as_ref());
+        }
+        let out = self.tiered_batch(&tiers, &keys, |i| {
             synth::estimate(&requests[i].model, device, clock_mhz)
                 .map(|r| HwEval::from_report(&r))
         })?;

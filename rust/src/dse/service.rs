@@ -1,0 +1,302 @@
+//! The probe-service abstraction: *what* evaluates probes, decoupled
+//! from *who* asks.
+//!
+//! Every probe consumer in the system — the O-task searches
+//! ([`crate::quant::quantize_search`], [`crate::scale::scale_search`],
+//! [`crate::prune::autoprune`], [`crate::synth::reuse_search`]), the
+//! multi-flow explorer, the budgeted search driver and its hardware
+//! prefilter — talks to a `&dyn ProbeService` instead of a concrete
+//! [`ProbePool`].  The trait exposes exactly the existing batch
+//! contracts (results in request order, bit-identical for every worker
+//! count, first error in index order), so swapping the implementation
+//! can never change a trace — only where and how fast results come
+//! from.
+//!
+//! Implementations compose as **tiers**:
+//!
+//! ```text
+//!   consumer (&dyn ProbeService)
+//!      └─ ProbePool ── in-memory memo tier   (EvalCache / HwCache)
+//!                   ── disk tier (optional)  (DiskStore under --cache-dir)
+//!                   └─ executor tier         (Trainer / synth::estimate)
+//! ```
+//!
+//! The [`ProbeTier`] trait is the seam: a tier is anything that can
+//! answer "do you already know this fingerprint key?" and absorb fresh
+//! results.  A remote worker pool or a learned surrogate drops in as
+//! another tier (or another `ProbeService` entirely) without touching
+//! any consumer.
+//!
+//! [`ProbeTiers`] is the shared bundle the engine threads through a
+//! run (the successor of the old `DseCaches`): one in-memory memo per
+//! probe kind, an optional disk store, and the [`ProbeStats`] counters
+//! aggregated across every pool built from it.
+
+use std::hash::Hash;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::dse::cache::{EvalCache, ProbeCache};
+use crate::dse::disk::DiskStore;
+use crate::dse::hw::{HwCache, HwProbeRequest, HwProbeResult};
+use crate::dse::pool::{ProbeCounts, ProbePool, ProbeRequest, ProbeResult, ProbeStats};
+use crate::error::{Error, Result};
+use crate::synth::FpgaDevice;
+use crate::train::Trainer;
+
+/// Batch probe evaluation behind one object-safe interface.
+///
+/// **Determinism contract** (inherited verbatim from [`ProbePool`]):
+/// results come back in request order; each probe is computed by the
+/// same single-threaded code path whatever the worker count; caching
+/// at any tier can only skip recomputation of bit-identical results.
+/// The first error in request order is propagated after the whole
+/// batch has been attempted.
+pub trait ProbeService: Send + Sync {
+    /// Evaluate candidate model states through `trainer` (the training
+    /// probe kind), memoized under [`crate::dse::EvalKey`] fingerprints.
+    fn evaluate_batch(
+        &self,
+        trainer: &Trainer,
+        requests: &[ProbeRequest],
+    ) -> Result<Vec<ProbeResult>>;
+
+    /// Estimate candidate HLS configurations on `device` at `clock_mhz`
+    /// (the hardware probe kind), memoized under
+    /// [`crate::dse::HwKey`] fingerprints.
+    fn estimate_batch(
+        &self,
+        device: &FpgaDevice,
+        clock_mhz: f64,
+        requests: &[HwProbeRequest],
+    ) -> Result<Vec<HwProbeResult>>;
+
+    /// Worker count — searches size speculative batches by it
+    /// (SCALING's grid waves, AUTOPRUNE's look-ahead).
+    fn jobs(&self) -> usize;
+
+    /// Probe-issue counters aggregated over this service's lifetime
+    /// (see [`ProbeStats`] for what is and is not replay-comparable).
+    fn counts(&self) -> ProbeCounts;
+
+    /// Run `f(0..n)` across the service's workers (object-safe core
+    /// behind [`ProbeServiceExt::run_batch`]).  The default executes
+    /// sequentially; [`ProbePool`] overrides it with its scoped-thread
+    /// pool.
+    fn run_raw(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        for i in 0..n {
+            f(i);
+        }
+    }
+}
+
+/// Generic batch helper over [`ProbeService::run_raw`] — kept in an
+/// extension trait because generic methods would make the service
+/// trait non-object-safe.  `use` it wherever a `&dyn ProbeService`
+/// needs the typed `run_batch` the concrete [`ProbePool`] offers:
+/// same request-order results, same first-error-in-index-order
+/// semantics.
+pub trait ProbeServiceExt: ProbeService {
+    fn run_batch<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let slots: Vec<Mutex<Option<Result<T>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        self.run_raw(n, &|i| {
+            let r = f(i);
+            *slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .unwrap_or_else(|| {
+                        Err(Error::other("probe service: worker dropped a job slot"))
+                    })
+            })
+            .collect()
+    }
+}
+
+impl<S: ProbeService + ?Sized> ProbeServiceExt for S {}
+
+impl ProbeService for ProbePool {
+    fn evaluate_batch(
+        &self,
+        trainer: &Trainer,
+        requests: &[ProbeRequest],
+    ) -> Result<Vec<ProbeResult>> {
+        ProbePool::evaluate_batch(self, trainer, requests)
+    }
+
+    fn estimate_batch(
+        &self,
+        device: &FpgaDevice,
+        clock_mhz: f64,
+        requests: &[HwProbeRequest],
+    ) -> Result<Vec<HwProbeResult>> {
+        ProbePool::estimate_batch(self, device, clock_mhz, requests)
+    }
+
+    fn jobs(&self) -> usize {
+        ProbePool::jobs(self)
+    }
+
+    fn counts(&self) -> ProbeCounts {
+        self.probe_counts()
+    }
+
+    fn run_raw(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        // infallible jobs can't produce an Err, so the Result is moot
+        let _ = ProbePool::run_batch(self, n, |i| {
+            f(i);
+            Ok(())
+        });
+    }
+}
+
+/// One cache tier for one probe kind: a key→value store a
+/// [`ProbePool`] consults top-down before computing, and back-fills
+/// with hits from lower tiers and fresh results.
+///
+/// `get` must only ever return a value that was `put` for exactly that
+/// key — tiers trade recomputation for lookup, never results.  `put`
+/// is best-effort (a full or failing tier may drop writes).
+pub trait ProbeTier<K, V>: Send + Sync {
+    fn get(&self, key: &K) -> Option<V>;
+    fn put(&self, key: &K, value: &V);
+}
+
+impl<K, V> ProbeTier<K, V> for ProbeCache<K, V>
+where
+    K: Clone + Eq + Hash + Send,
+    V: Clone + Send,
+{
+    fn get(&self, key: &K) -> Option<V> {
+        ProbeCache::get(self, key)
+    }
+
+    fn put(&self, key: &K, value: &V) {
+        self.insert(key.clone(), value.clone());
+    }
+}
+
+/// The shared tier bundle the engine threads through a run: one
+/// in-memory memo per probe kind, an optional persistent disk tier,
+/// and the probe-issue counters aggregated across every pool built
+/// from the bundle (the budgeted-search driver reports them per run).
+///
+/// Sharing never changes results (every key incorporates the complete
+/// evaluation input), only how often a probe is recomputed.
+#[derive(Debug, Clone, Default)]
+pub struct ProbeTiers {
+    pub eval: Arc<EvalCache>,
+    pub hw: Arc<HwCache>,
+    /// Persistent tier consulted after the memos; fresh results are
+    /// written through so they survive the process.
+    pub disk: Option<Arc<DiskStore>>,
+    pub stats: Arc<ProbeStats>,
+}
+
+impl ProbeTiers {
+    /// In-memory tiers only (the explorer/search default).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// In-memory tiers backed by a persistent `store` (the CLI's
+    /// `--cache-dir`).
+    pub fn with_disk(store: Arc<DiskStore>) -> Self {
+        ProbeTiers { disk: Some(store), ..Self::default() }
+    }
+
+    /// A pool over these shared tiers and counters.
+    pub fn pool(&self, jobs: usize) -> ProbePool {
+        ProbePool::with_tiers(jobs, self)
+    }
+
+    /// The same pool as a shared [`ProbeService`] handle (what
+    /// [`crate::flow::TaskCtx::probes`] hands to the O-task searches).
+    pub fn service(&self, jobs: usize) -> Arc<dyn ProbeService> {
+        Arc::new(self.pool(jobs))
+    }
+
+    /// Probe totals issued/computed through every pool of this bundle.
+    pub fn probe_counts(&self) -> ProbeCounts {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::pool::ProbePool;
+
+    /// The extension-trait run_batch must match the pool's own batch
+    /// executor exactly: request order, first error in index order,
+    /// empty batches.
+    #[test]
+    fn ext_run_batch_matches_pool_contract() {
+        let pool = ProbePool::new(4);
+        let service: &dyn ProbeService = &pool;
+        let out = service.run_batch(33, |i| Ok(i * i)).unwrap();
+        assert_eq!(out, (0..33).map(|i| i * i).collect::<Vec<_>>());
+
+        let res: Result<Vec<usize>> = service.run_batch(10, |i| {
+            if i == 3 || i == 7 {
+                Err(Error::other(format!("boom {i}")))
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(res.unwrap_err().to_string(), "boom 3");
+
+        let empty: Vec<usize> = service.run_batch(0, |_| unreachable!()).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn default_run_raw_is_sequential_and_ordered() {
+        struct Sequential;
+        impl ProbeService for Sequential {
+            fn evaluate_batch(
+                &self,
+                _trainer: &Trainer,
+                _requests: &[ProbeRequest],
+            ) -> Result<Vec<ProbeResult>> {
+                unreachable!()
+            }
+            fn estimate_batch(
+                &self,
+                _device: &FpgaDevice,
+                _clock_mhz: f64,
+                _requests: &[HwProbeRequest],
+            ) -> Result<Vec<HwProbeResult>> {
+                unreachable!()
+            }
+            fn jobs(&self) -> usize {
+                1
+            }
+            fn counts(&self) -> ProbeCounts {
+                ProbeCounts::default()
+            }
+        }
+        let out = Sequential.run_batch(5, |i| Ok(i + 1)).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn tiers_pool_shares_stats_across_pools() {
+        let tiers = ProbeTiers::new();
+        let a = tiers.pool(1);
+        let b = tiers.service(4);
+        assert_eq!(a.jobs(), 1);
+        assert_eq!(b.jobs(), 4);
+        assert_eq!(tiers.probe_counts(), ProbeCounts::default());
+    }
+}

@@ -23,7 +23,7 @@
 use std::time::Instant;
 
 use crate::config::FlowSpec;
-use crate::dse::DseCaches;
+use crate::dse::ProbeTiers;
 use crate::error::{Error, Result};
 use crate::flow::graph::{EdgeGuard, FlowGraph, FlowPlan, NodeId, NodeKind, StrategyArm};
 use crate::flow::registry::TaskRegistry;
@@ -34,26 +34,27 @@ use crate::metamodel::{LogEvent, MetaModel};
 pub struct Engine<'a> {
     pub session: &'a Session,
     pub registry: &'a TaskRegistry,
-    /// When set (multi-flow exploration), every O-task probe pool in
-    /// this engine shares one memo per probe kind (training *and*
-    /// hardware), deduplicating identical candidate evaluations across
-    /// flow variants.
-    shared_cache: Option<DseCaches>,
+    /// When set (multi-flow exploration), every O-task probe service in
+    /// this engine shares one tier stack per probe kind (training *and*
+    /// hardware, optionally disk-backed), deduplicating identical
+    /// candidate evaluations across flow variants.
+    services: Option<ProbeTiers>,
 }
 
 impl<'a> Engine<'a> {
     pub fn new(session: &'a Session, registry: &'a TaskRegistry) -> Self {
-        Engine { session, registry, shared_cache: None }
+        Engine { session, registry, services: None }
     }
 
-    /// Engine whose tasks share `caches` for probe memoization (used by
-    /// [`crate::flow::explore`] to deduplicate across variants).
-    pub fn with_cache(
+    /// Engine whose tasks share `services` tiers for probe memoization
+    /// (used by [`crate::flow::explore`] to deduplicate across
+    /// variants, and by the CLI to persist under `--cache-dir`).
+    pub fn with_services(
         session: &'a Session,
         registry: &'a TaskRegistry,
-        caches: DseCaches,
+        services: ProbeTiers,
     ) -> Self {
-        Engine { session, registry, shared_cache: Some(caches) }
+        Engine { session, registry, services: Some(services) }
     }
 
     /// Execute `graph` against `meta`. Returns the per-node outcomes of
@@ -258,7 +259,7 @@ impl<'a> Engine<'a> {
                     meta,
                     session: self.session,
                     instance: instance.to_string(),
-                    shared_cache: self.shared_cache.clone(),
+                    services: self.services.clone(),
                 };
                 task.run(&mut ctx).map_err(|e| Error::Task {
                     task: instance.to_string(),

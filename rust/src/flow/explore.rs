@@ -18,13 +18,13 @@
 //! [`expand_variants`] takes the cartesian product (orders ×
 //! cfg-grid points), [`explore`] runs every variant's full flow
 //! concurrently on a [`crate::dse::ProbePool`] — cloned `MetaModel`s
-//! against the shared `Send + Sync` [`Session`], one shared memo per
-//! probe kind ([`DseCaches`]) so identical candidate evaluations —
-//! training probes and hardware-synthesis probes alike — dedupe across
-//! variants — and
-//! [`pareto_front`] reports the non-dominated set over
-//! (accuracy ↑, DSP ↓, LUT ↓, latency ↓) pulled from each variant's
-//! final RTL report ([`crate::synth::estimate`]).
+//! against the shared `Send + Sync` [`Session`], one shared tier
+//! stack per probe kind ([`ProbeTiers`]) so identical candidate
+//! evaluations — training probes and hardware-synthesis probes alike —
+//! dedupe across variants — and [`front_of`] reports the non-dominated
+//! set over (accuracy ↑, DSP ↓, LUT ↓, latency ↓) pulled from each
+//! variant's final RTL report ([`crate::synth::estimate`]) via the
+//! N-objective [`crate::search::pareto::pareto_front_min`] kernel.
 //!
 //! **Determinism:** variants expand in declaration order, results come
 //! back in request order whatever the worker interleaving, every
@@ -35,7 +35,7 @@
 use std::collections::{BTreeMap, BTreeSet, HashSet};
 
 use crate::config::FlowSpec;
-use crate::dse::DseCaches;
+use crate::dse::{ProbeCounts, ProbeTiers};
 use crate::error::{Error, Result};
 use crate::flow::graph::{FlowGraph, NodeKind};
 use crate::flow::registry::TaskRegistry;
@@ -337,24 +337,25 @@ pub fn explore_variants(
     if variants.is_empty() {
         return Err(Error::Flow("explore: no variants to run".into()));
     }
-    let shared = DseCaches::new();
+    let shared = ProbeTiers::new();
     let results = run_variants(session, registry, variants, extra_cfg, jobs, &shared)?;
     let front = front_of(&results)?;
     Ok(ExploreOutcome { results, front })
 }
 
 /// Run a batch of variants concurrently against caller-provided shared
-/// probe memos and return their results in input order — the evaluation
-/// primitive under both [`explore_variants`] (one batch, fresh caches)
+/// probe tiers and return their results in input order — the evaluation
+/// primitive under both [`explore_variants`] (one batch, fresh tiers)
 /// and the budgeted [`crate::search`] driver (many batches against one
-/// persistent [`DseCaches`], so probes dedupe across the whole search).
+/// persistent [`ProbeTiers`], so probes dedupe across the whole search
+/// and, with a disk tier attached, across whole processes).
 pub fn run_variants(
     session: &Session,
     registry: &TaskRegistry,
     variants: &[FlowVariant],
     extra_cfg: &[(String, Value)],
     jobs: usize,
-    shared: &DseCaches,
+    shared: &ProbeTiers,
 ) -> Result<Vec<VariantResult>> {
     if variants.is_empty() {
         return Ok(Vec::new());
@@ -389,7 +390,7 @@ pub fn run_variants(
     let pool = shared.pool(concurrent);
     let ran: Vec<VariantResult> = pool.run_batch(unique.len(), |slot| {
         let variant = &variants[unique[slot]];
-        let engine = Engine::with_cache(session, registry, shared.clone());
+        let engine = Engine::with_services(session, registry, shared.clone());
         let mut meta = MetaModel::new();
         variant.spec.apply_cfg(&mut meta.cfg);
         for (k, v) in extra_cfg {
@@ -433,23 +434,6 @@ pub fn front_of(results: &[VariantResult]) -> Result<Vec<usize>> {
     Ok(crate::search::pareto::pareto_front_min(&objectives))
 }
 
-/// Non-dominated set over (accuracy ↑, DSP ↓, LUT ↓, latency ↓), as
-/// ascending indices.  A point is dominated when another is no worse on
-/// every objective and strictly better on at least one.  Latency is an
-/// objective in its own right: hardware grid dimensions (reuse factors,
-/// IO architectures) trade resources *against* latency at identical
-/// accuracy, a trade a resource-only front would collapse to its
-/// cheapest point.
-///
-/// Thin 4-tuple shim over the N-objective
-/// [`crate::search::pareto::pareto_front_min`] kernel (accuracy is
-/// maximized, so it enters negated).
-pub fn pareto_front(points: &[(f64, f64, f64, f64)]) -> Vec<usize> {
-    let min_points: Vec<Vec<f64>> =
-        points.iter().map(|&(acc, dsp, lut, lat)| vec![-acc, dsp, lut, lat]).collect();
-    crate::search::pareto::pareto_front_min(&min_points)
-}
-
 /// Aligned table of all variants, front members marked.
 pub fn front_table(out: &ExploreOutcome) -> Table {
     let on_front: HashSet<usize> = out.front.iter().copied().collect();
@@ -475,7 +459,14 @@ pub fn front_table(out: &ExploreOutcome) -> Table {
 /// overrides become their own columns (the sorted union of keys across
 /// the result set), so rows identify their grid point / sampled values
 /// directly instead of only through the rendered label.
-pub fn front_csv(out: &ExploreOutcome) -> CsvWriter {
+///
+/// With `probes` set, six run-level probe-accounting columns are
+/// appended per row (issued / computed / hit-rate per probe kind) —
+/// aggregates over the whole run, identical on every row, so a CSV
+/// consumer can join cost onto any slice of the result set.  Computed
+/// counts are wall-clock-style diagnostics (see
+/// [`crate::dse::ProbeStats`]), not replay-comparable data.
+pub fn front_csv(out: &ExploreOutcome, probes: Option<&ProbeCounts>) -> CsvWriter {
     let on_front: HashSet<usize> = out.front.iter().copied().collect();
     let cfg_keys: BTreeSet<&str> = out
         .results
@@ -484,7 +475,24 @@ pub fn front_csv(out: &ExploreOutcome) -> CsvWriter {
         .collect();
     let mut header =
         vec!["variant", "accuracy", "dsp", "lut", "latency_ns", "power_w", "on_front"];
+    if probes.is_some() {
+        header.extend([
+            "train_issued",
+            "train_computed",
+            "train_hit_rate",
+            "hw_issued",
+            "hw_computed",
+            "hw_hit_rate",
+        ]);
+    }
     header.extend(cfg_keys.iter().copied());
+    let hit_rate = |issued: usize, computed: usize| {
+        if issued == 0 {
+            String::new()
+        } else {
+            format!("{:.4}", issued.saturating_sub(computed) as f64 / issued as f64)
+        }
+    };
     let mut w = CsvWriter::new(&header);
     for (i, r) in out.results.iter().enumerate() {
         let g = |name: &str| r.metric(name).map(|v| format!("{v}")).unwrap_or_default();
@@ -497,6 +505,16 @@ pub fn front_csv(out: &ExploreOutcome) -> CsvWriter {
             g("power_w"),
             if on_front.contains(&i) { "1".into() } else { "0".into() },
         ];
+        if let Some(c) = probes {
+            row.extend([
+                c.train_issued.to_string(),
+                c.train_computed.to_string(),
+                hit_rate(c.train_issued, c.train_computed),
+                c.hw_issued.to_string(),
+                c.hw_computed.to_string(),
+                hit_rate(c.hw_issued, c.hw_computed),
+            ]);
+        }
         for &key in &cfg_keys {
             row.push(
                 r.cfg
@@ -515,8 +533,19 @@ pub fn front_csv(out: &ExploreOutcome) -> CsvWriter {
 mod tests {
     use super::*;
 
+    /// The explorer's objective mapping: (acc ↑, dsp ↓, lut ↓, lat ↓)
+    /// points into the minimizing vectors [`VariantResult::min_objectives`]
+    /// produces (accuracy negated).
+    fn front4(pts: &[(f64, f64, f64, f64)]) -> Vec<usize> {
+        let min_points: Vec<Vec<f64>> = pts
+            .iter()
+            .map(|&(acc, dsp, lut, lat)| vec![-acc, dsp, lut, lat])
+            .collect();
+        crate::search::pareto::pareto_front_min(&min_points)
+    }
+
     #[test]
-    fn pareto_front_basics() {
+    fn explorer_objectives_front_basics() {
         // (acc, dsp, lut, latency_ns)
         let pts = vec![
             (0.76, 100.0, 5000.0, 50.0), // on front (best acc)
@@ -524,23 +553,23 @@ mod tests {
             (0.74, 120.0, 6000.0, 60.0), // dominated by 0 and 1
             (0.70, 40.0, 2000.0, 50.0),  // dominated by 1
         ];
-        assert_eq!(pareto_front(&pts), vec![0, 1]);
+        assert_eq!(front4(&pts), vec![0, 1]);
     }
 
     #[test]
-    fn pareto_front_keeps_latency_tradeoff() {
+    fn explorer_objectives_keep_latency_tradeoff() {
         // identical accuracy: a high-reuse variant (cheap, slow) and a
         // fully-unrolled one (expensive, fast) are both non-dominated
         let pts = vec![(0.75, 200.0, 9000.0, 40.0), (0.75, 30.0, 1500.0, 160.0)];
-        assert_eq!(pareto_front(&pts), vec![0, 1]);
+        assert_eq!(front4(&pts), vec![0, 1]);
     }
 
     #[test]
-    fn pareto_front_keeps_ties() {
+    fn explorer_objectives_keep_ties() {
         let pts = vec![(0.5, 10.0, 10.0, 1.0), (0.5, 10.0, 10.0, 1.0)];
-        assert_eq!(pareto_front(&pts), vec![0, 1]);
-        assert!(pareto_front(&[]).is_empty());
-        assert_eq!(pareto_front(&[(0.1, 1.0, 1.0, 1.0)]), vec![0]);
+        assert_eq!(front4(&pts), vec![0, 1]);
+        assert!(front4(&[]).is_empty());
+        assert_eq!(front4(&[(0.1, 1.0, 1.0, 1.0)]), vec![0]);
     }
 
     #[test]
@@ -623,7 +652,7 @@ mod tests {
         ];
         let front = front_of(&results).unwrap();
         assert_eq!(front, vec![0]); // result 1 is dominated (lower accuracy)
-        let csv = front_csv(&ExploreOutcome { results, front }).render();
+        let csv = front_csv(&ExploreOutcome { results, front }, None).render();
         let mut lines = csv.lines();
         let header = lines.next().unwrap();
         assert_eq!(
@@ -634,6 +663,31 @@ mod tests {
         assert!(rows[0].starts_with("a k=1,0.9,"), "{}", rows[0]);
         assert!(rows[0].ends_with(",1,1,"), "{}", rows[0]);
         assert!(rows[1].ends_with(",0,,x"), "{}", rows[1]);
+    }
+
+    #[test]
+    fn front_csv_appends_probe_columns_when_given_counts() {
+        let results = vec![fake_result("a", vec![], 0.9)];
+        let front = front_of(&results).unwrap();
+        let counts = ProbeCounts {
+            train_issued: 40,
+            train_computed: 10,
+            hw_issued: 8,
+            hw_computed: 8,
+        };
+        let csv =
+            front_csv(&ExploreOutcome { results, front }, Some(&counts)).render();
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "variant,accuracy,dsp,lut,latency_ns,power_w,on_front,\
+             train_issued,train_computed,train_hit_rate,hw_issued,hw_computed,hw_hit_rate"
+        );
+        // 75% of training probes were cache hits; no hardware hits
+        assert!(
+            lines.next().unwrap().ends_with(",1,40,10,0.7500,8,8,0.0000"),
+            "{csv}"
+        );
     }
 
     #[test]

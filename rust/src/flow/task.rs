@@ -1,6 +1,8 @@
 //! The pipe task abstraction (paper §III–IV, Table I).
 
-use crate::dse::{DseCaches, ProbePool};
+use std::sync::Arc;
+
+use crate::dse::{ProbePool, ProbeService, ProbeTiers};
 use crate::error::Result;
 use crate::flow::session::Session;
 use crate::metamodel::MetaModel;
@@ -54,11 +56,11 @@ pub struct TaskCtx<'a> {
     pub session: &'a Session,
     /// Task-instance id (CFG namespace and LOG attribution).
     pub instance: String,
-    /// Engine-provided probe memos (one per probe kind) shared across
-    /// the whole run (set by the multi-flow explorer so identical
-    /// probes dedupe across variants); `None` = each task memoizes
-    /// privately.
-    pub shared_cache: Option<DseCaches>,
+    /// Engine-provided probe tiers (in-memory memos per probe kind,
+    /// plus an optional persistent disk tier) shared across the whole
+    /// run (set by the multi-flow explorer so identical probes dedupe
+    /// across variants); `None` = each task memoizes privately.
+    pub services: Option<ProbeTiers>,
 }
 
 impl<'a> TaskCtx<'a> {
@@ -96,13 +98,15 @@ impl<'a> TaskCtx<'a> {
             .unwrap_or_else(crate::dse::default_jobs)
     }
 
-    /// The DSE probe pool for this task run: sized by [`Self::jobs`],
-    /// backed by the engine's shared probe memos when they are active
-    /// (multi-flow exploration) or private memos otherwise.
-    pub fn probe_pool(&self) -> ProbePool {
-        match &self.shared_cache {
-            Some(caches) => caches.pool(self.jobs()),
-            None => ProbePool::new(self.jobs()),
+    /// The probe service for this task run: sized by [`Self::jobs`],
+    /// backed by the engine's shared probe tiers when they are active
+    /// (multi-flow exploration, `--cache-dir` persistence) or private
+    /// in-memory memos otherwise.  Tasks program against the trait —
+    /// the engine decides where probe results actually come from.
+    pub fn probes(&self) -> Arc<dyn ProbeService> {
+        match &self.services {
+            Some(tiers) => tiers.service(self.jobs()),
+            None => Arc::new(ProbePool::new(self.jobs())),
         }
     }
 

@@ -11,7 +11,7 @@ mod write;
 
 pub use parse::parse;
 pub use value::Value;
-pub use write::to_string_pretty;
+pub use write::{to_string_compact, to_string_pretty};
 
 #[cfg(test)]
 mod tests;

@@ -30,6 +30,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "list-tasks" => cmd_list_tasks(&args[1..]),
         "run-flow" => cmd_run_flow(&args[1..]),
         "explore" => cmd_explore(&args[1..]),
+        "cache" => cmd_cache(&args[1..]),
         "synth" => cmd_synth(&args[1..]),
         _ => {
             print_help();
@@ -53,17 +54,21 @@ COMMANDS:
                                 probe worker count for all O-tasks;
                                 --synthetic uses the in-memory jet manifest
   explore     --flow <spec.json> [--model <name>] [--jobs N] [--synthetic]
-              [--strategy S] [--budget N] [--seed S] [-c k=v]...
-                                search the spec's variant space and print
+              [--strategy S] [--budget N] [--seed S] [--cache-dir DIR]
+              [-c k=v]...       search the spec's variant space and print
                                 the (accuracy, DSP, LUT, latency) Pareto
                                 front; --strategy picks exhaustive |
                                 random | evolve (overriding the spec's
                                 `search` section), --budget bounds the
                                 flow evaluations spent, --seed fixes the
-                                sampler PRNG; --synthetic uses the
+                                sampler PRNG; --cache-dir persists probe
+                                results on disk so a repeated search
+                                recomputes nothing; --synthetic uses the
                                 in-memory jet manifest (no artifacts
                                 needed); a CSV of the evaluated variants
                                 lands in report/
+  cache       stats|clear --cache-dir DIR   inspect or delete the
+                                persistent probe-result store
   synth       --model <name> [--scale S] [--device D] [--clock NS]
               [--reuse RF]   HLS+RTL report with fit/utilization; --clock
                              sets the target period (ns), --reuse the
@@ -387,12 +392,15 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             ("--strategy", true),
             ("--budget", true),
             ("--seed", true),
+            ("--cache-dir", true),
             ("-c", true),
         ],
     )?;
+    use metaml::dse::{DiskStore, ProbeTiers};
     use metaml::flow::explore::{front_csv, front_table};
     use metaml::flow::TaskRegistry;
-    use metaml::search::{run_search, strategy_names};
+    use metaml::search::{run_search_tiered, strategy_names};
+    use std::sync::Arc;
 
     let flow_arg = opt(args, "--flow").unwrap_or_else(|| "s_p_q".into());
     let spec = load_spec(&flow_arg)?;
@@ -439,7 +447,25 @@ fn cmd_explore(args: &[String]) -> Result<()> {
         search.seed,
     );
 
-    let out = run_search(&session, &registry, &spec, &search, &extra, jobs)?;
+    // probe tiers: in-memory memos, plus the persistent disk tier when
+    // --cache-dir is given (a warm store turns repeat searches into
+    // pure cache hits — bit-identical results either way)
+    let tiers = match opt(args, "--cache-dir") {
+        Some(dir) => {
+            let store = Arc::new(DiskStore::open(std::path::Path::new(&dir))?);
+            let s = store.stats();
+            println!(
+                "cache: {} ({} training, {} hardware entries loaded)",
+                store.path().display(),
+                s.train_entries,
+                s.hw_entries,
+            );
+            ProbeTiers::with_disk(store)
+        }
+        None => ProbeTiers::new(),
+    };
+
+    let out = run_search_tiered(&session, &registry, &spec, &search, &extra, jobs, &tiers)?;
 
     println!(
         "evaluated {} of {} grid variants ({} proposals of budget {})\n",
@@ -465,18 +491,63 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             r.metric("lut").unwrap_or(0.0) as u64,
         );
     }
+    let pct = |issued: usize, computed: usize| -> String {
+        if issued == 0 {
+            "-".into()
+        } else {
+            format!("{}%", issued.saturating_sub(computed) * 100 / issued)
+        }
+    };
     println!(
-        "probes: {} training issued ({} computed), {} hardware issued ({} computed)",
+        "probes: {} training issued ({} computed, {} cached), \
+         {} hardware issued ({} computed, {} cached)",
         out.probes.train_issued,
         out.probes.train_computed,
+        pct(out.probes.train_issued, out.probes.train_computed),
         out.probes.hw_issued,
         out.probes.hw_computed,
+        pct(out.probes.hw_issued, out.probes.hw_computed),
     );
 
     let csv_path = report_dir().join(format!("explore_{}.csv", spec.graph.name));
-    front_csv(&out.outcome).save(&csv_path)?;
+    front_csv(&out.outcome, Some(&out.probes)).save(&csv_path)?;
     println!("\nwrote {}", csv_path.display());
     Ok(())
+}
+
+fn cmd_cache(args: &[String]) -> Result<()> {
+    use metaml::dse::DiskStore;
+
+    let (action, rest) = match args.split_first() {
+        Some((a, rest)) if !a.starts_with('-') => (a.as_str(), rest),
+        _ => ("", args),
+    };
+    check_flags("cache", rest, &[("--cache-dir", true)])?;
+    let dir = opt(rest, "--cache-dir")
+        .ok_or_else(|| metaml::Error::other("cache: --cache-dir <DIR> is required"))?;
+    let dir = std::path::PathBuf::from(dir);
+    match action {
+        "stats" => {
+            let s = DiskStore::inspect(&dir);
+            println!("store: {}", dir.join("probes.jsonl").display());
+            println!("training entries: {}", s.train_entries);
+            println!("hardware entries: {}", s.hw_entries);
+            println!("skipped lines: {}", s.skipped);
+            println!("bytes: {}", s.bytes);
+            Ok(())
+        }
+        "clear" => {
+            if DiskStore::clear(&dir)? {
+                println!("cleared probe store under {}", dir.display());
+            } else {
+                println!("no probe store under {}", dir.display());
+            }
+            Ok(())
+        }
+        other => Err(metaml::Error::other(format!(
+            "cache: unknown action {other:?} (expected stats | clear)"
+        ))),
+    }
 }
 
 fn cmd_synth(args: &[String]) -> Result<()> {
@@ -616,9 +687,19 @@ mod tests {
             ("--strategy", true),
             ("--budget", true),
             ("--seed", true),
+            ("--cache-dir", true),
             ("-c", true),
         ];
-        let ok = s(&["--strategy", "evolve", "--budget", "8", "--seed", "7"]);
+        let ok = s(&[
+            "--strategy",
+            "evolve",
+            "--budget",
+            "8",
+            "--seed",
+            "7",
+            "--cache-dir",
+            "/tmp/metaml-cache",
+        ]);
         assert!(check_flags("explore", &ok, EXPLORE).is_ok());
         let err = check_flags("explore", &s(&["--buget", "8"]), EXPLORE)
             .unwrap_err()

@@ -10,7 +10,7 @@
 //!
 //! Every probe is a pure function of its rate (candidates always prune
 //! from the *base* trained weights), so fine-tune probes are submitted
-//! through the [`ProbePool`].  Binary search is latency-bound — each
+//! through the [`ProbeService`].  Binary search is latency-bound — each
 //! step's rate depends on the previous verdict — so with `jobs >= 3`
 //! the pool speculatively computes both possible next-step rates in the
 //! same batch as the current one and memoizes them; otherwise-idle
@@ -22,7 +22,7 @@
 
 use std::collections::HashMap;
 
-use crate::dse::ProbePool;
+use crate::dse::{ProbeService, ProbeServiceExt};
 use crate::error::Result;
 use crate::model::ModelState;
 use crate::prune::mask::global_magnitude_masks;
@@ -89,7 +89,7 @@ pub fn autoprune(
     trainer: &Trainer,
     state: &mut ModelState,
     cfg: &AutopruneConfig,
-    pool: &ProbePool,
+    pool: &dyn ProbeService,
 ) -> Result<PruneTrace> {
     let fit_cfg = TrainConfig {
         epochs: cfg.train_epochs,

@@ -12,7 +12,7 @@
 //! shrink once the fractional part is exhausted.
 //!
 //! The `2·L` candidates of each round are independent, so they are
-//! submitted as one batch through the [`ProbePool`] and evaluated
+//! submitted as one batch through the [`ProbeService`] and evaluated
 //! concurrently under `jobs > 1`.  (Each round's candidates are
 //! genuinely new networks — an accepted cut changes the base precision
 //! vector — so the pool's memo only fires on exact repeats, e.g. when a
@@ -23,7 +23,7 @@
 //! — highest accuracy, then lowest layer index, then fewest integer
 //! bits — so the trace is bit-identical to sequential execution.
 
-use crate::dse::{ProbePool, ProbeRequest};
+use crate::dse::{ProbeRequest, ProbeService};
 use crate::error::Result;
 use crate::model::state::Precision;
 use crate::model::ModelState;
@@ -94,7 +94,7 @@ pub fn quantize_search(
     trainer: &Trainer,
     state: &mut ModelState,
     cfg: &QuantConfig,
-    pool: &ProbePool,
+    pool: &dyn ProbeService,
 ) -> Result<QuantTrace> {
     let n_layers = state.n_weight_layers();
     // instrument the starting precision everywhere

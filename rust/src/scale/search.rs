@@ -7,7 +7,7 @@
 //! exceeds α_s (paper default 0.05% — essentially "free" shrinkage only).
 //!
 //! Under `jobs > 1` the grid is evaluated *speculatively* in
-//! worker-count-sized waves through the [`ProbePool`]: each wave trains
+//! worker-count-sized waves through the [`ProbeService`]: each wave trains
 //! `jobs` candidates concurrently, then the stop rule scans results in
 //! grid order before the next wave launches.  Speculative work is
 //! bounded by otherwise-idle capacity (at most `jobs - 1` discarded
@@ -15,7 +15,7 @@
 //! trace is bit-identical to the sequential walk (which `jobs = 1`
 //! still performs lazily, trial by trial).
 
-use crate::dse::ProbePool;
+use crate::dse::{ProbeService, ProbeServiceExt};
 use crate::error::Result;
 use crate::flow::session::Session;
 use crate::model::ModelState;
@@ -79,7 +79,7 @@ pub fn scale_search(
     current_scale: f64,
     base_accuracy: f64,
     cfg: &ScaleConfig,
-    pool: &ProbePool,
+    pool: &dyn ProbeService,
 ) -> Result<(ScaleTrace, ModelState, f64)> {
     let data = session.dataset(model)?;
     let grid = session.manifest.scales_for(model);

@@ -3,8 +3,9 @@
 //! The driver owns everything a strategy must not: the evaluation
 //! budget, the evaluated-candidate memo (an exact repeat is served from
 //! memory, never re-run), variant materialization, the shared
-//! [`DseCaches`] that dedupe training and hardware probes across the
-//! whole search, and the final front.  A strategy only decides *which
+//! [`ProbeTiers`] that dedupe training and hardware probes across the
+//! whole search (and persist them, when a disk tier is attached), and
+//! the final front.  A strategy only decides *which
 //! points to look at next* — which is what makes the three built-ins
 //! (and user strategies) interchangeable in specs and on the CLI.
 //!
@@ -25,7 +26,7 @@
 use std::collections::HashMap;
 
 use crate::config::FlowSpec;
-use crate::dse::{DseCaches, ProbeCounts};
+use crate::dse::{ProbeCounts, ProbeTiers};
 use crate::error::Result;
 use crate::flow::explore::{run_variants, ExploreOutcome, FlowVariant};
 use crate::flow::registry::TaskRegistry;
@@ -112,11 +113,26 @@ pub fn run_search(
     extra_cfg: &[(String, Value)],
     jobs: usize,
 ) -> Result<SearchOutcome> {
+    run_search_tiered(session, registry, spec, search, extra_cfg, jobs, &ProbeTiers::new())
+}
+
+/// [`run_search`] against caller-provided probe tiers — how the CLI
+/// attaches a persistent `--cache-dir` disk tier, and the seam for
+/// pointing a search at any other [`crate::dse::ProbeService`] backing.
+pub fn run_search_tiered(
+    session: &Session,
+    registry: &TaskRegistry,
+    spec: &FlowSpec,
+    search: &SearchSpec,
+    extra_cfg: &[(String, Value)],
+    jobs: usize,
+    tiers: &ProbeTiers,
+) -> Result<SearchOutcome> {
     let space = SearchSpace::of(spec, &search.ranges)?;
     let grid_size = space.grid_size();
     let budget = search.budget.unwrap_or(grid_size).max(1);
     let mut strategy = make_strategy(search, &space)?;
-    let shared = DseCaches::new();
+    let shared = tiers.clone();
     let prefilter = if search.prefilter {
         // heuristic accelerator: a session whose manifest can't model
         // the spec (no such variant) just runs without it

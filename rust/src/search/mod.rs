@@ -6,7 +6,7 @@
 //! pluggable: a [`SearchStrategy`] proposes batches of candidates,
 //! observes their multi-objective results, and repeats until an
 //! evaluation **budget** is exhausted, all on top of the same
-//! [`crate::dse::ProbePool`]/[`crate::dse::DseCaches`] dedup machinery
+//! [`crate::dse::ProbeService`]/[`crate::dse::ProbeTiers`] dedup machinery
 //! the explorer uses (cf. MetaML-Pro's cross-stage search strategies
 //! and the "Software-defined DSE" line of work: near-optimal fronts at
 //! a fraction of the evaluations).
@@ -47,7 +47,9 @@ pub mod prefilter;
 pub mod random;
 pub mod space;
 
-pub use driver::{run_search, Observation, SearchCtx, SearchOutcome, SearchStrategy};
+pub use driver::{
+    run_search, run_search_tiered, Observation, SearchCtx, SearchOutcome, SearchStrategy,
+};
 pub use evolve::Evolve;
 pub use exhaustive::Exhaustive;
 pub use prefilter::HwPrefilter;

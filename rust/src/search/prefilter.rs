@@ -8,8 +8,8 @@
 //! applies each candidate's *hardware-stage* CFG overrides
 //! (`reuse_factor`, `clock_period`, `FPGA_part_number`, `IOType`) to a
 //! dense baseline HLS model of the flow's DNN, estimates every
-//! configuration through [`ProbePool::estimate_batch`] (so repeats hit
-//! the shared [`crate::dse::HwCache`] across the whole search), and
+//! configuration through [`ProbeService::estimate_batch`] (so repeats
+//! hit the shared [`crate::dse::HwCache`] across the whole search), and
 //! orders the batch by NSGA rank over (DSP, LUT, latency_ns) — the
 //! same dominance kernel the real front uses, just on the cheap
 //! objectives.
@@ -21,8 +21,10 @@
 //! and it is deterministic for any worker count (batch results come
 //! back in request order).
 
+use std::sync::Arc;
+
 use crate::config::FlowSpec;
-use crate::dse::{DseCaches, HwProbeRequest, ProbePool};
+use crate::dse::{HwProbeRequest, ProbeService, ProbeTiers};
 use crate::error::Result;
 use crate::flow::Session;
 use crate::hls::{HlsModel, HlsTransform, IoType, SetReuseFactor};
@@ -32,10 +34,11 @@ use crate::search::pareto::nsga_order;
 use crate::search::space::{Candidate, SearchSpace};
 use crate::synth::FpgaDevice;
 
-/// The baseline model + shared-memo pool behind one search's prefilter.
+/// The baseline model + shared probe service behind one search's
+/// prefilter.
 pub struct HwPrefilter {
     base: HlsModel,
-    pool: ProbePool,
+    service: Arc<dyn ProbeService>,
 }
 
 /// Last CFG entry whose key is exactly `param` or ends in `".{param}"`
@@ -57,7 +60,7 @@ impl HwPrefilter {
         session: &Session,
         spec: &FlowSpec,
         extra_cfg: &[(String, Value)],
-        shared: &DseCaches,
+        shared: &ProbeTiers,
         jobs: usize,
     ) -> Result<HwPrefilter> {
         let mut defaults: Vec<(String, Value)> = spec.cfg_entries.clone();
@@ -80,7 +83,7 @@ impl HwPrefilter {
         // validate the default target once so a bad part fails at build
         // time, not on the first rank() call
         FpgaDevice::target_of(&base)?;
-        Ok(HwPrefilter { base, pool: shared.pool(jobs) })
+        Ok(HwPrefilter { base, service: shared.service(jobs) })
     }
 
     /// Apply a candidate's hardware-stage overrides to the baseline.
@@ -132,7 +135,7 @@ impl HwPrefilter {
                 .iter()
                 .map(|&i| HwProbeRequest::new(i, models[i].clone()))
                 .collect();
-            for r in self.pool.estimate_batch(device, clock_mhz, &requests)? {
+            for r in self.service.estimate_batch(device, clock_mhz, &requests)? {
                 objectives[r.id] =
                     vec![r.eval.dsp as f64, r.eval.lut as f64, r.eval.latency_ns];
             }

@@ -17,14 +17,15 @@
 //!
 //! Each round's candidates (one next-legal-step per layer) are
 //! independent, so they are submitted as one batch through the
-//! [`ProbePool`]'s hardware probe kind ([`ProbePool::estimate_batch`],
-//! memoized by HLS-config fingerprint).  Selection is deterministic for
+//! [`ProbeService`]'s hardware probe kind
+//! ([`ProbeService::estimate_batch`], memoized by HLS-config
+//! fingerprint).  Selection is deterministic for
 //! any worker count: the full batch is scanned in candidate order with
 //! an explicit tie-break — lowest DSP, then lowest LUT, then lowest
 //! layer index — so the trace is bit-identical to sequential execution
 //! (the same jobs-invariance contract as `quantize_search`).
 
-use crate::dse::{HwEval, HwProbeRequest, ProbePool};
+use crate::dse::{HwEval, HwProbeRequest, ProbeService};
 use crate::error::Result;
 use crate::hls::ir::HlsModel;
 use crate::synth::device::FpgaDevice;
@@ -70,7 +71,7 @@ pub fn reuse_search(
     device: &FpgaDevice,
     clock_mhz: f64,
     cfg: &ReuseConfig,
-    pool: &ProbePool,
+    pool: &dyn ProbeService,
 ) -> Result<(HlsModel, ReuseTrace)> {
     let mut cur = model.clone();
     let idxs = cur.compute_layer_indices();
@@ -170,6 +171,7 @@ pub fn reuse_search(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dse::ProbePool;
     use crate::hls::ir::tests::toy_model;
 
     fn vu9p() -> &'static FpgaDevice {

@@ -47,8 +47,8 @@ impl PipeTask for PruningTask {
         let data = ctx.session.dataset(&variant.model)?;
         let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
 
-        let pool = ctx.probe_pool();
-        let trace = autoprune(&trainer, &mut state, &cfg, &pool)?;
+        let pool = ctx.probes();
+        let trace = autoprune(&trainer, &mut state, &cfg, pool.as_ref())?;
         for p in &trace.probes {
             ctx.log_metric("probe_rate", p.rate);
             ctx.log_metric("probe_accuracy", p.accuracy);

@@ -70,16 +70,20 @@ impl PipeTask for QuantizationTask {
         let data = ctx.session.dataset(&variant.model)?;
         let trainer = Trainer::new(&ctx.session.runtime, &exec, &data);
 
-        let pool = ctx.probe_pool();
-        let trace = quantize_search(&trainer, &mut state, &cfg, &pool)?;
+        let pool = ctx.probes();
+        let trace = quantize_search(&trainer, &mut state, &cfg, pool.as_ref())?;
         for p in &trace.probes {
             ctx.log_metric("probe_layer", p.layer as f64);
             ctx.log_metric("probe_bits", p.tried.total_bits as f64);
             ctx.log_metric("probe_accuracy", p.accuracy);
         }
-        // hit counts depend on pool sharing/timing, so they are a side
+        // hit counts depend on tier sharing/timing, so they are a side
         // note, not a replay-comparable LOG event
-        ctx.log_note("eval_cache_hits", pool.cache().hits() as f64);
+        let counts = pool.counts();
+        ctx.log_note(
+            "train_probes_cached",
+            counts.train_issued.saturating_sub(counts.train_computed) as f64,
+        );
         ctx.log_metric("accuracy", trace.final_accuracy);
         ctx.log_metric("bits_total", trace.bits_after as f64);
         ctx.log_message(format!(

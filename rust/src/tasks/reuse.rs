@@ -59,8 +59,8 @@ impl PipeTask for ReuseSearchTask {
             latency_budget_ns: ctx.meta.cfg.get_f64(&ctx.instance, "latency_budget_ns"),
         };
 
-        let pool = ctx.probe_pool();
-        let (model, trace) = reuse_search(&hls, device, clock_mhz, &cfg, &pool)?;
+        let pool = ctx.probes();
+        let (model, trace) = reuse_search(&hls, device, clock_mhz, &cfg, pool.as_ref())?;
         for p in &trace.probes {
             ctx.log_metric("probe_layer", p.layer as f64);
             ctx.log_metric("probe_rf", p.rf as f64);
@@ -69,9 +69,13 @@ impl PipeTask for ReuseSearchTask {
             ctx.log_metric("probe_latency_ns", p.latency_ns);
             ctx.log_metric("probe_accepted", if p.accepted { 1.0 } else { 0.0 });
         }
-        // hit counts depend on pool sharing/timing: side note, never
+        // hit counts depend on tier sharing/timing: side note, never
         // the replay-comparable event stream
-        ctx.log_note("hw_cache_hits", pool.hw_cache().hits() as f64);
+        let counts = pool.counts();
+        ctx.log_note(
+            "hw_probes_cached",
+            counts.hw_issued.saturating_sub(counts.hw_computed) as f64,
+        );
         let e = &trace.final_eval;
         ctx.log_metric("dsp", e.dsp as f64);
         ctx.log_metric("lut", e.lut as f64);

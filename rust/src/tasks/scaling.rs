@@ -59,9 +59,15 @@ impl PipeTask for ScalingTask {
             inherit_pruning_rate: input.metric("pruning_rate").unwrap_or(0.0),
         };
 
-        let pool = ctx.probe_pool();
-        let (trace, state, new_scale) =
-            scale_search(ctx.session, &variant.model, variant.scale, base_acc, &cfg, &pool)?;
+        let pool = ctx.probes();
+        let (trace, state, new_scale) = scale_search(
+            ctx.session,
+            &variant.model,
+            variant.scale,
+            base_acc,
+            &cfg,
+            pool.as_ref(),
+        )?;
         for p in &trace.probes {
             ctx.log_metric("probe_scale", p.scale);
             ctx.log_metric("probe_accuracy", p.accuracy);

@@ -1,0 +1,209 @@
+//! Probe-service + persistent-cache semantics on the synthetic mini
+//! jet manifest.
+//!
+//! Pins the PR's headline contract: for a fixed (spec, strategy, seed,
+//! budget), per-variant LOGs and the front are bit-identical across
+//! cold-cache, warm-cache and `--jobs` {1, 4} runs — and the warm run
+//! issues **zero** fresh training-probe computations ([`ProbeCounts`]
+//! asserts it).  Also covers the disk store surviving corruption at
+//! the integration level (a damaged store degrades to recomputation,
+//! never to an error or a changed trace).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use metaml::bench_support::synthetic_jet_mini_manifest;
+use metaml::config::FlowSpec;
+use metaml::dse::{DiskStore, ProbeTiers};
+use metaml::flow::{Session, TaskRegistry};
+use metaml::runtime::Runtime;
+use metaml::search::{run_search_tiered, SearchOutcome, SearchSpec};
+
+fn mini_session() -> Session {
+    Session::with_backend(Runtime::reference(), synthetic_jet_mini_manifest())
+}
+
+/// One order × (clock 5|10 ns) × (pruning tolerance 0.02|0.05) — the
+/// same provable 4-point grid the search-strategy tests use, with a
+/// QUANTIZATION task so the flow issues training probes and a
+/// REUSE_SEARCH task so it issues hardware probes through the service.
+fn grid_spec() -> FlowSpec {
+    FlowSpec::parse(
+        r#"{
+  "name": "mini_cache",
+  "cfg": {
+    "model": "jet_mini",
+    "gen.train_epochs": 1,
+    "prune.train_epochs": 1,
+    "prune.pruning_rate_thresh": 0.25,
+    "quantize.start_precision": "ap_fixed<8,4>",
+    "quantize.min_bits": 7,
+    "reuse.latency_budget_ns": 400.0
+  },
+  "tasks": [
+    {"id": "gen", "type": "KERAS-MODEL-GEN"},
+    {"id": "prune", "type": "PRUNING"},
+    {"id": "hls", "type": "HLS4ML"},
+    {"id": "quantize", "type": "QUANTIZATION"},
+    {"id": "reuse", "type": "REUSE_SEARCH"},
+    {"id": "synth", "type": "VIVADO-HLS"}
+  ],
+  "edges": [["gen", "prune"], ["prune", "hls"], ["hls", "quantize"],
+             ["quantize", "reuse"], ["reuse", "synth"]],
+  "explore": {
+    "cfg_grid": {
+      "hls.clock_period": [5, 10],
+      "prune.tolerate_acc_loss": [0.02, 0.05]
+    }
+  }
+}"#,
+    )
+    .unwrap()
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("metaml_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run the full exhaustive search against `tiers` (a fresh in-memory
+/// bundle per call, so only the disk tier carries state across runs).
+fn run_with(tiers: &ProbeTiers, jobs: usize) -> SearchOutcome {
+    let session = mini_session();
+    let registry = TaskRegistry::builtin();
+    run_search_tiered(
+        &session,
+        &registry,
+        &grid_spec(),
+        &SearchSpec::default(),
+        &[],
+        jobs,
+        tiers,
+    )
+    .unwrap()
+}
+
+/// Bit-identity over everything user-visible: labels, front, every
+/// metric's bit pattern, every LOG event stream.
+fn assert_bit_identical(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_eq!(a.outcome.front, b.outcome.front, "{what}: front");
+    assert_eq!(a.outcome.results.len(), b.outcome.results.len(), "{what}");
+    for (x, y) in a.outcome.results.iter().zip(&b.outcome.results) {
+        assert_eq!(x.label, y.label, "{what}");
+        assert_eq!(x.events, y.events, "{what}: {} LOG", x.label);
+        for (k, v) in &x.metrics {
+            let w = y.metrics.get(k).copied().unwrap_or(f64::NAN);
+            assert_eq!(v.to_bits(), w.to_bits(), "{what}: {} {k}", x.label);
+        }
+    }
+}
+
+#[test]
+fn warm_cache_issues_zero_fresh_training_probes_and_keeps_traces() {
+    let dir = tmpdir("probe_service_warm");
+
+    // baseline: no disk tier at all
+    let baseline = run_with(&ProbeTiers::new(), 1);
+    assert!(baseline.probes.train_issued > 0, "flow must issue training probes");
+    assert!(baseline.probes.train_computed > 0);
+    assert!(baseline.probes.hw_issued > 0);
+
+    // cold run: attaches an empty store, computes everything, persists
+    let cold_tiers = ProbeTiers::with_disk(Arc::new(DiskStore::open(&dir).unwrap()));
+    let cold = run_with(&cold_tiers, 1);
+    assert_bit_identical(&baseline, &cold, "cold vs no-cache");
+    let stats_after_cold = DiskStore::inspect(&dir);
+    assert!(stats_after_cold.train_entries > 0, "training probes persisted");
+    assert!(stats_after_cold.hw_entries > 0, "hardware probes persisted");
+    assert_eq!(stats_after_cold.skipped, 0);
+
+    // warm runs: fresh in-memory tiers + a fresh open of the same
+    // store, i.e. a second process — at both worker counts
+    for jobs in [1usize, 4] {
+        let warm_tiers =
+            ProbeTiers::with_disk(Arc::new(DiskStore::open(&dir).unwrap()));
+        let warm = run_with(&warm_tiers, jobs);
+        assert_bit_identical(&cold, &warm, "warm vs cold");
+
+        // the headline: zero fresh probe computations of either kind
+        assert_eq!(
+            warm.probes.train_computed, 0,
+            "warm run (jobs {jobs}) recomputed training probes"
+        );
+        assert_eq!(
+            warm.probes.hw_computed, 0,
+            "warm run (jobs {jobs}) recomputed hardware probes"
+        );
+        assert_eq!(warm.probes.train_issued, cold.probes.train_issued);
+    }
+
+    // warm runs never append: the store is byte-stable once saturated
+    let stats_after_warm = DiskStore::inspect(&dir);
+    assert_eq!(stats_after_cold, stats_after_warm);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn jobs_invariance_holds_through_the_disk_tier() {
+    let dir = tmpdir("probe_service_jobs");
+
+    let t1 = ProbeTiers::with_disk(Arc::new(DiskStore::open(&dir).unwrap()));
+    let cold_seq = run_with(&t1, 1);
+
+    // a *different* store directory filled by a parallel run must
+    // produce the same traces (parallelism changes wall-clock only)
+    let dir4 = tmpdir("probe_service_jobs4");
+    let t4 = ProbeTiers::with_disk(Arc::new(DiskStore::open(&dir4).unwrap()));
+    let cold_par = run_with(&t4, 4);
+    assert_bit_identical(&cold_seq, &cold_par, "jobs 1 vs 4 (cold)");
+
+    // and the stores they left behind hold the same number of entries
+    let s1 = DiskStore::inspect(&dir);
+    let s4 = DiskStore::inspect(&dir4);
+    assert_eq!(s1.train_entries, s4.train_entries);
+    assert_eq!(s1.hw_entries, s4.hw_entries);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir4);
+}
+
+#[test]
+fn damaged_store_degrades_to_recomputation_not_error() {
+    let dir = tmpdir("probe_service_damaged");
+
+    let cold_tiers = ProbeTiers::with_disk(Arc::new(DiskStore::open(&dir).unwrap()));
+    let cold = run_with(&cold_tiers, 2);
+
+    // vandalize the store: keep the first half of the file, then tack
+    // on garbage (a torn write from a killed process)
+    let path = dir.join("probes.jsonl");
+    let bytes = std::fs::read(&path).unwrap();
+    let mut torn = bytes[..bytes.len() / 2].to_vec();
+    torn.extend_from_slice(b"\x00\xff not a record\nv1 train zz{\n");
+    std::fs::write(&path, torn).unwrap();
+
+    let damaged = DiskStore::open(&dir).unwrap();
+    assert!(damaged.stats().skipped > 0, "damage was detected and skipped");
+
+    // the run over the damaged store still succeeds with identical
+    // traces — missing entries are recomputed (and persisted again)
+    let warm = run_with(&ProbeTiers::with_disk(Arc::new(damaged)), 2);
+    assert_bit_identical(&cold, &warm, "damaged-store run");
+    assert!(
+        warm.probes.train_computed + warm.probes.hw_computed > 0,
+        "lost entries were recomputed"
+    );
+
+    // ... and a third run over the repaired store is fully warm again
+    let healed_tiers =
+        ProbeTiers::with_disk(Arc::new(DiskStore::open(&dir).unwrap()));
+    let healed = run_with(&healed_tiers, 2);
+    assert_bit_identical(&cold, &healed, "healed-store run");
+    assert_eq!(healed.probes.train_computed, 0);
+    assert_eq!(healed.probes.hw_computed, 0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
