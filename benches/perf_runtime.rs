@@ -1,6 +1,11 @@
 //! §Perf — runtime microbenchmarks for the L3 hot path.
 //!
 //! Measures the pieces EXPERIMENTS.md §Perf tracks:
+//!   * interpreter kernels: dense GFLOP-equivalent eval throughput,
+//!     sparse-vs-dense speedup on a 90%-pruned jet model (with an
+//!     assertion that the compressed path actually engaged), and
+//!     naive-vs-fast probe throughput (the before/after of the kernel
+//!     rewrite);
 //!   * artifact compile time (cold) and cache hit (warm);
 //!   * train-step dispatch latency + steps/s per model (the hot loop of
 //!     every O-task probe);
@@ -21,6 +26,10 @@
 //! `jet_dnn` manifest (reference interpreter), so every machine can
 //! reproduce the numbers.  Writes bench_out/perf_runtime.csv and a
 //! machine-readable bench_out/perf_runtime.json.
+//!
+//! `--smoke` runs only the interpreter-kernel section with tiny
+//! iteration counts — a CI-sized functional check that the sparse path
+//! engages on a pruned model, not a timing run.
 
 use std::time::Instant;
 
@@ -109,7 +118,147 @@ fn traces_identical(a: &QuantTrace, b: &QuantTrace) -> bool {
         })
 }
 
+/// Interpreter-kernel section: dense GFLOP-equivalent throughput,
+/// sparse speedup at 90% pruning (asserting the compressed path
+/// engaged), and naive-vs-fast probe throughput.  Self-contained — it
+/// compares `KernelMode`s, so it builds its own reference sessions
+/// instead of using the caller's.
+fn interp_section(rec: &mut Recorder, table: &mut Table, smoke: bool) -> metaml::Result<()> {
+    use metaml::runtime::kernels::sparse_matmul_count;
+    use metaml::runtime::{HostTensor, KernelMode, RefBackend};
+    use metaml::util::Prng;
+
+    let iters = if smoke { 2 } else { 20 };
+    let mode_session = |mode: KernelMode| {
+        Session::with_backend(
+            Runtime::from_backend(Box::new(RefBackend::with_mode(mode))),
+            synthetic_jet_manifest(),
+        )
+    };
+
+    let fast = mode_session(KernelMode::Fast);
+    let variant = fast.manifest.variant("jet_dnn", 1.0)?.clone();
+    let exec = fast.executable(&variant.tag)?;
+    let data = fast.dataset("jet_dnn")?;
+    let trainer = Trainer::new(&fast.runtime, &exec, &data);
+    let state = ModelState::init(&variant, 77);
+
+    // dense GFLOP-equivalent eval throughput (each weight element is
+    // one multiply-add = 2 flops per sample)
+    let mul_adds: usize = variant
+        .param_shapes
+        .iter()
+        .filter(|(_, s)| s.len() == 2)
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    let t0 = Instant::now();
+    let mut samples = 0usize;
+    for _ in 0..iters {
+        samples += trainer.evaluate(&state)?.n;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let gflops = (samples * mul_adds * 2) as f64 / 1e9 / secs;
+    table.row_strs(&[
+        "interp dense eval",
+        "jet_dnn",
+        &format!("{:.2} GFLOP/s equivalent", gflops),
+    ]);
+    rec.record("interp_dense_gflops", "jet_dnn", gflops, "gflop/s");
+
+    // sparse speedup at 90% pruning: Fast (compressed path) vs
+    // DenseOnly (same blocked kernels, sparse list disabled)
+    let mut pruned = state.clone();
+    let mut rng = Prng::new(4311);
+    for m in &mut pruned.masks {
+        if let HostTensor::F32 { data, .. } = m {
+            for v in data.iter_mut() {
+                *v = if rng.uniform() < 0.9 { 0.0 } else { 1.0 };
+            }
+        }
+    }
+    let engaged_before = sparse_matmul_count();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        trainer.evaluate(&pruned)?;
+    }
+    let fast_secs = t0.elapsed().as_secs_f64();
+    if sparse_matmul_count() == engaged_before {
+        return Err(metaml::Error::other(
+            "interp: sparse path never engaged on a 90%-pruned jet model",
+        ));
+    }
+
+    let dense = mode_session(KernelMode::DenseOnly);
+    let dexec = dense.executable(&variant.tag)?;
+    let dtrainer = Trainer::new(&dense.runtime, &dexec, &data);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        dtrainer.evaluate(&pruned)?;
+    }
+    let dense_secs = t0.elapsed().as_secs_f64();
+    let sparse_speedup = dense_secs / fast_secs.max(1e-12);
+    table.row_strs(&[
+        "interp sparse eval (90% pruned)",
+        "jet_dnn",
+        &format!("{:.2}x vs dense path", sparse_speedup),
+    ]);
+    rec.record("interp_sparse_speedup_90", "jet_dnn", sparse_speedup, "x");
+
+    // probe throughput, before vs after: the original naive kernels
+    // against the fast path, over distinct cache-cold candidates
+    let naive_sess = mode_session(KernelMode::Naive);
+    let nexec = naive_sess.executable(&variant.tag)?;
+    let ntrainer = Trainer::new(&naive_sess.runtime, &nexec, &data);
+
+    let n_layers = state.n_weight_layers().max(1);
+    let n_probes = if smoke { n_layers } else { 4 * n_layers };
+    let requests: Vec<ProbeRequest> = (0..n_probes)
+        .map(|i| {
+            let mut cand = state.clone();
+            cand.precisions[i % n_layers] =
+                Precision::new(16 - 2 * (i / n_layers) as u32, 6);
+            ProbeRequest::new(i, cand)
+        })
+        .collect();
+    let run = |tr: &Trainer| -> metaml::Result<f64> {
+        let pool = ProbePool::new(1);
+        let t0 = Instant::now();
+        pool.evaluate_batch(tr, &requests)?;
+        Ok(requests.len() as f64 / t0.elapsed().as_secs_f64())
+    };
+    let naive_ps = run(&ntrainer)?;
+    let fast_ps = run(&trainer)?;
+    let probe_speedup = fast_ps / naive_ps.max(1e-12);
+    table.row_strs(&[
+        "interp probes/s (naive kernels)",
+        "jet_dnn",
+        &format!("{:.1} probes/s", naive_ps),
+    ]);
+    table.row_strs(&[
+        "interp probes/s (fast kernels)",
+        "jet_dnn",
+        &format!("{:.1} probes/s ({:.2}x)", fast_ps, probe_speedup),
+    ]);
+    rec.record("interp_probes_s_naive", "jet_dnn", naive_ps, "probes/s");
+    rec.record("interp_probes_s_fast", "jet_dnn", fast_ps, "probes/s");
+    rec.record("interp_probe_speedup", "jet_dnn", probe_speedup, "x");
+    Ok(())
+}
+
 fn main() -> metaml::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rec = Recorder::new();
+    let mut table = Table::new(&["metric", "model", "value"]);
+
+    // interpreter kernels (the only section --smoke runs)
+    interp_section(&mut rec, &mut table, smoke)?;
+    if smoke {
+        println!("== §Perf: interpreter kernels (smoke) ==");
+        println!("{}", table.render());
+        rec.save()?;
+        return Ok(());
+    }
+
     // real artifacts when available; otherwise the in-memory jet_dnn
     // manifest keeps the bench runnable on any machine
     let session = match Session::open(&artifacts_dir()) {
@@ -119,8 +268,6 @@ fn main() -> metaml::Result<()> {
             Session::with_backend(Runtime::cpu()?, synthetic_jet_manifest())
         }
     };
-    let mut rec = Recorder::new();
-    let mut table = Table::new(&["metric", "model", "value"]);
 
     // compile: cold vs warm
     {

@@ -178,6 +178,13 @@ impl ProbePool {
     /// Run `f(0..n)` across the pool's workers; results come back in
     /// index order.  The first `Err` in index order is propagated after
     /// the whole batch has been attempted.
+    ///
+    /// Idle capacity is lent *into* the probes as intra-probe
+    /// parallelism (`kernels::with_intra_threads`): a lone probe gets
+    /// the whole `--jobs` budget for its row-panel matmul splits, and a
+    /// full batch gets `jobs / workers` each.  The split is by shape,
+    /// never by thread count, so results stay bit-identical for any
+    /// `--jobs` (see `rust/tests/kernel_parity.rs`).
     pub fn run_batch<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
     where
         T: Send,
@@ -188,9 +195,13 @@ impl ProbePool {
         }
         let workers = self.jobs.min(n);
         if workers <= 1 {
-            return (0..n).map(f).collect();
+            let intra = self.jobs.max(1);
+            return (0..n)
+                .map(|i| crate::runtime::kernels::with_intra_threads(intra, || f(i)))
+                .collect();
         }
 
+        let intra = (self.jobs / workers).max(1);
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<Result<T>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
@@ -201,7 +212,7 @@ impl ProbePool {
                     if i >= n {
                         break;
                     }
-                    let r = f(i);
+                    let r = crate::runtime::kernels::with_intra_threads(intra, || f(i));
                     *slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
                 });
             }

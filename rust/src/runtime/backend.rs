@@ -99,6 +99,29 @@ pub trait ModelExec: Send + Sync {
 
     /// Evaluate one batch; returns (loss, acc).
     fn eval_step(&self, args: &[HostTensor]) -> Result<(f32, f32)>;
+
+    /// Evaluate many batches against one fixed model operand prefix
+    /// (`base` = params ++ masks ++ [qcfg]); returns per-batch
+    /// (loss, acc) in order.
+    ///
+    /// The default loops [`Self::eval_step`]; backends override it to
+    /// hoist per-run work (the reference interpreter quantizes and
+    /// sparsifies the weights once for the whole run).
+    fn eval_batches(
+        &self,
+        base: &[HostTensor],
+        batches: &[(HostTensor, HostTensor)],
+    ) -> Result<Vec<(f32, f32)>> {
+        let mut args: Vec<HostTensor> = base.to_vec();
+        let mut out = Vec::with_capacity(batches.len());
+        for (x, y) in batches {
+            args.truncate(base.len());
+            args.push(x.clone());
+            args.push(y.clone());
+            out.push(self.eval_step(&args)?);
+        }
+        Ok(out)
+    }
 }
 
 /// An execution substrate that can realize manifest variants.
@@ -222,6 +245,31 @@ impl ModelExecutable {
             )));
         }
         self.exec.eval_step(args)
+    }
+
+    /// Evaluate many batches against one fixed model operand prefix.
+    /// `base` = params ++ masks ++ [qcfg]; returns per-batch (loss, acc).
+    pub fn eval_batches(
+        &self,
+        base: &[HostTensor],
+        batches: &[(HostTensor, HostTensor)],
+    ) -> Result<Vec<(f32, f32)>> {
+        let expect = self.variant.n_params() + self.variant.n_masks() + 1;
+        if base.len() != expect {
+            return Err(Error::other(format!(
+                "eval_batches: expected {expect} base args, got {}",
+                base.len()
+            )));
+        }
+        let out = self.exec.eval_batches(base, batches)?;
+        if out.len() != batches.len() {
+            return Err(Error::other(format!(
+                "eval_batches: expected {} results, got {}",
+                batches.len(),
+                out.len()
+            )));
+        }
+        Ok(out)
     }
 }
 

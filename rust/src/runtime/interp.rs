@@ -18,43 +18,49 @@
 //! * loss: stable log-softmax cross-entropy mean + argmax accuracy;
 //! * update: plain SGD `p' = p - lr * g`.
 //!
-//! Parity with the JAX stack is pinned by `rust/tests/backend_parity.rs`
-//! against goldens generated from the actual Pallas-interpret kernels.
+//! The hot math lives in [`crate::runtime::kernels`] as blocked,
+//! sparse-aware, row-panel-parallel kernels, all bit-identical to the
+//! original naive triple loops (kept as [`kernels::naive`]).  The step
+//! driver here adds the per-step hoisting around them:
+//!
+//! * [`LayerWeights`] — `fq(w) * mask` with hoisted quantization
+//!   constants and the compressed sparse index list, built once per
+//!   train step (and once per eval *run* via
+//!   [`ModelExec::eval_batches`]) instead of re-derived per matmul;
+//! * [`Workspace`] — a per-execution buffer pool checked out of the
+//!   model, so steps stop allocating `Vec`s; the input batch is
+//!   borrowed, never copied;
+//! * [`KernelMode`] — `Fast` (default), `DenseOnly` (sparse path off,
+//!   for measuring sparse speedup) or `Naive` (the original per-call
+//!   requantizing, per-call-allocating implementation — the test
+//!   oracle and the "before" baseline of `benches/perf_runtime.rs`).
+//!   Selected by `METAML_INTERP=fast|dense|naive` at backend
+//!   construction, or explicitly via [`RefBackend::with_mode`].
+//!
+//! Every mode produces bit-identical results (pinned by
+//! `rust/tests/kernel_parity.rs`), so parity with the JAX stack —
+//! pinned by `rust/tests/backend_parity.rs` against goldens generated
+//! from the actual Pallas-interpret kernels — and the DSE determinism
+//! traces are unchanged by the kernel layer.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::runtime::backend::{ExecBackend, ModelExec, RuntimeStats, StatsCell};
+use crate::runtime::kernels::{
+    self, matmul_at, matmul_bt_masked, matmul_masked, naive, MaskedWeight, Quant, Workspace,
+    SPARSE_DENSITY_THRESHOLD,
+};
 use crate::runtime::manifest::{LayerDesc, Manifest, ModelVariant};
 use crate::runtime::tensor::HostTensor;
 
-/// Round half to even (`jnp.round` semantics; `f32::round` rounds half
-/// away from zero, which would diverge from the reference kernels).
-fn round_ties_even(x: f32) -> f32 {
-    let r = x.round();
-    if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
-        r - x.signum()
-    } else {
-        r
-    }
-}
-
-/// ap_fixed<W,I> fake quantization: round to nearest (ties to even) at
-/// `2^(W-I)` resolution, saturate to the representable range.  `W <= 0`
-/// disables quantization (identity).
-pub fn fake_quant(v: f32, total_bits: f32, int_bits: f32) -> f32 {
-    if total_bits <= 0.0 {
-        return v;
-    }
-    let scale = (total_bits - int_bits).exp2();
-    let hi = (int_bits - 1.0).exp2() - 1.0 / scale;
-    let lo = -(int_bits - 1.0).exp2();
-    (round_ties_even(v * scale) / scale).clamp(lo, hi)
-}
+pub use crate::runtime::kernels::fake_quant;
 
 /// Straight-through gradient mask: 1 inside the representable range (or
 /// when quantization is disabled), 0 where the forward pass saturated.
+/// (Per-element constant recomputation — the naive path; the fast path
+/// hoists the bound into [`Quant`].)
 fn ste(v: f32, total_bits: f32, int_bits: f32) -> f32 {
     if total_bits <= 0.0 {
         return 1.0;
@@ -67,175 +73,353 @@ fn ste(v: f32, total_bits: f32, int_bits: f32) -> f32 {
     }
 }
 
-/// `a[m,k] @ b[k,n]` (row-major, f32 accumulation).
+/// Which kernel implementation a [`RefBackend`] drives.
 ///
-/// No zero-skipping: `0 * NaN = NaN` must propagate exactly as in the
-/// XLA matmul, so a diverged model reports NaN loss instead of a
-/// plausible finite value.
-fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for t in 0..k {
-            let av = a[i * k + t];
-            let brow = &b[t * n..(t + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+/// All three are bit-identical in output; they differ only in cost.
+/// `Fast` is the default; `DenseOnly` and `Naive` exist so the bench
+/// can measure the sparse and blocked/workspace wins in-process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Blocked matmuls, hoisted quantization, workspace reuse, sparse
+    /// skip below [`SPARSE_DENSITY_THRESHOLD`], intra-probe parallelism.
+    Fast,
+    /// `Fast` with the compressed sparse path disabled (every masked
+    /// matmul runs dense-blocked).
+    DenseOnly,
+    /// The original implementation: naive triple-loop matmuls,
+    /// per-call `fq(w) * mask` requantization, per-call allocations.
+    Naive,
+}
+
+impl KernelMode {
+    /// Parse `METAML_INTERP` (`fast` default; `dense` / `naive`).
+    pub fn from_env() -> KernelMode {
+        match std::env::var("METAML_INTERP")
+            .unwrap_or_default()
+            .to_ascii_lowercase()
+            .as_str()
+        {
+            "naive" => KernelMode::Naive,
+            "dense" | "dense-only" | "dense_only" => KernelMode::DenseOnly,
+            _ => KernelMode::Fast,
         }
     }
-    out
 }
 
-/// `a[m,n] @ b[k,n]^T` → `[m,k]`.
-fn mm_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        for j in 0..k {
-            let brow = &b[j * n..(j + 1) * n];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            out[i * k + j] = acc;
+// ---------------------------------------------------------------------------
+// argument parsing
+// ---------------------------------------------------------------------------
+
+/// The model operand prefix shared by every step of a run:
+/// `params ++ masks ++ [qcfg]`, borrowed from the caller's tensors.
+struct BaseArgs<'a> {
+    params: Vec<&'a [f32]>,
+    masks: Vec<&'a [f32]>,
+    /// Flattened `[L, 2]` rows of `[total_bits, int_bits]`.
+    qcfg: &'a [f32],
+}
+
+// ---------------------------------------------------------------------------
+// fast-path activation plumbing
+// ---------------------------------------------------------------------------
+
+/// Activation shape without `Vec` churn (rank is always 2 or 4 here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ActShape {
+    dims: [usize; 4],
+    rank: usize,
+}
+
+impl ActShape {
+    fn from_slice(s: &[usize]) -> Result<ActShape> {
+        if s.len() > 4 {
+            return Err(Error::backend(format!(
+                "activation rank {} exceeds the interpreter's max rank 4",
+                s.len()
+            )));
+        }
+        let mut dims = [0usize; 4];
+        dims[..s.len()].copy_from_slice(s);
+        Ok(ActShape { dims, rank: s.len() })
+    }
+
+    fn d2(b: usize, d: usize) -> ActShape {
+        ActShape { dims: [b, d, 0, 0], rank: 2 }
+    }
+
+    fn d4(b: usize, h: usize, w: usize, c: usize) -> ActShape {
+        ActShape { dims: [b, h, w, c], rank: 4 }
+    }
+
+    fn as_slice(&self) -> &[usize] {
+        &self.dims[..self.rank]
+    }
+}
+
+/// Activation storage: the input batch is borrowed from the caller's
+/// tensor (the old code cloned it every step); everything downstream
+/// lives in workspace buffers.
+enum Buf<'a> {
+    Borrowed(&'a [f32]),
+    Owned(Vec<f32>),
+}
+
+impl Buf<'_> {
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            Buf::Borrowed(s) => s,
+            Buf::Owned(v) => v,
         }
     }
-    out
-}
 
-/// `a[m,k]^T @ b[m,n]` → `[k,n]` (same NaN-propagation contract as [`mm`]).
-fn mm_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; k * n];
-    for t in 0..m {
-        let arow = &a[t * k..(t + 1) * k];
-        let brow = &b[t * n..(t + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+    fn recycle(self, ws: &mut Workspace) {
+        if let Buf::Owned(v) = self {
+            ws.recycle(v);
         }
     }
-    out
 }
 
-/// `fq(w) * mask`, elementwise.
-fn quantized_masked(w: &[f32], mask: &[f32], wb: f32, ib: f32) -> Vec<f32> {
-    w.iter()
-        .zip(mask)
-        .map(|(&wv, &mv)| fake_quant(wv, wb, ib) * mv)
-        .collect()
+/// One weight layer's step-hoisted operands: quantization constants and
+/// `fq(w) * mask` (with its sparse index list), built once per train
+/// step / eval run.  For conv layers the 2d-transposed weight and mask
+/// are kept for the backward `m * ste(w)` products; dense layers use
+/// the caller's slices directly.
+struct LayerWeights {
+    q: Quant,
+    mw: MaskedWeight,
+    w2: Vec<f32>,
+    m2: Vec<f32>,
 }
 
-/// Channel-major im2col: `[B,H,W,C]` → `[B*H*W, C*k*k]`, SAME padding,
-/// stride 1, feature index `c*k*k + kh*k + kw` (matching
-/// `conv_general_dilated_patches` + the HWIO→(C,k,k,Cout) weight
-/// transpose in `layers.qconv2d`).
-fn im2col(x: &[f32], shape: [usize; 4], k: usize) -> Vec<f32> {
-    let [b, h, w, c] = shape;
-    let pad = (k - 1) / 2;
-    let fk = c * k * k;
-    let mut cols = vec![0.0f32; b * h * w * fk];
+/// Per-layer forward state saved for the fast backward pass.  Relu
+/// masks are stored as compact keep-bytes instead of cloning the whole
+/// post-activation tensor (all the backward needs is `out <= 0`).
+enum FastTape<'a> {
+    Dense { x: Buf<'a>, xq: Option<Vec<f32>>, relu: Option<Vec<u8>>, li: usize },
+    Conv {
+        cols: Vec<f32>,
+        colsq: Option<Vec<f32>>,
+        in_shape: [usize; 4],
+        relu: Option<Vec<u8>>,
+        li: usize,
+    },
+    Pool { in_shape: [usize; 4], arg: Vec<u8> },
+    Flatten,
+    /// `skip`: the activation captured at the block entry (forward-only).
+    ResBegin { skip: Buf<'a> },
+    /// `begin`: tape index of the matching [`FastTape::ResBegin`].
+    ResAdd { begin: usize, relu: Vec<u8> },
+}
+
+fn recycle_tape(ws: &mut Workspace, tape: Vec<FastTape>) {
+    for entry in tape {
+        match entry {
+            FastTape::Dense { x, xq, relu, .. } => {
+                x.recycle(ws);
+                if let Some(v) = xq {
+                    ws.recycle(v);
+                }
+                if let Some(m) = relu {
+                    ws.recycle_u8(m);
+                }
+            }
+            FastTape::Conv { cols, colsq, relu, .. } => {
+                ws.recycle(cols);
+                if let Some(v) = colsq {
+                    ws.recycle(v);
+                }
+                if let Some(m) = relu {
+                    ws.recycle_u8(m);
+                }
+            }
+            FastTape::Pool { arg, .. } => ws.recycle_u8(arg),
+            FastTape::Flatten => {}
+            FastTape::ResBegin { skip } => skip.recycle(ws),
+            FastTape::ResAdd { relu, .. } => ws.recycle_u8(relu),
+        }
+    }
+}
+
+fn recycle_weights(ws: &mut Workspace, lws: Vec<Option<LayerWeights>>) {
+    for lw in lws.into_iter().flatten() {
+        ws.recycle_weight(lw.mw);
+        ws.recycle(lw.w2);
+        ws.recycle(lw.m2);
+    }
+}
+
+/// `keep[i] = !(z[i] <= 0.0)` — the relu-VJP predicate (NaN keeps).
+fn keep_mask_into(keep: &mut [u8], z: &[f32]) {
+    for (k, &v) in keep.iter_mut().zip(z) {
+        *k = u8::from(!(v <= 0.0));
+    }
+}
+
+/// Apply a keep-mask: `g[i] = 0.0` where the forward output was `<= 0`.
+fn apply_keep(g: &mut [f32], keep: &[u8]) {
+    for (gv, &k) in g.iter_mut().zip(keep) {
+        if k == 0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared layer loops (used verbatim by the fast and naive paths, so the
+// two can never diverge on these ops)
+// ---------------------------------------------------------------------------
+
+/// 2x2 VALID max-pool.  Writes argmax bytes only when `arg` is
+/// non-empty (the training path).  NaN wins its window (`lax.max`
+/// propagates NaN).
+fn maxpool_forward(x: &[f32], in_shape: [usize; 4], out: &mut [f32], arg: &mut [u8]) {
+    let [b, h, w, c] = in_shape;
+    let (oh, ow) = (h / 2, w / 2);
+    let record = !arg.is_empty();
     for bi in 0..b {
-        for i in 0..h {
-            for j in 0..w {
-                let row = ((bi * h + i) * w + j) * fk;
-                for kh in 0..k {
-                    let y = i + kh;
-                    if y < pad || y - pad >= h {
-                        continue;
+        for i in 0..oh {
+            for j in 0..ow {
+                for ci in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bidx = 0u8;
+                    for di in 0..2 {
+                        for dj in 0..2 {
+                            let v = x[((bi * h + 2 * i + di) * w + 2 * j + dj) * c + ci];
+                            if v.is_nan() {
+                                best = f32::NAN;
+                            } else if v > best {
+                                best = v;
+                                bidx = (di * 2 + dj) as u8;
+                            }
+                        }
                     }
-                    let y = y - pad;
-                    for kw in 0..k {
-                        let xx = j + kw;
-                        if xx < pad || xx - pad >= w {
-                            continue;
-                        }
-                        let xx = xx - pad;
-                        let src = ((bi * h + y) * w + xx) * c;
-                        for ci in 0..c {
-                            cols[row + ci * k * k + kh * k + kw] = x[src + ci];
-                        }
+                    let o = ((bi * oh + i) * ow + j) * c + ci;
+                    out[o] = best;
+                    if record {
+                        arg[o] = bidx;
                     }
                 }
             }
         }
     }
-    cols
 }
 
-/// Scatter-add transpose of [`im2col`]: `[B*H*W, C*k*k]` → `[B,H,W,C]`.
-fn col2im(dcols: &[f32], shape: [usize; 4], k: usize) -> Vec<f32> {
+/// Scatter each output-cell gradient back to its argmax input cell.
+/// `dx` must be zeroed by the caller.
+fn maxpool_backward(g: &[f32], arg: &[u8], in_shape: [usize; 4], dx: &mut [f32]) {
+    let [b, h, w, c] = in_shape;
+    let (oh, ow) = (h / 2, w / 2);
+    for bi in 0..b {
+        for i in 0..oh {
+            for j in 0..ow {
+                for ci in 0..c {
+                    let o = ((bi * oh + i) * ow + j) * c + ci;
+                    let (di, dj) = ((arg[o] / 2) as usize, (arg[o] % 2) as usize);
+                    dx[((bi * h + 2 * i + di) * w + 2 * j + dj) * c + ci] += g[o];
+                }
+            }
+        }
+    }
+}
+
+/// NaN-propagating `relu(branch + skip)`, as in `jax.nn.relu`.
+fn resadd_forward(branch: &[f32], skip: &[f32], z: &mut [f32]) {
+    for ((zv, &v), &s) in z.iter_mut().zip(branch).zip(skip) {
+        let sum = v + s;
+        *zv = if sum < 0.0 { 0.0 } else { sum };
+    }
+}
+
+/// `z += bias` (broadcast over rows) then apply the layer activation.
+fn apply_bias_activation(
+    z: &mut [f32],
+    bias: &[f32],
+    width: usize,
+    activation: &str,
+) -> Result<()> {
+    for row in z.chunks_mut(width) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+    match activation {
+        "relu" => {
+            // `if v < 0` rather than f32::max: Rust's max(NaN, 0.0)
+            // returns 0.0, but jnp.maximum propagates NaN
+            for v in z.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            Ok(())
+        }
+        "linear" => Ok(()),
+        other => Err(Error::backend(format!("unknown activation {other:?}"))),
+    }
+}
+
+/// `g *= (out > 0)` — the relu VJP against the saved post-activation
+/// (the naive path; the fast path stores keep-bytes instead).
+fn relu_mask(g: &mut [f32], out: &[f32]) {
+    for (gv, &ov) in g.iter_mut().zip(out) {
+        if ov <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Column sums of `g[rows, width]` into `db` (zeroed first — the bias
+/// gradient).
+fn bias_grad_into(db: &mut [f32], g: &[f32], rows: usize, width: usize) {
+    db.fill(0.0);
+    for i in 0..rows {
+        for (d, &gv) in db.iter_mut().zip(&g[i * width..(i + 1) * width]) {
+            *d += gv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// naive-path helpers (guarded layout transforms returning fresh Vecs)
+// ---------------------------------------------------------------------------
+
+fn im2col_vec(x: &[f32], shape: [usize; 4], k: usize) -> Result<Vec<f32>> {
     let [b, h, w, c] = shape;
-    let pad = (k - 1) / 2;
-    let fk = c * k * k;
+    let mut cols = vec![0.0f32; b * h * w * c * k * k];
+    kernels::im2col(&mut cols, x, shape, k)?;
+    Ok(cols)
+}
+
+fn col2im_vec(dcols: &[f32], shape: [usize; 4], k: usize) -> Result<Vec<f32>> {
+    let [b, h, w, c] = shape;
     let mut dx = vec![0.0f32; b * h * w * c];
-    for bi in 0..b {
-        for i in 0..h {
-            for j in 0..w {
-                let row = ((bi * h + i) * w + j) * fk;
-                for kh in 0..k {
-                    let y = i + kh;
-                    if y < pad || y - pad >= h {
-                        continue;
-                    }
-                    let y = y - pad;
-                    for kw in 0..k {
-                        let xx = j + kw;
-                        if xx < pad || xx - pad >= w {
-                            continue;
-                        }
-                        let xx = xx - pad;
-                        let dst = ((bi * h + y) * w + xx) * c;
-                        for ci in 0..c {
-                            dx[dst + ci] += dcols[row + ci * k * k + kh * k + kw];
-                        }
-                    }
-                }
-            }
-        }
-    }
-    dx
+    kernels::col2im(&mut dx, dcols, shape, k)?;
+    Ok(dx)
 }
 
-/// HWIO `[k,k,Cin,Cout]` → matmul operand `[Cin*k*k, Cout]`.
-fn hwio_to_2d(w4: &[f32], k: usize, cin: usize, cout: usize) -> Vec<f32> {
+fn hwio_to_2d_vec(w4: &[f32], k: usize, cin: usize, cout: usize) -> Vec<f32> {
     let mut w2 = vec![0.0f32; cin * k * k * cout];
-    for kh in 0..k {
-        for kw in 0..k {
-            for c in 0..cin {
-                let src = (((kh * k) + kw) * cin + c) * cout;
-                let dst = (c * k * k + kh * k + kw) * cout;
-                w2[dst..dst + cout].copy_from_slice(&w4[src..src + cout]);
-            }
-        }
-    }
+    kernels::hwio_to_2d(&mut w2, w4, k, cin, cout);
     w2
 }
 
-/// Inverse of [`hwio_to_2d`].
-fn hwio_from_2d(w2: &[f32], k: usize, cin: usize, cout: usize) -> Vec<f32> {
+fn hwio_from_2d_vec(w2: &[f32], k: usize, cin: usize, cout: usize) -> Vec<f32> {
     let mut w4 = vec![0.0f32; k * k * cin * cout];
-    for kh in 0..k {
-        for kw in 0..k {
-            for c in 0..cin {
-                let dst = (((kh * k) + kw) * cin + c) * cout;
-                let src = (c * k * k + kh * k + kw) * cout;
-                w4[dst..dst + cout].copy_from_slice(&w2[src..src + cout]);
-            }
-        }
-    }
+    kernels::hwio_from_2d(&mut w4, w2, k, cin, cout);
     w4
 }
 
-/// Current activation value flowing through the layer stack.
+// ---------------------------------------------------------------------------
+// naive-path forward/backward state (the original implementation)
+// ---------------------------------------------------------------------------
+
+/// Current activation value flowing through the naive layer stack.
 struct Act {
     shape: Vec<usize>,
     data: Vec<f32>,
 }
 
-/// Per-layer state saved by the forward pass for the backward pass.
+/// Per-layer state saved by the naive forward pass for the backward pass.
 enum Tape {
     /// `x`: pre-quantization layer input; `out`: post-activation output.
     Dense { x: Vec<f32>, out: Vec<f32>, li: usize },
@@ -255,28 +439,36 @@ struct Forward {
     tape: Vec<Tape>,
 }
 
-/// Parsed flat argument list (the `python/compile/train.py` convention).
-struct StepArgs<'a> {
-    params: Vec<&'a [f32]>,
-    masks: Vec<&'a [f32]>,
-    /// Flattened `[L, 2]` rows of `[total_bits, int_bits]`.
-    qcfg: &'a [f32],
-    x: &'a HostTensor,
-    y: &'a [i32],
-    lr: Option<f32>,
-}
-
 /// A manifest variant bound to the reference interpreter.
 ///
-/// Holds only the immutable variant description plus the shared atomic
-/// stats cell, so one model is freely stepped from concurrent DSE probe
-/// workers (`ModelExec` requires `Send + Sync`).
+/// Holds the immutable variant description, the shared atomic stats
+/// cell, and a pool of reusable [`Workspace`]s — one is checked out per
+/// step, so one model is freely stepped from concurrent DSE probe
+/// workers (`ModelExec` requires `Send + Sync`) without contention or
+/// per-step allocation.
 pub struct RefModel {
     variant: ModelVariant,
     stats: Arc<StatsCell>,
+    mode: KernelMode,
+    workspaces: Mutex<Vec<Workspace>>,
 }
 
 impl RefModel {
+    fn take_ws(&self) -> Workspace {
+        self.workspaces
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn put_ws(&self, ws: Workspace) {
+        self.workspaces
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(ws);
+    }
+
     fn layer_q(&self, qcfg: &[f32], l: &LayerDesc) -> Result<(f32, f32)> {
         let row = l.mask_idx as usize;
         if l.mask_idx < 0 || (row + 1) * 2 > qcfg.len() {
@@ -290,13 +482,14 @@ impl RefModel {
         Ok((qcfg[2 * row], qcfg[2 * row + 1]))
     }
 
-    fn split_args<'a>(&self, args: &'a [HostTensor], with_lr: bool) -> Result<StepArgs<'a>> {
+    /// Parse the model operand prefix (`params ++ masks ++ [qcfg]`).
+    fn split_base<'a>(&self, args: &'a [HostTensor]) -> Result<BaseArgs<'a>> {
         let n_p = self.variant.n_params();
         let n_m = self.variant.n_masks();
-        let expect = n_p + n_m + 3 + usize::from(with_lr);
-        if args.len() != expect {
+        if args.len() != n_p + n_m + 1 {
             return Err(Error::backend(format!(
-                "expected {expect} args, got {}",
+                "expected {} model operands, got {}",
+                n_p + n_m + 1,
                 args.len()
             )));
         }
@@ -332,6 +525,26 @@ impl RefModel {
                 qcfg.len()
             )));
         }
+        Ok(BaseArgs { params, masks, qcfg })
+    }
+
+    /// Parse a full flat step argument list (the
+    /// `python/compile/train.py` convention).
+    fn split_step<'a>(
+        &self,
+        args: &'a [HostTensor],
+        with_lr: bool,
+    ) -> Result<(BaseArgs<'a>, &'a HostTensor, &'a [i32], Option<f32>)> {
+        let n_p = self.variant.n_params();
+        let n_m = self.variant.n_masks();
+        let expect = n_p + n_m + 3 + usize::from(with_lr);
+        if args.len() != expect {
+            return Err(Error::backend(format!(
+                "expected {expect} args, got {}",
+                args.len()
+            )));
+        }
+        let base = self.split_base(&args[..n_p + n_m + 1])?;
         let x = &args[n_p + n_m + 1];
         let y = args[n_p + n_m + 2].as_i32()?;
         let batch = *x.shape().first().unwrap_or(&0);
@@ -342,15 +555,571 @@ impl RefModel {
             )));
         }
         let lr = if with_lr { Some(args[n_p + n_m + 3].scalar_f32()?) } else { None };
-        Ok(StepArgs { params, masks, qcfg, x, y, lr })
+        Ok((base, x, y, lr))
     }
 
-    /// Forward pass.  With `record` set, saves per-layer state for
-    /// [`Self::backward`]; without it (the eval path) only the
-    /// [`Tape::ResBegin`] skip values needed by the forward computation
-    /// itself are kept, so evaluation never clones activations.
-    fn forward(&self, a: &StepArgs, record: bool) -> Result<Forward> {
-        let mut act = Act { shape: a.x.shape().to_vec(), data: a.x.as_f32()?.to_vec() };
+    /// Stable softmax cross-entropy + accuracy; optionally fills
+    /// `d loss / d logits` into `grad` (resized to `[B, n_classes]`).
+    /// One implementation serves eval (no grad) and training — the
+    /// loss/accuracy arithmetic cannot diverge between them.
+    fn loss_acc_core(
+        &self,
+        shape: &[usize],
+        logits: &[f32],
+        y: &[i32],
+        mut grad: Option<&mut Vec<f32>>,
+    ) -> Result<(f32, f32)> {
+        let n_classes = self.variant.n_classes;
+        if shape.len() != 2 || shape[1] != n_classes {
+            return Err(Error::backend(format!(
+                "logits shape {shape:?}, want [B, {n_classes}]"
+            )));
+        }
+        let b = shape[0];
+        if let Some(d) = grad.as_deref_mut() {
+            d.clear();
+            d.resize(b * n_classes, 0.0);
+        }
+        let mut loss = 0.0f32;
+        let mut correct = 0usize;
+        for i in 0..b {
+            let row = &logits[i * n_classes..(i + 1) * n_classes];
+            let label = y[i];
+            if label < 0 || label as usize >= n_classes {
+                return Err(Error::backend(format!(
+                    "label {label} out of range [0, {n_classes})"
+                )));
+            }
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for &v in row {
+                sum += (v - mx).exp();
+            }
+            let lse = sum.ln();
+            loss -= row[label as usize] - mx - lse;
+            // argmax with first-max tie-break and NaN treated as maximal
+            // (jnp.argmax semantics)
+            let mut am = 0usize;
+            for (c, &v) in row.iter().enumerate().skip(1) {
+                let cur = row[am];
+                let better = if v.is_nan() { !cur.is_nan() } else { v > cur };
+                if better {
+                    am = c;
+                }
+            }
+            if am == label as usize {
+                correct += 1;
+            }
+            if let Some(d) = grad.as_deref_mut() {
+                for c in 0..n_classes {
+                    let soft = (row[c] - mx - lse).exp();
+                    let onehot = if c == label as usize { 1.0 } else { 0.0 };
+                    d[i * n_classes + c] = (soft - onehot) / b as f32;
+                }
+            }
+        }
+        Ok((loss / b as f32, correct as f32 / b as f32))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fast path
+// ---------------------------------------------------------------------------
+
+impl RefModel {
+    /// Hoist every weight layer's step-constant operands: quantization
+    /// constants, `fq(w) * mask`, and (below the density threshold) the
+    /// compressed sparse index list.  Indexed by layer position; `None`
+    /// for layers without weights.
+    fn prepare_weights(
+        &self,
+        base: &BaseArgs,
+        ws: &mut Workspace,
+    ) -> Result<Vec<Option<LayerWeights>>> {
+        let threshold = match self.mode {
+            KernelMode::Fast => SPARSE_DENSITY_THRESHOLD,
+            // density < 0.0 never holds: the sparse list is never built
+            _ => 0.0,
+        };
+        let mut lws = Vec::with_capacity(self.variant.layers.len());
+        for l in &self.variant.layers {
+            lws.push(match l.kind.as_str() {
+                "dense" => {
+                    let (wb, ib) = self.layer_q(base.qcfg, l)?;
+                    let q = Quant::new(wb, ib);
+                    let w = base.params[l.param_w as usize];
+                    let mask = base.masks[l.mask_idx as usize];
+                    let mw = MaskedWeight::build(ws, w, mask, &q, l.in_dim, l.out_dim, threshold);
+                    Some(LayerWeights { q, mw, w2: Vec::new(), m2: Vec::new() })
+                }
+                "conv2d" => {
+                    let (wb, ib) = self.layer_q(base.qcfg, l)?;
+                    let q = Quant::new(wb, ib);
+                    let (k, cin, cout) = (l.kernel, l.in_dim, l.out_dim);
+                    let mut w2 = ws.buf_uninit(cin * k * k * cout);
+                    let mut m2 = ws.buf_uninit(cin * k * k * cout);
+                    kernels::hwio_to_2d(&mut w2, base.params[l.param_w as usize], k, cin, cout);
+                    kernels::hwio_to_2d(&mut m2, base.masks[l.mask_idx as usize], k, cin, cout);
+                    let mw = MaskedWeight::build(ws, &w2, &m2, &q, cin * k * k, cout, threshold);
+                    Some(LayerWeights { q, mw, w2, m2 })
+                }
+                _ => None,
+            });
+        }
+        Ok(lws)
+    }
+
+    /// Fast forward pass.  With `record` set, saves per-layer state for
+    /// [`Self::backward_fast`]; without it (the eval path) only the
+    /// [`FastTape::ResBegin`] skip values needed by the forward itself
+    /// are kept.  The input batch is borrowed, never copied.
+    fn forward_fast<'a>(
+        &self,
+        base: &BaseArgs<'a>,
+        x: &'a HostTensor,
+        lws: &[Option<LayerWeights>],
+        ws: &mut Workspace,
+        record: bool,
+    ) -> Result<(ActShape, Buf<'a>, Vec<FastTape<'a>>)> {
+        let (xshape, xdata) = x.as_f32_shaped()?;
+        let mut shape = ActShape::from_slice(xshape)?;
+        let mut data: Buf<'a> = Buf::Borrowed(xdata);
+        let mut tape: Vec<FastTape<'a>> = Vec::with_capacity(self.variant.layers.len());
+        let mut res_stack: Vec<usize> = Vec::new();
+
+        for (li, l) in self.variant.layers.iter().enumerate() {
+            match l.kind.as_str() {
+                "dense" => {
+                    if shape.rank != 2 || shape.dims[1] != l.in_dim {
+                        return Err(Error::backend(format!(
+                            "dense {}: input shape {:?}, want [B, {}]",
+                            l.name,
+                            shape.as_slice(),
+                            l.in_dim
+                        )));
+                    }
+                    let lw = lws[li].as_ref().expect("weights prepared for dense layer");
+                    let b = shape.dims[0];
+                    let bias = base.params[l.param_b as usize];
+                    let xq = if lw.q.enabled() {
+                        let mut buf = ws.buf_uninit(data.as_slice().len());
+                        lw.q.fq_into(&mut buf, data.as_slice());
+                        Some(buf)
+                    } else {
+                        None
+                    };
+                    let mut z = ws.buf_uninit(b * l.out_dim);
+                    {
+                        let src = match &xq {
+                            Some(v) => v.as_slice(),
+                            None => data.as_slice(),
+                        };
+                        matmul_masked(&mut z, src, &lw.mw, b, l.in_dim, l.out_dim, &mut ws.pack);
+                    }
+                    apply_bias_activation(&mut z, bias, l.out_dim, &l.activation)?;
+                    let relu = if record && l.activation == "relu" {
+                        let mut m = ws.buf_u8(z.len());
+                        keep_mask_into(&mut m, &z);
+                        Some(m)
+                    } else {
+                        None
+                    };
+                    let prev = std::mem::replace(&mut data, Buf::Owned(z));
+                    if record {
+                        tape.push(FastTape::Dense { x: prev, xq, relu, li });
+                    } else {
+                        prev.recycle(ws);
+                        if let Some(v) = xq {
+                            ws.recycle(v);
+                        }
+                    }
+                    shape = ActShape::d2(b, l.out_dim);
+                }
+                "conv2d" => {
+                    if shape.rank != 4 || shape.dims[3] != l.in_dim {
+                        return Err(Error::backend(format!(
+                            "conv2d {}: input shape {:?}, want [B,H,W,{}]",
+                            l.name,
+                            shape.as_slice(),
+                            l.in_dim
+                        )));
+                    }
+                    let lw = lws[li].as_ref().expect("weights prepared for conv layer");
+                    let in_shape = shape.dims;
+                    let [b, h, w, cin] = in_shape;
+                    let (k, cout) = (l.kernel, l.out_dim);
+                    let fk = cin * k * k;
+                    let rows = b * h * w;
+                    let mut cols = ws.buf_uninit(rows * fk);
+                    kernels::im2col(&mut cols, data.as_slice(), in_shape, k)?;
+                    let colsq = if lw.q.enabled() {
+                        let mut buf = ws.buf_uninit(cols.len());
+                        lw.q.fq_into(&mut buf, &cols);
+                        Some(buf)
+                    } else {
+                        None
+                    };
+                    let mut z = ws.buf_uninit(rows * cout);
+                    {
+                        let src = match &colsq {
+                            Some(v) => v.as_slice(),
+                            None => cols.as_slice(),
+                        };
+                        matmul_masked(&mut z, src, &lw.mw, rows, fk, cout, &mut ws.pack);
+                    }
+                    apply_bias_activation(
+                        &mut z,
+                        base.params[l.param_b as usize],
+                        cout,
+                        &l.activation,
+                    )?;
+                    let relu = if record && l.activation == "relu" {
+                        let mut m = ws.buf_u8(z.len());
+                        keep_mask_into(&mut m, &z);
+                        Some(m)
+                    } else {
+                        None
+                    };
+                    let prev = std::mem::replace(&mut data, Buf::Owned(z));
+                    // the conv backward reads the patches, not the input
+                    prev.recycle(ws);
+                    if record {
+                        tape.push(FastTape::Conv { cols, colsq, in_shape, relu, li });
+                    } else {
+                        ws.recycle(cols);
+                        if let Some(v) = colsq {
+                            ws.recycle(v);
+                        }
+                    }
+                    shape = ActShape::d4(b, h, w, cout);
+                }
+                "maxpool2" => {
+                    if shape.rank != 4 {
+                        return Err(Error::backend(format!(
+                            "maxpool2: input shape {:?}, want NHWC",
+                            shape.as_slice()
+                        )));
+                    }
+                    let in_shape = shape.dims;
+                    let [b, h, w, c] = in_shape;
+                    let (oh, ow) = (h / 2, w / 2);
+                    let out_len = b * oh * ow * c;
+                    let mut out = ws.buf_uninit(out_len);
+                    let mut arg = ws.buf_u8(if record { out_len } else { 0 });
+                    maxpool_forward(data.as_slice(), in_shape, &mut out, &mut arg);
+                    let prev = std::mem::replace(&mut data, Buf::Owned(out));
+                    prev.recycle(ws);
+                    if record {
+                        tape.push(FastTape::Pool { in_shape, arg });
+                    } else {
+                        ws.recycle_u8(arg);
+                    }
+                    shape = ActShape::d4(b, oh, ow, c);
+                }
+                "flatten" => {
+                    let b = shape.dims[0];
+                    let rest: usize = shape.as_slice()[1..].iter().product();
+                    if record {
+                        tape.push(FastTape::Flatten);
+                    }
+                    shape = ActShape::d2(b, rest);
+                }
+                "residual_begin" => {
+                    res_stack.push(tape.len());
+                    let skip = match &data {
+                        Buf::Borrowed(s) => Buf::Borrowed(*s),
+                        Buf::Owned(v) => {
+                            let mut c = ws.buf_uninit(v.len());
+                            c.copy_from_slice(v);
+                            Buf::Owned(c)
+                        }
+                    };
+                    tape.push(FastTape::ResBegin { skip });
+                }
+                "residual_add" => {
+                    let begin = res_stack.pop().ok_or_else(|| {
+                        Error::backend("residual_add without residual_begin")
+                    })?;
+                    let z = {
+                        let skip = match &tape[begin] {
+                            FastTape::ResBegin { skip } => skip.as_slice(),
+                            _ => unreachable!("res_stack points at ResBegin entries"),
+                        };
+                        if skip.len() != data.as_slice().len() {
+                            return Err(Error::backend(
+                                "residual_add: branch/skip shape mismatch",
+                            ));
+                        }
+                        let mut z = ws.buf_uninit(skip.len());
+                        resadd_forward(data.as_slice(), skip, &mut z);
+                        z
+                    };
+                    let relu = if record {
+                        let mut m = ws.buf_u8(z.len());
+                        keep_mask_into(&mut m, &z);
+                        Some(m)
+                    } else {
+                        None
+                    };
+                    let prev = std::mem::replace(&mut data, Buf::Owned(z));
+                    prev.recycle(ws);
+                    if let Some(relu) = relu {
+                        tape.push(FastTape::ResAdd { begin, relu });
+                    }
+                }
+                other => {
+                    return Err(Error::backend(format!(
+                        "reference interpreter: unknown layer kind {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok((shape, data, tape))
+    }
+
+    /// Fast reverse pass; consumes the tape (recycling each entry as it
+    /// is processed) and returns per-param gradients in flat param
+    /// order, all in workspace buffers.
+    fn backward_fast(
+        &self,
+        base: &BaseArgs,
+        lws: &[Option<LayerWeights>],
+        tape: Vec<FastTape>,
+        dlogits: Vec<f32>,
+        ws: &mut Workspace,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut grads: Vec<Vec<f32>> =
+            base.params.iter().map(|p| ws.buf(p.len())).collect();
+        let mut g = dlogits;
+        // gradient contributions waiting at a ResBegin tape index
+        let mut pending: Vec<Option<Vec<f32>>> = (0..tape.len()).map(|_| None).collect();
+
+        for (t, entry) in tape.into_iter().enumerate().rev() {
+            match entry {
+                FastTape::Dense { x, xq, relu, li } => {
+                    let l = &self.variant.layers[li];
+                    let lw = lws[li].as_ref().expect("weights prepared for dense layer");
+                    if let Some(m) = &relu {
+                        apply_keep(&mut g, m);
+                    }
+                    let xs = x.as_slice();
+                    let b = xs.len() / l.in_dim;
+                    let w = base.params[l.param_w as usize];
+                    let mask = base.masks[l.mask_idx as usize];
+                    bias_grad_into(&mut grads[l.param_b as usize], &g, b, l.out_dim);
+                    let mut dx = ws.buf_uninit(b * l.in_dim);
+                    matmul_bt_masked(&mut dx, &g, &lw.mw, b, l.out_dim, l.in_dim);
+                    if lw.q.enabled() {
+                        for (d, &xv) in dx.iter_mut().zip(xs) {
+                            *d *= lw.q.ste(xv);
+                        }
+                    }
+                    let mut dw = ws.buf_uninit(l.in_dim * l.out_dim);
+                    {
+                        let src = match &xq {
+                            Some(v) => v.as_slice(),
+                            None => xs,
+                        };
+                        matmul_at(&mut dw, src, &g, b, l.in_dim, l.out_dim, &mut ws.pack);
+                    }
+                    if lw.q.enabled() {
+                        for ((d, &mv), &wv) in dw.iter_mut().zip(mask).zip(w) {
+                            *d *= mv * lw.q.ste(wv);
+                        }
+                    } else {
+                        for (d, &mv) in dw.iter_mut().zip(mask) {
+                            *d *= mv;
+                        }
+                    }
+                    ws.recycle(std::mem::replace(&mut grads[l.param_w as usize], dw));
+                    x.recycle(ws);
+                    if let Some(v) = xq {
+                        ws.recycle(v);
+                    }
+                    if let Some(m) = relu {
+                        ws.recycle_u8(m);
+                    }
+                    ws.recycle(std::mem::replace(&mut g, dx));
+                }
+                FastTape::Conv { cols, colsq, in_shape, relu, li } => {
+                    let l = &self.variant.layers[li];
+                    let lw = lws[li].as_ref().expect("weights prepared for conv layer");
+                    if let Some(m) = &relu {
+                        apply_keep(&mut g, m);
+                    }
+                    let [_, _, _, cin] = in_shape;
+                    let (k, cout) = (l.kernel, l.out_dim);
+                    let fk = cin * k * k;
+                    let rows = cols.len() / fk;
+                    bias_grad_into(&mut grads[l.param_b as usize], &g, rows, cout);
+                    let mut dcols = ws.buf_uninit(rows * fk);
+                    matmul_bt_masked(&mut dcols, &g, &lw.mw, rows, cout, fk);
+                    if lw.q.enabled() {
+                        for (d, &cv) in dcols.iter_mut().zip(&cols) {
+                            *d *= lw.q.ste(cv);
+                        }
+                    }
+                    let mut dw2 = ws.buf_uninit(fk * cout);
+                    {
+                        let src = match &colsq {
+                            Some(v) => v.as_slice(),
+                            None => cols.as_slice(),
+                        };
+                        matmul_at(&mut dw2, src, &g, rows, fk, cout, &mut ws.pack);
+                    }
+                    if lw.q.enabled() {
+                        for ((d, &mv), &wv) in dw2.iter_mut().zip(&lw.m2).zip(&lw.w2) {
+                            *d *= mv * lw.q.ste(wv);
+                        }
+                    } else {
+                        for (d, &mv) in dw2.iter_mut().zip(&lw.m2) {
+                            *d *= mv;
+                        }
+                    }
+                    let mut dw4 = ws.buf_uninit(k * k * cin * cout);
+                    kernels::hwio_from_2d(&mut dw4, &dw2, k, cin, cout);
+                    ws.recycle(std::mem::replace(&mut grads[l.param_w as usize], dw4));
+                    let mut dx = ws.buf_uninit(rows * cin);
+                    kernels::col2im(&mut dx, &dcols, in_shape, k)?;
+                    ws.recycle(dcols);
+                    ws.recycle(dw2);
+                    ws.recycle(cols);
+                    if let Some(v) = colsq {
+                        ws.recycle(v);
+                    }
+                    if let Some(m) = relu {
+                        ws.recycle_u8(m);
+                    }
+                    ws.recycle(std::mem::replace(&mut g, dx));
+                }
+                FastTape::Pool { in_shape, arg } => {
+                    let [b, h, w, c] = in_shape;
+                    let mut dx = ws.buf(b * h * w * c);
+                    maxpool_backward(&g, &arg, in_shape, &mut dx);
+                    ws.recycle_u8(arg);
+                    ws.recycle(std::mem::replace(&mut g, dx));
+                }
+                FastTape::Flatten => {
+                    // pure reshape: the gradient buffer is already flat
+                }
+                FastTape::ResAdd { begin, relu } => {
+                    apply_keep(&mut g, &relu);
+                    ws.recycle_u8(relu);
+                    if let Some(acc) = pending[begin].as_mut() {
+                        for (dst, &src) in acc.iter_mut().zip(&g) {
+                            *dst += src;
+                        }
+                    } else {
+                        let mut c = ws.buf_uninit(g.len());
+                        c.copy_from_slice(&g);
+                        pending[begin] = Some(c);
+                    }
+                }
+                FastTape::ResBegin { skip } => {
+                    skip.recycle(ws);
+                    if let Some(skip_g) = pending[t].take() {
+                        for (dst, &src) in g.iter_mut().zip(&skip_g) {
+                            *dst += src;
+                        }
+                        ws.recycle(skip_g);
+                    }
+                }
+            }
+        }
+        ws.recycle(g);
+        Ok(grads)
+    }
+
+    fn train_step_fast(
+        &self,
+        base: &BaseArgs,
+        x: &HostTensor,
+        y: &[i32],
+        lr: f32,
+        ws: &mut Workspace,
+    ) -> Result<(Vec<HostTensor>, f32, f32)> {
+        let lws = self.prepare_weights(base, ws)?;
+        let (shape, logits, tape) = self.forward_fast(base, x, &lws, ws, true)?;
+        let mut dlogits = ws.buf_uninit(0);
+        let (loss, acc) =
+            self.loss_acc_core(shape.as_slice(), logits.as_slice(), y, Some(&mut dlogits))?;
+        logits.recycle(ws);
+        let grads = self.backward_fast(base, &lws, tape, dlogits, ws)?;
+        let mut new_params = Vec::with_capacity(base.params.len());
+        for (i, (p, gr)) in base.params.iter().zip(&grads).enumerate() {
+            let data: Vec<f32> = p.iter().zip(gr).map(|(&pv, &gv)| pv - lr * gv).collect();
+            let shape = &self.variant.param_shapes[i].1;
+            new_params.push(HostTensor::F32 { shape: shape.clone(), data });
+        }
+        for gr in grads {
+            ws.recycle(gr);
+        }
+        recycle_weights(ws, lws);
+        Ok((new_params, loss, acc))
+    }
+
+    fn eval_step_fast(
+        &self,
+        base: &BaseArgs,
+        x: &HostTensor,
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<(f32, f32)> {
+        let lws = self.prepare_weights(base, ws)?;
+        let out = self.eval_forward_fast(base, x, y, &lws, ws);
+        recycle_weights(ws, lws);
+        out
+    }
+
+    /// One eval forward against already-prepared weights (the shared
+    /// core of [`Self::eval_step_fast`] and the batched eval run).
+    fn eval_forward_fast(
+        &self,
+        base: &BaseArgs,
+        x: &HostTensor,
+        y: &[i32],
+        lws: &[Option<LayerWeights>],
+        ws: &mut Workspace,
+    ) -> Result<(f32, f32)> {
+        let (shape, logits, tape) = self.forward_fast(base, x, lws, ws, false)?;
+        let out = self.loss_acc_core(shape.as_slice(), logits.as_slice(), y, None);
+        logits.recycle(ws);
+        recycle_tape(ws, tape);
+        out
+    }
+
+    /// The fast branch of [`ModelExec::eval_batches`]: prepare weights
+    /// once, then run every batch against them.
+    fn eval_batches_fast(
+        &self,
+        base: &BaseArgs,
+        batches: &[(HostTensor, HostTensor)],
+        out: &mut Vec<(f32, f32)>,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let lws = self.prepare_weights(base, ws)?;
+        for (x, y) in batches {
+            let t0 = Instant::now();
+            let y = y.as_i32()?;
+            check_labels(x, y)?;
+            out.push(self.eval_forward_fast(base, x, y, &lws, ws)?);
+            self.stats.add_execute(t0.elapsed());
+        }
+        recycle_weights(ws, lws);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// naive path (the original implementation, kept as oracle + baseline)
+// ---------------------------------------------------------------------------
+
+impl RefModel {
+    /// The original forward pass: per-call `fq(w) * mask`
+    /// requantization, naive triple-loop matmuls, fresh `Vec`s
+    /// throughout.  Bit-identical to [`Self::forward_fast`].
+    fn forward_naive(&self, base: &BaseArgs, x: &HostTensor, record: bool) -> Result<Forward> {
+        let mut act = Act { shape: x.shape().to_vec(), data: x.as_f32()?.to_vec() };
         let mut tape: Vec<Tape> = Vec::with_capacity(self.variant.layers.len());
         let mut res_stack: Vec<usize> = Vec::new();
 
@@ -363,15 +1132,15 @@ impl RefModel {
                             l.name, act.shape, l.in_dim
                         )));
                     }
-                    let (wb, ib) = self.layer_q(a.qcfg, l)?;
+                    let (wb, ib) = self.layer_q(base.qcfg, l)?;
                     let b = act.shape[0];
-                    let w = a.params[l.param_w as usize];
-                    let bias = a.params[l.param_b as usize];
-                    let mask = a.masks[l.mask_idx as usize];
-                    let wq = quantized_masked(w, mask, wb, ib);
+                    let w = base.params[l.param_w as usize];
+                    let bias = base.params[l.param_b as usize];
+                    let mask = base.masks[l.mask_idx as usize];
+                    let wq = naive::quantized_masked(w, mask, wb, ib);
                     let xq: Vec<f32> =
                         act.data.iter().map(|&v| fake_quant(v, wb, ib)).collect();
-                    let mut z = mm(&xq, &wq, b, l.in_dim, l.out_dim);
+                    let mut z = naive::mm(&xq, &wq, b, l.in_dim, l.out_dim);
                     apply_bias_activation(&mut z, bias, l.out_dim, &l.activation)?;
                     if record {
                         tape.push(Tape::Dense {
@@ -389,24 +1158,23 @@ impl RefModel {
                             l.name, act.shape, l.in_dim
                         )));
                     }
-                    let (wb, ib) = self.layer_q(a.qcfg, l)?;
+                    let (wb, ib) = self.layer_q(base.qcfg, l)?;
                     let in_shape =
                         [act.shape[0], act.shape[1], act.shape[2], act.shape[3]];
                     let [b, h, w, cin] = in_shape;
                     let k = l.kernel;
                     let cout = l.out_dim;
-                    let cols = im2col(&act.data, in_shape, k);
-                    let w2 =
-                        hwio_to_2d(a.params[l.param_w as usize], k, cin, cout);
-                    let m2 = hwio_to_2d(a.masks[l.mask_idx as usize], k, cin, cout);
-                    let wq2 = quantized_masked(&w2, &m2, wb, ib);
+                    let cols = im2col_vec(&act.data, in_shape, k)?;
+                    let w2 = hwio_to_2d_vec(base.params[l.param_w as usize], k, cin, cout);
+                    let m2 = hwio_to_2d_vec(base.masks[l.mask_idx as usize], k, cin, cout);
+                    let wq2 = naive::quantized_masked(&w2, &m2, wb, ib);
                     let colsq: Vec<f32> =
                         cols.iter().map(|&v| fake_quant(v, wb, ib)).collect();
                     let rows = b * h * w;
-                    let mut z = mm(&colsq, &wq2, rows, cin * k * k, cout);
+                    let mut z = naive::mm(&colsq, &wq2, rows, cin * k * k, cout);
                     apply_bias_activation(
                         &mut z,
-                        a.params[l.param_b as usize],
+                        base.params[l.param_b as usize],
                         cout,
                         &l.activation,
                     )?;
@@ -428,39 +1196,7 @@ impl RefModel {
                     let (oh, ow) = (h / 2, w / 2);
                     let mut out = vec![0.0f32; b * oh * ow * c];
                     let mut arg = if record { vec![0u8; b * oh * ow * c] } else { Vec::new() };
-                    for bi in 0..b {
-                        for i in 0..oh {
-                            for j in 0..ow {
-                                for ci in 0..c {
-                                    let mut best = f32::NEG_INFINITY;
-                                    let mut bidx = 0u8;
-                                    for di in 0..2 {
-                                        for dj in 0..2 {
-                                            let v = act.data[((bi * h + 2 * i + di)
-                                                * w
-                                                + 2 * j
-                                                + dj)
-                                                * c
-                                                + ci];
-                                            if v.is_nan() {
-                                                // NaN must win the window
-                                                // (lax.max propagates NaN)
-                                                best = f32::NAN;
-                                            } else if v > best {
-                                                best = v;
-                                                bidx = (di * 2 + dj) as u8;
-                                            }
-                                        }
-                                    }
-                                    let o = ((bi * oh + i) * ow + j) * c + ci;
-                                    out[o] = best;
-                                    if record {
-                                        arg[o] = bidx;
-                                    }
-                                }
-                            }
-                        }
-                    }
+                    maxpool_forward(&act.data, in_shape, &mut out, &mut arg);
                     if record {
                         tape.push(Tape::Pool { in_shape, arg });
                     }
@@ -491,20 +1227,8 @@ impl RefModel {
                             "residual_add: branch/skip shape mismatch",
                         ));
                     }
-                    // NaN-propagating relu(v + s), as in jax.nn.relu
-                    let z: Vec<f32> = act
-                        .data
-                        .iter()
-                        .zip(skip)
-                        .map(|(&v, &s)| {
-                            let sum = v + s;
-                            if sum < 0.0 {
-                                0.0
-                            } else {
-                                sum
-                            }
-                        })
-                        .collect();
+                    let mut z = vec![0.0f32; skip.len()];
+                    resadd_forward(&act.data, skip, &mut z);
                     if record {
                         tape.push(Tape::ResAdd { begin, out: z.clone() });
                     }
@@ -520,61 +1244,16 @@ impl RefModel {
         Ok(Forward { logits: act, tape })
     }
 
-    /// Stable softmax cross-entropy + accuracy; returns `d loss / d logits`.
-    fn loss_acc(&self, logits: &Act, y: &[i32]) -> Result<(f32, f32, Vec<f32>)> {
-        let n_classes = self.variant.n_classes;
-        if logits.shape.len() != 2 || logits.shape[1] != n_classes {
-            return Err(Error::backend(format!(
-                "logits shape {:?}, want [B, {n_classes}]",
-                logits.shape
-            )));
-        }
-        let b = logits.shape[0];
-        let mut loss = 0.0f32;
-        let mut correct = 0usize;
-        let mut dlogits = vec![0.0f32; b * n_classes];
-        for i in 0..b {
-            let row = &logits.data[i * n_classes..(i + 1) * n_classes];
-            let label = y[i];
-            if label < 0 || label as usize >= n_classes {
-                return Err(Error::backend(format!(
-                    "label {label} out of range [0, {n_classes})"
-                )));
-            }
-            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0f32;
-            for &v in row {
-                sum += (v - mx).exp();
-            }
-            let lse = sum.ln();
-            loss -= row[label as usize] - mx - lse;
-            // argmax with first-max tie-break and NaN treated as maximal
-            // (jnp.argmax semantics)
-            let mut am = 0usize;
-            for (c, &v) in row.iter().enumerate().skip(1) {
-                let cur = row[am];
-                let better = if v.is_nan() { !cur.is_nan() } else { v > cur };
-                if better {
-                    am = c;
-                }
-            }
-            if am == label as usize {
-                correct += 1;
-            }
-            for c in 0..n_classes {
-                let soft = (row[c] - mx - lse).exp();
-                let onehot = if c == label as usize { 1.0 } else { 0.0 };
-                dlogits[i * n_classes + c] = (soft - onehot) / b as f32;
-            }
-        }
-        Ok((loss / b as f32, correct as f32 / b as f32, dlogits))
-    }
-
-    /// Reverse pass over the tape; returns per-param gradients in flat
-    /// param order.
-    fn backward(&self, a: &StepArgs, fwd: &Forward, dlogits: Vec<f32>) -> Result<Vec<Vec<f32>>> {
+    /// The original reverse pass over the naive tape; returns per-param
+    /// gradients in flat param order.
+    fn backward_naive(
+        &self,
+        base: &BaseArgs,
+        fwd: &Forward,
+        dlogits: Vec<f32>,
+    ) -> Result<Vec<Vec<f32>>> {
         let mut grads: Vec<Vec<f32>> =
-            a.params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+            base.params.iter().map(|p| vec![0.0f32; p.len()]).collect();
         let mut g = dlogits;
         // gradient contributions waiting at a ResBegin tape index
         let mut pending: Vec<Option<Vec<f32>>> = (0..fwd.tape.len()).map(|_| None).collect();
@@ -583,22 +1262,22 @@ impl RefModel {
             match entry {
                 Tape::Dense { x, out, li } => {
                     let l = &self.variant.layers[*li];
-                    let (wb, ib) = self.layer_q(a.qcfg, l)?;
+                    let (wb, ib) = self.layer_q(base.qcfg, l)?;
                     if l.activation == "relu" {
                         relu_mask(&mut g, out);
                     }
                     let b = x.len() / l.in_dim;
-                    let w = a.params[l.param_w as usize];
-                    let mask = a.masks[l.mask_idx as usize];
-                    grads[l.param_b as usize] = bias_grad(&g, b, l.out_dim);
-                    let wq = quantized_masked(w, mask, wb, ib);
-                    let mut dx = mm_bt(&g, &wq, b, l.out_dim, l.in_dim);
+                    let w = base.params[l.param_w as usize];
+                    let mask = base.masks[l.mask_idx as usize];
+                    bias_grad_into(&mut grads[l.param_b as usize], &g, b, l.out_dim);
+                    let wq = naive::quantized_masked(w, mask, wb, ib);
+                    let mut dx = naive::mm_bt(&g, &wq, b, l.out_dim, l.in_dim);
                     for (d, &xv) in dx.iter_mut().zip(x) {
                         *d *= ste(xv, wb, ib);
                     }
                     let xq: Vec<f32> =
                         x.iter().map(|&v| fake_quant(v, wb, ib)).collect();
-                    let mut dw = mm_at(&xq, &g, b, l.in_dim, l.out_dim);
+                    let mut dw = naive::mm_at(&xq, &g, b, l.in_dim, l.out_dim);
                     for ((d, &mv), &wv) in dw.iter_mut().zip(mask).zip(w) {
                         *d *= mv * ste(wv, wb, ib);
                     }
@@ -607,7 +1286,7 @@ impl RefModel {
                 }
                 Tape::Conv { cols, in_shape, out, li } => {
                     let l = &self.variant.layers[*li];
-                    let (wb, ib) = self.layer_q(a.qcfg, l)?;
+                    let (wb, ib) = self.layer_q(base.qcfg, l)?;
                     if l.activation == "relu" {
                         relu_mask(&mut g, out);
                     }
@@ -615,41 +1294,27 @@ impl RefModel {
                     let (k, cout) = (l.kernel, l.out_dim);
                     let fk = cin * k * k;
                     let rows = cols.len() / fk;
-                    grads[l.param_b as usize] = bias_grad(&g, rows, cout);
-                    let w2 =
-                        hwio_to_2d(a.params[l.param_w as usize], k, cin, cout);
-                    let m2 = hwio_to_2d(a.masks[l.mask_idx as usize], k, cin, cout);
-                    let wq2 = quantized_masked(&w2, &m2, wb, ib);
-                    let mut dcols = mm_bt(&g, &wq2, rows, cout, fk);
+                    bias_grad_into(&mut grads[l.param_b as usize], &g, rows, cout);
+                    let w2 = hwio_to_2d_vec(base.params[l.param_w as usize], k, cin, cout);
+                    let m2 = hwio_to_2d_vec(base.masks[l.mask_idx as usize], k, cin, cout);
+                    let wq2 = naive::quantized_masked(&w2, &m2, wb, ib);
+                    let mut dcols = naive::mm_bt(&g, &wq2, rows, cout, fk);
                     for (d, &cv) in dcols.iter_mut().zip(cols) {
                         *d *= ste(cv, wb, ib);
                     }
                     let colsq: Vec<f32> =
                         cols.iter().map(|&v| fake_quant(v, wb, ib)).collect();
-                    let mut dw2 = mm_at(&colsq, &g, rows, fk, cout);
+                    let mut dw2 = naive::mm_at(&colsq, &g, rows, fk, cout);
                     for ((d, &mv), &wv) in dw2.iter_mut().zip(&m2).zip(&w2) {
                         *d *= mv * ste(wv, wb, ib);
                     }
-                    grads[l.param_w as usize] = hwio_from_2d(&dw2, k, cin, cout);
-                    g = col2im(&dcols, *in_shape, k);
+                    grads[l.param_w as usize] = hwio_from_2d_vec(&dw2, k, cin, cout);
+                    g = col2im_vec(&dcols, *in_shape, k)?;
                 }
                 Tape::Pool { in_shape, arg } => {
                     let [b, h, w, c] = *in_shape;
-                    let (oh, ow) = (h / 2, w / 2);
                     let mut dx = vec![0.0f32; b * h * w * c];
-                    for bi in 0..b {
-                        for i in 0..oh {
-                            for j in 0..ow {
-                                for ci in 0..c {
-                                    let o = ((bi * oh + i) * ow + j) * c + ci;
-                                    let (di, dj) =
-                                        ((arg[o] / 2) as usize, (arg[o] % 2) as usize);
-                                    dx[((bi * h + 2 * i + di) * w + 2 * j + dj) * c
-                                        + ci] += g[o];
-                                }
-                            }
-                        }
-                    }
+                    maxpool_backward(&g, arg, *in_shape, &mut dx);
                     g = dx;
                 }
                 Tape::Flatten => {
@@ -676,49 +1341,49 @@ impl RefModel {
         }
         Ok(grads)
     }
+
+    fn train_step_naive(
+        &self,
+        base: &BaseArgs,
+        x: &HostTensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<HostTensor>, f32, f32)> {
+        let fwd = self.forward_naive(base, x, true)?;
+        let mut dlogits = Vec::new();
+        let (loss, acc) = self.loss_acc_core(
+            &fwd.logits.shape,
+            &fwd.logits.data,
+            y,
+            Some(&mut dlogits),
+        )?;
+        let grads = self.backward_naive(base, &fwd, dlogits)?;
+        let mut new_params = Vec::with_capacity(base.params.len());
+        for (i, (p, gr)) in base.params.iter().zip(&grads).enumerate() {
+            let data: Vec<f32> = p.iter().zip(gr).map(|(&pv, &gv)| pv - lr * gv).collect();
+            let shape = &self.variant.param_shapes[i].1;
+            new_params.push(HostTensor::F32 { shape: shape.clone(), data });
+        }
+        Ok((new_params, loss, acc))
+    }
+
+    fn eval_step_naive(&self, base: &BaseArgs, x: &HostTensor, y: &[i32]) -> Result<(f32, f32)> {
+        let fwd = self.forward_naive(base, x, false)?;
+        self.loss_acc_core(&fwd.logits.shape, &fwd.logits.data, y, None)
+    }
 }
 
-/// `z += bias` (broadcast over rows) then apply the layer activation.
-fn apply_bias_activation(z: &mut [f32], bias: &[f32], width: usize, activation: &str) -> Result<()> {
-    for row in z.chunks_mut(width) {
-        for (v, &bv) in row.iter_mut().zip(bias) {
-            *v += bv;
-        }
+/// Per-batch label validation shared by the step and batched-eval entry
+/// points.
+fn check_labels(x: &HostTensor, y: &[i32]) -> Result<()> {
+    let batch = *x.shape().first().unwrap_or(&0);
+    if y.len() != batch {
+        return Err(Error::backend(format!(
+            "labels: expected {batch} entries, got {}",
+            y.len()
+        )));
     }
-    match activation {
-        "relu" => {
-            // `if v < 0` rather than f32::max: Rust's max(NaN, 0.0)
-            // returns 0.0, but jnp.maximum propagates NaN
-            for v in z.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-            Ok(())
-        }
-        "linear" => Ok(()),
-        other => Err(Error::backend(format!("unknown activation {other:?}"))),
-    }
-}
-
-/// `g *= (out > 0)` — the relu VJP against the saved post-activation.
-fn relu_mask(g: &mut [f32], out: &[f32]) {
-    for (gv, &ov) in g.iter_mut().zip(out) {
-        if ov <= 0.0 {
-            *gv = 0.0;
-        }
-    }
-}
-
-/// Column sums of `g[rows, width]` (the bias gradient).
-fn bias_grad(g: &[f32], rows: usize, width: usize) -> Vec<f32> {
-    let mut db = vec![0.0f32; width];
-    for i in 0..rows {
-        for (d, &gv) in db.iter_mut().zip(&g[i * width..(i + 1) * width]) {
-            *d += gv;
-        }
-    }
-    db
+    Ok(())
 }
 
 impl ModelExec for RefModel {
@@ -728,29 +1393,66 @@ impl ModelExec for RefModel {
 
     fn train_step(&self, args: &[HostTensor]) -> Result<(Vec<HostTensor>, f32, f32)> {
         let t0 = Instant::now();
-        let a = self.split_args(args, true)?;
-        let lr = a.lr.expect("split_args(with_lr)");
-        let fwd = self.forward(&a, true)?;
-        let (loss, acc, dlogits) = self.loss_acc(&fwd.logits, a.y)?;
-        let grads = self.backward(&a, &fwd, dlogits)?;
-        let mut new_params = Vec::with_capacity(a.params.len());
-        for (i, (p, gr)) in a.params.iter().zip(&grads).enumerate() {
-            let data: Vec<f32> =
-                p.iter().zip(gr).map(|(&pv, &gv)| pv - lr * gv).collect();
-            let shape = &self.variant.param_shapes[i].1;
-            new_params.push(HostTensor::F32 { shape: shape.clone(), data });
-        }
+        let (base, x, y, lr) = self.split_step(args, true)?;
+        let lr = lr.expect("split_step(with_lr)");
+        let out = match self.mode {
+            KernelMode::Naive => self.train_step_naive(&base, x, y, lr)?,
+            _ => {
+                let mut ws = self.take_ws();
+                let out = self.train_step_fast(&base, x, y, lr, &mut ws);
+                self.put_ws(ws);
+                out?
+            }
+        };
         self.stats.add_execute(t0.elapsed());
-        Ok((new_params, loss, acc))
+        Ok(out)
     }
 
     fn eval_step(&self, args: &[HostTensor]) -> Result<(f32, f32)> {
         let t0 = Instant::now();
-        let a = self.split_args(args, false)?;
-        let fwd = self.forward(&a, false)?;
-        let (loss, acc, _) = self.loss_acc(&fwd.logits, a.y)?;
+        let (base, x, y, _) = self.split_step(args, false)?;
+        let out = match self.mode {
+            KernelMode::Naive => self.eval_step_naive(&base, x, y)?,
+            _ => {
+                let mut ws = self.take_ws();
+                let out = self.eval_step_fast(&base, x, y, &mut ws);
+                self.put_ws(ws);
+                out?
+            }
+        };
         self.stats.add_execute(t0.elapsed());
-        Ok((loss, acc))
+        Ok(out)
+    }
+
+    /// Batched evaluation: the weight preparation (`fq(w) * mask` +
+    /// sparse index lists) is hoisted over the whole run instead of
+    /// repeated per batch — the eval-loop analogue of the per-step
+    /// hoisting in [`RefModel::train_step_fast`].
+    fn eval_batches(
+        &self,
+        base_args: &[HostTensor],
+        batches: &[(HostTensor, HostTensor)],
+    ) -> Result<Vec<(f32, f32)>> {
+        let base = self.split_base(base_args)?;
+        let mut out = Vec::with_capacity(batches.len());
+        match self.mode {
+            KernelMode::Naive => {
+                for (x, y) in batches {
+                    let t0 = Instant::now();
+                    let y = y.as_i32()?;
+                    check_labels(x, y)?;
+                    out.push(self.eval_step_naive(&base, x, y)?);
+                    self.stats.add_execute(t0.elapsed());
+                }
+            }
+            _ => {
+                let mut ws = self.take_ws();
+                let run = self.eval_batches_fast(&base, batches, &mut out, &mut ws);
+                self.put_ws(ws);
+                run?;
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -817,11 +1519,34 @@ fn validate_layer_indices(variant: &ModelVariant) -> Result<()> {
 /// The reference-interpreter backend: no artifacts, no native libraries.
 pub struct RefBackend {
     stats: Arc<StatsCell>,
+    mode: KernelMode,
 }
 
 impl RefBackend {
+    /// The default backend: kernel mode from `METAML_INTERP` (fast
+    /// unless overridden).
     pub fn new() -> Self {
-        RefBackend { stats: Arc::new(StatsCell::new()) }
+        Self::with_mode(KernelMode::from_env())
+    }
+
+    pub fn with_mode(mode: KernelMode) -> Self {
+        RefBackend { stats: Arc::new(StatsCell::new()), mode }
+    }
+
+    /// The original per-call-allocating implementation (test oracle and
+    /// benchmark baseline).
+    pub fn naive() -> Self {
+        Self::with_mode(KernelMode::Naive)
+    }
+
+    /// The fast path with the compressed sparse path disabled (for
+    /// measuring the sparse win in isolation).
+    pub fn dense_only() -> Self {
+        Self::with_mode(KernelMode::DenseOnly)
+    }
+
+    pub fn mode(&self) -> KernelMode {
+        self.mode
     }
 }
 
@@ -847,7 +1572,12 @@ impl ExecBackend for RefBackend {
         }
         validate_layer_indices(&variant)?;
         self.stats.add_compile(t0.elapsed());
-        Ok(Arc::new(RefModel { variant, stats: self.stats.clone() }))
+        Ok(Arc::new(RefModel {
+            variant,
+            stats: self.stats.clone(),
+            mode: self.mode,
+            workspaces: Mutex::new(Vec::new()),
+        }))
     }
 
     fn stats(&self) -> RuntimeStats {
@@ -860,34 +1590,6 @@ mod tests {
     use super::*;
 
     #[test]
-    fn round_ties_even_matches_jnp_round() {
-        assert_eq!(round_ties_even(2.5), 2.0);
-        assert_eq!(round_ties_even(3.5), 4.0);
-        assert_eq!(round_ties_even(-2.5), -2.0);
-        assert_eq!(round_ties_even(-3.5), -4.0);
-        assert_eq!(round_ties_even(2.4), 2.0);
-        assert_eq!(round_ties_even(2.6), 3.0);
-        assert_eq!(round_ties_even(-0.5), 0.0);
-        assert_eq!(round_ties_even(0.0), 0.0);
-    }
-
-    #[test]
-    fn fake_quant_disabled_is_identity() {
-        for v in [-7.3f32, -0.1, 0.0, 0.49, 123.4] {
-            assert_eq!(fake_quant(v, 0.0, 0.0), v);
-        }
-    }
-
-    #[test]
-    fn fake_quant_rounds_and_saturates() {
-        // ap_fixed<6,3>: scale 8, range [-4, 3.875]
-        assert_eq!(fake_quant(7.9, 6.0, 3.0), 3.875);
-        assert_eq!(fake_quant(-9.0, 6.0, 3.0), -4.0);
-        assert_eq!(fake_quant(0.13, 6.0, 3.0), 0.125);
-        assert_eq!(fake_quant(1.0, 6.0, 3.0), 1.0);
-    }
-
-    #[test]
     fn ste_boundary() {
         // enabled <7,3>: representable magnitude bound 2^(3-1) = 4
         assert_eq!(ste(3.9, 7.0, 3.0), 1.0);
@@ -898,40 +1600,9 @@ mod tests {
     }
 
     #[test]
-    fn matmul_variants_agree() {
-        // a: 2x3, b: 3x2
-        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
-        let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0];
-        let c = mm(&a, &b, 2, 3, 2);
-        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
-        // b^T is 2x3; mm_bt(a2x3 @ (bt)^T) must equal mm with b
-        let bt = [7.0f32, 9.0, 11.0, 8.0, 10.0, 12.0];
-        assert_eq!(mm_bt(&a, &bt, 2, 3, 2), c);
-        // a^T path: (a^T)^T @ b
-        let at = [1.0f32, 4.0, 2.0, 5.0, 3.0, 6.0];
-        assert_eq!(mm_at(&at, &b, 3, 2, 2), c);
-    }
-
-    #[test]
-    fn im2col_col2im_roundtrip_shapes() {
-        // 1x2x2x1 input, k=3: each pixel sees its 3x3 SAME neighborhood
-        let x = [1.0f32, 2.0, 3.0, 4.0];
-        let cols = im2col(&x, [1, 2, 2, 1], 3);
-        assert_eq!(cols.len(), 4 * 9);
-        // center of patch (kh=1, kw=1) is the pixel itself
-        for (p, &v) in x.iter().enumerate() {
-            assert_eq!(cols[p * 9 + 4], v);
-        }
-        // col2im of all-ones gradient counts each pixel's patch memberships
-        let dx = col2im(&vec![1.0f32; 4 * 9], [1, 2, 2, 1], 3);
-        assert_eq!(dx, vec![4.0; 4]);
-    }
-
-    #[test]
-    fn hwio_transpose_roundtrip() {
-        let (k, cin, cout) = (3, 2, 4);
-        let w4: Vec<f32> = (0..k * k * cin * cout).map(|i| i as f32).collect();
-        let w2 = hwio_to_2d(&w4, k, cin, cout);
-        assert_eq!(hwio_from_2d(&w2, k, cin, cout), w4);
+    fn backend_mode_constructors() {
+        assert_eq!(RefBackend::naive().mode(), KernelMode::Naive);
+        assert_eq!(RefBackend::dense_only().mode(), KernelMode::DenseOnly);
+        assert_eq!(RefBackend::with_mode(KernelMode::Fast).mode(), KernelMode::Fast);
     }
 }

@@ -1,0 +1,1064 @@
+//! Fast interpreter kernels: the hot math of the reference interpreter
+//! ([`crate::runtime::interp`]), extracted so the step loops stay
+//! readable and every search probe pays kernel cost, not allocator and
+//! transcendental-call cost.
+//!
+//! Three layers, all bound by one **bit-identity contract**: for every
+//! output element the f32 additions happen in exactly the ascending
+//! reduction-index order the naive triple loops use, so the blocked,
+//! sparse and row-panel-parallel paths produce bit-identical results to
+//! [`naive`] (pinned by `rust/tests/kernel_parity.rs`) and the
+//! backend-parity goldens never move:
+//!
+//! * **Blocked dense matmuls** — register-tiled microkernels over a
+//!   packed-B panel cache ([`matmul`], [`matmul_bt`], [`matmul_at`]).
+//!   Each output element accumulates over the full reduction dimension
+//!   in its own register accumulator (ascending `t`, single store), so
+//!   tiling changes memory traffic only, never arithmetic order.  No
+//!   `mul_add`: fused multiply-add would change rounding.
+//! * **Sparse-aware masked matmul** — [`MaskedWeight`] precomputes
+//!   `fq(w) * mask` once per step (or once per eval run) and, when
+//!   density falls below [`SPARSE_DENSITY_THRESHOLD`], a compressed
+//!   row-major index list of the *exactly-zero* entries' complements.
+//!   Skipping a `+= a * 0.0` term is bit-identical as long as `a` is
+//!   finite (the accumulator can never sit at `-0.0`: it starts at
+//!   `+0.0` and IEEE round-to-nearest addition only yields `-0.0` from
+//!   two `-0.0` operands), so the sparse kernels scan the dense operand
+//!   once and fall back to the dense path whenever it contains a
+//!   non-finite value — `0 * NaN = NaN` propagation is preserved
+//!   exactly.  NaN *weights* are no problem: `fq(NaN) * mask` is NaN,
+//!   NaN ≠ 0.0, so the entry lands in the index list and propagates.
+//! * **Deterministic intra-probe parallelism** — [`for_row_panels`]
+//!   splits large matmuls into fixed [`ROW_PANEL`]-row output panels.
+//!   The partition depends only on the output shape, never on the
+//!   thread count; each panel is computed start-to-finish by the same
+//!   sequential microkernel, so any worker assignment (including fully
+//!   sequential) yields bit-identical results.  The thread budget comes
+//!   from a scoped thread-local ([`with_intra_threads`]) that
+//!   [`crate::dse::ProbePool`] sets when it has idle workers to lend a
+//!   probe.
+//!
+//! [`Workspace`] is the per-step allocation sink: a free-list of f32 /
+//! u32 / u8 buffers plus the packed-panel scratch, owned per
+//! interpreter execution (checked out of a small pool on the model, so
+//! concurrent probe workers never contend on one workspace).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::error::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// fake quantization (hoisted-constant form)
+// ---------------------------------------------------------------------------
+
+/// Round half to even (`jnp.round` semantics; `f32::round` rounds half
+/// away from zero, which would diverge from the reference kernels).
+pub fn round_ties_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - x.signum()
+    } else {
+        r
+    }
+}
+
+/// ap_fixed<W,I> fake quantization: round to nearest (ties to even) at
+/// `2^(W-I)` resolution, saturate to the representable range.  `W <= 0`
+/// disables quantization (identity).
+pub fn fake_quant(v: f32, total_bits: f32, int_bits: f32) -> f32 {
+    Quant::new(total_bits, int_bits).fq(v)
+}
+
+/// One layer's quantization constants, computed once per step instead
+/// of once per element (`exp2` twice per weight was a measurable slice
+/// of small-model probe time).  Arithmetic is identical to the
+/// per-element form: the same `exp2` inputs produce the same constants.
+#[derive(Debug, Clone, Copy)]
+pub struct Quant {
+    enabled: bool,
+    scale: f32,
+    hi: f32,
+    lo: f32,
+    /// STE saturation bound `2^(I-1)` (not the forward clamp bound).
+    ste_hi: f32,
+}
+
+impl Quant {
+    pub fn new(total_bits: f32, int_bits: f32) -> Quant {
+        if total_bits <= 0.0 {
+            return Quant { enabled: false, scale: 1.0, hi: 0.0, lo: 0.0, ste_hi: 0.0 };
+        }
+        let scale = (total_bits - int_bits).exp2();
+        Quant {
+            enabled: true,
+            scale,
+            hi: (int_bits - 1.0).exp2() - 1.0 / scale,
+            lo: -(int_bits - 1.0).exp2(),
+            ste_hi: (int_bits - 1.0).exp2(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// `fake_quant(v)` with the precomputed constants.
+    #[inline]
+    pub fn fq(&self, v: f32) -> f32 {
+        if !self.enabled {
+            return v;
+        }
+        (round_ties_even(v * self.scale) / self.scale).clamp(self.lo, self.hi)
+    }
+
+    /// Straight-through gradient mask: 1 inside the representable range
+    /// (or when quantization is disabled), 0 where the forward saturated.
+    #[inline]
+    pub fn ste(&self, v: f32) -> f32 {
+        if !self.enabled || v.abs() <= self.ste_hi {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// `dst = fq(src)` elementwise into a caller-provided buffer.
+    pub fn fq_into(&self, dst: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(dst.len(), src.len());
+        if !self.enabled {
+            dst.copy_from_slice(src);
+            return;
+        }
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = self.fq(v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// intra-probe parallelism: scoped thread budget + fixed row panels
+// ---------------------------------------------------------------------------
+
+/// Output rows per parallel panel.  Fixed: the work partition depends
+/// only on the output shape, so results are identical for any budget.
+pub const ROW_PANEL: usize = 64;
+
+/// Default multiply-add floor below which a matmul never goes parallel
+/// (scope-spawn overhead dominates tiny probes; they parallelize at the
+/// probe-batch level instead).
+pub const PAR_MIN_FLOPS_DEFAULT: usize = 1 << 22;
+
+static PAR_MIN_FLOPS: AtomicUsize = AtomicUsize::new(PAR_MIN_FLOPS_DEFAULT);
+
+/// Multiply-add count a matmul must exceed before the row-panel
+/// parallel driver engages.  Tunable (tests drop it to 0 to exercise
+/// the parallel path on tiny models); never affects results, only
+/// whether idle workers are used.
+pub fn par_min_flops() -> usize {
+    PAR_MIN_FLOPS.load(Ordering::Relaxed)
+}
+
+/// Override the parallelism floor (process-wide; see [`par_min_flops`]).
+pub fn set_par_min_flops(min_mul_adds: usize) {
+    PAR_MIN_FLOPS.store(min_mul_adds, Ordering::Relaxed);
+}
+
+thread_local! {
+    static INTRA_THREADS: Cell<usize> = const { Cell::new(1) };
+}
+
+/// Current intra-op thread budget for this thread (default 1).
+pub fn intra_threads() -> usize {
+    INTRA_THREADS.with(|c| c.get()).max(1)
+}
+
+/// Run `f` with the intra-op thread budget set to `n` (restored on
+/// exit).  [`crate::dse::ProbePool`] wraps probe closures in this to
+/// lend idle workers to a large probe; results are bit-identical for
+/// every budget by the fixed-partition contract.
+pub fn with_intra_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    INTRA_THREADS.with(|c| {
+        let prev = c.get();
+        c.set(n.max(1));
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+/// Split `out` (`m` rows of `row_width`) into [`ROW_PANEL`]-row panels
+/// and run `body(first_row, panel)` over each.  Parallel across the
+/// intra-thread budget when it is > 1 and the work (`mul_adds`) clears
+/// the floor; panels are assigned round-robin but each is computed by
+/// the same sequential `body`, so the schedule never affects results.
+pub fn for_row_panels<F>(out: &mut [f32], m: usize, row_width: usize, mul_adds: usize, body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), m * row_width);
+    let chunk = ROW_PANEL * row_width;
+    let threads = intra_threads();
+    let n_panels = if chunk == 0 { 0 } else { m.div_ceil(ROW_PANEL) };
+    if threads <= 1 || n_panels <= 1 || mul_adds < par_min_flops() {
+        for (p, panel) in out.chunks_mut(chunk.max(1)).enumerate() {
+            body(p * ROW_PANEL, panel);
+        }
+        return;
+    }
+    let threads = threads.min(n_panels);
+    let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (p, panel) in out.chunks_mut(chunk).enumerate() {
+        buckets[p % threads].push((p * ROW_PANEL, panel));
+    }
+    std::thread::scope(|scope| {
+        let body = &body;
+        for bucket in buckets {
+            scope.spawn(move || {
+                for (row0, panel) in bucket {
+                    body(row0, panel);
+                }
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// blocked dense matmuls
+// ---------------------------------------------------------------------------
+
+/// Packed-B panel width (f32 lanes per register tile column).
+const NR: usize = 16;
+/// Rows of A per microkernel tile.
+const MR: usize = 4;
+
+/// Pack `b[k, n]` into `ceil(n/NR)` column panels of `k * NR` each
+/// (remainder lanes zero-padded; they feed accumulator lanes that are
+/// never stored).  Reused across row panels, so packing cost is
+/// `O(k*n)` per matmul regardless of `m` or the thread count.
+fn pack_b(pack: &mut Vec<f32>, b: &[f32], k: usize, n: usize) {
+    let panels = n.div_ceil(NR).max(1);
+    pack.clear();
+    pack.resize(panels * k * NR, 0.0);
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let width = NR.min(n - j0);
+        let base = jp * k * NR;
+        for t in 0..k {
+            let src = &b[t * n + j0..t * n + j0 + width];
+            pack[base + t * NR..base + t * NR + width].copy_from_slice(src);
+        }
+    }
+}
+
+/// `out = a[m,k] @ b[k,n]` (row-major, f32): blocked, packed-B,
+/// row-panel parallel.  Bit-identical to [`naive::mm`]: each output
+/// element accumulates over the full reduction in its own register
+/// lane (ascending `t` from a `+0.0` start, single store).
+pub fn matmul(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pack: &mut Vec<f32>,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    pack_b(pack, b, k, n);
+    let pack = &*pack;
+    let panels = n.div_ceil(NR);
+    for_row_panels(out, m, n, m * k * n, |row0, chunk| {
+        let rows = chunk.len() / n;
+        let mut i = 0;
+        while i < rows {
+            let tile = MR.min(rows - i);
+            for jp in 0..panels {
+                let j0 = jp * NR;
+                let width = NR.min(n - j0);
+                let panel = &pack[jp * k * NR..(jp + 1) * k * NR];
+                let mut acc = [[0.0f32; NR]; MR];
+                for t in 0..k {
+                    let bp = &panel[t * NR..t * NR + NR];
+                    for r in 0..tile {
+                        let av = a[(row0 + i + r) * k + t];
+                        let lane = &mut acc[r];
+                        for j in 0..NR {
+                            lane[j] += av * bp[j];
+                        }
+                    }
+                }
+                for r in 0..tile {
+                    chunk[(i + r) * n + j0..(i + r) * n + j0 + width]
+                        .copy_from_slice(&acc[r][..width]);
+                }
+            }
+            i += tile;
+        }
+    });
+}
+
+/// `out = a[m,n] @ b[k,n]^T` → `[m,k]`: register-blocked dot products
+/// (IRxJR tile of independent scalar accumulators, ascending inner
+/// index).  Bit-identical to [`naive::mm_bt`].
+pub fn matmul_bt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(out.len(), m * k);
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    if m == 0 || k == 0 {
+        return;
+    }
+    const JR: usize = 4;
+    for_row_panels(out, m, k, m * n * k, |row0, chunk| {
+        let rows = chunk.len() / k;
+        for i in 0..rows {
+            let arow = &a[(row0 + i) * n..(row0 + i + 1) * n];
+            let orow = &mut chunk[i * k..(i + 1) * k];
+            let mut j = 0;
+            while j + JR <= k {
+                let b0 = &b[j * n..(j + 1) * n];
+                let b1 = &b[(j + 1) * n..(j + 2) * n];
+                let b2 = &b[(j + 2) * n..(j + 3) * n];
+                let b3 = &b[(j + 3) * n..(j + 4) * n];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for t in 0..n {
+                    let av = arow[t];
+                    s0 += av * b0[t];
+                    s1 += av * b1[t];
+                    s2 += av * b2[t];
+                    s3 += av * b3[t];
+                }
+                orow[j] = s0;
+                orow[j + 1] = s1;
+                orow[j + 2] = s2;
+                orow[j + 3] = s3;
+                j += JR;
+            }
+            while j < k {
+                let brow = &b[j * n..(j + 1) * n];
+                let mut acc = 0.0f32;
+                for t in 0..n {
+                    acc += arow[t] * brow[t];
+                }
+                orow[j] = acc;
+                j += 1;
+            }
+        }
+    });
+}
+
+/// `out = a[m,k]^T @ b[m,n]` → `[k,n]`: the gradient-weight matmul.
+/// Same packed-B microkernel as [`matmul`], with the A operand read
+/// column-wise (`a[t*k + i]`).  Bit-identical to [`naive::mm_at`].
+pub fn matmul_at(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pack: &mut Vec<f32>,
+) {
+    debug_assert_eq!(out.len(), k * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    if k == 0 || n == 0 {
+        return;
+    }
+    pack_b(pack, b, m, n);
+    let pack = &*pack;
+    let panels = n.div_ceil(NR);
+    for_row_panels(out, k, n, m * k * n, |row0, chunk| {
+        let rows = chunk.len() / n;
+        let mut i = 0;
+        while i < rows {
+            let tile = MR.min(rows - i);
+            for jp in 0..panels {
+                let j0 = jp * NR;
+                let width = NR.min(n - j0);
+                let panel = &pack[jp * m * NR..(jp + 1) * m * NR];
+                let mut acc = [[0.0f32; NR]; MR];
+                for t in 0..m {
+                    let bp = &panel[t * NR..t * NR + NR];
+                    for r in 0..tile {
+                        let av = a[t * k + row0 + i + r];
+                        let lane = &mut acc[r];
+                        for j in 0..NR {
+                            lane[j] += av * bp[j];
+                        }
+                    }
+                }
+                for r in 0..tile {
+                    chunk[(i + r) * n + j0..(i + r) * n + j0 + width]
+                        .copy_from_slice(&acc[r][..width]);
+                }
+            }
+            i += tile;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sparse-aware masked weights
+// ---------------------------------------------------------------------------
+
+/// Sparsity threshold: the compressed path engages when the fraction of
+/// nonzero `fq(w)*mask` entries drops below this (scalar gather/scatter
+/// only beats the vectorized dense microkernel once most terms vanish).
+pub const SPARSE_DENSITY_THRESHOLD: f32 = 0.25;
+
+static SPARSE_MATMULS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of matmuls served by the compressed sparse path since process
+/// start (bench/CI telemetry: proves the sparse path engages on a
+/// pruned model).
+pub fn sparse_matmul_count() -> u64 {
+    SPARSE_MATMULS.load(Ordering::Relaxed)
+}
+
+/// Compressed row-major index list of the nonzero entries of a
+/// `[k, n]` masked-quantized weight matrix.  Entries are *value*-zero
+/// tested (`v == 0.0` catches both `±0.0`; NaN entries compare unequal
+/// and stay in the list, preserving propagation).
+#[derive(Debug, Default)]
+pub struct SparseRows {
+    /// `k + 1` prefix offsets into `col`/`val`.
+    pub row_ptr: Vec<u32>,
+    pub col: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+/// `fq(w) * mask` evaluated once per step, plus the compressed index
+/// list when density is below `threshold`.
+#[derive(Debug, Default)]
+pub struct MaskedWeight {
+    /// Dense `[k, n]` quantized-masked weights.
+    pub wq: Vec<f32>,
+    pub sparse: Option<SparseRows>,
+    /// Fraction of nonzero entries in `wq`.
+    pub density: f32,
+}
+
+impl MaskedWeight {
+    /// Build from raw weights + mask (both `[k, n]`).  Buffers come
+    /// from `ws` and return to it via [`Workspace::recycle_weight`].
+    pub fn build(
+        ws: &mut Workspace,
+        w: &[f32],
+        mask: &[f32],
+        q: &Quant,
+        k: usize,
+        n: usize,
+        threshold: f32,
+    ) -> MaskedWeight {
+        debug_assert_eq!(w.len(), k * n);
+        debug_assert_eq!(mask.len(), k * n);
+        let mut wq = ws.buf_uninit(k * n);
+        let mut nnz = 0usize;
+        for ((d, &wv), &mv) in wq.iter_mut().zip(w).zip(mask) {
+            let v = q.fq(wv) * mv;
+            *d = v;
+            nnz += usize::from(v != 0.0);
+        }
+        let density = if wq.is_empty() { 1.0 } else { nnz as f32 / wq.len() as f32 };
+        let sparse = if density < threshold {
+            let mut row_ptr = ws.buf_u32(k + 1);
+            let mut col = ws.buf_u32(nnz);
+            let mut val = ws.buf_uninit(nnz);
+            row_ptr.clear();
+            col.clear();
+            val.clear();
+            row_ptr.push(0);
+            for t in 0..k {
+                for (j, &v) in wq[t * n..(t + 1) * n].iter().enumerate() {
+                    if v != 0.0 {
+                        col.push(j as u32);
+                        val.push(v);
+                    }
+                }
+                row_ptr.push(col.len() as u32);
+            }
+            Some(SparseRows { row_ptr, col, val })
+        } else {
+            None
+        };
+        MaskedWeight { wq, sparse, density }
+    }
+}
+
+/// True when every element is finite (no NaN/±inf).  The sparse kernels
+/// require this of their *dense* operand: skipping an exact-zero weight
+/// term is only bit-identical when the factor it would have multiplied
+/// is finite.
+pub fn all_finite(v: &[f32]) -> bool {
+    v.iter().all(|x| x.is_finite())
+}
+
+/// Forward masked matmul `out = a[m,k] @ wq[k,n]`: compressed path when
+/// the index list exists and `a` is finite, dense blocked otherwise.
+pub fn matmul_masked(
+    out: &mut [f32],
+    a: &[f32],
+    mw: &MaskedWeight,
+    m: usize,
+    k: usize,
+    n: usize,
+    pack: &mut Vec<f32>,
+) {
+    if let Some(sp) = &mw.sparse {
+        if all_finite(a) {
+            SPARSE_MATMULS.fetch_add(1, Ordering::Relaxed);
+            let nnz = sp.val.len();
+            for_row_panels(out, m, n, m * nnz, |row0, chunk| {
+                chunk.fill(0.0);
+                let rows = chunk.len() / n.max(1);
+                for i in 0..rows {
+                    let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+                    let orow = &mut chunk[i * n..(i + 1) * n];
+                    for (t, &av) in arow.iter().enumerate() {
+                        let (s, e) = (sp.row_ptr[t] as usize, sp.row_ptr[t + 1] as usize);
+                        for (&c, &v) in sp.col[s..e].iter().zip(&sp.val[s..e]) {
+                            orow[c as usize] += av * v;
+                        }
+                    }
+                }
+            });
+            return;
+        }
+    }
+    matmul(out, a, &mw.wq, m, k, n, pack);
+}
+
+/// Backward input-gradient matmul `out = g[m,n] @ wq[k,n]^T`:
+/// compressed when possible (requires finite `g`), dense blocked
+/// otherwise.  Row `j` of the index list holds exactly the ascending-`t`
+/// nonzeros of `wq[j, :]`, so the per-element accumulation order
+/// matches [`naive::mm_bt`] minus the exact-zero terms.
+pub fn matmul_bt_masked(
+    out: &mut [f32],
+    g: &[f32],
+    mw: &MaskedWeight,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    if let Some(sp) = &mw.sparse {
+        if all_finite(g) {
+            SPARSE_MATMULS.fetch_add(1, Ordering::Relaxed);
+            let nnz = sp.val.len();
+            for_row_panels(out, m, k, m * nnz, |row0, chunk| {
+                let rows = chunk.len() / k.max(1);
+                for i in 0..rows {
+                    let grow = &g[(row0 + i) * n..(row0 + i + 1) * n];
+                    let orow = &mut chunk[i * k..(i + 1) * k];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let (s, e) = (sp.row_ptr[j] as usize, sp.row_ptr[j + 1] as usize);
+                        let mut acc = 0.0f32;
+                        for (&c, &v) in sp.col[s..e].iter().zip(&sp.val[s..e]) {
+                            acc += grow[c as usize] * v;
+                        }
+                        *o = acc;
+                    }
+                }
+            });
+            return;
+        }
+    }
+    matmul_bt(out, g, &mw.wq, m, n, k);
+}
+
+// ---------------------------------------------------------------------------
+// convolution layout transforms (guarded)
+// ---------------------------------------------------------------------------
+
+/// Validate a conv/pool NHWC shape + kernel size before the layout
+/// transforms index into it.  Degenerate shapes (zero batch/spatial/
+/// channel dims, kernel exceeding the padded input) return a clean
+/// error instead of silently producing empty output or panicking on
+/// index underflow in debug builds.
+pub fn check_conv_shape(shape: [usize; 4], k: usize) -> Result<()> {
+    let [b, h, w, c] = shape;
+    if b == 0 || h == 0 || w == 0 || c == 0 {
+        return Err(Error::backend(format!(
+            "im2col: degenerate input shape {shape:?} (zero-sized dimension)"
+        )));
+    }
+    if k == 0 {
+        return Err(Error::backend("im2col: kernel size must be positive"));
+    }
+    if k > h || k > w {
+        return Err(Error::backend(format!(
+            "im2col: kernel {k} exceeds spatial dims of input {shape:?}"
+        )));
+    }
+    Ok(())
+}
+
+/// Channel-major im2col: `[B,H,W,C]` → `[B*H*W, C*k*k]`, SAME padding,
+/// stride 1, feature index `c*k*k + kh*k + kw` (matching
+/// `conv_general_dilated_patches` + the HWIO→(C,k,k,Cout) weight
+/// transpose in `layers.qconv2d`).  `cols` is fully overwritten.
+pub fn im2col(cols: &mut [f32], x: &[f32], shape: [usize; 4], k: usize) -> Result<()> {
+    check_conv_shape(shape, k)?;
+    let [b, h, w, c] = shape;
+    let pad = (k - 1) / 2;
+    let fk = c * k * k;
+    debug_assert_eq!(cols.len(), b * h * w * fk);
+    cols.fill(0.0);
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..w {
+                let row = ((bi * h + i) * w + j) * fk;
+                for kh in 0..k {
+                    let y = i + kh;
+                    if y < pad || y - pad >= h {
+                        continue;
+                    }
+                    let y = y - pad;
+                    for kw in 0..k {
+                        let xx = j + kw;
+                        if xx < pad || xx - pad >= w {
+                            continue;
+                        }
+                        let xx = xx - pad;
+                        let src = ((bi * h + y) * w + xx) * c;
+                        for ci in 0..c {
+                            cols[row + ci * k * k + kh * k + kw] = x[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Scatter-add transpose of [`im2col`]: `[B*H*W, C*k*k]` → `[B,H,W,C]`.
+/// `dx` is zeroed then accumulated.
+pub fn col2im(dx: &mut [f32], dcols: &[f32], shape: [usize; 4], k: usize) -> Result<()> {
+    check_conv_shape(shape, k)?;
+    let [b, h, w, c] = shape;
+    let pad = (k - 1) / 2;
+    let fk = c * k * k;
+    debug_assert_eq!(dx.len(), b * h * w * c);
+    dx.fill(0.0);
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..w {
+                let row = ((bi * h + i) * w + j) * fk;
+                for kh in 0..k {
+                    let y = i + kh;
+                    if y < pad || y - pad >= h {
+                        continue;
+                    }
+                    let y = y - pad;
+                    for kw in 0..k {
+                        let xx = j + kw;
+                        if xx < pad || xx - pad >= w {
+                            continue;
+                        }
+                        let xx = xx - pad;
+                        let dst = ((bi * h + y) * w + xx) * c;
+                        for ci in 0..c {
+                            dx[dst + ci] += dcols[row + ci * k * k + kh * k + kw];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// HWIO `[k,k,Cin,Cout]` → matmul operand `[Cin*k*k, Cout]`.
+pub fn hwio_to_2d(w2: &mut [f32], w4: &[f32], k: usize, cin: usize, cout: usize) {
+    debug_assert_eq!(w2.len(), cin * k * k * cout);
+    for kh in 0..k {
+        for kw in 0..k {
+            for c in 0..cin {
+                let src = (((kh * k) + kw) * cin + c) * cout;
+                let dst = (c * k * k + kh * k + kw) * cout;
+                w2[dst..dst + cout].copy_from_slice(&w4[src..src + cout]);
+            }
+        }
+    }
+}
+
+/// Inverse of [`hwio_to_2d`].
+pub fn hwio_from_2d(w4: &mut [f32], w2: &[f32], k: usize, cin: usize, cout: usize) {
+    debug_assert_eq!(w4.len(), k * k * cin * cout);
+    for kh in 0..k {
+        for kw in 0..k {
+            for c in 0..cin {
+                let dst = (((kh * k) + kw) * cin + c) * cout;
+                let src = (c * k * k + kh * k + kw) * cout;
+                w4[dst..dst + cout].copy_from_slice(&w2[src..src + cout]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reusable per-execution workspace
+// ---------------------------------------------------------------------------
+
+/// Per-execution scratch: free-lists of typed buffers plus the packed
+/// matmul panel cache, so train/eval steps stop allocating `Vec`s per
+/// call.  Checked out of a small pool on the model (`RefModel` keeps
+/// one per concurrent probe worker), never shared across threads.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free_f32: Vec<Vec<f32>>,
+    free_u32: Vec<Vec<u32>>,
+    free_u8: Vec<Vec<u8>>,
+    /// Packed-B panel scratch for the blocked matmuls.
+    pub pack: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A zero-initialized f32 buffer of exactly `len` elements, reusing
+    /// capacity from the free-list when available.
+    pub fn buf(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free_f32.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Like [`Self::buf`] but the contents are unspecified (callers
+    /// overwrite every element).  Still zero-fills — profiling showed
+    /// the memset is noise next to the kernels — but the name records
+    /// the contract so a future unsafe variant can skip it.
+    pub fn buf_uninit(&mut self, len: usize) -> Vec<f32> {
+        self.buf(len)
+    }
+
+    pub fn buf_u32(&mut self, len: usize) -> Vec<u32> {
+        let mut v = self.free_u32.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    pub fn buf_u8(&mut self, len: usize) -> Vec<u8> {
+        let mut v = self.free_u8.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    pub fn recycle(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.free_f32.push(v);
+        }
+    }
+
+    pub fn recycle_u32(&mut self, v: Vec<u32>) {
+        if v.capacity() > 0 {
+            self.free_u32.push(v);
+        }
+    }
+
+    pub fn recycle_u8(&mut self, v: Vec<u8>) {
+        if v.capacity() > 0 {
+            self.free_u8.push(v);
+        }
+    }
+
+    /// Return a [`MaskedWeight`]'s buffers to the free-lists.
+    pub fn recycle_weight(&mut self, mw: MaskedWeight) {
+        self.recycle(mw.wq);
+        if let Some(sp) = mw.sparse {
+            self.recycle_u32(sp.row_ptr);
+            self.recycle_u32(sp.col);
+            self.recycle(sp.val);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// naive reference kernels (test oracle + "before" benchmark baseline)
+// ---------------------------------------------------------------------------
+
+/// The original triple-loop kernels, kept verbatim as (a) the bit-exact
+/// oracle the blocked/sparse paths are tested against and (b) the
+/// honest "before" baseline for the `interp` section of
+/// `benches/perf_runtime.rs` (`RefBackend::naive()`).
+pub mod naive {
+    use super::fake_quant;
+
+    /// `a[m,k] @ b[k,n]` (row-major, f32 accumulation).
+    ///
+    /// No zero-skipping: `0 * NaN = NaN` must propagate exactly as in
+    /// the XLA matmul, so a diverged model reports NaN loss instead of
+    /// a plausible finite value.
+    pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for t in 0..k {
+                let av = a[i * k + t];
+                let brow = &b[t * n..(t + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `a[m,n] @ b[k,n]^T` → `[m,k]`.
+    pub fn mm_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * k];
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            for j in 0..k {
+                let brow = &b[j * n..(j + 1) * n];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                out[i * k + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// `a[m,k]^T @ b[m,n]` → `[k,n]` (same NaN contract as [`mm`]).
+    pub fn mm_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; k * n];
+        for t in 0..m {
+            let arow = &a[t * k..(t + 1) * k];
+            let brow = &b[t * n..(t + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `fq(w) * mask`, elementwise (per-element constant recomputation,
+    /// as the original interpreter did).
+    pub fn quantized_masked(w: &[f32], mask: &[f32], wb: f32, ib: f32) -> Vec<f32> {
+        w.iter()
+            .zip(mask)
+            .map(|(&wv, &mv)| fake_quant(wv, wb, ib) * mv)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n).map(f).collect()
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_bitwise() {
+        let shapes = [(1, 1, 1), (2, 3, 2), (7, 5, 9), (33, 17, 65), (64, 64, 64), (65, 1, 16)];
+        for &(m, k, n) in &shapes {
+            let a = seq(m * k, |i| ((i * 37 % 23) as f32 - 11.0) / 7.0);
+            let b = seq(k * n, |i| ((i * 29 % 19) as f32 - 9.0) / 5.0);
+            let want = naive::mm(&a, &b, m, k, n);
+            let mut got = vec![f32::NAN; m * n];
+            matmul(&mut got, &a, &b, m, k, n, &mut Vec::new());
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "m={m} k={k} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_bt_at_match_naive_bitwise() {
+        let (m, k, n) = (13, 21, 17);
+        let a = seq(m * n, |i| ((i * 13 % 31) as f32 - 15.0) / 8.0);
+        let b = seq(k * n, |i| ((i * 7 % 27) as f32 - 13.0) / 4.0);
+        let want = naive::mm_bt(&a, &b, m, n, k);
+        let mut got = vec![0.0f32; m * k];
+        matmul_bt(&mut got, &a, &b, m, n, k);
+        assert_eq!(got, want);
+
+        let a2 = seq(m * k, |i| ((i * 11 % 29) as f32 - 14.0) / 16.0);
+        let b2 = seq(m * n, |i| ((i * 5 % 33) as f32 - 16.0) / 32.0);
+        let want2 = naive::mm_at(&a2, &b2, m, k, n);
+        let mut got2 = vec![0.0f32; k * n];
+        matmul_at(&mut got2, &a2, &b2, m, k, n, &mut Vec::new());
+        assert_eq!(got2, want2);
+    }
+
+    #[test]
+    fn quant_matches_scalar_fake_quant() {
+        for &(wb, ib) in &[(0.0f32, 0.0f32), (6.0, 3.0), (7.0, 3.0), (12.0, 6.0)] {
+            let q = Quant::new(wb, ib);
+            for v in [-9.0f32, -0.51, -0.0, 0.0, 0.13, 1.0, 3.875, 7.9, f32::NAN] {
+                let a = q.fq(v);
+                let b = fake_quant(v, wb, ib);
+                assert_eq!(a.to_bits(), b.to_bits(), "fq({v}) under <{wb},{ib}>");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_weight_sparse_engages_below_threshold() {
+        let ws = &mut Workspace::new();
+        let (k, n) = (8, 8);
+        let w = seq(k * n, |i| i as f32 / 8.0);
+        let mut mask = vec![0.0f32; k * n];
+        mask[3] = 1.0;
+        mask[40] = 1.0;
+        let q = Quant::new(0.0, 0.0);
+        let mw = MaskedWeight::build(ws, &w, &mask, &q, k, n, SPARSE_DENSITY_THRESHOLD);
+        let sp = mw.sparse.as_ref().expect("density 2/64 engages sparse");
+        assert_eq!(sp.val.len(), 2);
+        assert_eq!(sp.row_ptr.len(), k + 1);
+        // dense mask never engages
+        let ones = vec![1.0f32; k * n];
+        let dense = MaskedWeight::build(ws, &w, &ones, &q, k, n, SPARSE_DENSITY_THRESHOLD);
+        assert!(dense.sparse.is_none());
+        ws.recycle_weight(mw);
+        ws.recycle_weight(dense);
+    }
+
+    #[test]
+    fn row_panel_partition_is_thread_invariant() {
+        let m = 3 * ROW_PANEL + 7;
+        let n = 5;
+        let run = |threads: usize| {
+            with_intra_threads(threads, || {
+                let mut out = vec![0.0f32; m * n];
+                // engage the parallel driver regardless of size
+                let saved = par_min_flops();
+                set_par_min_flops(0);
+                for_row_panels(&mut out, m, n, usize::MAX, |row0, chunk| {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = (row0 * n + i) as f32;
+                    }
+                });
+                set_par_min_flops(saved);
+                out
+            })
+        };
+        let seq = run(1);
+        for t in [2, 3, 8] {
+            assert_eq!(run(t), seq, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn im2col_guards_degenerate_shapes() {
+        let mut cols = [0.0f32; 9];
+        assert!(im2col(&mut cols, &[], [0, 2, 2, 1], 3).is_err());
+        assert!(im2col(&mut cols, &[1.0; 4], [1, 2, 2, 1], 0).is_err());
+        assert!(im2col(&mut cols, &[1.0; 4], [1, 2, 2, 1], 5).is_err());
+        let mut dx = [0.0f32; 4];
+        assert!(col2im(&mut dx, &[1.0; 36], [1, 0, 2, 1], 3).is_err());
+    }
+
+    #[test]
+    fn workspace_recycles_capacity() {
+        let mut ws = Workspace::new();
+        let b = ws.buf(128);
+        let p = b.as_ptr();
+        ws.recycle(b);
+        let b2 = ws.buf(64);
+        assert_eq!(b2.as_ptr(), p, "free-list reuses the allocation");
+        assert_eq!(b2.len(), 64);
+        assert!(b2.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn round_ties_even_matches_jnp_round() {
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(3.5), 4.0);
+        assert_eq!(round_ties_even(-2.5), -2.0);
+        assert_eq!(round_ties_even(-3.5), -4.0);
+        assert_eq!(round_ties_even(2.4), 2.0);
+        assert_eq!(round_ties_even(2.6), 3.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(0.0), 0.0);
+    }
+
+    #[test]
+    fn fake_quant_disabled_is_identity() {
+        for v in [-7.3f32, -0.1, 0.0, 0.49, 123.4] {
+            assert_eq!(fake_quant(v, 0.0, 0.0), v);
+        }
+    }
+
+    #[test]
+    fn fake_quant_rounds_and_saturates() {
+        // ap_fixed<6,3>: scale 8, range [-4, 3.875]
+        assert_eq!(fake_quant(7.9, 6.0, 3.0), 3.875);
+        assert_eq!(fake_quant(-9.0, 6.0, 3.0), -4.0);
+        assert_eq!(fake_quant(0.13, 6.0, 3.0), 0.125);
+        assert_eq!(fake_quant(1.0, 6.0, 3.0), 1.0);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        // a: 2x3, b: 3x2
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = naive::mm(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+        // b^T is 2x3; mm_bt(a2x3 @ (bt)^T) must equal mm with b
+        let bt = [7.0f32, 9.0, 11.0, 8.0, 10.0, 12.0];
+        assert_eq!(naive::mm_bt(&a, &bt, 2, 3, 2), c);
+        // a^T path: (a^T)^T @ b
+        let at = [1.0f32, 4.0, 2.0, 5.0, 3.0, 6.0];
+        assert_eq!(naive::mm_at(&at, &b, 3, 2, 2), c);
+    }
+
+    #[test]
+    fn im2col_col2im_roundtrip_shapes() {
+        // 1x4x4x1 input, k=3: each pixel sees its 3x3 SAME neighborhood
+        let x: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let mut cols = vec![f32::NAN; 16 * 9];
+        im2col(&mut cols, &x, [1, 4, 4, 1], 3).unwrap();
+        // center of patch (kh=1, kw=1) is the pixel itself
+        for (p, &v) in x.iter().enumerate() {
+            assert_eq!(cols[p * 9 + 4], v);
+        }
+        // col2im of all-ones gradient counts each pixel's patch
+        // memberships: 4 at corners, 6 on edges, 9 in the interior
+        let mut dx = vec![f32::NAN; 16];
+        col2im(&mut dx, &[1.0f32; 16 * 9], [1, 4, 4, 1], 3).unwrap();
+        #[rustfmt::skip]
+        let want = [
+            4.0, 6.0, 6.0, 4.0,
+            6.0, 9.0, 9.0, 6.0,
+            6.0, 9.0, 9.0, 6.0,
+            4.0, 6.0, 6.0, 4.0,
+        ];
+        assert_eq!(dx, want);
+    }
+
+    #[test]
+    fn hwio_transpose_roundtrip() {
+        let (k, cin, cout) = (3, 2, 4);
+        let w4: Vec<f32> = (0..k * k * cin * cout).map(|i| i as f32).collect();
+        let mut w2 = vec![0.0f32; w4.len()];
+        hwio_to_2d(&mut w2, &w4, k, cin, cout);
+        let mut back = vec![0.0f32; w4.len()];
+        hwio_from_2d(&mut back, &w2, k, cin, cout);
+        assert_eq!(back, w4);
+    }
+}

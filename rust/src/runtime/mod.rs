@@ -19,12 +19,13 @@ pub mod backend;
 #[cfg(feature = "xla")]
 pub mod exec;
 pub mod interp;
+pub mod kernels;
 pub mod manifest;
 pub mod tensor;
 
 pub use backend::{ExecBackend, ModelExec, ModelExecutable, Runtime, RuntimeStats};
 #[cfg(feature = "xla")]
 pub use exec::PjrtBackend;
-pub use interp::RefBackend;
+pub use interp::{KernelMode, RefBackend};
 pub use manifest::{LayerDesc, Manifest, ModelVariant};
 pub use tensor::HostTensor;

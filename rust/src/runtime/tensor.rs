@@ -70,6 +70,15 @@ impl HostTensor {
         }
     }
 
+    /// Shape and f32 data in one borrow — the interpreter hot path
+    /// reads both per step and must not clone either.
+    pub fn as_f32_shaped(&self) -> Result<(&[usize], &[f32])> {
+        match self {
+            HostTensor::F32 { shape, data } => Ok((shape, data)),
+            _ => Err(Error::other("tensor is not f32")),
+        }
+    }
+
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match self {
             HostTensor::F32 { data, .. } => Ok(data),

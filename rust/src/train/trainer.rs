@@ -151,23 +151,30 @@ impl<'a> Trainer<'a> {
     /// batch, bounded by batch/n_test; acceptable for trend experiments).
     ///
     /// Model operands are staged once per evaluate() call, not once per
-    /// batch — the quantization search calls this hundreds of times.
+    /// batch — the quantization search calls this hundreds of times —
+    /// and the whole split goes through [`ModelExecutable::eval_batches`]
+    /// so the backend hoists per-run work (the reference interpreter
+    /// quantizes and sparsifies the weights once for the full split).
     pub fn evaluate(&self, state: &ModelState) -> Result<EvalResult> {
         let batch = self.exec.variant.eval_batch;
-        let base = state.params.len() + state.masks.len() + 1;
-        let mut args: Vec<HostTensor> = Vec::with_capacity(base + 2);
-        args.extend(state.params.iter().cloned());
-        args.extend(state.masks.iter().cloned());
-        args.push(state.qcfg_tensor());
+        let base_len = state.params.len() + state.masks.len() + 1;
+        let mut base: Vec<HostTensor> = Vec::with_capacity(base_len);
+        base.extend(state.params.iter().cloned());
+        base.extend(state.masks.iter().cloned());
+        base.push(state.qcfg_tensor());
+
+        let mut batches = Vec::new();
+        let mut valids = Vec::new();
+        for (x, y, valid) in self.data.test_batches(batch)? {
+            batches.push((x, y));
+            valids.push(valid);
+        }
+        let results = self.exec.eval_batches(&base, &batches)?;
 
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut n = 0usize;
-        for (x, y, valid) in self.data.test_batches(batch)? {
-            args.truncate(base);
-            args.push(x);
-            args.push(y);
-            let (loss, acc) = self.exec.eval_step(&args)?;
+        for ((loss, acc), valid) in results.into_iter().zip(valids) {
             loss_sum += loss as f64 * valid as f64;
             acc_sum += acc as f64 * valid as f64;
             n += valid;

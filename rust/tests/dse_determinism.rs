@@ -16,6 +16,7 @@ use metaml::model::state::Precision;
 use metaml::model::ModelState;
 use metaml::prune::{autoprune, AutopruneConfig};
 use metaml::quant::{quantize_search, QuantConfig};
+use metaml::runtime::kernels::{set_par_min_flops, PAR_MIN_FLOPS_DEFAULT};
 use metaml::runtime::{Manifest, ModelExecutable, ModelVariant, Runtime};
 use metaml::scale::{scale_search, ScaleConfig};
 use metaml::train::{TrainConfig, Trainer};
@@ -214,6 +215,60 @@ fn autoprune_is_jobs_invariant() {
         assert_eq!(a.layer_nnz, b.layer_nnz);
     }
     // the accepted states are bit-identical (params, masks, precisions)
+    assert_eq!(state_seq.params, state_par.params);
+    assert_eq!(state_seq.masks, state_par.masks);
+}
+
+/// One AUTOPRUNE search with intra-probe parallelism actually engaged:
+/// 256-row eval batches split into four row panels, and the mul-add
+/// floor is dropped to zero so the panel driver runs even on this small
+/// model.  Worker lending hands single-probe batches the pool's whole
+/// thread budget, and the trace must still be bit-identical between
+/// `jobs = 1` and `jobs = 4`.
+#[test]
+fn autoprune_with_intra_probe_parallelism_is_jobs_invariant() {
+    let mut variant = mlp_variant(1.0, "dse_mlp_intra", 16, 8);
+    variant.train_batch = 128;
+    variant.eval_batch = 256;
+    let manifest = Manifest::from_variants(vec![variant.clone()]);
+    let runtime = Runtime::reference();
+    let exec = ModelExecutable::load(&runtime, &manifest, &variant.tag).unwrap();
+    let data = small_dataset();
+    let trainer = Trainer::new(&runtime, &exec, &data);
+    let mut base = ModelState::init(&variant, 83);
+    trainer
+        .fit(&mut base, &TrainConfig { epochs: 2, seed: 19, ..Default::default() })
+        .unwrap();
+
+    let cfg = AutopruneConfig {
+        tolerate_acc_loss: 0.05,
+        rate_threshold: 0.1,
+        train_epochs: 1,
+        seed: 31,
+    };
+
+    set_par_min_flops(0);
+    let mut state_seq = base.clone();
+    let trace_seq =
+        autoprune(&trainer, &mut state_seq, &cfg, &ProbePool::new(1)).unwrap();
+    let mut state_par = base.clone();
+    let trace_par =
+        autoprune(&trainer, &mut state_par, &cfg, &ProbePool::new(4)).unwrap();
+    set_par_min_flops(PAR_MIN_FLOPS_DEFAULT);
+
+    assert_eq!(trace_seq.best_rate.to_bits(), trace_par.best_rate.to_bits());
+    assert_eq!(
+        trace_seq.best_accuracy.to_bits(),
+        trace_par.best_accuracy.to_bits()
+    );
+    assert_eq!(trace_seq.probes.len(), trace_par.probes.len());
+    for (a, b) in trace_seq.probes.iter().zip(&trace_par.probes) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.rate.to_bits(), b.rate.to_bits());
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.layer_nnz, b.layer_nnz);
+    }
     assert_eq!(state_seq.params, state_par.params);
     assert_eq!(state_seq.masks, state_par.masks);
 }

@@ -1,0 +1,350 @@
+//! Kernel-layer parity contract.
+//!
+//! The fast interpreter path (`runtime/kernels.rs`: blocked matmul,
+//! sparse-aware masked matmul, workspace reuse, intra-probe row-panel
+//! parallelism) promises *bit-identical* results to the original naive
+//! implementation (`KernelMode::Naive`) — not approximately equal.
+//! These tests pin that promise at every level:
+//!
+//! * raw kernels: blocked vs naive matmul on random data;
+//! * masked matmul: sparse vs dense at 0% / 50% / 90% / 100% sparsity
+//!   (random masks, fixed seed);
+//! * full model steps: `Fast` and `DenseOnly` train/eval vs `Naive`
+//!   over multiple SGD steps, quantization on, masks pruned;
+//! * NaN / -0.0 propagation through the sparse and blocked paths;
+//! * intra-probe parallelism: any thread count produces the same bits;
+//! * batched eval (`eval_batches`) vs the per-batch eval loop.
+
+use metaml::bench_support::mlp_chain_variant;
+use metaml::model::state::Precision;
+use metaml::model::ModelState;
+use metaml::runtime::kernels::{
+    self, naive, set_par_min_flops, sparse_matmul_count, with_intra_threads, MaskedWeight, Quant,
+    Workspace, PAR_MIN_FLOPS_DEFAULT, SPARSE_DENSITY_THRESHOLD,
+};
+use metaml::runtime::{
+    HostTensor, KernelMode, Manifest, ModelExecutable, ModelVariant, RefBackend, Runtime,
+};
+use metaml::util::Prng;
+
+/// The jet-tagging MLP (16 → 64 → 32 → 32 → 5) the benches use.
+fn jet_variant() -> ModelVariant {
+    mlp_chain_variant("jet_dnn", 1.0, &[16, 64, 32, 32, 5])
+}
+
+fn exec_with_mode(variant: &ModelVariant, mode: KernelMode) -> ModelExecutable {
+    let manifest = Manifest::from_variants(vec![variant.clone()]);
+    let runtime = Runtime::from_backend(Box::new(RefBackend::with_mode(mode)));
+    ModelExecutable::load(&runtime, &manifest, &variant.tag).unwrap()
+}
+
+fn batch(variant: &ModelVariant, rows: usize, seed: u64) -> (HostTensor, HostTensor) {
+    let mut rng = Prng::new(seed);
+    let d = variant.input_shape[0];
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..rows)
+        .map(|_| rng.below(variant.n_classes) as i32)
+        .collect();
+    (
+        HostTensor::F32 { shape: vec![rows, d], data: x },
+        HostTensor::I32 { shape: vec![rows], data: y },
+    )
+}
+
+/// Randomly zero a `sparsity` fraction of every mask (fixed seed).
+fn prune_masks(state: &mut ModelState, sparsity: f64, seed: u64) {
+    let mut rng = Prng::new(seed);
+    for m in &mut state.masks {
+        if let HostTensor::F32 { data, .. } = m {
+            for v in data.iter_mut() {
+                *v = if rng.uniform() < sparsity { 0.0 } else { 1.0 };
+            }
+        }
+    }
+}
+
+fn assert_params_bit_identical(a: &[HostTensor], b: &[HostTensor], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: param count");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        let (da, db) = (pa.as_f32().unwrap(), pb.as_f32().unwrap());
+        assert_eq!(da.len(), db.len(), "{ctx}: param {i} length");
+        for (j, (va, vb)) in da.iter().zip(db).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{ctx}: param {i} element {j}: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// raw kernels
+// ---------------------------------------------------------------------------
+
+#[test]
+fn blocked_matmul_matches_naive_on_random_data() {
+    let mut rng = Prng::new(41);
+    for &(m, k, n) in &[(5, 7, 3), (64, 16, 64), (65, 33, 17), (256, 16, 64)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let want = naive::mm(&a, &b, m, k, n);
+        let mut got = vec![f32::NAN; m * n];
+        let mut pack = Vec::new();
+        kernels::matmul(&mut got, &a, &b, m, k, n, &mut pack);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits(), "matmul {m}x{k}x{n}");
+        }
+    }
+}
+
+#[test]
+fn sparse_masked_matmul_matches_dense_at_all_sparsities() {
+    let (m, k, n) = (96, 48, 32);
+    let q = Quant::new(10.0, 5.0);
+    for &sparsity in &[0.0f64, 0.5, 0.9, 1.0] {
+        let mut rng = Prng::new(1000 + (sparsity * 100.0) as u64);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mask: Vec<f32> = (0..k * n)
+            .map(|_| if rng.uniform() < sparsity { 0.0 } else { 1.0 })
+            .collect();
+
+        let mut ws = Workspace::new();
+        // threshold 0.0: the sparse list is never built (dense path)
+        let dense = MaskedWeight::build(&mut ws, &w, &mask, &q, k, n, 0.0);
+        let mut want = vec![f32::NAN; m * n];
+        kernels::matmul_masked(&mut want, &a, &dense, m, k, n, &mut ws.pack);
+
+        let sparse = MaskedWeight::build(&mut ws, &w, &mask, &q, k, n, SPARSE_DENSITY_THRESHOLD);
+        if sparsity >= 0.9 {
+            assert!(
+                sparse.sparse.is_some(),
+                "sparsity {sparsity}: compressed index list should engage"
+            );
+        }
+        let mut got = vec![f32::NAN; m * n];
+        kernels::matmul_masked(&mut got, &a, &sparse, m, k, n, &mut ws.pack);
+        for (idx, (wv, gv)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                wv.to_bits(),
+                gv.to_bits(),
+                "sparsity {sparsity}, element {idx}: {wv} vs {gv}"
+            );
+        }
+
+        // the backward masked kernel agrees with the naive oracle too
+        let wq = naive::quantized_masked(&w, &mask, 10.0, 5.0);
+        let g: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let want_bt = naive::mm_bt(&g, &wq, m, n, k);
+        let mut got_bt = vec![f32::NAN; m * k];
+        kernels::matmul_bt_masked(&mut got_bt, &g, &sparse, m, n, k);
+        for (wv, gv) in want_bt.iter().zip(&got_bt) {
+            assert_eq!(wv.to_bits(), gv.to_bits(), "bt sparsity {sparsity}");
+        }
+    }
+}
+
+#[test]
+fn nan_weights_and_negative_zero_propagate_through_sparse_path() {
+    let (m, k, n) = (8, 6, 4);
+    let q = Quant::new(0.0, 0.0); // quantization off: values flow raw
+    let mut rng = Prng::new(77);
+    let mut a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    a[3] = -0.0;
+    let mut w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    w[5] = f32::NAN;
+    w[9] = -0.0;
+    // heavily pruned mask keeping exactly four weights alive, including
+    // the NaN and -0.0 ones (density 4/24 < SPARSE_DENSITY_THRESHOLD)
+    let mut mask = vec![0.0f32; k * n];
+    for idx in [0usize, 5, 9, 13] {
+        mask[idx] = 1.0;
+    }
+
+    let mut ws = Workspace::new();
+    let dense = MaskedWeight::build(&mut ws, &w, &mask, &q, k, n, 0.0);
+    let sparse = MaskedWeight::build(&mut ws, &w, &mask, &q, k, n, SPARSE_DENSITY_THRESHOLD);
+    assert!(sparse.sparse.is_some(), "pruned mask should engage the sparse path");
+
+    let mut want = vec![0.0f32; m * n];
+    kernels::matmul_masked(&mut want, &a, &dense, m, k, n, &mut ws.pack);
+    let mut got = vec![0.0f32; m * n];
+    kernels::matmul_masked(&mut got, &a, &sparse, m, k, n, &mut ws.pack);
+    assert!(want.iter().any(|v| v.is_nan()), "NaN weight must reach the output");
+    for (wv, gv) in want.iter().zip(&got) {
+        assert_eq!(wv.to_bits(), gv.to_bits(), "{wv} vs {gv}");
+    }
+
+    // non-finite *activations* force the dense fallback — still identical
+    let mut a_nan = a.clone();
+    a_nan[0] = f32::NAN;
+    let mut want2 = vec![0.0f32; m * n];
+    kernels::matmul_masked(&mut want2, &a_nan, &dense, m, k, n, &mut ws.pack);
+    let mut got2 = vec![0.0f32; m * n];
+    kernels::matmul_masked(&mut got2, &a_nan, &sparse, m, k, n, &mut ws.pack);
+    for (wv, gv) in want2.iter().zip(&got2) {
+        assert_eq!(wv.to_bits(), gv.to_bits());
+    }
+}
+
+#[test]
+fn degenerate_conv_shapes_error_cleanly() {
+    let mut cols = [0.0f32; 0];
+    // zero batch
+    assert!(kernels::im2col(&mut cols, &[], [0, 4, 4, 1], 3).is_err());
+    // kernel larger than the spatial extent
+    let x = [0.0f32; 2 * 2];
+    let mut cols = [0.0f32; 4 * 9];
+    assert!(kernels::im2col(&mut cols, &x, [1, 2, 2, 1], 5).is_err());
+    let mut dx = [0.0f32; 4];
+    assert!(kernels::col2im(&mut dx, &cols, [1, 2, 2, 1], 5).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// full model steps
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fast_train_and_eval_match_naive_bitwise() {
+    let variant = jet_variant();
+    let mut base = ModelState::init(&variant, 7);
+    for p in base.precisions.iter_mut() {
+        *p = Precision::new(10, 5);
+    }
+    prune_masks(&mut base, 0.5, 11);
+    let (x, y) = batch(&variant, 64, 3);
+
+    let naive_exec = exec_with_mode(&variant, KernelMode::Naive);
+    for mode in [KernelMode::Fast, KernelMode::DenseOnly] {
+        let exec = exec_with_mode(&variant, mode);
+        let mut s_naive = base.clone();
+        let mut s_fast = base.clone();
+        for step in 0..3 {
+            let (pa, la, aa) = naive_exec
+                .train_step(&s_naive.train_args(x.clone(), y.clone(), 0.1))
+                .unwrap();
+            let (pb, lb, ab) = exec
+                .train_step(&s_fast.train_args(x.clone(), y.clone(), 0.1))
+                .unwrap();
+            assert_eq!(la.to_bits(), lb.to_bits(), "{mode:?} step {step} loss");
+            assert_eq!(aa.to_bits(), ab.to_bits(), "{mode:?} step {step} acc");
+            assert_params_bit_identical(&pa, &pb, &format!("{mode:?} step {step}"));
+            s_naive.params = pa;
+            s_fast.params = pb;
+        }
+        let (la, aa) = naive_exec
+            .eval_step(&s_naive.eval_args(x.clone(), y.clone()))
+            .unwrap();
+        let (lb, ab) = exec
+            .eval_step(&s_fast.eval_args(x.clone(), y.clone()))
+            .unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(), "{mode:?} eval loss");
+        assert_eq!(aa.to_bits(), ab.to_bits(), "{mode:?} eval acc");
+    }
+}
+
+#[test]
+fn sparse_model_steps_match_dense_at_all_sparsities() {
+    let variant = jet_variant();
+    for &sparsity in &[0.0f64, 0.5, 0.9, 1.0] {
+        let mut base = ModelState::init(&variant, 13);
+        for p in base.precisions.iter_mut() {
+            *p = Precision::new(12, 6);
+        }
+        prune_masks(&mut base, sparsity, 17 + (sparsity * 10.0) as u64);
+        let (x, y) = batch(&variant, 64, 5);
+
+        let fast = exec_with_mode(&variant, KernelMode::Fast);
+        let dense = exec_with_mode(&variant, KernelMode::DenseOnly);
+
+        let before = sparse_matmul_count();
+        let (pf, lf, af) = fast
+            .train_step(&base.train_args(x.clone(), y.clone(), 0.05))
+            .unwrap();
+        let (pd, ld, ad) = dense
+            .train_step(&base.train_args(x.clone(), y.clone(), 0.05))
+            .unwrap();
+        assert_eq!(lf.to_bits(), ld.to_bits(), "sparsity {sparsity} loss");
+        assert_eq!(af.to_bits(), ad.to_bits(), "sparsity {sparsity} acc");
+        assert_params_bit_identical(&pf, &pd, &format!("sparsity {sparsity}"));
+        if sparsity >= 0.9 {
+            assert!(
+                sparse_matmul_count() > before,
+                "sparsity {sparsity}: the sparse path should engage"
+            );
+        }
+
+        let (lf, af) = fast.eval_step(&base.eval_args(x.clone(), y.clone())).unwrap();
+        let (ld, ad) = dense.eval_step(&base.eval_args(x.clone(), y.clone())).unwrap();
+        assert_eq!(lf.to_bits(), ld.to_bits(), "sparsity {sparsity} eval loss");
+        assert_eq!(af.to_bits(), ad.to_bits(), "sparsity {sparsity} eval acc");
+    }
+}
+
+#[test]
+fn intra_probe_parallelism_is_bit_identical_for_any_thread_count() {
+    let variant = jet_variant();
+    let mut state = ModelState::init(&variant, 23);
+    for p in state.precisions.iter_mut() {
+        *p = Precision::new(10, 5);
+    }
+    prune_masks(&mut state, 0.9, 29);
+    // 256 rows = 4 row panels: large enough to split
+    let (x, y) = batch(&variant, 256, 9);
+    let exec = exec_with_mode(&variant, KernelMode::Fast);
+
+    // drop the size floor so these small matmuls split panels at all
+    set_par_min_flops(0);
+    let (l1, a1) = with_intra_threads(1, || {
+        exec.eval_step(&state.eval_args(x.clone(), y.clone())).unwrap()
+    });
+    let (p1, tl1, ta1) = with_intra_threads(1, || {
+        exec.train_step(&state.train_args(x.clone(), y.clone(), 0.1)).unwrap()
+    });
+    for threads in [2usize, 3, 8] {
+        let (l, a) = with_intra_threads(threads, || {
+            exec.eval_step(&state.eval_args(x.clone(), y.clone())).unwrap()
+        });
+        assert_eq!(l1.to_bits(), l.to_bits(), "eval loss, {threads} threads");
+        assert_eq!(a1.to_bits(), a.to_bits(), "eval acc, {threads} threads");
+        let (p, tl, ta) = with_intra_threads(threads, || {
+            exec.train_step(&state.train_args(x.clone(), y.clone(), 0.1)).unwrap()
+        });
+        assert_eq!(tl1.to_bits(), tl.to_bits(), "train loss, {threads} threads");
+        assert_eq!(ta1.to_bits(), ta.to_bits(), "train acc, {threads} threads");
+        assert_params_bit_identical(&p1, &p, &format!("{threads} threads"));
+    }
+    set_par_min_flops(PAR_MIN_FLOPS_DEFAULT);
+}
+
+#[test]
+fn eval_batches_matches_per_batch_eval_loop() {
+    let variant = jet_variant();
+    let mut state = ModelState::init(&variant, 31);
+    for p in state.precisions.iter_mut() {
+        *p = Precision::new(10, 5);
+    }
+    prune_masks(&mut state, 0.9, 37);
+
+    let mut base: Vec<HostTensor> = Vec::new();
+    base.extend(state.params.iter().cloned());
+    base.extend(state.masks.iter().cloned());
+    base.push(state.qcfg_tensor());
+    let batches: Vec<(HostTensor, HostTensor)> = (0..3)
+        .map(|i| batch(&variant, 64, 100 + i))
+        .collect();
+
+    for mode in [KernelMode::Fast, KernelMode::DenseOnly, KernelMode::Naive] {
+        let exec = exec_with_mode(&variant, mode);
+        let batched = exec.eval_batches(&base, &batches).unwrap();
+        assert_eq!(batched.len(), batches.len());
+        for ((x, y), (bl, ba)) in batches.iter().zip(&batched) {
+            let (l, a) = exec
+                .eval_step(&state.eval_args(x.clone(), y.clone()))
+                .unwrap();
+            assert_eq!(l.to_bits(), bl.to_bits(), "{mode:?} batched eval loss");
+            assert_eq!(a.to_bits(), ba.to_bits(), "{mode:?} batched eval acc");
+        }
+    }
+}
