@@ -19,6 +19,10 @@
 //!   * budgeted search: exhaustive vs NSGA-II `evolve` over a hardware
 //!     grid — probes spent and front hypervolume, with an assertion
 //!     that evolution recovers the full front at fewer evaluations;
+//!   * surrogate-guided search: `evolve` + the online ridge surrogate
+//!     vs a prefilter-only `evolve` baseline at the same budget —
+//!     asserts equal front hypervolume at >= 2x fewer training probes,
+//!     and measures raw surrogate fit/predict throughput;
 //!   * literal marshaling overhead (host→device→host round trip);
 //!   * flow-engine overhead (no-op task graph traversal).
 //!
@@ -27,9 +31,10 @@
 //! reproduce the numbers.  Writes bench_out/perf_runtime.csv and a
 //! machine-readable bench_out/perf_runtime.json.
 //!
-//! `--smoke` runs only the interpreter-kernel section with tiny
-//! iteration counts — a CI-sized functional check that the sparse path
-//! engages on a pruned model, not a timing run.
+//! `--smoke` runs only the interpreter-kernel and surrogate-search
+//! sections with tiny iteration counts / grids — a CI-sized functional
+//! check (sparse path engages, surrogate halves the probes), not a
+//! timing run.
 
 use std::time::Instant;
 
@@ -245,15 +250,225 @@ fn interp_section(rec: &mut Recorder, table: &mut Table, smoke: bool) -> metaml:
     Ok(())
 }
 
+/// Surrogate-guided search: `evolve` + the online ridge model vs a
+/// prefilter-only `evolve` baseline at the same budget, on a
+/// clock-period-only grid where the model is provably exact after its
+/// two-point warmup (every non-latency objective is constant, latency
+/// is linear in the period — the construction
+/// rust/tests/surrogate_search.rs pins).  The baseline's budget covers
+/// the whole grid, so its front doubles as the exhaustive reference
+/// the hypervolume parity check compares against.  Also measures raw
+/// fit/predict throughput of the ridge model on a synthetic space.
+fn surrogate_section(rec: &mut Recorder, table: &mut Table, smoke: bool) -> metaml::Result<()> {
+    use std::sync::Arc;
+
+    use metaml::bench_support::synthetic_jet_mini_manifest;
+    use metaml::config::FlowSpec;
+    use metaml::dse::ProbeStats;
+    use metaml::search::pareto::hypervolume;
+    use metaml::search::{
+        run_search, Candidate, SearchOutcome, SearchSpace, SearchSpec, Surrogate, SurrogateSpec,
+    };
+
+    let clocks = if smoke { "[5, 10, 15, 20]" } else { "[4, 5, 6, 8, 10, 12]" };
+    let budget = if smoke { 4 } else { 6 };
+    let spec = FlowSpec::parse(&format!(
+        r#"{{
+  "name": "bench_surrogate",
+  "cfg": {{
+    "model": "jet_mini",
+    "gen.train_epochs": 1,
+    "prune.train_epochs": 1,
+    "prune.pruning_rate_thresh": 0.25,
+    "quantize.start_precision": "ap_fixed<8,4>",
+    "quantize.min_bits": 7
+  }},
+  "tasks": [
+    {{"id": "gen", "type": "KERAS-MODEL-GEN"}},
+    {{"id": "prune", "type": "PRUNING"}},
+    {{"id": "hls", "type": "HLS4ML"}},
+    {{"id": "quantize", "type": "QUANTIZATION"}},
+    {{"id": "synth", "type": "VIVADO-HLS"}}
+  ],
+  "edges": [["gen", "prune"], ["prune", "hls"], ["hls", "quantize"],
+             ["quantize", "synth"]],
+  "explore": {{"cfg_grid": {{"hls.clock_period": {clocks}}}}},
+  "search": {{"strategy": "evolve", "budget": {budget}, "seed": 9,
+             "surrogate": {{"warmup": 2, "every": 8}}}}
+}}"#
+    ))?;
+    // the reference-interpreter mini session keeps this section
+    // deterministic and runnable everywhere (including --smoke on CI)
+    let session = Session::with_backend(Runtime::reference(), synthetic_jet_mini_manifest());
+    let registry = TaskRegistry::builtin();
+    let jobs = metaml::dse::default_jobs();
+
+    let baseline = SearchSpec {
+        strategy: "evolve".into(),
+        budget: Some(budget),
+        seed: 9,
+        prefilter: true,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let base = run_search(&session, &registry, &spec, &baseline, &[], jobs)?;
+    let base_secs = t0.elapsed().as_secs_f64();
+    let search = spec.search.clone().expect("bench spec declares a search section");
+    let t0 = Instant::now();
+    let sur = run_search(&session, &registry, &spec, &search, &[], jobs)?;
+    let sur_secs = t0.elapsed().as_secs_f64();
+    let report = sur.surrogate.clone().ok_or_else(|| {
+        metaml::Error::other("surrogate search returned no surrogate accounting")
+    })?;
+
+    // one reference point over both runs so the hypervolumes compare
+    let objs = |out: &SearchOutcome| -> metaml::Result<Vec<Vec<f64>>> {
+        out.outcome.results.iter().map(|r| r.min_objectives()).collect()
+    };
+    let (base_objs, sur_objs) = (objs(&base)?, objs(&sur)?);
+    let n_obj = base_objs[0].len();
+    let reference: Vec<f64> = (0..n_obj)
+        .map(|d| {
+            base_objs
+                .iter()
+                .chain(&sur_objs)
+                .map(|o| o[d])
+                .fold(f64::NEG_INFINITY, f64::max)
+                + 1.0
+        })
+        .collect();
+    let base_hv = hypervolume(&base_objs, &reference);
+    let sur_hv = hypervolume(&sur_objs, &reference);
+
+    // baseline budget == grid size, so its front is the full-grid
+    // front; the surrogate must match it with at most half the
+    // training probes (the headline acceptance number)
+    if (base_hv - sur_hv).abs() > 1e-9 * base_hv.abs().max(1.0) {
+        return Err(metaml::Error::other(format!(
+            "surrogate: front hypervolume {sur_hv} != full-grid {base_hv}"
+        )));
+    }
+    if 2 * sur.probes.train_issued > base.probes.train_issued {
+        return Err(metaml::Error::other(format!(
+            "surrogate: {} train probes vs baseline {} — less than the 2x saving",
+            sur.probes.train_issued, base.probes.train_issued
+        )));
+    }
+    if report.probes_saved() == 0 {
+        return Err(metaml::Error::other(
+            "surrogate: no probes saved (every deferral was re-validated)",
+        ));
+    }
+
+    for (name, out, secs, hv) in [
+        ("baseline", &base, base_secs, base_hv),
+        ("surrogate", &sur, sur_secs, sur_hv),
+    ] {
+        table.row_strs(&[
+            &format!("search {name} evolve"),
+            "jet_mini",
+            &format!(
+                "{:.3} s, {} evals, {} train probes, HV {:.3}",
+                secs,
+                out.evaluations(),
+                out.probes.train_issued,
+                hv
+            ),
+        ]);
+        rec.record(&format!("surrogate_{name}_s"), "jet_mini", secs, "s");
+        rec.record(
+            &format!("surrogate_{name}_evals"),
+            "jet_mini",
+            out.evaluations() as f64,
+            "flows",
+        );
+        rec.record(
+            &format!("surrogate_{name}_train_probes"),
+            "jet_mini",
+            out.probes.train_issued as f64,
+            "probes",
+        );
+        rec.record(&format!("surrogate_{name}_hypervolume"), "jet_mini", hv, "hv");
+    }
+    table.row_strs(&[
+        "search surrogate deferrals",
+        "jet_mini",
+        &format!(
+            "{} deferred, {} validated, {} probes saved",
+            report.deferred,
+            report.validated,
+            report.probes_saved()
+        ),
+    ]);
+    rec.record(
+        "surrogate_probes_saved",
+        "jet_mini",
+        report.probes_saved() as f64,
+        "probes",
+    );
+
+    // raw model throughput: refit-per-observation and predict over a
+    // three-dimensional numeric space (the per-candidate costs a
+    // search actually pays)
+    let space = SearchSpace {
+        orders: vec![None],
+        grid: vec![
+            ("a".to_string(), (0..8).map(|v| Value::Number(v as f64)).collect()),
+            ("b".to_string(), (0..6).map(|v| Value::Number(2.0 * v as f64)).collect()),
+            ("c".to_string(), (0..5).map(|v| Value::Number(3.0 * v as f64)).collect()),
+        ],
+        ranges: Vec::new(),
+    };
+    let sspec = SurrogateSpec { warmup: Some(1), ..Default::default() };
+    let mut model = Surrogate::new(&space, &sspec, Arc::new(ProbeStats::default()));
+    let cand = |i: usize| Candidate {
+        order: 0,
+        grid: vec![i % 8, (i / 2) % 6, (i / 3) % 5],
+        range: Vec::new(),
+    };
+    let n_obs = if smoke { 64 } else { 256 };
+    let t0 = Instant::now();
+    for i in 0..n_obs {
+        let a = (i % 8) as f64;
+        let b = 2.0 * ((i / 2) % 6) as f64;
+        let c = 3.0 * ((i / 3) % 5) as f64;
+        model.observe_truth(
+            &cand(i),
+            &[1.0 + a - b + 0.5 * c, 0.1 * a * b + c, 3.0 - a, a + b + c],
+        );
+        model.fit_if_dirty();
+    }
+    let fit_secs = t0.elapsed().as_secs_f64();
+    let fits_s = model.report().fits as f64 / fit_secs.max(1e-12);
+    model.finish_warmup();
+    let n_preds = if smoke { 10_000 } else { 100_000 };
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for i in 0..n_preds {
+        acc += model.predict(&cand(i))[0];
+    }
+    let pred_secs = t0.elapsed().as_secs_f64();
+    if !acc.is_finite() {
+        return Err(metaml::Error::other("surrogate: non-finite prediction sum"));
+    }
+    let preds_s = n_preds as f64 / pred_secs.max(1e-12);
+    table.row_strs(&["surrogate fit", "-", &format!("{:.0} refits/s", fits_s)]);
+    table.row_strs(&["surrogate predict", "-", &format!("{:.0} predictions/s", preds_s)]);
+    rec.record("surrogate_fits_s", "-", fits_s, "1/s");
+    rec.record("surrogate_predictions_s", "-", preds_s, "1/s");
+    Ok(())
+}
+
 fn main() -> metaml::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let mut rec = Recorder::new();
     let mut table = Table::new(&["metric", "model", "value"]);
 
-    // interpreter kernels (the only section --smoke runs)
+    // interpreter kernels + surrogate search (the sections --smoke runs)
     interp_section(&mut rec, &mut table, smoke)?;
+    surrogate_section(&mut rec, &mut table, smoke)?;
     if smoke {
-        println!("== §Perf: interpreter kernels (smoke) ==");
+        println!("== §Perf: interpreter kernels + surrogate search (smoke) ==");
         println!("{}", table.render());
         rec.save()?;
         return Ok(());

@@ -49,9 +49,11 @@
 //!                "cfg_grid": {"prune.tolerate_acc_loss": [0.01, 0.03]}}`
 //! * **Budgeted search** — a `search` section selects how the variant
 //!   space is traversed (strategy, evaluation budget, seed, numeric
-//!   range dimensions); see [`crate::search`]:
+//!   range dimensions, optional online surrogate); see
+//!   [`crate::search`]:
 //!   `"search": {"strategy": "evolve", "budget": 8, "seed": 7,
-//!               "range": {"hls.clock_period": {"min": 4, "max": 10}}}`
+//!               "range": {"hls.clock_period": {"min": 4, "max": 10}},
+//!               "surrogate": {"warmup": 2, "every": 2}}`
 
 use std::collections::BTreeMap;
 

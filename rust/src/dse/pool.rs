@@ -64,6 +64,8 @@ pub struct ProbeStats {
     train_computed: AtomicUsize,
     hw_issued: AtomicUsize,
     hw_computed: AtomicUsize,
+    sur_fits: AtomicUsize,
+    sur_predictions: AtomicUsize,
 }
 
 /// A point-in-time copy of [`ProbeStats`].
@@ -77,6 +79,11 @@ pub struct ProbeCounts {
     pub hw_issued: usize,
     /// Hardware probes actually estimated (cache misses).
     pub hw_computed: usize,
+    /// Surrogate model refits ([`crate::search::surrogate`]).
+    pub sur_fits: usize,
+    /// Surrogate objective-vector predictions served in place of (or
+    /// ahead of) flow evaluations.
+    pub sur_predictions: usize,
 }
 
 impl ProbeStats {
@@ -86,7 +93,21 @@ impl ProbeStats {
             train_computed: self.train_computed.load(Ordering::Relaxed),
             hw_issued: self.hw_issued.load(Ordering::Relaxed),
             hw_computed: self.hw_computed.load(Ordering::Relaxed),
+            sur_fits: self.sur_fits.load(Ordering::Relaxed),
+            sur_predictions: self.sur_predictions.load(Ordering::Relaxed),
         }
+    }
+
+    /// The surrogate refit its model (called from
+    /// [`crate::search::surrogate::Surrogate`], which shares this
+    /// counter block through [`crate::dse::ProbeTiers`]).
+    pub fn note_surrogate_fit(&self) {
+        self.sur_fits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The surrogate served one objective-vector prediction.
+    pub fn note_surrogate_prediction(&self) {
+        self.sur_predictions.fetch_add(1, Ordering::Relaxed);
     }
 }
 

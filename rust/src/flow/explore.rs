@@ -35,7 +35,8 @@
 use std::collections::{BTreeMap, BTreeSet, HashSet};
 
 use crate::config::FlowSpec;
-use crate::dse::{ProbeCounts, ProbeTiers};
+use crate::dse::ProbeTiers;
+use crate::search::driver::SearchCost;
 use crate::error::{Error, Result};
 use crate::flow::graph::{FlowGraph, NodeKind};
 use crate::flow::registry::TaskRegistry;
@@ -460,13 +461,16 @@ pub fn front_table(out: &ExploreOutcome) -> Table {
 /// the result set), so rows identify their grid point / sampled values
 /// directly instead of only through the rendered label.
 ///
-/// With `probes` set, six run-level probe-accounting columns are
-/// appended per row (issued / computed / hit-rate per probe kind) —
-/// aggregates over the whole run, identical on every row, so a CSV
-/// consumer can join cost onto any slice of the result set.  Computed
-/// counts are wall-clock-style diagnostics (see
-/// [`crate::dse::ProbeStats`]), not replay-comparable data.
-pub fn front_csv(out: &ExploreOutcome, probes: Option<&ProbeCounts>) -> CsvWriter {
+/// With `cost` set, run-level accounting columns are appended per row:
+/// issued / computed / hit-rate per probe kind, the search shape
+/// (`grid_size`, `budget`, `spent`), and — when the run used the
+/// learned surrogate — its fit/prediction counts, probes saved, and
+/// mean absolute prediction error per objective.  Aggregates over the
+/// whole run, identical on every row, so a CSV consumer can join cost
+/// onto any slice of the result set.  Computed counts are
+/// wall-clock-style diagnostics (see [`crate::dse::ProbeStats`]), not
+/// replay-comparable data.
+pub fn front_csv(out: &ExploreOutcome, cost: Option<&SearchCost>) -> CsvWriter {
     let on_front: HashSet<usize> = out.front.iter().copied().collect();
     let cfg_keys: BTreeSet<&str> = out
         .results
@@ -475,7 +479,7 @@ pub fn front_csv(out: &ExploreOutcome, probes: Option<&ProbeCounts>) -> CsvWrite
         .collect();
     let mut header =
         vec!["variant", "accuracy", "dsp", "lut", "latency_ns", "power_w", "on_front"];
-    if probes.is_some() {
+    if cost.is_some() {
         header.extend([
             "train_issued",
             "train_computed",
@@ -483,6 +487,16 @@ pub fn front_csv(out: &ExploreOutcome, probes: Option<&ProbeCounts>) -> CsvWrite
             "hw_issued",
             "hw_computed",
             "hw_hit_rate",
+            "grid_size",
+            "budget",
+            "spent",
+            "sur_fits",
+            "sur_predictions",
+            "sur_probes_saved",
+            "sur_mae_accuracy",
+            "sur_mae_dsp",
+            "sur_mae_lut",
+            "sur_mae_latency_ns",
         ]);
     }
     header.extend(cfg_keys.iter().copied());
@@ -505,15 +519,38 @@ pub fn front_csv(out: &ExploreOutcome, probes: Option<&ProbeCounts>) -> CsvWrite
             g("power_w"),
             if on_front.contains(&i) { "1".into() } else { "0".into() },
         ];
-        if let Some(c) = probes {
+        if let Some(c) = cost {
             row.extend([
-                c.train_issued.to_string(),
-                c.train_computed.to_string(),
-                hit_rate(c.train_issued, c.train_computed),
-                c.hw_issued.to_string(),
-                c.hw_computed.to_string(),
-                hit_rate(c.hw_issued, c.hw_computed),
+                c.probes.train_issued.to_string(),
+                c.probes.train_computed.to_string(),
+                hit_rate(c.probes.train_issued, c.probes.train_computed),
+                c.probes.hw_issued.to_string(),
+                c.probes.hw_computed.to_string(),
+                hit_rate(c.probes.hw_issued, c.probes.hw_computed),
+                c.grid_size.to_string(),
+                c.budget.to_string(),
+                c.spent.to_string(),
             ]);
+            // surrogate columns stay in the header (stable schema) but
+            // are blank for runs that never enabled it
+            match &c.surrogate {
+                Some(s) => {
+                    row.extend([
+                        s.fits.to_string(),
+                        s.predictions.to_string(),
+                        s.probes_saved().to_string(),
+                    ]);
+                    for o in 0..4 {
+                        row.push(
+                            s.mean_abs_error
+                                .get(o)
+                                .map(|e| format!("{e}"))
+                                .unwrap_or_default(),
+                        );
+                    }
+                }
+                None => row.extend(vec![String::new(); 7]),
+            }
         }
         for &key in &cfg_keys {
             row.push(
@@ -532,6 +569,7 @@ pub fn front_csv(out: &ExploreOutcome, probes: Option<&ProbeCounts>) -> CsvWrite
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dse::ProbeCounts;
 
     /// The explorer's objective mapping: (acc ↑, dsp ↓, lut ↓, lat ↓)
     /// points into the minimizing vectors [`VariantResult::min_objectives`]
@@ -669,25 +707,59 @@ mod tests {
     fn front_csv_appends_probe_columns_when_given_counts() {
         let results = vec![fake_result("a", vec![], 0.9)];
         let front = front_of(&results).unwrap();
-        let counts = ProbeCounts {
-            train_issued: 40,
-            train_computed: 10,
-            hw_issued: 8,
-            hw_computed: 8,
+        let cost = SearchCost {
+            probes: ProbeCounts {
+                train_issued: 40,
+                train_computed: 10,
+                hw_issued: 8,
+                hw_computed: 8,
+                ..Default::default()
+            },
+            grid_size: 16,
+            budget: 12,
+            spent: 12,
+            surrogate: None,
         };
-        let csv =
-            front_csv(&ExploreOutcome { results, front }, Some(&counts)).render();
+        let csv = front_csv(&ExploreOutcome { results, front }, Some(&cost)).render();
         let mut lines = csv.lines();
         assert_eq!(
             lines.next().unwrap(),
             "variant,accuracy,dsp,lut,latency_ns,power_w,on_front,\
-             train_issued,train_computed,train_hit_rate,hw_issued,hw_computed,hw_hit_rate"
+             train_issued,train_computed,train_hit_rate,hw_issued,hw_computed,hw_hit_rate,\
+             grid_size,budget,spent,sur_fits,sur_predictions,sur_probes_saved,\
+             sur_mae_accuracy,sur_mae_dsp,sur_mae_lut,sur_mae_latency_ns"
         );
-        // 75% of training probes were cache hits; no hardware hits
+        // 75% of training probes were cache hits; no hardware hits;
+        // the surrogate columns are blank for a surrogate-less run
         assert!(
-            lines.next().unwrap().ends_with(",1,40,10,0.7500,8,8,0.0000"),
+            lines
+                .next()
+                .unwrap()
+                .ends_with(",1,40,10,0.7500,8,8,0.0000,16,12,12,,,,,,,"),
             "{csv}"
         );
+    }
+
+    #[test]
+    fn front_csv_fills_surrogate_columns_from_the_report() {
+        let results = vec![fake_result("a", vec![], 0.9)];
+        let front = front_of(&results).unwrap();
+        let cost = SearchCost {
+            probes: ProbeCounts { train_issued: 10, ..Default::default() },
+            grid_size: 24,
+            budget: 24,
+            spent: 24,
+            surrogate: Some(crate::search::SurrogateReport {
+                fits: 3,
+                predictions: 20,
+                deferred: 15,
+                validated: 2,
+                mean_abs_error: vec![0.5, 1.0, 2.0, 4.0],
+            }),
+        };
+        let csv = front_csv(&ExploreOutcome { results, front }, Some(&cost)).render();
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",24,24,24,3,20,13,0.5,1,2,4"), "{csv}");
     }
 
     #[test]

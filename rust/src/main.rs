@@ -54,19 +54,26 @@ COMMANDS:
                                 probe worker count for all O-tasks;
                                 --synthetic uses the in-memory jet manifest
   explore     --flow <spec.json> [--model <name>] [--jobs N] [--synthetic]
-              [--strategy S] [--budget N] [--seed S] [--cache-dir DIR]
+              [--strategy S] [--budget N] [--seed S] [--surrogate]
+              [--warmup N] [--cache-dir DIR]
               [-c k=v]...       search the spec's variant space and print
                                 the (accuracy, DSP, LUT, latency) Pareto
                                 front; --strategy picks exhaustive |
                                 random | evolve (overriding the spec's
                                 `search` section), --budget bounds the
                                 flow evaluations spent, --seed fixes the
-                                sampler PRNG; --cache-dir persists probe
-                                results on disk so a repeated search
-                                recomputes nothing; --synthetic uses the
-                                in-memory jet manifest (no artifacts
-                                needed); a CSV of the evaluated variants
-                                lands in report/
+                                sampler PRNG; --surrogate enables the
+                                online learned predictor (proposals whose
+                                predicted objectives are dominated skip
+                                the flow run entirely), --warmup sets its
+                                real evaluations before predictions gate
+                                anything (implies --surrogate);
+                                --cache-dir persists probe results on
+                                disk so a repeated search recomputes
+                                nothing; --synthetic uses the in-memory
+                                jet manifest (no artifacts needed); a CSV
+                                of the evaluated variants lands in
+                                report/
   cache       stats|clear --cache-dir DIR   inspect or delete the
                                 persistent probe-result store
   synth       --model <name> [--scale S] [--device D] [--clock NS]
@@ -392,6 +399,8 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             ("--strategy", true),
             ("--budget", true),
             ("--seed", true),
+            ("--surrogate", false),
+            ("--warmup", true),
             ("--cache-dir", true),
             ("-c", true),
         ],
@@ -435,9 +444,18 @@ fn cmd_explore(args: &[String]) -> Result<()> {
     if let Some(seed) = parse_opt::<u64>(args, "--seed")? {
         search.seed = seed;
     }
+    if flag(args, "--surrogate") && search.surrogate.is_none() {
+        search.surrogate = Some(Default::default());
+    }
+    if let Some(warmup) = parse_opt::<usize>(args, "--warmup")? {
+        if warmup == 0 {
+            return Err(metaml::Error::other("--warmup must be at least 1"));
+        }
+        search.surrogate.get_or_insert_with(Default::default).warmup = Some(warmup);
+    }
 
     println!(
-        "exploring '{}' with strategy '{}' (budget {}, seed {}, jobs {jobs})",
+        "exploring '{}' with strategy '{}' (budget {}, seed {}, jobs {jobs}{})",
         spec.graph.name,
         search.strategy,
         search
@@ -445,6 +463,7 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             .map(|b| b.to_string())
             .unwrap_or_else(|| "grid".into()),
         search.seed,
+        if search.surrogate.is_some() { ", surrogate on" } else { "" },
     );
 
     // probe tiers: in-memory memos, plus the persistent disk tier when
@@ -508,9 +527,30 @@ fn cmd_explore(args: &[String]) -> Result<()> {
         out.probes.hw_computed,
         pct(out.probes.hw_issued, out.probes.hw_computed),
     );
+    if let Some(s) = &out.surrogate {
+        let mae = if s.mean_abs_error.is_empty() {
+            "-".to_string()
+        } else {
+            ["acc", "dsp", "lut", "lat_ns"]
+                .iter()
+                .zip(&s.mean_abs_error)
+                .map(|(n, e)| format!("{n} {e:.4}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        println!(
+            "surrogate: {} fits, {} predictions, {} deferred ({} validated, \
+             {} probes saved), mean abs err [{mae}]",
+            s.fits,
+            s.predictions,
+            s.deferred,
+            s.validated,
+            s.probes_saved(),
+        );
+    }
 
     let csv_path = report_dir().join(format!("explore_{}.csv", spec.graph.name));
-    front_csv(&out.outcome, Some(&out.probes)).save(&csv_path)?;
+    front_csv(&out.outcome, Some(&out.cost())).save(&csv_path)?;
     println!("\nwrote {}", csv_path.display());
     Ok(())
 }
@@ -687,6 +727,8 @@ mod tests {
             ("--strategy", true),
             ("--budget", true),
             ("--seed", true),
+            ("--surrogate", false),
+            ("--warmup", true),
             ("--cache-dir", true),
             ("-c", true),
         ];
@@ -697,6 +739,9 @@ mod tests {
             "8",
             "--seed",
             "7",
+            "--surrogate",
+            "--warmup",
+            "4",
             "--cache-dir",
             "/tmp/metaml-cache",
         ]);
@@ -705,6 +750,10 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("--budget"), "{err}");
+        let err = check_flags("explore", &s(&["--surogate"]), EXPLORE)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--surrogate"), "{err}");
     }
 
     #[test]

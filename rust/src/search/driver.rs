@@ -14,7 +14,9 @@
 //! their LOG event streams, and the reported front are bit-identical
 //! for every `--jobs` value.  Strategies see only their own seeded PRNG
 //! and the deterministic observations; worker counts change wall-clock
-//! only.
+//! only.  The surrogate policy below preserves this: its fit, its
+//! predictions and every defer/evaluate decision are pure functions of
+//! the evaluation history, which is itself deterministic.
 //!
 //! **Budget semantics:** `budget` bounds *proposals*.  Every candidate
 //! a strategy proposes consumes one unit, including exact repeats of
@@ -22,20 +24,42 @@
 //! but a repeat costs no flow execution — it is observed from the memo.
 //! An empty proposal batch ends the search early (space exhausted or
 //! strategy converged).
+//!
+//! **Surrogate policy** (`search.surrogate`): with the online learned
+//! predictor enabled ([`crate::search::surrogate`]), the driver first
+//! spends part of the budget on a space-filling **warmup** (a strided
+//! sample of the grid enumeration, so every dimension shows variance
+//! before the model is trusted).  After that, each fresh proposal is
+//! predicted before it is run: a candidate whose prediction — granted
+//! a trust-radius optimism margin — is still dominated by an evaluated
+//! point is **deferred** (the strategy observes the predicted
+//! objectives, flagged `predicted`; no flow runs, no training probes
+//! are spent).  Deferred candidates are periodically re-validated
+//! (best-predicted first), and at the end every deferred candidate
+//! whose re-prediction is not dominated by the truth set is evaluated
+//! — the reported results and front contain **only truth**, never
+//! predictions.
 
 use std::collections::HashMap;
 
 use crate::config::FlowSpec;
 use crate::dse::{ProbeCounts, ProbeTiers};
 use crate::error::Result;
-use crate::flow::explore::{run_variants, ExploreOutcome, FlowVariant};
+use crate::flow::explore::{run_variants, ExploreOutcome, FlowVariant, VariantResult};
 use crate::flow::registry::TaskRegistry;
 use crate::flow::session::Session;
 use crate::json::Value;
-use crate::search::pareto::pareto_front_min;
+use crate::search::pareto::{dominates_min, nsga_order, pareto_front_min};
 use crate::search::prefilter::HwPrefilter;
 use crate::search::space::{Candidate, CandidateKey, SearchSpace};
-use crate::search::{make_strategy, SearchSpec};
+use crate::search::surrogate::{Surrogate, SurrogateReport};
+use crate::search::{make_strategy, CandidateRanker, SearchSpec};
+use crate::util::prng::Prng;
+
+/// Seed salt for the warmup sampler's range draws — forked from the
+/// search seed so the strategy's own PRNG stream is untouched by
+/// enabling the surrogate.
+const WARMUP_SEED_SALT: u64 = 0x5u64.wrapping_mul(0x9e37_79b9_7f4a_7c15);
 
 /// What the driver exposes to a strategy while it proposes/observes.
 pub struct SearchCtx<'a> {
@@ -43,9 +67,16 @@ pub struct SearchCtx<'a> {
     /// Exact points already evaluated (key → index into the result
     /// list).  Strategies use it to avoid burning budget on repeats.
     pub evaluated: &'a HashMap<CandidateKey, usize>,
-    /// Hardware-only candidate ranking, when the search enabled it and
-    /// the session could build a baseline model.
-    pub prefilter: Option<&'a HwPrefilter>,
+    /// Points answered by surrogate prediction instead of a flow run
+    /// (key → deferred-pool index).  Empty unless `search.surrogate`
+    /// is enabled; strategies should treat them like evaluated points
+    /// when hunting for fresh proposals.
+    pub deferred: &'a HashMap<CandidateKey, usize>,
+    /// Best-first candidate ranking without flow runs: the fitted
+    /// surrogate once it is ready, else the hardware prefilter when
+    /// the search enabled it and the session could build a baseline
+    /// model.
+    pub ranker: Option<&'a dyn CandidateRanker>,
 }
 
 /// One evaluated proposal, in proposal order.
@@ -56,9 +87,13 @@ pub struct Observation {
     /// Minimization objectives
     /// ([`crate::flow::VariantResult::min_objectives`]).
     pub objectives: Vec<f64>,
-    /// True when the proposal repeated an already-evaluated point and
-    /// was served from the memo.
+    /// True when the proposal repeated an already-seen point and was
+    /// served from the memo (or the deferred pool).
     pub repeat: bool,
+    /// True when `objectives` are surrogate predictions, not a flow
+    /// run.  A later truth evaluation of the same candidate arrives as
+    /// a fresh non-predicted observation.
+    pub predicted: bool,
 }
 
 /// A pluggable multi-objective search strategy over the joint variant
@@ -81,16 +116,30 @@ pub trait SearchStrategy: Send {
 pub struct SearchOutcome {
     /// Unique evaluated variants in evaluation order, plus the Pareto
     /// front over them — the same shape the exhaustive explorer
-    /// reports, so tables/CSVs are shared.
+    /// reports, so tables/CSVs are shared.  Truth only: deferred
+    /// candidates never appear here.
     pub outcome: ExploreOutcome,
     pub strategy: String,
     /// Size of the discrete grid (what `Exhaustive` would evaluate).
     pub grid_size: usize,
     pub budget: usize,
-    /// Proposals consumed (unique evaluations + repeats).
+    /// Proposals consumed (unique evaluations + repeats + deferrals).
     pub spent: usize,
     /// Probe totals issued/computed through the search's shared pools.
     pub probes: ProbeCounts,
+    /// Surrogate accounting, when `search.surrogate` was enabled.
+    pub surrogate: Option<SurrogateReport>,
+}
+
+/// The cost/efficiency bundle the explore summary and
+/// [`crate::flow::explore::front_csv`] surface alongside the front.
+#[derive(Debug, Clone, Default)]
+pub struct SearchCost {
+    pub probes: ProbeCounts,
+    pub grid_size: usize,
+    pub budget: usize,
+    pub spent: usize,
+    pub surrogate: Option<SurrogateReport>,
 }
 
 impl SearchOutcome {
@@ -98,6 +147,121 @@ impl SearchOutcome {
     pub fn evaluations(&self) -> usize {
         self.outcome.results.len()
     }
+
+    pub fn cost(&self) -> SearchCost {
+        SearchCost {
+            probes: self.probes,
+            grid_size: self.grid_size,
+            budget: self.budget,
+            spent: self.spent,
+            surrogate: self.surrogate.clone(),
+        }
+    }
+}
+
+/// A proposal answered by prediction instead of a flow run.
+struct DeferredEntry {
+    candidate: Candidate,
+    label: String,
+    /// The prediction that justified the deferral (what the strategy
+    /// observed, and what error feedback is measured against).
+    predicted: Vec<f64>,
+    validated: bool,
+}
+
+/// The ranker strategies see: the fitted surrogate wins once ready
+/// (it models the full candidate vector), else the hardware prefilter.
+fn ranker_of<'a>(
+    surrogate: &'a Option<Surrogate>,
+    prefilter: &'a Option<HwPrefilter>,
+) -> Option<&'a dyn CandidateRanker> {
+    match surrogate {
+        Some(s) if s.ready() => Some(s as &dyn CandidateRanker),
+        _ => prefilter.as_ref().map(|p| p as &dyn CandidateRanker),
+    }
+}
+
+/// Run `fresh` variants and append their truth results/objectives.
+fn evaluate_fresh(
+    session: &Session,
+    registry: &TaskRegistry,
+    extra_cfg: &[(String, Value)],
+    jobs: usize,
+    shared: &ProbeTiers,
+    fresh: &[FlowVariant],
+    results: &mut Vec<VariantResult>,
+    objectives: &mut Vec<Vec<f64>>,
+) -> Result<()> {
+    let ran = run_variants(session, registry, fresh, extra_cfg, jobs, shared)?;
+    for r in ran {
+        objectives.push(r.min_objectives()?);
+        results.push(r);
+    }
+    Ok(())
+}
+
+/// Truth-evaluate one deferred candidate: run the flow, move its key
+/// from the deferred pool to the evaluated memo, feed the prediction
+/// error back into the trust radius, teach the surrogate the truth,
+/// and let the strategy observe the corrected objectives.
+#[allow(clippy::too_many_arguments)]
+fn validate_deferred(
+    idx: usize,
+    session: &Session,
+    registry: &TaskRegistry,
+    spec: &FlowSpec,
+    extra_cfg: &[(String, Value)],
+    jobs: usize,
+    shared: &ProbeTiers,
+    space: &SearchSpace,
+    surrogate: &mut Surrogate,
+    strategy: &mut dyn SearchStrategy,
+    deferred: &mut [DeferredEntry],
+    deferred_index: &mut HashMap<CandidateKey, usize>,
+    index: &mut HashMap<CandidateKey, usize>,
+    results: &mut Vec<VariantResult>,
+    objectives: &mut Vec<Vec<f64>>,
+) -> Result<()> {
+    let candidate = deferred[idx].candidate.clone();
+    let key = space.key(&candidate);
+    let slot = results.len();
+    let fresh = vec![space.materialize(spec, &candidate)?];
+    evaluate_fresh(session, registry, extra_cfg, jobs, shared, &fresh, results, objectives)?;
+    deferred[idx].validated = true;
+    deferred_index.remove(&key);
+    index.insert(key, slot);
+    surrogate.note_validated();
+    surrogate.record_error(&deferred[idx].predicted, &objectives[slot], objectives);
+    surrogate.observe_truth(&candidate, &objectives[slot]);
+    surrogate.fit_if_dirty();
+    let obs = Observation {
+        candidate,
+        label: results[slot].label.clone(),
+        objectives: objectives[slot].clone(),
+        repeat: false,
+        predicted: false,
+    };
+    let ctx = SearchCtx { space, evaluated: index, deferred: deferred_index, ranker: None };
+    strategy.observe(&ctx, &[obs]);
+    Ok(())
+}
+
+/// Best-predicted pending deferral (NSGA order over fresh
+/// re-predictions), if any.
+fn top_deferred(surrogate: &Surrogate, deferred: &[DeferredEntry]) -> Option<usize> {
+    let pending: Vec<usize> = deferred
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| !d.validated)
+        .map(|(i, _)| i)
+        .collect();
+    if pending.is_empty() {
+        return None;
+    }
+    let preds: Vec<Vec<f64>> =
+        pending.iter().map(|&i| surrogate.predict(&deferred[i].candidate)).collect();
+    let order = nsga_order(&preds);
+    Some(pending[order[0]])
 }
 
 /// Run a budgeted search over `spec`'s joint variant space.
@@ -140,17 +304,78 @@ pub fn run_search_tiered(
     } else {
         None
     };
+    let mut surrogate = search
+        .surrogate
+        .as_ref()
+        .map(|s| Surrogate::new(&space, s, std::sync::Arc::clone(&shared.stats)));
 
-    let mut results = Vec::new();
+    let mut results: Vec<VariantResult> = Vec::new();
     let mut objectives: Vec<Vec<f64>> = Vec::new();
     let mut index: HashMap<CandidateKey, usize> = HashMap::new();
+    let mut deferred: Vec<DeferredEntry> = Vec::new();
+    let mut deferred_index: HashMap<CandidateKey, usize> = HashMap::new();
     let mut spent = 0usize;
+
+    // ---- warmup: a driver-owned, space-filling strided sample ------
+    // Front-seeking proposals concentrate on the best-known region and
+    // can leave a dimension with zero variance (every point at the
+    // same clock), which no fit can learn from.  Striding the grid
+    // enumeration guarantees coverage; range dimensions draw from a
+    // PRNG forked off the search seed so the strategy's stream is
+    // untouched.
+    if let Some(sur) = surrogate.as_mut() {
+        let want = sur.warmup().min(budget);
+        let mut prng = Prng::new(search.seed ^ WARMUP_SEED_SALT);
+        let mut picks: Vec<Candidate> = Vec::new();
+        for i in 0..want {
+            let at = if want >= grid_size { i % grid_size } else { i * grid_size / want };
+            let c = space.nth_grid_point(at, &mut prng);
+            let key = space.key(&c);
+            if index.contains_key(&key) {
+                continue;
+            }
+            index.insert(key, picks.len());
+            picks.push(c);
+        }
+        if !picks.is_empty() {
+            spent += picks.len();
+            let fresh: Vec<FlowVariant> =
+                picks.iter().map(|c| space.materialize(spec, c)).collect::<Result<_>>()?;
+            evaluate_fresh(
+                session, registry, extra_cfg, jobs, &shared, &fresh, &mut results,
+                &mut objectives,
+            )?;
+            let observations: Vec<Observation> = picks
+                .iter()
+                .enumerate()
+                .map(|(slot, c)| {
+                    sur.observe_truth(c, &objectives[slot]);
+                    Observation {
+                        candidate: c.clone(),
+                        label: results[slot].label.clone(),
+                        objectives: objectives[slot].clone(),
+                        repeat: false,
+                        predicted: false,
+                    }
+                })
+                .collect();
+            let ctx =
+                SearchCtx { space: &space, evaluated: &index, deferred: &deferred_index, ranker: None };
+            strategy.observe(&ctx, &observations);
+        }
+        sur.finish_warmup();
+        sur.fit_if_dirty();
+    }
+
+    // ---- propose → gate → evaluate → observe -----------------------
+    let mut rounds = 0usize;
     while spent < budget {
         let batch = {
             let ctx = SearchCtx {
                 space: &space,
                 evaluated: &index,
-                prefilter: prefilter.as_ref(),
+                deferred: &deferred_index,
+                ranker: ranker_of(&surrogate, &prefilter),
             };
             strategy.propose(&ctx, budget - spent)?
         };
@@ -159,46 +384,151 @@ pub fn run_search_tiered(
         }
         let batch = &batch[..batch.len().min(budget - spent)];
         spent += batch.len();
+        rounds += 1;
 
-        // resolve each proposal: repeats (incl. batch-internal ones)
-        // are served from the memo, first appearances get the next
-        // result slot, all in proposal order
-        let prior = results.len();
-        let mut slots: Vec<(usize, bool)> = Vec::with_capacity(batch.len());
-        let mut fresh: Vec<FlowVariant> = Vec::new();
-        for c in batch {
-            match index.get(&space.key(c)) {
-                Some(&slot) => slots.push((slot, true)),
-                None => {
-                    let slot = prior + fresh.len();
-                    index.insert(space.key(c), slot);
-                    fresh.push(space.materialize(spec, c)?);
-                    slots.push((slot, false));
-                }
-            }
+        // resolve each proposal in order: evaluated repeats from the
+        // memo, deferred repeats re-served their prediction, fresh
+        // points either deferred (prediction dominated even with the
+        // optimism margin) or slotted for a real run
+        enum Slot {
+            Truth { slot: usize, repeat: bool },
+            Predicted { idx: usize, repeat: bool },
         }
-        let ran = run_variants(session, registry, &fresh, extra_cfg, jobs, &shared)?;
-        for r in ran {
-            objectives.push(r.min_objectives()?);
-            results.push(r);
+        let prior = results.len();
+        let mut slots: Vec<Slot> = Vec::with_capacity(batch.len());
+        let mut fresh: Vec<FlowVariant> = Vec::new();
+        let mut fresh_cands: Vec<Candidate> = Vec::new();
+        let mut band_preds: Vec<(usize, Vec<f64>)> = Vec::new();
+        for c in batch {
+            let key = space.key(c);
+            if let Some(&slot) = index.get(&key) {
+                slots.push(Slot::Truth { slot, repeat: true });
+                continue;
+            }
+            if let Some(&idx) = deferred_index.get(&key) {
+                slots.push(Slot::Predicted { idx, repeat: true });
+                continue;
+            }
+            if let Some(sur) = surrogate.as_mut().filter(|s| s.ready()) {
+                let pred = sur.predict(c);
+                if sur.defer(&pred, &objectives) {
+                    sur.note_deferred();
+                    let idx = deferred.len();
+                    deferred_index.insert(key, idx);
+                    deferred.push(DeferredEntry {
+                        candidate: c.clone(),
+                        label: space.materialize(spec, c)?.label,
+                        predicted: pred,
+                        validated: false,
+                    });
+                    slots.push(Slot::Predicted { idx, repeat: false });
+                    continue;
+                }
+                // predicted-front band: worth a real evaluation; keep
+                // the prediction to score the model once truth lands
+                band_preds.push((prior + fresh.len(), pred));
+            }
+            let slot = prior + fresh.len();
+            index.insert(key, slot);
+            fresh_cands.push(c.clone());
+            fresh.push(space.materialize(spec, c)?);
+            slots.push(Slot::Truth { slot, repeat: false });
+        }
+        evaluate_fresh(
+            session, registry, extra_cfg, jobs, &shared, &fresh, &mut results, &mut objectives,
+        )?;
+        if let Some(sur) = surrogate.as_mut() {
+            for (slot, pred) in &band_preds {
+                sur.record_error(pred, &objectives[*slot], &objectives);
+            }
+            for (i, c) in fresh_cands.iter().enumerate() {
+                sur.observe_truth(c, &objectives[prior + i]);
+            }
+            sur.fit_if_dirty();
         }
 
         let observations: Vec<Observation> = batch
             .iter()
             .zip(&slots)
-            .map(|(c, &(slot, repeat))| Observation {
-                candidate: c.clone(),
-                label: results[slot].label.clone(),
-                objectives: objectives[slot].clone(),
-                repeat,
+            .map(|(c, slot)| match *slot {
+                Slot::Truth { slot, repeat } => Observation {
+                    candidate: c.clone(),
+                    label: results[slot].label.clone(),
+                    objectives: objectives[slot].clone(),
+                    repeat,
+                    predicted: false,
+                },
+                Slot::Predicted { idx, repeat } => Observation {
+                    candidate: c.clone(),
+                    label: deferred[idx].label.clone(),
+                    objectives: deferred[idx].predicted.clone(),
+                    repeat,
+                    predicted: true,
+                },
             })
             .collect();
-        let ctx = SearchCtx {
-            space: &space,
-            evaluated: &index,
-            prefilter: prefilter.as_ref(),
+        {
+            let ctx = SearchCtx {
+                space: &space,
+                evaluated: &index,
+                deferred: &deferred_index,
+                ranker: ranker_of(&surrogate, &prefilter),
+            };
+            strategy.observe(&ctx, &observations);
+        }
+
+        // periodic re-validation: every K rounds the best-predicted
+        // deferral is truth-evaluated (spending one of the flows the
+        // deferral saved), so a drifting model is caught mid-search,
+        // not only at the end
+        if let Some(sur) = surrogate.as_mut() {
+            if sur.ready() && rounds % sur.every() == 0 {
+                if let Some(idx) = top_deferred(sur, &deferred) {
+                    validate_deferred(
+                        idx, session, registry, spec, extra_cfg, jobs, &shared, &space, sur,
+                        strategy.as_mut(), &mut deferred, &mut deferred_index, &mut index,
+                        &mut results, &mut objectives,
+                    )?;
+                }
+            }
+        }
+    }
+
+    // ---- final validation: the front may not rest on predictions ---
+    // Re-predict every pending deferral with the final model; any not
+    // strictly dominated by an evaluated point gets truth-evaluated
+    // (best-predicted first, so each run can dominate away the rest).
+    // Every iteration shrinks the pending pool by one, so this
+    // terminates; on a hostile space it degrades to evaluating all
+    // deferrals — exhaustive behavior, never a wrong front.
+    while let Some(sur) = surrogate.as_mut() {
+        let next = {
+            let pending: Vec<usize> = deferred
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| !d.validated)
+                .map(|(i, _)| i)
+                .collect();
+            let live: Vec<(usize, Vec<f64>)> = pending
+                .iter()
+                .map(|&i| (i, sur.predict(&deferred[i].candidate)))
+                .filter(|(_, p)| !objectives.iter().any(|t| dominates_min(t, p)))
+                .collect();
+            if live.is_empty() {
+                None
+            } else {
+                let preds: Vec<Vec<f64>> = live.iter().map(|(_, p)| p.clone()).collect();
+                Some(live[nsga_order(&preds)[0]].0)
+            }
         };
-        strategy.observe(&ctx, &observations);
+        match next {
+            Some(idx) => validate_deferred(
+                idx, session, registry, spec, extra_cfg, jobs, &shared, &space, sur,
+                strategy.as_mut(), &mut deferred, &mut deferred_index, &mut index, &mut results,
+                &mut objectives,
+            )?,
+            None => break,
+        }
     }
 
     let front = pareto_front_min(&objectives);
@@ -209,5 +539,6 @@ pub fn run_search_tiered(
         budget,
         spent,
         probes: shared.probe_counts(),
+        surrogate: surrogate.as_ref().map(Surrogate::report),
     })
 }

@@ -10,12 +10,14 @@
 //! 1. **Seeding** (first call): enumerate the whole discrete grid when
 //!    it is small (≤ [`GEN0_ENUM_CAP`] points; range dimensions get
 //!    seeded uniform values), else draw a uniform pool of `4 × P`
-//!    points.  The pool is then *ordered* — by the cheap-estimator
-//!    prefilter when enabled (hardware-only NSGA rank through
-//!    [`crate::dse::ProbePool::estimate_batch`]/`HwCache`, so no
-//!    training probe is spent learning what the synthesis estimator
-//!    already knows), otherwise by a seeded shuffle — and the first
-//!    `min(P, budget left)` points become generation 0.
+//!    points.  The pool is then *ordered* — by the context's
+//!    [`crate::search::CandidateRanker`] when one is available (the
+//!    cheap-estimator prefilter's hardware-only NSGA rank through
+//!    [`crate::dse::ProbePool::estimate_batch`]/`HwCache`, or the
+//!    fitted surrogate's predicted NSGA rank, so no training probe is
+//!    spent learning what a cheap model already knows), otherwise by a
+//!    seeded shuffle — and the first `min(P, budget left)` points
+//!    become generation 0.
 //! 2. **Evolution**: binary-tournament parent selection on (rank,
 //!    crowding), uniform per-dimension crossover, mutation with
 //!    probability `1/n_dims` per dimension (categorical dims resample
@@ -35,7 +37,7 @@
 //! deterministic observation stream, so a fixed (spec, seed, budget)
 //! reproduces the exact candidate sequence for any worker count.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use crate::error::Result;
 use crate::search::driver::{Observation, SearchCtx, SearchStrategy};
@@ -55,8 +57,12 @@ pub struct Evolve {
     prng: Prng,
     population: usize,
     /// Every observed point: (candidate, minimization objectives).
+    /// Surrogate-predicted observations are archived too (they steer
+    /// evolution away from dominated regions) and upgraded in place
+    /// when a re-validation delivers the truth.
     archive: Vec<(Candidate, Vec<f64>)>,
-    archive_keys: HashSet<CandidateKey>,
+    /// Key → (archive slot, objectives are still predicted).
+    archive_keys: HashMap<CandidateKey, (usize, bool)>,
 }
 
 impl Evolve {
@@ -65,16 +71,16 @@ impl Evolve {
             prng: Prng::new(seed),
             population: population.unwrap_or(DEFAULT_POPULATION).max(2),
             archive: Vec::new(),
-            archive_keys: HashSet::new(),
+            archive_keys: HashMap::new(),
         }
     }
 
-    /// Order a candidate pool best-first: prefilter rank when
-    /// available (falling back on estimator errors), else a seeded
-    /// shuffle.
+    /// Order a candidate pool best-first: ranker order when available
+    /// (hardware prefilter or fitted surrogate, falling back on
+    /// estimator errors), else a seeded shuffle.
     fn order_pool(&mut self, ctx: &SearchCtx<'_>, pool: Vec<Candidate>) -> Vec<Candidate> {
-        if let Some(pf) = ctx.prefilter {
-            if let Ok(order) = pf.rank(ctx.space, &pool) {
+        if let Some(rk) = ctx.ranker {
+            if let Ok(order) = rk.rank(ctx.space, &pool) {
                 return order.into_iter().map(|i| pool[i].clone()).collect();
             }
         }
@@ -160,7 +166,8 @@ impl Evolve {
                 break;
             }
             let c = ctx.space.nth_grid_point(i, &mut self.prng);
-            if !ctx.evaluated.contains_key(&ctx.space.key(&c)) {
+            let key = ctx.space.key(&c);
+            if !ctx.evaluated.contains_key(&key) && !ctx.deferred.contains_key(&key) {
                 out.push(c);
             }
         }
@@ -184,7 +191,10 @@ impl SearchStrategy for Evolve {
             let ordered = self.order_pool(ctx, pool);
             return Ok(ordered
                 .into_iter()
-                .filter(|c| !ctx.evaluated.contains_key(&ctx.space.key(c)))
+                .filter(|c| {
+                    let key = ctx.space.key(c);
+                    !ctx.evaluated.contains_key(&key) && !ctx.deferred.contains_key(&key)
+                })
                 .take(want)
                 .collect());
         }
@@ -198,9 +208,9 @@ impl SearchStrategy for Evolve {
             positions[i] = pos;
         }
 
-        // generate novel offspring (surplus ×2 when the prefilter can
-        // rank the extras away)
-        let surplus = if ctx.prefilter.is_some() { 2 * want } else { want };
+        // generate novel offspring (surplus ×2 when a ranker can rank
+        // the extras away)
+        let surplus = if ctx.ranker.is_some() { 2 * want } else { want };
         let mut taken: HashSet<CandidateKey> = HashSet::new();
         let mut pool = Vec::new();
         let mut tries = surplus * TRIES_PER_OFFSPRING;
@@ -211,7 +221,10 @@ impl SearchStrategy for Evolve {
             let (pa, pb) = (self.archive[pa].0.clone(), self.archive[pb].0.clone());
             let child = self.offspring(ctx.space, &pa, &pb);
             let key = ctx.space.key(&child);
-            if !ctx.evaluated.contains_key(&key) && !taken.contains(&key) {
+            if !ctx.evaluated.contains_key(&key)
+                && !ctx.deferred.contains_key(&key)
+                && !taken.contains(&key)
+            {
                 taken.insert(key);
                 pool.push(child);
             }
@@ -228,8 +241,18 @@ impl SearchStrategy for Evolve {
     fn observe(&mut self, ctx: &SearchCtx<'_>, batch: &[Observation]) {
         for obs in batch {
             let key = ctx.space.key(&obs.candidate);
-            if self.archive_keys.insert(key) {
-                self.archive.push((obs.candidate.clone(), obs.objectives.clone()));
+            match self.archive_keys.get(&key) {
+                None => {
+                    self.archive_keys.insert(key, (self.archive.len(), obs.predicted));
+                    self.archive.push((obs.candidate.clone(), obs.objectives.clone()));
+                }
+                // a re-validated deferral upgrades its predicted
+                // archive entry to the truth, in place
+                Some(&(slot, true)) if !obs.predicted => {
+                    self.archive[slot].1 = obs.objectives.clone();
+                    self.archive_keys.insert(key, (slot, false));
+                }
+                Some(_) => {}
             }
         }
     }

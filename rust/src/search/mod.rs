@@ -29,15 +29,20 @@
 //!   "seed": 7,
 //!   "population": 4,
 //!   "prefilter": true,
+//!   "surrogate": {"warmup": 4, "every": 2},
 //!   "range": {"hls.clock_period": {"min": 4.0, "max": 10.0}}
 //! }
 //! ```
 //!
 //! `range` adds numeric dimensions the samplers draw from
 //! ([`RangeDim`]); `exhaustive` rejects them (no finite enumeration).
-//! Determinism: for a fixed (spec, strategy, seed, budget) the
-//! candidate sequence, every LOG event stream, and the front are
-//! bit-identical for every `--jobs` value.
+//! `surrogate` (`true` or an options object) turns on the online
+//! learned predictor that answers dominated proposals without running
+//! the flow ([`surrogate`]).  Determinism: for a fixed (spec, strategy,
+//! seed, budget) the candidate sequence, every LOG event stream, and
+//! the front are bit-identical for every `--jobs` value — with or
+//! without the surrogate (its fit has a fixed feature order, fixed
+//! observation order, and no RNG).
 
 pub mod driver;
 pub mod evolve;
@@ -46,6 +51,7 @@ pub mod pareto;
 pub mod prefilter;
 pub mod random;
 pub mod space;
+pub mod surrogate;
 
 pub use driver::{
     run_search, run_search_tiered, Observation, SearchCtx, SearchOutcome, SearchStrategy,
@@ -55,9 +61,21 @@ pub use exhaustive::Exhaustive;
 pub use prefilter::HwPrefilter;
 pub use random::RandomSample;
 pub use space::{Candidate, CandidateKey, RangeDim, SearchSpace};
+pub use surrogate::{Surrogate, SurrogateReport, SurrogateSpec};
 
 use crate::error::{Error, Result};
 use crate::json::Value;
+
+/// One way to order candidates best-first without running flows: the
+/// hardware-estimator prefilter ranks by cheap estimator calls over
+/// hardware-visible dimensions, the learned surrogate by predicted
+/// NSGA order over the **full** candidate vector.  `Evolve`'s seed
+/// pool and the driver's evaluation band share this seam.
+pub trait CandidateRanker {
+    /// Indices into `candidates`, best first.  Must be deterministic
+    /// in the input order.
+    fn rank(&self, space: &SearchSpace, candidates: &[Candidate]) -> Result<Vec<usize>>;
+}
 
 /// The built-in strategy names, in help/table order.
 pub fn strategy_names() -> &'static [&'static str] {
@@ -77,6 +95,9 @@ pub struct SearchSpec {
     pub population: Option<usize>,
     /// Enable the cheap-estimator hardware prefilter.
     pub prefilter: bool,
+    /// Enable the online learned surrogate (predicted-band evaluation
+    /// policy in the driver).
+    pub surrogate: Option<SurrogateSpec>,
     /// Numeric search dimensions (samplers only).
     pub ranges: Vec<(String, RangeDim)>,
 }
@@ -89,6 +110,7 @@ impl Default for SearchSpec {
             seed: 0,
             population: None,
             prefilter: false,
+            surrogate: None,
             ranges: Vec::new(),
         }
     }
@@ -138,6 +160,9 @@ impl SearchSpec {
                         Error::Config("search prefilter must be a bool".into())
                     })?;
                 }
+                "surrogate" => {
+                    spec.surrogate = Some(SurrogateSpec::parse(val)?);
+                }
                 "range" => {
                     let Value::Object(ranges) = val else {
                         return Err(Error::Config(
@@ -151,7 +176,7 @@ impl SearchSpec {
                 other => {
                     return Err(Error::Config(format!(
                         "unknown search key {other:?} (valid: strategy, budget, seed, \
-                         population, prefilter, range)"
+                         population, prefilter, surrogate, range)"
                     )));
                 }
             }
@@ -196,7 +221,7 @@ mod tests {
     fn parses_full_search_section() {
         let v = json::parse(
             r#"{"strategy": "evolve", "budget": 8, "seed": 7, "population": 4,
-                "prefilter": true,
+                "prefilter": true, "surrogate": {"warmup": 4, "every": 3},
                 "range": {"hls.clock_period": {"min": 4.0, "max": 10.0}}}"#,
         )
         .unwrap();
@@ -206,6 +231,9 @@ mod tests {
         assert_eq!(s.seed, 7);
         assert_eq!(s.population, Some(4));
         assert!(s.prefilter);
+        let sur = s.surrogate.as_ref().expect("surrogate parsed");
+        assert_eq!(sur.warmup, Some(4));
+        assert_eq!(sur.every, 3);
         assert_eq!(s.ranges.len(), 1);
         assert_eq!(s.ranges[0].0, "hls.clock_period");
         assert!(!s.ranges[0].1.integer);
@@ -218,6 +246,17 @@ mod tests {
         assert_eq!(s.budget, None);
         assert_eq!(s.seed, 0);
         assert!(!s.prefilter);
+        assert!(s.surrogate.is_none());
+    }
+
+    #[test]
+    fn surrogate_bool_true_enables_defaults() {
+        let s = SearchSpec::parse(&json::parse(r#"{"surrogate": true}"#).unwrap()).unwrap();
+        assert_eq!(s.surrogate, Some(SurrogateSpec::default()));
+        let bad = SearchSpec::parse(&json::parse(r#"{"surrogate": {"bogus": 1}}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(bad.contains("bogus"), "{bad}");
     }
 
     #[test]

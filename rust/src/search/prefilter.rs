@@ -32,6 +32,7 @@ use crate::json::Value;
 use crate::model::state::Precision;
 use crate::search::pareto::nsga_order;
 use crate::search::space::{Candidate, SearchSpace};
+use crate::search::CandidateRanker;
 use crate::synth::FpgaDevice;
 
 /// The baseline model + shared probe service behind one search's
@@ -39,16 +40,47 @@ use crate::synth::FpgaDevice;
 pub struct HwPrefilter {
     base: HlsModel,
     service: Arc<dyn ProbeService>,
+    /// The hardware-stage parameters `configure` looks up, with their
+    /// instance-scope suffixes precomputed once — `configure` runs per
+    /// candidate on every `rank` call, and rebuilding `".{param}"`
+    /// there put an allocation in the hot candidate loop.
+    part: HwParam,
+    clock: HwParam,
+    io: HwParam,
+    reuse: HwParam,
 }
 
-/// Last CFG entry whose key is exactly `param` or ends in `".{param}"`
-/// (instance-scoped keys like `hls.clock_period`).
+/// A CFG parameter name plus its precomputed `".{param}"` suffix for
+/// instance-scoped keys like `hls.clock_period`.
+struct HwParam {
+    name: &'static str,
+    suffix: String,
+}
+
+impl HwParam {
+    fn new(name: &'static str) -> HwParam {
+        HwParam { name, suffix: format!(".{name}") }
+    }
+
+    /// Last CFG entry whose key is exactly the parameter or ends in
+    /// its dotted suffix.
+    fn get<'a>(&self, cfg: &'a [(String, Value)]) -> Option<&'a Value> {
+        cfg.iter()
+            .rev()
+            .find(|(k, _)| k == self.name || k.ends_with(&self.suffix))
+            .map(|(_, v)| v)
+    }
+}
+
+/// One-off lookup form of [`HwParam::get`] (build-time defaults; the
+/// per-candidate path uses the precomputed suffixes instead).
 fn hw_param<'a>(cfg: &'a [(String, Value)], param: &str) -> Option<&'a Value> {
-    let suffix = format!(".{param}");
-    cfg.iter()
-        .rev()
-        .find(|(k, _)| k == param || k.ends_with(&suffix))
-        .map(|(_, v)| v)
+    let dotted = |k: &str| {
+        k.len() > param.len() + 1
+            && k.ends_with(param)
+            && k.as_bytes()[k.len() - param.len() - 1] == b'.'
+    };
+    cfg.iter().rev().find(|(k, _)| k == param || dotted(k)).map(|(_, v)| v)
 }
 
 impl HwPrefilter {
@@ -83,24 +115,31 @@ impl HwPrefilter {
         // validate the default target once so a bad part fails at build
         // time, not on the first rank() call
         FpgaDevice::target_of(&base)?;
-        Ok(HwPrefilter { base, service: shared.service(jobs) })
+        Ok(HwPrefilter {
+            base,
+            service: shared.service(jobs),
+            part: HwParam::new("FPGA_part_number"),
+            clock: HwParam::new("clock_period"),
+            io: HwParam::new("IOType"),
+            reuse: HwParam::new("reuse_factor"),
+        })
     }
 
     /// Apply a candidate's hardware-stage overrides to the baseline.
     fn configure(&self, cfg: &[(String, Value)]) -> Result<HlsModel> {
         let mut m = self.base.clone();
-        if let Some(part) = hw_param(cfg, "FPGA_part_number").and_then(Value::as_str) {
+        if let Some(part) = self.part.get(cfg).and_then(Value::as_str) {
             m.fpga_part = part.to_string();
         }
-        if let Some(clock) = hw_param(cfg, "clock_period").and_then(Value::as_f64) {
+        if let Some(clock) = self.clock.get(cfg).and_then(Value::as_f64) {
             if clock > 0.0 {
                 m.clock_period_ns = clock;
             }
         }
-        if let Some(io) = hw_param(cfg, "IOType").and_then(Value::as_str) {
+        if let Some(io) = self.io.get(cfg).and_then(Value::as_str) {
             m.io_type = if io == "io_stream" { IoType::Stream } else { IoType::Parallel };
         }
-        if let Some(rf) = hw_param(cfg, "reuse_factor").and_then(Value::as_usize) {
+        if let Some(rf) = self.reuse.get(cfg).and_then(Value::as_usize) {
             if rf > 1 {
                 SetReuseFactor(rf).apply(&mut m)?;
             }
@@ -144,9 +183,31 @@ impl HwPrefilter {
     }
 }
 
+impl CandidateRanker for HwPrefilter {
+    fn rank(&self, space: &SearchSpace, candidates: &[Candidate]) -> Result<Vec<usize>> {
+        HwPrefilter::rank(self, space, candidates)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn precomputed_hw_param_matches_free_lookup() {
+        let cfg = vec![
+            ("clock_period".to_string(), Value::Number(5.0)),
+            ("hls.clock_period".to_string(), Value::Number(10.0)),
+            ("xclock_period".to_string(), Value::Number(1.0)),
+        ];
+        let p = HwParam::new("clock_period");
+        assert_eq!(p.get(&cfg).and_then(Value::as_f64), Some(10.0));
+        assert_eq!(
+            p.get(&cfg).and_then(Value::as_f64),
+            hw_param(&cfg, "clock_period").and_then(Value::as_f64)
+        );
+        assert!(HwParam::new("reuse_factor").get(&cfg).is_none());
+    }
 
     #[test]
     fn hw_param_matches_global_and_instance_scoped_keys() {

@@ -1,0 +1,840 @@
+//! Online learned surrogate: replace most training probes with a
+//! ridge-regression predictor fitted as the search runs.
+//!
+//! A full variant evaluation trains and searches a model end to end;
+//! the hardware prefilter shortcuts *hardware-only* dimensions but is
+//! blind to training-affecting ones (pruning tolerance, quantization
+//! settings, task order).  The surrogate closes that gap: it encodes
+//! the **complete** candidate vector — numeric dimensions standardized,
+//! categorical/grid values one-hot, task orders as per-task permutation
+//! position features — and fits one linear ridge model per front
+//! objective (accuracy, DSP, LUT, latency_ns) **online** from the
+//! truth evaluations the search has already paid for (cf.
+//! "Software-defined Design Space Exploration" and AutoDNNchip, whose
+//! predictors reach near-optimal designs at a fraction of the
+//! evaluations).
+//!
+//! The fit is pure Rust and exactly deterministic: a fixed feature
+//! order, observations in evaluation order, normal equations solved by
+//! a hand-rolled Cholesky factorization — no RNG, no iteration-order
+//! hashing, no crates.io dependencies.  For a fixed (spec, strategy,
+//! seed, budget) every prediction is bit-identical for any `--jobs`,
+//! which is what lets the driver make *policy* decisions (evaluate vs
+//! defer) from predictions without breaking the search determinism
+//! contract.
+//!
+//! **Evaluation policy** (driven by [`crate::search::driver`]):
+//!
+//! 1. **Warmup** — the first `warmup` evaluations are real and chosen
+//!    by the driver as a space-filling strided sample of the grid, so
+//!    every dimension shows variance before the model is trusted.
+//! 2. **Band** — once fitted, each proposal batch is ranked by
+//!    predicted NSGA order; a candidate is **deferred** (no flow run,
+//!    no training probes) only when its prediction — given an optimism
+//!    margin of `trust radius × per-objective spread` — is still
+//!    dominated by an already-evaluated point.  Everything else (the
+//!    predicted-front band) spends real probes.
+//! 3. **Re-validation** — every `every` rounds the best-predicted
+//!    deferred candidate is truth-evaluated; at search end, deferred
+//!    candidates whose re-predicted objectives are not dominated by
+//!    the truth set are evaluated until none remain.  Every truth
+//!    evaluation of a predicted point feeds the observed error back:
+//!    error above `threshold` doubles the trust radius (the band
+//!    widens toward "evaluate everything", so a hostile space degrades
+//!    gracefully to exhaustive behavior), low error decays it back.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::dse::ProbeStats;
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::search::pareto::{dominates_min, nsga_order};
+use crate::search::space::{Candidate, SearchSpace};
+use crate::search::CandidateRanker;
+
+/// Default observations before predictions may gate evaluations
+/// (raised to `n_features + 1` when the encoding is wider).
+pub const DEFAULT_WARMUP: usize = 4;
+/// Default initial trust radius (optimism margin as a fraction of the
+/// per-objective truth spread).
+pub const DEFAULT_MARGIN: f64 = 0.1;
+/// Default re-validation cadence (rounds between truth-evaluating the
+/// top deferred candidate).
+pub const DEFAULT_EVERY: usize = 2;
+/// Default relative prediction error above which the trust radius
+/// doubles.
+pub const DEFAULT_THRESHOLD: f64 = 0.2;
+/// Default ridge regularization strength (λ per observation).
+pub const DEFAULT_RIDGE: f64 = 1e-6;
+/// Trust radius cap: at this many spreads of optimism nothing is ever
+/// deferred, i.e. the policy has degraded to exhaustive behavior.
+const RADIUS_CAP: f64 = 8.0;
+/// Trust radius decay factor applied on an accurate prediction.
+const RADIUS_DECAY: f64 = 0.9;
+
+/// The parsed `search.surrogate` section (or its CLI override).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SurrogateSpec {
+    /// Real evaluations before predictions gate anything
+    /// (`None` = `max(DEFAULT_WARMUP, n_features + 1)`).
+    pub warmup: Option<usize>,
+    /// Initial trust radius (fraction of per-objective spread).
+    pub margin: f64,
+    /// Re-validate the top deferred candidate every this many rounds.
+    pub every: usize,
+    /// Relative error above which the trust radius doubles.
+    pub threshold: f64,
+    /// Ridge regularization λ (scaled by observation count).
+    pub ridge: f64,
+}
+
+impl Default for SurrogateSpec {
+    fn default() -> Self {
+        SurrogateSpec {
+            warmup: None,
+            margin: DEFAULT_MARGIN,
+            every: DEFAULT_EVERY,
+            threshold: DEFAULT_THRESHOLD,
+            ridge: DEFAULT_RIDGE,
+        }
+    }
+}
+
+impl SurrogateSpec {
+    /// Parse `"surrogate": true` or a full
+    /// `{"warmup": N, "margin": x, "every": K, "threshold": x,
+    ///   "ridge": x}` object.  Unknown keys are rejected.
+    pub fn parse(v: &Value) -> Result<SurrogateSpec> {
+        match v {
+            Value::Bool(true) => Ok(SurrogateSpec::default()),
+            Value::Bool(false) => Err(Error::Config(
+                "search surrogate: use `true` or an options object to enable it \
+                 (omit the key to disable)"
+                    .into(),
+            )),
+            Value::Object(map) => {
+                let mut spec = SurrogateSpec::default();
+                for (key, val) in map {
+                    match key.as_str() {
+                        "warmup" => {
+                            let w = val.as_usize().filter(|&w| w >= 1).ok_or_else(|| {
+                                Error::Config(
+                                    "search surrogate warmup must be a positive integer".into(),
+                                )
+                            })?;
+                            spec.warmup = Some(w);
+                        }
+                        "margin" => {
+                            spec.margin = val
+                                .as_f64()
+                                .filter(|m| m.is_finite() && *m >= 0.0)
+                                .ok_or_else(|| {
+                                    Error::Config(
+                                        "search surrogate margin must be a non-negative number"
+                                            .into(),
+                                    )
+                                })?;
+                        }
+                        "every" => {
+                            spec.every = val.as_usize().filter(|&e| e >= 1).ok_or_else(|| {
+                                Error::Config(
+                                    "search surrogate every must be a positive integer".into(),
+                                )
+                            })?;
+                        }
+                        "threshold" => {
+                            spec.threshold = val
+                                .as_f64()
+                                .filter(|t| t.is_finite() && *t > 0.0)
+                                .ok_or_else(|| {
+                                    Error::Config(
+                                        "search surrogate threshold must be a positive number"
+                                            .into(),
+                                    )
+                                })?;
+                        }
+                        "ridge" => {
+                            spec.ridge = val
+                                .as_f64()
+                                .filter(|r| r.is_finite() && *r > 0.0)
+                                .ok_or_else(|| {
+                                    Error::Config(
+                                        "search surrogate ridge must be a positive number".into(),
+                                    )
+                                })?;
+                        }
+                        other => {
+                            return Err(Error::Config(format!(
+                                "unknown search surrogate key {other:?} (valid: warmup, \
+                                 margin, every, threshold, ridge)"
+                            )));
+                        }
+                    }
+                }
+                Ok(spec)
+            }
+            _ => Err(Error::Config(
+                "search surrogate must be `true` or an options object".into(),
+            )),
+        }
+    }
+}
+
+/// What one surrogate-guided run did, surfaced in the explore summary
+/// and `front_csv` columns.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SurrogateReport {
+    /// Model refits over the run.
+    pub fits: usize,
+    /// Objective-vector predictions served.
+    pub predictions: usize,
+    /// Proposals answered by prediction instead of a flow evaluation.
+    pub deferred: usize,
+    /// Deferred candidates later truth-evaluated (periodic + final
+    /// re-validation).
+    pub validated: usize,
+    /// Mean absolute prediction error per objective
+    /// (minimization order: -accuracy, dsp, lut, latency_ns), over
+    /// every truth-evaluated prediction.  Empty until one lands.
+    pub mean_abs_error: Vec<f64>,
+}
+
+impl SurrogateReport {
+    /// Net flow evaluations avoided: deferrals that never needed a
+    /// truth evaluation after all.
+    pub fn probes_saved(&self) -> usize {
+        self.deferred.saturating_sub(self.validated)
+    }
+}
+
+/// How one discrete grid dimension is encoded.
+#[derive(Debug, Clone)]
+enum GridEnc {
+    /// All candidate values numeric: one standardized column holding
+    /// the value itself.
+    Numeric(Vec<f64>),
+    /// Mixed/categorical values: one 0/1 column per value index.
+    OneHot(usize),
+}
+
+/// Deterministic candidate → feature-vector encoding with a fixed
+/// column order: task-order permutation features, then grid dimensions
+/// in declaration order, then range dimensions.
+#[derive(Debug, Clone)]
+struct Encoder {
+    /// Per order option, one row of per-task normalized positions
+    /// (empty when the space has a single order — no variance to
+    /// learn).
+    order_feats: Vec<Vec<f64>>,
+    grid: Vec<GridEnc>,
+    n_ranges: usize,
+    n_features: usize,
+}
+
+impl Encoder {
+    fn of(space: &SearchSpace) -> Encoder {
+        // task-order permutation features: position of each task
+        // (canonical sorted name order) within the variant's chain,
+        // normalized to [0, 1]
+        let order_feats: Vec<Vec<f64>> = if space.orders.len() > 1 {
+            let mut canon: Vec<String> = space
+                .orders
+                .iter()
+                .flatten()
+                .next()
+                .cloned()
+                .unwrap_or_default();
+            canon.sort_unstable();
+            let denom = (canon.len().saturating_sub(1)).max(1) as f64;
+            space
+                .orders
+                .iter()
+                .map(|o| match o {
+                    Some(order) => canon
+                        .iter()
+                        .map(|t| {
+                            order.iter().position(|x| x == t).unwrap_or(0) as f64 / denom
+                        })
+                        .collect(),
+                    None => canon
+                        .iter()
+                        .enumerate()
+                        .map(|(i, _)| i as f64 / denom)
+                        .collect(),
+                })
+                .collect()
+        } else {
+            vec![Vec::new(); space.orders.len()]
+        };
+        let grid: Vec<GridEnc> = space
+            .grid
+            .iter()
+            .map(|(_, vals)| {
+                let nums: Option<Vec<f64>> = vals.iter().map(Value::as_f64).collect();
+                match nums {
+                    Some(ns) => GridEnc::Numeric(ns),
+                    None => GridEnc::OneHot(vals.len()),
+                }
+            })
+            .collect();
+        let n_features = order_feats.first().map_or(0, Vec::len)
+            + grid
+                .iter()
+                .map(|g| match g {
+                    GridEnc::Numeric(_) => 1,
+                    GridEnc::OneHot(k) => *k,
+                })
+                .sum::<usize>()
+            + space.ranges.len();
+        Encoder { order_feats, grid, n_ranges: space.ranges.len(), n_features }
+    }
+
+    fn encode(&self, c: &Candidate) -> Vec<f64> {
+        let mut x = Vec::with_capacity(self.n_features);
+        x.extend_from_slice(&self.order_feats[c.order.min(self.order_feats.len() - 1)]);
+        for (enc, &gi) in self.grid.iter().zip(&c.grid) {
+            match enc {
+                GridEnc::Numeric(vals) => x.push(vals[gi.min(vals.len() - 1)]),
+                GridEnc::OneHot(k) => {
+                    for j in 0..*k {
+                        x.push(if j == gi { 1.0 } else { 0.0 });
+                    }
+                }
+            }
+        }
+        x.extend(c.range.iter().take(self.n_ranges).copied());
+        x
+    }
+}
+
+/// One fitted multi-output ridge model: standardized features,
+/// centered targets, per-objective weight rows.
+#[derive(Debug, Clone)]
+struct Fit {
+    mu: Vec<f64>,
+    /// Population std per feature; 0 marks a dropped (constant)
+    /// column.
+    sigma: Vec<f64>,
+    ybar: Vec<f64>,
+    /// `w[objective][feature]` over standardized columns.
+    w: Vec<Vec<f64>>,
+}
+
+impl Fit {
+    fn predict(&self, x: &[f64]) -> Vec<f64> {
+        self.ybar
+            .iter()
+            .zip(&self.w)
+            .map(|(&yb, row)| {
+                let mut y = yb;
+                for (j, &wj) in row.iter().enumerate() {
+                    if self.sigma[j] > 0.0 {
+                        y += wj * (x[j] - self.mu[j]) / self.sigma[j];
+                    }
+                }
+                y
+            })
+            .collect()
+    }
+}
+
+/// In-place Cholesky factorization of a symmetric positive-definite
+/// matrix (row-major, `n × n`), leaving the lower triangle `L` with
+/// `L·Lᵀ = A`.  Fails on a non-positive pivot (caller bumps the ridge
+/// and retries).
+fn cholesky(a: &mut [f64], n: usize) -> Result<()> {
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "surrogate: normal equations not positive definite (pivot {s})"
+                    )));
+                }
+                a[i * n + i] = s.sqrt();
+            } else {
+                a[i * n + j] = s / a[j * n + j];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Solve `L·Lᵀ·x = b` given the Cholesky factor `L`.
+fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Multi-output ridge regression by normal equations + Cholesky:
+/// standardize columns (constant columns dropped), center targets,
+/// solve `(ZᵀZ + λ·n·I)·w = Zᵀ(y − ȳ)` per objective.  Exposed for the
+/// linear-recovery tests; everything is deterministic in the input
+/// order.
+pub(crate) fn ridge_fit_raw(
+    xs: &[Vec<f64>],
+    ys: &[Vec<f64>],
+    lambda: f64,
+) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<Vec<f64>>)> {
+    let n = xs.len();
+    if n < 2 {
+        return Err(Error::Config("surrogate: need at least 2 observations".into()));
+    }
+    let d = xs[0].len();
+    let m = ys[0].len();
+    let mut mu = vec![0.0f64; d];
+    for x in xs {
+        for (j, &v) in x.iter().enumerate() {
+            mu[j] += v;
+        }
+    }
+    for v in &mut mu {
+        *v /= n as f64;
+    }
+    let mut sigma = vec![0.0f64; d];
+    for x in xs {
+        for (j, &v) in x.iter().enumerate() {
+            sigma[j] += (v - mu[j]) * (v - mu[j]);
+        }
+    }
+    for v in &mut sigma {
+        *v = (*v / n as f64).sqrt();
+        if !v.is_finite() || *v < 1e-12 {
+            *v = 0.0; // constant column: dropped
+        }
+    }
+    let z = |x: &[f64], j: usize| -> f64 {
+        if sigma[j] > 0.0 {
+            (x[j] - mu[j]) / sigma[j]
+        } else {
+            0.0
+        }
+    };
+    let mut ybar = vec![0.0f64; m];
+    for y in ys {
+        for (o, &v) in y.iter().enumerate() {
+            ybar[o] += v;
+        }
+    }
+    for v in &mut ybar {
+        *v /= n as f64;
+    }
+
+    // Zᵀ·Z and Zᵀ·(y − ȳ), dense (d is small: one column per encoded
+    // dimension)
+    let mut ztz = vec![0.0f64; d * d];
+    let mut zty = vec![vec![0.0f64; d]; m];
+    for (x, y) in xs.iter().zip(ys) {
+        for j in 0..d {
+            let zj = z(x, j);
+            if zj == 0.0 {
+                continue;
+            }
+            for k in 0..=j {
+                ztz[j * d + k] += zj * z(x, k);
+            }
+            for o in 0..m {
+                zty[o][j] += zj * (y[o] - ybar[o]);
+            }
+        }
+    }
+    for j in 0..d {
+        for k in j + 1..d {
+            ztz[j * d + k] = ztz[k * d + j];
+        }
+    }
+
+    let mut lambda = lambda.max(1e-12);
+    for _ in 0..8 {
+        let mut a = ztz.clone();
+        for j in 0..d {
+            a[j * d + j] += lambda * n as f64;
+        }
+        if cholesky(&mut a, d).is_ok() {
+            let w: Vec<Vec<f64>> = zty.iter().map(|b| chol_solve(&a, d, b)).collect();
+            return Ok((mu, sigma, ybar, w));
+        }
+        lambda *= 10.0; // numerically degenerate: regularize harder
+    }
+    Err(Error::Config("surrogate: ridge system stayed indefinite".into()))
+}
+
+/// The online surrogate one search run owns: encoder, observation
+/// store, current fit, trust radius and accounting.
+pub struct Surrogate {
+    spec: SurrogateSpec,
+    enc: Encoder,
+    warmup: usize,
+    warmed: bool,
+    obs_x: Vec<Vec<f64>>,
+    obs_y: Vec<Vec<f64>>,
+    fit: Option<Fit>,
+    dirty: bool,
+    /// Optimism margin in units of per-objective truth spread.
+    radius: f64,
+    fits: usize,
+    predictions: AtomicUsize,
+    deferred: usize,
+    validated: usize,
+    err_sum: Vec<f64>,
+    err_n: usize,
+    stats: Arc<ProbeStats>,
+}
+
+impl Surrogate {
+    pub fn new(space: &SearchSpace, spec: &SurrogateSpec, stats: Arc<ProbeStats>) -> Surrogate {
+        let enc = Encoder::of(space);
+        let warmup = spec.warmup.unwrap_or_else(|| DEFAULT_WARMUP.max(enc.n_features + 1));
+        Surrogate {
+            spec: spec.clone(),
+            warmup,
+            warmed: false,
+            radius: spec.margin,
+            enc,
+            obs_x: Vec::new(),
+            obs_y: Vec::new(),
+            fit: None,
+            dirty: false,
+            fits: 0,
+            predictions: AtomicUsize::new(0),
+            deferred: 0,
+            validated: 0,
+            err_sum: Vec::new(),
+            err_n: 0,
+            stats,
+        }
+    }
+
+    /// Warmup evaluations the driver owes before predictions gate
+    /// anything.
+    pub fn warmup(&self) -> usize {
+        self.warmup
+    }
+
+    /// Re-validation cadence in rounds.
+    pub fn every(&self) -> usize {
+        self.spec.every
+    }
+
+    /// The driver finished its warmup phase (possibly short of
+    /// `warmup` points on tiny grids/budgets).
+    pub fn finish_warmup(&mut self) {
+        self.warmed = true;
+    }
+
+    /// Predictions may gate evaluations: warmup done and a model
+    /// fitted.
+    pub fn ready(&self) -> bool {
+        self.warmed && self.fit.is_some()
+    }
+
+    /// Record one truth evaluation (objectives in the shared
+    /// minimization convention, evaluation order = observation order).
+    pub fn observe_truth(&mut self, c: &Candidate, objectives: &[f64]) {
+        self.obs_x.push(self.enc.encode(c));
+        self.obs_y.push(objectives.to_vec());
+        self.dirty = true;
+    }
+
+    /// Refit if new observations arrived since the last fit.  Never
+    /// fails the search: a degenerate system just leaves the previous
+    /// fit (or none) in place.
+    pub fn fit_if_dirty(&mut self) {
+        if !self.dirty || self.obs_x.len() < 2 {
+            return;
+        }
+        self.dirty = false;
+        if let Ok((mu, sigma, ybar, w)) =
+            ridge_fit_raw(&self.obs_x, &self.obs_y, self.spec.ridge)
+        {
+            self.fit = Some(Fit { mu, sigma, ybar, w });
+            self.fits += 1;
+            self.stats.note_surrogate_fit();
+        }
+    }
+
+    /// Predict the objective vector for a candidate.  Only meaningful
+    /// when [`Self::ready`]; without a fit it returns the observation
+    /// mean (never panics).
+    pub fn predict(&self, c: &Candidate) -> Vec<f64> {
+        self.predictions.fetch_add(1, Ordering::Relaxed);
+        self.stats.note_surrogate_prediction();
+        let x = self.enc.encode(c);
+        match &self.fit {
+            Some(f) => f.predict(&x),
+            None => {
+                let m = self.obs_y.first().map_or(0, Vec::len);
+                let n = self.obs_y.len().max(1) as f64;
+                (0..m)
+                    .map(|o| self.obs_y.iter().map(|y| y[o]).sum::<f64>() / n)
+                    .collect()
+            }
+        }
+    }
+
+    /// Per-objective spread (max − min) over the truth observations.
+    fn spreads(truth: &[Vec<f64>]) -> Vec<f64> {
+        let m = truth.first().map_or(0, Vec::len);
+        (0..m)
+            .map(|o| {
+                let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+                for t in truth {
+                    lo = lo.min(t[o]);
+                    hi = hi.max(t[o]);
+                }
+                (hi - lo).max(0.0)
+            })
+            .collect()
+    }
+
+    /// Should a freshly-predicted candidate be deferred?  Only when
+    /// its prediction, granted an optimism margin of
+    /// `radius × spread` per objective, is still dominated by some
+    /// already-evaluated point.  Call [`Self::note_deferred`] when the
+    /// driver acts on a `true`.
+    pub fn defer(&self, predicted: &[f64], truth: &[Vec<f64>]) -> bool {
+        if truth.is_empty() {
+            return false;
+        }
+        let spreads = Self::spreads(truth);
+        let optimistic: Vec<f64> = predicted
+            .iter()
+            .zip(&spreads)
+            .map(|(&p, &s)| p - self.radius * s)
+            .collect();
+        truth.iter().any(|t| dominates_min(t, &optimistic))
+    }
+
+    pub fn note_deferred(&mut self) {
+        self.deferred += 1;
+    }
+
+    pub fn note_validated(&mut self) {
+        self.validated += 1;
+    }
+
+    /// Feed back the error of a prediction whose truth arrived (band
+    /// evaluations and re-validations alike): accumulate the
+    /// per-objective absolute error and adapt the trust radius —
+    /// relative error above the threshold doubles it (wider band, less
+    /// deferral), accurate predictions decay it back toward the
+    /// configured margin.
+    pub fn record_error(&mut self, predicted: &[f64], truth_point: &[f64], truth: &[Vec<f64>]) {
+        if self.err_sum.len() < predicted.len() {
+            self.err_sum.resize(predicted.len(), 0.0);
+        }
+        let spreads = Self::spreads(truth);
+        let mut rel = 0.0f64;
+        for (o, (&p, &t)) in predicted.iter().zip(truth_point).enumerate() {
+            let err = (p - t).abs();
+            self.err_sum[o] += err;
+            let scale = spreads[o].max(1e-6 * t.abs().max(1.0));
+            rel = rel.max(err / scale);
+        }
+        self.err_n += 1;
+        if rel > self.spec.threshold {
+            self.radius = (self.radius * 2.0).max(self.spec.margin.max(1e-3)).min(RADIUS_CAP);
+        } else {
+            self.radius = (self.radius * RADIUS_DECAY).max(self.spec.margin);
+        }
+    }
+
+    /// Current trust radius (optimism margin in spread units).
+    pub fn trust_radius(&self) -> f64 {
+        self.radius
+    }
+
+    pub fn report(&self) -> SurrogateReport {
+        SurrogateReport {
+            fits: self.fits,
+            predictions: self.predictions.load(Ordering::Relaxed),
+            deferred: self.deferred,
+            validated: self.validated,
+            mean_abs_error: if self.err_n == 0 {
+                Vec::new()
+            } else {
+                self.err_sum.iter().map(|s| s / self.err_n as f64).collect()
+            },
+        }
+    }
+}
+
+impl CandidateRanker for Surrogate {
+    /// Best-first by NSGA rank/crowding over *predicted* objectives —
+    /// the full-candidate-vector counterpart of the hardware
+    /// prefilter's estimator ranking, stable in input order for
+    /// prediction ties.
+    fn rank(&self, _space: &SearchSpace, candidates: &[Candidate]) -> Result<Vec<usize>> {
+        let objectives: Vec<Vec<f64>> = candidates.iter().map(|c| self.predict(c)).collect();
+        Ok(nsga_order(&objectives))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::ProbeStats;
+    use crate::search::space::RangeDim;
+
+    fn numeric_space() -> SearchSpace {
+        SearchSpace {
+            orders: vec![None],
+            grid: vec![
+                ("a".to_string(), vec![0.0, 1.0, 2.0, 3.0].into_iter().map(Value::Number).collect()),
+                ("b".to_string(), vec![0.0, 5.0, 10.0].into_iter().map(Value::Number).collect()),
+            ],
+            ranges: Vec::new(),
+        }
+    }
+
+    fn cand(a: usize, b: usize) -> Candidate {
+        Candidate { order: 0, grid: vec![a, b], range: Vec::new() }
+    }
+
+    #[test]
+    fn encoder_fixed_order_numeric_onehot_and_permutations() {
+        let space = SearchSpace {
+            orders: vec![
+                Some(vec!["p".into(), "q".into()]),
+                Some(vec!["q".into(), "p".into()]),
+            ],
+            grid: vec![
+                ("k".to_string(), vec![Value::Number(2.0), Value::Number(8.0)]),
+                (
+                    "io".to_string(),
+                    vec![Value::String("par".into()), Value::String("str".into())],
+                ),
+            ],
+            ranges: vec![("r".to_string(), RangeDim { lo: 0.0, hi: 1.0, integer: false })],
+        };
+        let enc = Encoder::of(&space);
+        // 2 permutation features + 1 numeric + 2 one-hot + 1 range
+        assert_eq!(enc.n_features, 6);
+        let c = Candidate { order: 1, grid: vec![0, 1], range: vec![0.25] };
+        // order "q-p": p at position 1, q at position 0 (canonical sorted)
+        assert_eq!(enc.encode(&c), vec![1.0, 0.0, 2.0, 0.0, 1.0, 0.25]);
+        let c0 = Candidate { order: 0, grid: vec![1, 0], range: vec![0.75] };
+        assert_eq!(enc.encode(&c0), vec![0.0, 1.0, 8.0, 1.0, 0.0, 0.75]);
+    }
+
+    #[test]
+    fn ridge_recovers_linear_objectives_exactly() {
+        let space = numeric_space();
+        let spec = SurrogateSpec { ridge: 1e-9, warmup: Some(1), ..Default::default() };
+        let mut sur = Surrogate::new(&space, &spec, Arc::new(ProbeStats::default()));
+        // y0 = 2 + 3a − b, y1 = 7 − a over a training subset
+        for (a, b) in [(0usize, 0usize), (1, 1), (2, 2), (3, 0), (0, 2), (2, 1)] {
+            let av = a as f64;
+            let bv = [0.0, 5.0, 10.0][b];
+            sur.observe_truth(&cand(a, b), &[2.0 + 3.0 * av - bv, 7.0 - av]);
+        }
+        sur.finish_warmup();
+        sur.fit_if_dirty();
+        assert!(sur.ready());
+        // held-out grid points recovered to ridge precision
+        for (a, b) in [(1usize, 2usize), (3, 1), (1, 0), (3, 2)] {
+            let av = a as f64;
+            let bv = [0.0, 5.0, 10.0][b];
+            let p = sur.predict(&cand(a, b));
+            assert!((p[0] - (2.0 + 3.0 * av - bv)).abs() < 1e-5, "y0 {p:?}");
+            assert!((p[1] - (7.0 - av)).abs() < 1e-5, "y1 {p:?}");
+        }
+        let rep = sur.report();
+        assert_eq!(rep.fits, 1);
+        assert_eq!(rep.predictions, 4);
+    }
+
+    #[test]
+    fn fit_is_deterministic_in_observation_order() {
+        let space = numeric_space();
+        let spec = SurrogateSpec::default();
+        let mk = || {
+            let mut s = Surrogate::new(&space, &spec, Arc::new(ProbeStats::default()));
+            for (a, b) in [(0usize, 0usize), (1, 2), (2, 1), (3, 0)] {
+                s.observe_truth(&cand(a, b), &[a as f64 * 1.5 - b as f64, b as f64]);
+            }
+            s.finish_warmup();
+            s.fit_if_dirty();
+            s
+        };
+        let (s1, s2) = (mk(), mk());
+        for (a, b) in [(0usize, 1usize), (2, 2), (3, 1)] {
+            let (p, q) = (s1.predict(&cand(a, b)), s2.predict(&cand(a, b)));
+            for (x, y) in p.iter().zip(&q) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn defer_needs_margin_dominance_and_radius_widens_on_error() {
+        let space = numeric_space();
+        let spec = SurrogateSpec { margin: 0.1, threshold: 0.2, ..Default::default() };
+        let mut sur = Surrogate::new(&space, &spec, Arc::new(ProbeStats::default()));
+        let truth = vec![vec![1.0, 1.0], vec![2.0, 0.5]];
+        // clearly dominated prediction (margin 0.1 × spread 1.0/0.5)
+        assert!(sur.defer(&[3.0, 3.0], &truth));
+        // a tie with the best point is never deferred
+        assert!(!sur.defer(&[1.0, 1.0], &truth));
+        // better on one objective: evaluate
+        assert!(!sur.defer(&[0.5, 4.0], &truth));
+
+        // large error doubles the radius; an 8-spread optimism margin
+        // means nothing is deferred any more (exhaustive fallback)
+        let r0 = sur.trust_radius();
+        for _ in 0..12 {
+            sur.record_error(&[10.0, 10.0], &[1.0, 1.0], &truth);
+        }
+        assert!(sur.trust_radius() > r0);
+        assert!((sur.trust_radius() - 8.0).abs() < 1e-12, "{}", sur.trust_radius());
+        assert!(!sur.defer(&[3.0, 3.0], &truth));
+        // accurate predictions decay it back toward the margin
+        for _ in 0..200 {
+            sur.record_error(&[1.0, 1.0], &[1.0, 1.0], &truth);
+        }
+        assert!((sur.trust_radius() - 0.1).abs() < 1e-9);
+        let rep = sur.report();
+        assert_eq!(rep.mean_abs_error.len(), 2);
+        assert!(rep.mean_abs_error[0] > 0.0);
+    }
+
+    #[test]
+    fn surrogate_spec_parses_bool_and_object_and_rejects_unknown() {
+        let t = SurrogateSpec::parse(&crate::json::parse("true").unwrap()).unwrap();
+        assert_eq!(t, SurrogateSpec::default());
+        let o = SurrogateSpec::parse(
+            &crate::json::parse(
+                r#"{"warmup": 6, "margin": 0.2, "every": 3, "threshold": 0.5, "ridge": 0.001}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(o.warmup, Some(6));
+        assert_eq!(o.every, 3);
+        let bad = |s: &str| SurrogateSpec::parse(&crate::json::parse(s).unwrap()).unwrap_err();
+        assert!(bad("false").to_string().contains("enable"));
+        assert!(bad(r#"{"wormup": 3}"#).to_string().contains("wormup"));
+        assert!(bad(r#"{"warmup": 0}"#).to_string().contains("positive"));
+        assert!(bad(r#"{"ridge": 0}"#).to_string().contains("positive"));
+    }
+}

@@ -1,0 +1,324 @@
+//! Surrogate-guided search semantics on the synthetic mini jet
+//! manifest.
+//!
+//! Covers the `search.surrogate` evaluation policy end to end:
+//!
+//! - the ridge model recovers an exactly-linear objective through the
+//!   public `Surrogate` API (encode → fit → predict);
+//! - jobs=1 vs jobs=4 produce bit-identical candidate sequences, LOG
+//!   streams, fronts **and** surrogate accounting (the determinism
+//!   contract holds with the predictor in the loop);
+//! - the headline golden: surrogate-guided `Evolve` recovers the
+//!   full-grid Pareto front (same labels, same hypervolume) while
+//!   issuing at most **half** the training probes of a prefilter-only
+//!   `Evolve` at the same budget;
+//! - a deliberately mispredictive space (convex reuse-factor resource
+//!   curve vs a linear model) still converges to the exhaustive front
+//!   within the budget — the trust radius + final re-validation
+//!   degrade gracefully instead of reporting a predicted front.
+//!
+//! The golden is constructed to be provable, not lucky: on a
+//! clock-period-only grid every non-hardware objective is *constant*,
+//! so its fitted weight is exactly zero and predictions equal the
+//! truth bit-for-bit, while `latency_ns = cycles × period` is exactly
+//! linear in the one varying dimension.  After a two-point warmup the
+//! model is exact; every other clock is predicted dominated by the
+//! fastest one and deferred, and the final re-validation confirms the
+//! deferrals instead of running them.
+
+use std::sync::Arc;
+
+use metaml::bench_support::synthetic_jet_mini_manifest;
+use metaml::config::FlowSpec;
+use metaml::dse::ProbeStats;
+use metaml::flow::{Session, TaskRegistry};
+use metaml::json::Value;
+use metaml::runtime::Runtime;
+use metaml::search::pareto::hypervolume;
+use metaml::search::{
+    run_search, Candidate, SearchOutcome, SearchSpace, SearchSpec, Surrogate, SurrogateSpec,
+};
+
+fn mini_session() -> Session {
+    Session::with_backend(Runtime::reference(), synthetic_jet_mini_manifest())
+}
+
+/// The 5-task mini flow with a parameterized discrete grid and search
+/// section (same flow as the `search_strategies` suite).
+fn spec_json(cfg_grid: &str, search: &str) -> String {
+    format!(
+        r#"{{
+  "name": "mini_surrogate",
+  "cfg": {{
+    "model": "jet_mini",
+    "gen.train_epochs": 1,
+    "prune.train_epochs": 1,
+    "prune.pruning_rate_thresh": 0.25,
+    "quantize.start_precision": "ap_fixed<8,4>",
+    "quantize.min_bits": 7
+  }},
+  "tasks": [
+    {{"id": "gen", "type": "KERAS-MODEL-GEN"}},
+    {{"id": "prune", "type": "PRUNING"}},
+    {{"id": "hls", "type": "HLS4ML"}},
+    {{"id": "quantize", "type": "QUANTIZATION"}},
+    {{"id": "synth", "type": "VIVADO-HLS"}}
+  ],
+  "edges": [["gen", "prune"], ["prune", "hls"], ["hls", "quantize"],
+             ["quantize", "synth"]],
+  "explore": {{
+    "cfg_grid": {{{cfg_grid}}}
+  }}{search}
+}}"#
+    )
+}
+
+fn run(spec: &FlowSpec, search: &SearchSpec, jobs: usize) -> SearchOutcome {
+    let session = mini_session();
+    let registry = TaskRegistry::builtin();
+    run_search(&session, &registry, spec, search, &[], jobs).unwrap()
+}
+
+fn labels(out: &SearchOutcome) -> Vec<String> {
+    out.outcome.results.iter().map(|r| r.label.clone()).collect()
+}
+
+fn front_labels(out: &SearchOutcome) -> Vec<String> {
+    let mut v: Vec<String> = out
+        .outcome
+        .front
+        .iter()
+        .map(|&i| out.outcome.results[i].label.clone())
+        .collect();
+    v.sort();
+    v
+}
+
+fn front_points(out: &SearchOutcome) -> Vec<Vec<f64>> {
+    out.outcome
+        .front
+        .iter()
+        .map(|&i| out.outcome.results[i].min_objectives().unwrap())
+        .collect()
+}
+
+/// Hypervolume of a front against a reference dominated by every point
+/// of both fronts (componentwise max + 1).
+fn shared_hv(a: &[Vec<f64>], b: &[Vec<f64>]) -> (f64, f64) {
+    let m = a[0].len();
+    let mut reference = vec![f64::NEG_INFINITY; m];
+    for p in a.iter().chain(b) {
+        for (r, &v) in reference.iter_mut().zip(p) {
+            *r = r.max(v);
+        }
+    }
+    for r in &mut reference {
+        *r += 1.0;
+    }
+    (hypervolume(a, &reference), hypervolume(b, &reference))
+}
+
+#[test]
+fn surrogate_recovers_linear_objectives_through_the_public_api() {
+    // y0 = 3 + 2a − b, y1 = 10 − a on a two-dimensional numeric grid
+    let space = SearchSpace {
+        orders: vec![None],
+        grid: vec![
+            ("a".to_string(), (0..4).map(|v| Value::Number(v as f64)).collect()),
+            (
+                "b".to_string(),
+                vec![Value::Number(0.0), Value::Number(5.0), Value::Number(10.0)],
+            ),
+        ],
+        ranges: Vec::new(),
+    };
+    let spec = SurrogateSpec { warmup: Some(1), ridge: 1e-9, ..Default::default() };
+    let mut sur = Surrogate::new(&space, &spec, Arc::new(ProbeStats::default()));
+    let cand = |a: usize, b: usize| Candidate { order: 0, grid: vec![a, b], range: Vec::new() };
+    for (a, b) in [(0usize, 0usize), (1, 1), (2, 2), (3, 0), (0, 2), (2, 1)] {
+        let (av, bv) = (a as f64, [0.0, 5.0, 10.0][b]);
+        sur.observe_truth(&cand(a, b), &[3.0 + 2.0 * av - bv, 10.0 - av]);
+    }
+    sur.finish_warmup();
+    sur.fit_if_dirty();
+    assert!(sur.ready());
+    for (a, b) in [(1usize, 0usize), (3, 2), (1, 2), (3, 1)] {
+        let (av, bv) = (a as f64, [0.0, 5.0, 10.0][b]);
+        let p = sur.predict(&cand(a, b));
+        assert!((p[0] - (3.0 + 2.0 * av - bv)).abs() < 1e-5, "y0 at ({a},{b}): {p:?}");
+        assert!((p[1] - (10.0 - av)).abs() < 1e-5, "y1 at ({a},{b}): {p:?}");
+    }
+    let rep = sur.report();
+    assert_eq!(rep.fits, 1);
+    assert_eq!(rep.predictions, 4);
+    assert_eq!(rep.probes_saved(), 0);
+}
+
+#[test]
+fn surrogate_evolve_matches_exhaustive_front_with_half_the_probes() {
+    // Clock-period-only grid: accuracy/DSP/LUT are constant across the
+    // grid (the estimator's resources and cycle counts are
+    // clock-independent) and latency is exactly linear in the period,
+    // so after the 2-point warmup the model is exact and every clock
+    // above the fastest is provably dominated.
+    let grid = r#"
+      "hls.clock_period": [4, 5, 6, 8, 10, 12]"#;
+    let spec = FlowSpec::parse(&spec_json(
+        grid,
+        r#",
+  "search": {"strategy": "evolve", "budget": 6, "seed": 9,
+             "surrogate": {"warmup": 2, "every": 5}}"#,
+    ))
+    .unwrap();
+    let search = spec.search.clone().unwrap();
+
+    let full = run(&spec, &SearchSpec::default(), 1);
+    assert_eq!(full.evaluations(), 6);
+
+    // probe baseline: prefilter-only Evolve at the same budget runs
+    // every proposal as a real flow
+    let base = run(
+        &spec,
+        &SearchSpec {
+            strategy: "evolve".into(),
+            budget: Some(6),
+            seed: 9,
+            prefilter: true,
+            ..Default::default()
+        },
+        1,
+    );
+    assert_eq!(base.evaluations(), 6);
+
+    let sur = run(&spec, &search, 1);
+    assert_eq!(sur.strategy, "evolve");
+    assert_eq!(sur.grid_size, 6);
+    assert_eq!(sur.budget, 6);
+    assert_eq!(sur.spent, 6);
+    // only the warmup pair (4 ns and 8 ns) ran as real flows; the rest
+    // of the grid was answered by prediction and never validated
+    assert_eq!(sur.evaluations(), 2, "evaluated {:?}", labels(&sur));
+    let report = sur.surrogate.clone().expect("surrogate accounting");
+    assert_eq!(report.deferred, 4);
+    assert_eq!(report.validated, 0);
+    assert_eq!(report.probes_saved(), 4);
+    assert!(report.fits >= 1);
+    assert!(report.predictions > 0);
+    // the shared probe counters surface the same story
+    assert!(sur.probes.sur_fits >= 1);
+    assert!(sur.probes.sur_predictions > 0);
+    assert_eq!(base.probes.sur_predictions, 0);
+
+    // same front as the exhaustive sweep, label for label, and equal
+    // hypervolume from a shared reference point
+    let expected = front_labels(&full);
+    assert!(!expected.is_empty());
+    assert_eq!(front_labels(&sur), expected);
+    for l in &expected {
+        assert!(l.contains("hls.clock_period=4"), "{l}");
+    }
+    let (hv_sur, hv_full) = shared_hv(&front_points(&sur), &front_points(&full));
+    assert!(hv_full > 0.0);
+    assert!((hv_sur - hv_full).abs() < 1e-9, "{hv_sur} vs {hv_full}");
+
+    // the acceptance claim: >= 2x fewer training probes than the
+    // prefilter-only baseline at the same budget
+    assert!(sur.probes.train_issued > 0);
+    assert!(
+        2 * sur.probes.train_issued <= base.probes.train_issued,
+        "surrogate {} !<= half of prefilter baseline {}",
+        sur.probes.train_issued,
+        base.probes.train_issued
+    );
+}
+
+#[test]
+fn surrogate_search_is_jobs_invariant_and_seeded() {
+    // a 2-D grid where the surrogate defers the dominated slow-clock
+    // half and the band/validation machinery all runs
+    let grid = r#"
+      "hls.clock_period": [5, 10, 15],
+      "prune.tolerate_acc_loss": [0.02, 0.05]"#;
+    let spec = FlowSpec::parse(&spec_json(
+        grid,
+        r#",
+  "search": {"strategy": "evolve", "budget": 6, "seed": 9,
+             "surrogate": {"warmup": 3, "every": 2}}"#,
+    ))
+    .unwrap();
+    let search = spec.search.clone().unwrap();
+
+    let a = run(&spec, &search, 1);
+    let b = run(&spec, &search, 1);
+    let c = run(&spec, &search, 4);
+
+    // same seed + budget -> identical candidate sequence, front, LOG
+    // streams and surrogate accounting, whatever the worker count
+    for other in [&b, &c] {
+        assert_eq!(labels(&a), labels(other));
+        assert_eq!(a.outcome.front, other.outcome.front);
+        assert_eq!(a.spent, other.spent);
+        assert_eq!(a.surrogate, other.surrogate);
+        for (x, y) in a.outcome.results.iter().zip(&other.outcome.results) {
+            assert_eq!(x.events, y.events, "{}", x.label);
+            for (k, v) in &x.metrics {
+                let w = y.metrics.get(k).copied().unwrap_or(f64::NAN);
+                assert_eq!(v.to_bits(), w.to_bits(), "{}: {k}", x.label);
+            }
+        }
+    }
+    let report = a.surrogate.clone().expect("surrogate accounting");
+    assert!(report.fits >= 1);
+    assert!(report.predictions > 0);
+    assert!(report.deferred >= 1, "{report:?}");
+
+    // every point the surrogate skipped was genuinely dominated: the
+    // front still matches the exhaustive sweep and lives in the 5 ns
+    // slice
+    let full = run(&spec, &SearchSpec::default(), 2);
+    let expected = front_labels(&full);
+    assert!(!expected.is_empty());
+    assert_eq!(front_labels(&a), expected);
+    for l in &expected {
+        assert!(l.contains("hls.clock_period=5"), "{l}");
+    }
+}
+
+#[test]
+fn mispredictive_space_still_converges_to_the_exhaustive_front() {
+    // DSP/LUT fall convexly in the reuse factor (~1/RF) while the
+    // model is linear, so warmup-era predictions are badly wrong.  The
+    // error feedback widens the trust radius and the final
+    // re-validation truth-evaluates every surviving deferral: the
+    // front must equal the exhaustive one, never a predicted artifact.
+    let grid = r#"
+      "hls.reuse_factor": [1, 4, 16],
+      "hls.clock_period": [5, 10]"#;
+    let spec = FlowSpec::parse(&spec_json(
+        grid,
+        r#",
+  "search": {"strategy": "evolve", "budget": 6, "seed": 3,
+             "surrogate": {"warmup": 2, "margin": 0.05, "threshold": 0.05,
+                           "every": 1}}"#,
+    ))
+    .unwrap();
+    let search = spec.search.clone().unwrap();
+
+    let full = run(&spec, &SearchSpec::default(), 2);
+    assert_eq!(full.evaluations(), 6);
+    let expected = front_labels(&full);
+    assert!(!expected.is_empty());
+
+    let sur = run(&spec, &search, 2);
+    assert!(sur.evaluations() <= 6);
+    assert_eq!(front_labels(&sur), expected, "evaluated {:?}", labels(&sur));
+    let (hv_sur, hv_full) = shared_hv(&front_points(&sur), &front_points(&full));
+    assert!((hv_sur - hv_full).abs() < 1e-9, "{hv_sur} vs {hv_full}");
+
+    let report = sur.surrogate.clone().expect("surrogate accounting");
+    assert!(report.validated <= report.deferred);
+    if report.validated > 0 {
+        // validated deferrals feed the error accumulator
+        assert_eq!(report.mean_abs_error.len(), 4);
+    }
+}
