@@ -23,6 +23,11 @@
 //!     vs a prefilter-only `evolve` baseline at the same budget —
 //!     asserts equal front hypervolume at >= 2x fewer training probes,
 //!     and measures raw surrogate fit/predict throughput;
+//!   * probe scheduler: the pipelined persistent-pool scheduler
+//!     (`search.pipeline`, the default) vs the lock-step barrier on
+//!     the same evolve+surrogate search at 1 / 4 / max workers —
+//!     asserts bit-identical traces and that pipelining pays at
+//!     jobs=4 (>= 1.5x in full runs, no regression in smoke);
 //!   * literal marshaling overhead (host→device→host round trip);
 //!   * flow-engine overhead (no-op task graph traversal).
 //!
@@ -31,10 +36,10 @@
 //! reproduce the numbers.  Writes bench_out/perf_runtime.csv and a
 //! machine-readable bench_out/perf_runtime.json.
 //!
-//! `--smoke` runs only the interpreter-kernel and surrogate-search
-//! sections with tiny iteration counts / grids — a CI-sized functional
-//! check (sparse path engages, surrogate halves the probes), not a
-//! timing run.
+//! `--smoke` runs only the interpreter-kernel, surrogate-search and
+//! scheduler sections with tiny iteration counts / grids — a CI-sized
+//! functional check (sparse path engages, surrogate halves the probes,
+//! pipelined scheduling stays trace-identical), not a timing run.
 
 use std::time::Instant;
 
@@ -459,16 +464,155 @@ fn surrogate_section(rec: &mut Recorder, table: &mut Table, smoke: bool) -> meta
     Ok(())
 }
 
+/// Scheduler section: the pipelined persistent-pool scheduler (the
+/// `search.pipeline` default) vs the lock-step barrier on the same
+/// mispredictive evolve+surrogate search (population 2 <= jobs/2, so
+/// the barrier leaves workers idle every round and validates deferrals
+/// one at a time, while the pipelined scheduler keeps the pool full
+/// with speculated next-round candidates and pending deferrals).
+/// Asserts the determinism contract — both modes, every worker count,
+/// one bit-identical trace — and that pipelining actually pays at
+/// jobs=4.
+fn scheduler_section(rec: &mut Recorder, table: &mut Table, smoke: bool) -> metaml::Result<()> {
+    use metaml::bench_support::synthetic_jet_mini_manifest;
+    use metaml::config::FlowSpec;
+    use metaml::search::{SearchOutcome, SearchSpec};
+
+    // the mispredictive space from rust/tests/surrogate_search.rs: a
+    // convex resource curve vs a linear model defers plenty and
+    // re-validates, which is exactly the serial tail pipelining hides
+    let (grid, budget) = if smoke {
+        (r#""hls.reuse_factor": [1, 4, 16], "hls.clock_period": [5, 10]"#, 6)
+    } else {
+        (r#""hls.reuse_factor": [1, 2, 4, 8, 16], "hls.clock_period": [5, 10]"#, 10)
+    };
+    let spec = FlowSpec::parse(&format!(
+        r#"{{
+  "name": "bench_scheduler",
+  "cfg": {{
+    "model": "jet_mini",
+    "gen.train_epochs": 1,
+    "prune.train_epochs": 1,
+    "prune.pruning_rate_thresh": 0.25,
+    "quantize.start_precision": "ap_fixed<8,4>",
+    "quantize.min_bits": 7
+  }},
+  "tasks": [
+    {{"id": "gen", "type": "KERAS-MODEL-GEN"}},
+    {{"id": "prune", "type": "PRUNING"}},
+    {{"id": "hls", "type": "HLS4ML"}},
+    {{"id": "quantize", "type": "QUANTIZATION"}},
+    {{"id": "synth", "type": "VIVADO-HLS"}}
+  ],
+  "edges": [["gen", "prune"], ["prune", "hls"], ["hls", "quantize"],
+             ["quantize", "synth"]],
+  "explore": {{"cfg_grid": {{{grid}}}}},
+  "search": {{"strategy": "evolve", "budget": {budget}, "seed": 3, "population": 2,
+             "surrogate": {{"warmup": 2, "margin": 0.05, "threshold": 0.05,
+                           "every": 1}}}}
+}}"#
+    ))?;
+    let session = Session::with_backend(Runtime::reference(), synthetic_jet_mini_manifest());
+    let registry = TaskRegistry::builtin();
+    let pipelined = spec.search.clone().expect("bench spec declares a search section");
+    let barrier = SearchSpec { pipeline: false, ..pipelined.clone() };
+
+    // everything the determinism contract covers; probe counters stay
+    // out (computed/spec_* totals are wall-clock diagnostics)
+    let trace = |out: &SearchOutcome| {
+        let labels: Vec<&str> =
+            out.outcome.results.iter().map(|r| r.label.as_str()).collect();
+        format!(
+            "{labels:?} front {:?} spent {} surrogate {:?}",
+            out.outcome.front, out.spent, out.surrogate
+        )
+    };
+
+    let max_jobs = metaml::dse::default_jobs();
+    let mut worker_counts = vec![1usize, 4];
+    if max_jobs > 4 {
+        worker_counts.push(max_jobs);
+    }
+    let mut golden: Option<String> = None;
+    for &jobs in &worker_counts {
+        let t0 = Instant::now();
+        let bar = metaml::search::run_search(&session, &registry, &spec, &barrier, &[], jobs)?;
+        let bar_secs = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let pipe =
+            metaml::search::run_search(&session, &registry, &spec, &pipelined, &[], jobs)?;
+        let pipe_secs = t0.elapsed().as_secs_f64();
+
+        let golden = golden.get_or_insert_with(|| trace(&bar));
+        if trace(&bar) != *golden {
+            return Err(metaml::Error::other(format!(
+                "scheduler: barrier trace diverged at jobs={jobs}"
+            )));
+        }
+        if trace(&pipe) != *golden {
+            return Err(metaml::Error::other(format!(
+                "scheduler: pipelined trace diverged from barrier at jobs={jobs}"
+            )));
+        }
+
+        let speedup = bar_secs / pipe_secs.max(1e-12);
+        let computed = (pipe.probes.train_computed + pipe.probes.hw_computed) as f64;
+        table.row_strs(&[
+            &format!("scheduler barrier (jobs={jobs})"),
+            "jet_mini",
+            &format!("{:.3} s", bar_secs),
+        ]);
+        table.row_strs(&[
+            &format!("scheduler pipelined (jobs={jobs})"),
+            "jet_mini",
+            &format!(
+                "{:.3} s ({:.2}x, {} speculated / {} committed, bit-identical)",
+                pipe_secs, speedup, pipe.probes.spec_submitted, pipe.probes.spec_committed
+            ),
+        ]);
+        rec.record(&format!("scheduler_barrier_jobs{jobs}_s"), "jet_mini", bar_secs, "s");
+        rec.record(&format!("scheduler_pipelined_jobs{jobs}_s"), "jet_mini", pipe_secs, "s");
+        rec.record(&format!("scheduler_speedup_jobs{jobs}"), "jet_mini", speedup, "x");
+        rec.record(
+            &format!("scheduler_pipelined_jobs{jobs}_probes_s"),
+            "jet_mini",
+            computed / pipe_secs.max(1e-12),
+            "probes/s",
+        );
+
+        if jobs == 4 {
+            if smoke {
+                // functional gate, not a timing run: pipelining must
+                // not regress (small absolute slack absorbs noise on
+                // millisecond-scale smoke flows)
+                if pipe_secs > bar_secs * 1.05 + 0.05 {
+                    return Err(metaml::Error::other(format!(
+                        "scheduler: pipelined {pipe_secs:.3}s slower than \
+                         barrier {bar_secs:.3}s at jobs=4"
+                    )));
+                }
+            } else if speedup < 1.5 {
+                return Err(metaml::Error::other(format!(
+                    "scheduler: {speedup:.2}x at jobs=4 — below the 1.5x acceptance bar"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
 fn main() -> metaml::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let mut rec = Recorder::new();
     let mut table = Table::new(&["metric", "model", "value"]);
 
-    // interpreter kernels + surrogate search (the sections --smoke runs)
+    // interpreter kernels + surrogate search + probe scheduler (the
+    // sections --smoke runs)
     interp_section(&mut rec, &mut table, smoke)?;
     surrogate_section(&mut rec, &mut table, smoke)?;
+    scheduler_section(&mut rec, &mut table, smoke)?;
     if smoke {
-        println!("== §Perf: interpreter kernels + surrogate search (smoke) ==");
+        println!("== §Perf: interpreter kernels + surrogate search + scheduler (smoke) ==");
         println!("{}", table.render());
         rec.save()?;
         return Ok(());

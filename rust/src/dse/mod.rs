@@ -7,7 +7,8 @@
 //! SCALING walks a speculative grid, AUTOPRUNE fine-tunes binary-search
 //! candidates), and the execution substrate underneath is `Send + Sync`
 //! end to end (see [`crate::runtime::ExecBackend`]), so this module
-//! fans them out across a scoped-thread worker pool:
+//! fans them out across a persistent worker pool whose threads spawn
+//! once per pool lifetime and drain a submission queue:
 //!
 //! A probe is no longer synonymous with "train-and-eval": the pool is
 //! generic over *probe kinds*.  Training probes (candidate
@@ -19,11 +20,17 @@
 //! config) and what it yields.
 //!
 //! * [`ProbeService`] — the object-safe trait every probe consumer
-//!   programs against (the seam for remote workers and surrogates);
-//! * [`ProbePool`] — deterministic batch executor
-//!   (`std::thread::scope`, no external dependencies) plus a stack of
-//!   cache tiers per probe kind ([`EvalCache`], [`HwCache`], and an
-//!   optional persistent [`DiskStore`]);
+//!   programs against (the seam for remote workers and surrogates),
+//!   with both a synchronous batch API and an async submission seam
+//!   ([`submit_batch`] → ticket → wait/cancel) that the pipelined
+//!   search driver speculates through;
+//! * [`WorkerPool`] — the long-lived execution threads (submission
+//!   queue, claim-cursor batches, conservative cancellation, no
+//!   external dependencies);
+//! * [`ProbePool`] — deterministic batch executor over a
+//!   [`WorkerPool`] plus a stack of cache tiers per probe kind
+//!   ([`EvalCache`], [`HwCache`], and an optional persistent
+//!   [`DiskStore`]);
 //! * [`ProbeRequest`] / [`ProbeResult`] — the training-probe batch API;
 //! * [`HwProbeRequest`] / [`HwProbeResult`] — the hardware-probe batch
 //!   API ([`ProbePool::estimate_batch`]);
@@ -49,12 +56,16 @@ pub mod disk;
 pub mod hw;
 pub mod pool;
 pub mod service;
+pub mod workers;
 
 pub use cache::{EvalCache, EvalKey, ProbeCache};
 pub use disk::{DiskStore, StoreStats};
 pub use hw::{HwCache, HwEval, HwKey, HwProbeRequest, HwProbeResult};
 pub use pool::{ProbeCounts, ProbePool, ProbeRequest, ProbeResult, ProbeStats};
-pub use service::{ProbeService, ProbeServiceExt, ProbeTier, ProbeTiers};
+pub use service::{
+    submit_batch, ProbeService, ProbeServiceExt, ProbeTier, ProbeTiers, SubmittedBatch,
+};
+pub use workers::WorkerPool;
 
 /// Worker count from `METAML_JOBS`, when set to a positive integer.
 pub fn env_jobs() -> Option<usize> {

@@ -1,4 +1,4 @@
-//! Deterministic scoped-thread worker pool for candidate probes.
+//! Deterministic batch executor for candidate probes.
 //!
 //! The pool is a *batch* executor: callers hand it an indexed set of
 //! independent jobs and get the results back in index order, whatever
@@ -7,13 +7,18 @@
 //! as under `jobs = 1`, so probe results are bit-identical across
 //! worker counts and the metamodel LOG stays reproducible.
 //!
-//! Built on `std::thread::scope` (no crates.io dependencies): workers
-//! borrow the caller's state directly, claim indices from a shared
-//! atomic cursor, and write results into per-index slots.
+//! Built on the persistent [`WorkerPool`] (`dse/workers.rs`, no
+//! crates.io dependencies): threads spawn once per pool lifetime and
+//! batches flow through a submission queue; workers claim indices from
+//! a shared atomic cursor and write results into per-index slots, and
+//! single-item or single-job batches bypass the queue entirely and run
+//! inline on the caller.
 
 use std::hash::Hash;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::dse::workers::WorkerPool;
 
 use crate::dse::cache::{EvalCache, EvalKey, ProbeCache};
 use crate::dse::disk::DiskStore;
@@ -54,8 +59,10 @@ pub struct ProbeResult {
 /// independent of cache state, and deterministic for a *fixed* worker
 /// configuration — but not across worker counts, because some searches
 /// size their speculative batches by `pool.jobs()` (SCALING's grid
-/// waves, PRUNING's look-ahead), so comparisons of issued counts must
-/// pin `jobs`.  `computed` counts fresh evaluations, which additionally
+/// waves, PRUNING's look-ahead) and the pipelined search scheduler
+/// issues probes for mis-speculated flows that never reach the trace,
+/// so comparisons of issued counts must pin `jobs` and the scheduling
+/// mode.  `computed` counts fresh evaluations, which additionally
 /// depends on what concurrent batches had already memoized — a
 /// wall-clock-style diagnostic, never a replay-comparable number.
 #[derive(Debug, Default)]
@@ -66,6 +73,9 @@ pub struct ProbeStats {
     hw_computed: AtomicUsize,
     sur_fits: AtomicUsize,
     sur_predictions: AtomicUsize,
+    spec_submitted: AtomicUsize,
+    spec_committed: AtomicUsize,
+    spec_cancelled: AtomicUsize,
 }
 
 /// A point-in-time copy of [`ProbeStats`].
@@ -84,6 +94,16 @@ pub struct ProbeCounts {
     /// Surrogate objective-vector predictions served in place of (or
     /// ahead of) flow evaluations.
     pub sur_predictions: usize,
+    /// Probe flows enqueued speculatively by the pipelined scheduler
+    /// before the strategy committed to them.  Like `computed`, the
+    /// `spec_*` trio is a wall-clock diagnostic — speculation volume
+    /// depends on worker timing and `--jobs`, never replay-comparable.
+    pub spec_submitted: usize,
+    /// Speculative flows whose results were committed to the observed
+    /// trace (the strategy really proposed them).
+    pub spec_committed: usize,
+    /// Speculative flows cancelled before any work started.
+    pub spec_cancelled: usize,
 }
 
 impl ProbeStats {
@@ -95,6 +115,9 @@ impl ProbeStats {
             hw_computed: self.hw_computed.load(Ordering::Relaxed),
             sur_fits: self.sur_fits.load(Ordering::Relaxed),
             sur_predictions: self.sur_predictions.load(Ordering::Relaxed),
+            spec_submitted: self.spec_submitted.load(Ordering::Relaxed),
+            spec_committed: self.spec_committed.load(Ordering::Relaxed),
+            spec_cancelled: self.spec_cancelled.load(Ordering::Relaxed),
         }
     }
 
@@ -108,6 +131,21 @@ impl ProbeStats {
     /// The surrogate served one objective-vector prediction.
     pub fn note_surrogate_prediction(&self) {
         self.sur_predictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The pipelined scheduler enqueued one speculative probe flow.
+    pub fn note_speculation_submitted(&self) {
+        self.spec_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A speculative flow's result was committed to the observed trace.
+    pub fn note_speculation_committed(&self) {
+        self.spec_committed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A speculative flow was cancelled before any work started.
+    pub fn note_speculation_cancelled(&self) {
+        self.spec_cancelled.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -128,6 +166,10 @@ pub struct ProbePool {
     /// Probe-issue accounting (shared with the memos by
     /// [`crate::dse::ProbeTiers`] so a whole search aggregates).
     stats: Arc<ProbeStats>,
+    /// Persistent execution threads.  `Arc` so pools built over one
+    /// [`ProbeTiers`] bundle at the same width share a single set of
+    /// OS threads instead of spawning per O-task run.
+    workers: Arc<WorkerPool>,
 }
 
 impl ProbePool {
@@ -156,19 +198,29 @@ impl ProbePool {
         hw_cache: Arc<HwCache>,
         stats: Arc<ProbeStats>,
     ) -> Self {
-        ProbePool { jobs: jobs.max(1), cache, hw_cache, disk: None, stats }
+        let jobs = jobs.max(1);
+        ProbePool {
+            jobs,
+            cache,
+            hw_cache,
+            disk: None,
+            stats,
+            workers: Arc::new(WorkerPool::new(jobs)),
+        }
     }
 
     /// Pool over a shared [`ProbeTiers`] bundle — memos, optional disk
     /// tier and counters all shared (how [`ProbeTiers::pool`] builds
     /// the explorer's and the search driver's pools).
     pub fn with_tiers(jobs: usize, tiers: &ProbeTiers) -> Self {
+        let jobs = jobs.max(1);
         ProbePool {
-            jobs: jobs.max(1),
+            jobs,
             cache: Arc::clone(&tiers.eval),
             hw_cache: Arc::clone(&tiers.hw),
             disk: tiers.disk.clone(),
             stats: Arc::clone(&tiers.stats),
+            workers: tiers.worker_pool(jobs),
         }
     }
 
@@ -196,6 +248,12 @@ impl ProbePool {
         self.stats.snapshot()
     }
 
+    /// The persistent worker pool backing this executor (the async
+    /// [`crate::dse::ProbeService`] seam submits through it).
+    pub(crate) fn workers(&self) -> &Arc<WorkerPool> {
+        &self.workers
+    }
+
     /// Run `f(0..n)` across the pool's workers; results come back in
     /// index order.  The first `Err` in index order is propagated after
     /// the whole batch has been attempted.
@@ -216,6 +274,9 @@ impl ProbePool {
         }
         let workers = self.jobs.min(n);
         if workers <= 1 {
+            // Fast path (n == 1 or jobs == 1, the common
+            // surrogate-validation case): inline on the caller, no
+            // queue hop, full `--jobs` budget lent into the probe.
             let intra = self.jobs.max(1);
             return (0..n)
                 .map(|i| crate::runtime::kernels::with_intra_threads(intra, || f(i)))
@@ -223,21 +284,13 @@ impl ProbePool {
         }
 
         let intra = (self.jobs / workers).max(1);
-        let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<Result<T>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let r = crate::runtime::kernels::with_intra_threads(intra, || f(i));
-                    *slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
-                });
-            }
-        });
+        let job = |i: usize| {
+            let r = crate::runtime::kernels::with_intra_threads(intra, || f(i));
+            *slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
+        };
+        self.workers.run(n, &job);
 
         slots
             .into_iter()
@@ -296,6 +349,31 @@ impl ProbePool {
         V: Clone + Send,
         F: Fn(usize) -> Result<V> + Sync,
     {
+        // Single-request fast path (the common surrogate-validation
+        // shape): one tier walk, no resolution map, and the compute —
+        // if any — runs inline through `run_batch`'s n == 1 path.
+        if let [key] = keys {
+            let hit = tiers
+                .iter()
+                .enumerate()
+                .find_map(|(depth, tier)| tier.get(key).map(|v| (depth, v)));
+            if let Some((depth, v)) = hit {
+                for upper in &tiers[..depth] {
+                    upper.put(key, &v);
+                }
+                return Ok(vec![(v, true)]);
+            }
+            let fresh = self.run_batch(1, |_| compute(0))?;
+            let v = fresh
+                .into_iter()
+                .next()
+                .ok_or_else(|| Error::other("probe pool: worker dropped a job slot"))?;
+            for tier in tiers {
+                tier.put(key, &v);
+            }
+            return Ok(vec![(v, false)]);
+        }
+
         // Resolve each request: cached at some tier, to-compute, or
         // duplicate of an earlier to-compute entry (mapped to its
         // position in the compute list).

@@ -32,6 +32,7 @@
 //! probe kind, an optional disk store, and the [`ProbeStats`] counters
 //! aggregated across every pool built from it.
 
+use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::{Arc, Mutex, PoisonError};
 
@@ -39,6 +40,7 @@ use crate::dse::cache::{EvalCache, ProbeCache};
 use crate::dse::disk::DiskStore;
 use crate::dse::hw::{HwCache, HwProbeRequest, HwProbeResult};
 use crate::dse::pool::{ProbeCounts, ProbePool, ProbeRequest, ProbeResult, ProbeStats};
+use crate::dse::workers::WorkerPool;
 use crate::error::{Error, Result};
 use crate::synth::FpgaDevice;
 use crate::train::Trainer;
@@ -80,12 +82,45 @@ pub trait ProbeService: Send + Sync {
 
     /// Run `f(0..n)` across the service's workers (object-safe core
     /// behind [`ProbeServiceExt::run_batch`]).  The default executes
-    /// sequentially; [`ProbePool`] overrides it with its scoped-thread
-    /// pool.
+    /// sequentially; [`ProbePool`] overrides it with its persistent
+    /// worker pool.
     fn run_raw(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
         for i in 0..n {
             f(i);
         }
+    }
+
+    /// Asynchronous submission seam (object-safe core behind
+    /// [`submit_batch`]): enqueue `f(0..n)` for execution and return a
+    /// ticket for [`Self::wait_raw`] / [`Self::cancel_raw`].  The
+    /// default runs the batch inline and returns ticket `0` (the
+    /// "already done" sentinel), so implementations without a queue —
+    /// and the jobs = 1 fast path — stay trivially correct.
+    ///
+    /// # Safety
+    ///
+    /// The referent of `f` must remain valid — not moved, dropped, or
+    /// mutably aliased — until `wait_raw(ticket)` returns or
+    /// `cancel_raw(ticket)` returns `true`.  Use [`submit_batch`],
+    /// which owns the closure and waits on drop, unless you can prove
+    /// that yourself.
+    unsafe fn submit_raw(&self, n: usize, f: &(dyn Fn(usize) + Sync)) -> u64 {
+        for i in 0..n {
+            f(i);
+        }
+        0
+    }
+
+    /// Block until the ticket's batch has fully executed.  Idempotent;
+    /// unknown tickets (including the `0` sentinel) are a no-op.
+    fn wait_raw(&self, _ticket: u64) {}
+
+    /// Try to cancel a pending batch.  Returns `true` only when no job
+    /// of the batch had started — in which case none ever will — and
+    /// `false` otherwise (including for unknown tickets and services
+    /// without a queue).
+    fn cancel_raw(&self, _ticket: u64) -> bool {
+        false
     }
 }
 
@@ -158,6 +193,115 @@ impl ProbeService for ProbePool {
             Ok(())
         });
     }
+
+    unsafe fn submit_raw(&self, n: usize, f: &(dyn Fn(usize) + Sync)) -> u64 {
+        if ProbePool::jobs(self) <= 1 {
+            // jobs = 1 fast path: no queue, no ticket — run inline on
+            // the caller thread exactly as the synchronous executor
+            // would.
+            for i in 0..n {
+                f(i);
+            }
+            return 0;
+        }
+        // SAFETY: forwarded verbatim from our caller's contract.
+        self.workers().submit(n, f)
+    }
+
+    fn wait_raw(&self, ticket: u64) {
+        self.workers().wait(ticket);
+    }
+
+    fn cancel_raw(&self, ticket: u64) -> bool {
+        self.workers().cancel(ticket)
+    }
+}
+
+/// A batch in flight through [`ProbeService::submit_raw`], returned by
+/// [`submit_batch`].
+///
+/// Owns the erased job closure (stable heap address) and the result
+/// slots; **waits on drop** if neither [`Self::wait`] nor a successful
+/// [`Self::try_cancel`] happened, which is what makes the async seam
+/// safe to use with borrowing closures — the borrows provably outlive
+/// the execution.
+pub struct SubmittedBatch<'a, T: Send> {
+    svc: &'a dyn ProbeService,
+    ticket: u64,
+    slots: Arc<Vec<Mutex<Option<Result<T>>>>>,
+    /// Keeps the erased closure alive for the pool; never read.
+    _job: Box<dyn Fn(usize) + Sync + 'a>,
+    waited: bool,
+}
+
+impl<'a, T: Send> SubmittedBatch<'a, T> {
+    /// Block until the batch has fully executed, then return results in
+    /// request order.  The first error in request order is propagated
+    /// after the whole batch has been attempted — identical to the
+    /// synchronous [`ProbeServiceExt::run_batch`] contract.
+    pub fn wait(mut self) -> Result<Vec<T>> {
+        self.svc.wait_raw(self.ticket);
+        self.waited = true;
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let r = slot
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .take()
+                .unwrap_or_else(|| {
+                    Err(Error::other("probe service: worker dropped a job slot"))
+                });
+            out.push(r?);
+        }
+        Ok(out)
+    }
+
+    /// Try to cancel before any work starts.  On `true` the batch is
+    /// dead (no job ran, none will, drop won't wait); on `false` the
+    /// batch is still pending and can be waited or left to finish.
+    pub fn try_cancel(&mut self) -> bool {
+        if !self.waited && self.svc.cancel_raw(self.ticket) {
+            self.waited = true;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl<'a, T: Send> Drop for SubmittedBatch<'a, T> {
+    fn drop(&mut self) {
+        if !self.waited {
+            // Unobserved speculative work still runs to completion —
+            // its results land in the shared tiers as cache fodder —
+            // and the wait keeps the borrowed closure sound.
+            self.svc.wait_raw(self.ticket);
+        }
+    }
+}
+
+/// Submit `f(0..n)` asynchronously and get a [`SubmittedBatch`] handle
+/// to wait on (or cancel).  This is the safe typed wrapper over
+/// [`ProbeService::submit_raw`]: the handle owns the closure and the
+/// slots, and waits on drop, so mis-speculated batches can simply be
+/// dropped.
+pub fn submit_batch<'a, T, F>(svc: &'a dyn ProbeService, n: usize, f: F) -> SubmittedBatch<'a, T>
+where
+    T: Send + 'a,
+    F: Fn(usize) -> Result<T> + Sync + 'a,
+{
+    let slots: Arc<Vec<Mutex<Option<Result<T>>>>> =
+        Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+    let job_slots = Arc::clone(&slots);
+    let job: Box<dyn Fn(usize) + Sync + 'a> = Box::new(move |i| {
+        let r = f(i);
+        *job_slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
+    });
+    // SAFETY: the returned SubmittedBatch owns `job` (boxed, so the
+    // referent's address is stable across moves of the handle) and
+    // guarantees wait_raw/cancel_raw-true before the box drops.
+    let ticket = unsafe { svc.submit_raw(n, &*job) };
+    SubmittedBatch { svc, ticket, slots, _job: job, waited: false }
 }
 
 /// One cache tier for one probe kind: a key→value store a
@@ -201,6 +345,12 @@ pub struct ProbeTiers {
     /// written through so they survive the process.
     pub disk: Option<Arc<DiskStore>>,
     pub stats: Arc<ProbeStats>,
+    /// Persistent worker pools keyed by width: every pool/service built
+    /// from this bundle at the same `jobs` shares one set of OS threads
+    /// (nested searches call [`Self::service`] per O-task run — those
+    /// must not spawn threads each time).  Waiters drain their own
+    /// batches, so pools of different widths can nest without deadlock.
+    workers: Arc<Mutex<HashMap<usize, Arc<WorkerPool>>>>,
 }
 
 impl ProbeTiers {
@@ -229,6 +379,18 @@ impl ProbeTiers {
     /// Probe totals issued/computed through every pool of this bundle.
     pub fn probe_counts(&self) -> ProbeCounts {
         self.stats.snapshot()
+    }
+
+    /// The shared persistent [`WorkerPool`] for `jobs` workers,
+    /// creating (and thereafter reusing) it on first request.
+    pub(crate) fn worker_pool(&self, jobs: usize) -> Arc<WorkerPool> {
+        let jobs = jobs.max(1);
+        let mut pools = self.workers.lock().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(
+            pools
+                .entry(jobs)
+                .or_insert_with(|| Arc::new(WorkerPool::new(jobs))),
+        )
     }
 }
 
@@ -298,5 +460,94 @@ mod tests {
         assert_eq!(a.jobs(), 1);
         assert_eq!(b.jobs(), 4);
         assert_eq!(tiers.probe_counts(), ProbeCounts::default());
+    }
+
+    #[test]
+    fn tiers_share_one_worker_pool_per_width() {
+        let tiers = ProbeTiers::new();
+        let a = tiers.worker_pool(4);
+        let b = tiers.worker_pool(4);
+        let c = tiers.worker_pool(2);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(a.jobs(), 4);
+        assert_eq!(c.jobs(), 2);
+    }
+
+    #[test]
+    fn submit_batch_returns_results_in_order() {
+        let pool = ProbePool::new(4);
+        let svc: &dyn ProbeService = &pool;
+        let batch = submit_batch(svc, 33, |i| Ok(i * i));
+        assert_eq!(batch.wait().unwrap(), (0..33).map(|i| i * i).collect::<Vec<_>>());
+
+        // jobs = 1: submit runs inline on the caller (ticket sentinel),
+        // same results, same order.
+        let inline = ProbePool::new(1);
+        let svc: &dyn ProbeService = &inline;
+        let batch = submit_batch(svc, 5, |i| Ok(i + 1));
+        assert_eq!(batch.wait().unwrap(), vec![1, 2, 3, 4, 5]);
+        let mut batch = submit_batch(svc, 2, |i| Ok(i));
+        assert!(!batch.try_cancel()); // inline work already ran
+        assert_eq!(batch.wait().unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn submit_batch_propagates_first_error_in_index_order() {
+        let pool = ProbePool::new(4);
+        let svc: &dyn ProbeService = &pool;
+        let batch = submit_batch(svc, 10, |i| {
+            if i == 3 || i == 7 {
+                Err(Error::other(format!("boom {i}")))
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(batch.wait().unwrap_err().to_string(), "boom 3");
+    }
+
+    #[test]
+    fn try_cancel_is_deterministic_when_the_only_worker_is_busy() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let pool = ProbePool::new(2); // exactly one spawned worker
+        let svc: &dyn ProbeService = &pool;
+        let gate = Mutex::new(());
+        let ran_b = AtomicUsize::new(0);
+
+        let guard = gate.lock().unwrap_or_else(PoisonError::into_inner);
+        // A blocks the only worker on the gate (or, if the worker is
+        // slow, sits ahead of B in the FIFO queue — either way B can
+        // never start before A completes).
+        let a = submit_batch(svc, 1, |_| {
+            drop(gate.lock().unwrap_or_else(PoisonError::into_inner));
+            Ok(1usize)
+        });
+        let mut b = submit_batch(svc, 1, |_| {
+            ran_b.fetch_add(1, Ordering::SeqCst);
+            Ok(2usize)
+        });
+        // B provably unstarted → cancel must succeed, deterministically.
+        assert!(b.try_cancel());
+        assert!(!b.try_cancel()); // already dead
+        drop(guard);
+        assert_eq!(a.wait().unwrap(), vec![1]);
+        drop(b); // must not wait or run anything
+        assert_eq!(ran_b.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn dropped_batch_still_executes_as_cache_fodder() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let pool = ProbePool::new(4);
+        let svc: &dyn ProbeService = &pool;
+        let ran = AtomicUsize::new(0);
+        let batch = submit_batch(svc, 6, |_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        drop(batch); // drop-wait: all jobs complete before this returns
+        assert_eq!(ran.load(Ordering::SeqCst), 6);
     }
 }

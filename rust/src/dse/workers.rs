@@ -1,0 +1,391 @@
+//! Persistent worker pool backing the probe executors.
+//!
+//! `WorkerPool` spawns its threads **once per pool lifetime** and feeds
+//! them batches through a submission queue, replacing the old
+//! per-batch `std::thread::scope` spawn/join cycle. Batches are
+//! work-stealing over a claim cursor: every participating thread
+//! (workers *and* the waiter) claims indices with a `fetch_add`, so a
+//! batch always completes even on a pool with zero spawned workers —
+//! the thread that calls [`WorkerPool::wait`] drains whatever is left
+//! itself. That self-draining waiter is also what makes nested batches
+//! (a probe that opens its own inner batch on another pool) deadlock
+//! free.
+//!
+//! Cancellation is conservative by design: [`WorkerPool::cancel`]
+//! succeeds only when *nothing* of the batch has been claimed yet
+//! (compare-and-swap of the claim cursor from 0 to n). A batch that
+//! any thread has started is left to finish — its results land in the
+//! probe tiers as cache fodder, never half-observed.
+
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Completion state of one batch, guarded by the batch mutex.
+struct Done {
+    finished: usize,
+    cancelled: bool,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+/// One submitted batch: an erased job plus a claim cursor.
+///
+/// The job reference is lifetime-erased to `'static` at submission;
+/// the submitter guarantees the referent outlives the batch (see
+/// [`WorkerPool::submit`] safety contract).
+struct Batch {
+    job: &'static (dyn Fn(usize) + Sync),
+    n: usize,
+    next: AtomicUsize,
+    done: Mutex<Done>,
+    cond: Condvar,
+}
+
+impl Batch {
+    fn new(job: &'static (dyn Fn(usize) + Sync), n: usize) -> Self {
+        Batch {
+            job,
+            n,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(Done { finished: 0, cancelled: false, panic: None }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Claim and run indices until the cursor passes `n`. Safe to call
+    /// from any number of threads concurrently; panics inside the job
+    /// are captured (first one wins) and re-thrown by `wait`.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.n {
+                break;
+            }
+            let outcome = catch_unwind(AssertUnwindSafe(|| (self.job)(i)));
+            let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
+            done.finished += 1;
+            if let Err(p) = outcome {
+                if done.panic.is_none() {
+                    done.panic = Some(p);
+                }
+            }
+            if done.finished == self.n {
+                self.cond.notify_all();
+            }
+        }
+    }
+
+    /// Drain remaining indices on the calling thread, then block until
+    /// every claimed index has finished. Re-throws the first captured
+    /// panic.
+    fn wait(&self) {
+        self.drain();
+        let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
+        while !done.cancelled && done.finished < self.n {
+            done = self.cond.wait(done).unwrap_or_else(|e| e.into_inner());
+        }
+        if let Some(p) = done.panic.take() {
+            drop(done);
+            resume_unwind(p);
+        }
+    }
+
+    /// Cancel iff no index has been claimed yet. Returns `true` on
+    /// success, in which case the job is guaranteed never to run.
+    fn cancel(&self) -> bool {
+        if self
+            .next
+            .compare_exchange(0, self.n.max(1), Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
+            done.cancelled = true;
+            self.cond.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+struct Queue {
+    tokens: VecDeque<Arc<Batch>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work: Condvar,
+}
+
+/// Long-lived worker pool with a FIFO submission queue.
+///
+/// `new(jobs)` spawns `jobs - 1` threads: the caller participates as
+/// the `jobs`-th worker whenever it waits on a batch, so a `jobs = 1`
+/// pool spawns nothing and runs everything inline.
+pub struct WorkerPool {
+    jobs: usize,
+    shared: Arc<Shared>,
+    tickets: Mutex<HashMap<u64, Arc<Batch>>>,
+    next_ticket: AtomicU64,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("jobs", &self.jobs).finish()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let token = {
+            let mut queue = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(t) = queue.tokens.pop_front() {
+                    break t;
+                }
+                if queue.shutdown {
+                    return;
+                }
+                queue = shared.work.wait(queue).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        token.drain();
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool for `jobs` total workers (clamped to at least 1);
+    /// spawns `jobs - 1` threads immediately.
+    pub fn new(jobs: usize) -> Self {
+        let jobs = jobs.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { tokens: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+        });
+        let handles = (1..jobs)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        WorkerPool {
+            jobs,
+            shared,
+            tickets: Mutex::new(HashMap::new()),
+            next_ticket: AtomicU64::new(0),
+            handles,
+        }
+    }
+
+    /// Total worker count (spawned threads + the waiting caller).
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Enqueue a batch of `n` jobs and return its ticket (tickets start
+    /// at 1; 0 is reserved for "already done" sentinels upstream).
+    ///
+    /// # Safety
+    ///
+    /// The referent of `job` must remain valid — not moved, dropped, or
+    /// mutably aliased — until either `wait(ticket)` returns or
+    /// `cancel(ticket)` returns `true`. The pool erases the lifetime
+    /// internally; the caller owns the proof.
+    pub unsafe fn submit(&self, n: usize, job: &(dyn Fn(usize) + Sync)) -> u64 {
+        // Lifetime erasure: validity until wait/cancel is the caller's
+        // contract, stated above.
+        let job: &'static (dyn Fn(usize) + Sync) = std::mem::transmute(job);
+        let batch = Arc::new(Batch::new(job, n));
+        let ticket = self.next_ticket.fetch_add(1, Ordering::SeqCst) + 1;
+        self.tickets
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(ticket, Arc::clone(&batch));
+        // One queue token per worker that could usefully help; the
+        // waiter drains the rest itself.
+        let tokens = n.min(self.jobs.saturating_sub(1)).max(if self.jobs > 1 { 1 } else { 0 });
+        if tokens > 0 {
+            let mut queue = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            for _ in 0..tokens {
+                queue.tokens.push_back(Arc::clone(&batch));
+            }
+            drop(queue);
+            self.shared.work.notify_all();
+        }
+        ticket
+    }
+
+    /// Block until the ticket's batch has fully finished (draining
+    /// unclaimed work on this thread first). Unknown or already-waited
+    /// tickets are a no-op, so `wait` is idempotent.
+    pub fn wait(&self, ticket: u64) {
+        let batch = self
+            .tickets
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(&ticket);
+        if let Some(batch) = batch {
+            batch.wait();
+        }
+    }
+
+    /// Try to cancel a pending batch. Returns `true` only when no job
+    /// of the batch had started, in which case none ever will.
+    pub fn cancel(&self, ticket: u64) -> bool {
+        let batch = self
+            .tickets
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&ticket)
+            .cloned();
+        match batch {
+            Some(batch) if batch.cancel() => {
+                self.tickets
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .remove(&ticket);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Synchronous run: submit + wait in one call. This is the safe
+    /// wrapper the batch executors use; panics from jobs propagate to
+    /// the caller exactly as the old scoped-thread executor did.
+    pub fn run(&self, n: usize, job: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        // SAFETY: `job` outlives this call, and we wait on the ticket
+        // before returning, so the referent is valid for the batch's
+        // whole execution.
+        let ticket = unsafe { self.submit(n, job) };
+        self.wait(ticket);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut queue = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            queue.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_executes_every_index_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..33).map(|_| AtomicUsize::new(0)).collect();
+        let job = |i: usize| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        };
+        pool.run(33, &job);
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn single_job_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.handles.is_empty());
+        let sum = AtomicUsize::new(0);
+        let job = |i: usize| {
+            sum.fetch_add(i + 1, Ordering::SeqCst);
+        };
+        pool.run(10, &job);
+        assert_eq!(sum.load(Ordering::SeqCst), 55);
+    }
+
+    #[test]
+    fn reuse_across_batches() {
+        let pool = WorkerPool::new(3);
+        for round in 0..5 {
+            let count = AtomicUsize::new(0);
+            let job = |_i: usize| {
+                count.fetch_add(1, Ordering::SeqCst);
+            };
+            pool.run(round + 1, &job);
+            assert_eq!(count.load(Ordering::SeqCst), round + 1);
+        }
+    }
+
+    #[test]
+    fn wait_is_idempotent_and_unknown_tickets_are_noops() {
+        let pool = WorkerPool::new(2);
+        let job = |_i: usize| {};
+        // SAFETY: `job` lives to the end of the test; we wait below.
+        let ticket = unsafe { pool.submit(3, &job) };
+        pool.wait(ticket);
+        pool.wait(ticket); // idempotent
+        pool.wait(9999); // unknown: no-op
+    }
+
+    #[test]
+    fn cancel_before_start_prevents_execution() {
+        // jobs=1: no spawned workers, so nothing can claim the batch
+        // before we cancel it.
+        let pool = WorkerPool::new(1);
+        let ran = AtomicUsize::new(0);
+        let job = |_i: usize| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        };
+        // SAFETY: referent valid until cancel returns true below.
+        let ticket = unsafe { pool.submit(4, &job) };
+        assert!(pool.cancel(ticket));
+        assert!(!pool.cancel(ticket)); // second cancel: ticket gone
+        pool.wait(ticket); // no-op after successful cancel
+        assert_eq!(ran.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn cancel_fails_once_work_has_started() {
+        let pool = WorkerPool::new(1);
+        let job = |_i: usize| {};
+        // SAFETY: waited below before the referent dies.
+        let ticket = unsafe { pool.submit(2, &job) };
+        pool.wait(ticket); // fully drained by the waiter
+        assert!(!pool.cancel(ticket));
+    }
+
+    #[test]
+    fn panics_propagate_to_the_waiter() {
+        let pool = WorkerPool::new(4);
+        let job = |i: usize| {
+            if i == 3 {
+                panic!("boom 3");
+            }
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| pool.run(8, &job)));
+        let msg = outcome.expect_err("run should propagate the job panic");
+        let text = msg
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| msg.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(text.contains("boom 3"), "unexpected panic payload: {text}");
+        // The pool must survive a panicked batch.
+        let count = AtomicUsize::new(0);
+        let ok = |_i: usize| {
+            count.fetch_add(1, Ordering::SeqCst);
+        };
+        pool.run(5, &ok);
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+    }
+}

@@ -390,39 +390,55 @@ pub fn run_variants(
 
     let pool = shared.pool(concurrent);
     let ran: Vec<VariantResult> = pool.run_batch(unique.len(), |slot| {
-        let variant = &variants[unique[slot]];
-        let engine = Engine::with_services(session, registry, shared.clone());
-        let mut meta = MetaModel::new();
-        variant.spec.apply_cfg(&mut meta.cfg);
-        for (k, v) in extra_cfg {
-            meta.cfg.set(k.clone(), v.clone());
-        }
-        for (k, v) in &variant.cfg {
-            meta.cfg.set(k.clone(), v.clone());
-        }
-        if meta.cfg.get("jobs").is_none() {
-            meta.cfg.set("jobs", inner_jobs);
-        }
-        engine.run_spec(&variant.spec, &mut meta).map_err(|e| {
-            Error::Flow(format!("variant {:?}: {e}", variant.label))
-        })?;
-        let rtl = meta.space.latest(Abstraction::Rtl).ok_or_else(|| {
-            Error::Flow(format!(
-                "variant {:?} produced no RTL artifact (explored flows must \
-                 end in VIVADO-HLS)",
-                variant.label
-            ))
-        })?;
-        Ok(VariantResult {
-            label: variant.label.clone(),
-            cfg: variant.cfg.clone(),
-            metrics: rtl.metrics.clone(),
-            n_models: meta.space.len(),
-            events: meta.log.events().cloned().collect(),
-        })
+        run_one_variant(session, registry, &variants[unique[slot]], extra_cfg, inner_jobs, shared)
     })?;
 
     Ok(source.into_iter().map(|slot| ran[slot].clone()).collect())
+}
+
+/// Run a single variant's full flow against the shared probe tiers —
+/// the per-candidate unit of work under [`run_variants`] and the
+/// pipelined search scheduler (which submits these one at a time
+/// through the async [`crate::dse::ProbeService`] seam).  `inner_jobs`
+/// is the worker budget handed to the variant's inner probe pools
+/// (unless the variant's cfg pins `jobs` itself).
+pub(crate) fn run_one_variant(
+    session: &Session,
+    registry: &TaskRegistry,
+    variant: &FlowVariant,
+    extra_cfg: &[(String, Value)],
+    inner_jobs: usize,
+    shared: &ProbeTiers,
+) -> Result<VariantResult> {
+    let engine = Engine::with_services(session, registry, shared.clone());
+    let mut meta = MetaModel::new();
+    variant.spec.apply_cfg(&mut meta.cfg);
+    for (k, v) in extra_cfg {
+        meta.cfg.set(k.clone(), v.clone());
+    }
+    for (k, v) in &variant.cfg {
+        meta.cfg.set(k.clone(), v.clone());
+    }
+    if meta.cfg.get("jobs").is_none() {
+        meta.cfg.set("jobs", inner_jobs);
+    }
+    engine.run_spec(&variant.spec, &mut meta).map_err(|e| {
+        Error::Flow(format!("variant {:?}: {e}", variant.label))
+    })?;
+    let rtl = meta.space.latest(Abstraction::Rtl).ok_or_else(|| {
+        Error::Flow(format!(
+            "variant {:?} produced no RTL artifact (explored flows must \
+             end in VIVADO-HLS)",
+            variant.label
+        ))
+    })?;
+    Ok(VariantResult {
+        label: variant.label.clone(),
+        cfg: variant.cfg.clone(),
+        metrics: rtl.metrics.clone(),
+        n_models: meta.space.len(),
+        events: meta.log.events().cloned().collect(),
+    })
 }
 
 /// The Pareto front (ascending indices) over a result set's
@@ -463,9 +479,11 @@ pub fn front_table(out: &ExploreOutcome) -> Table {
 ///
 /// With `cost` set, run-level accounting columns are appended per row:
 /// issued / computed / hit-rate per probe kind, the search shape
-/// (`grid_size`, `budget`, `spent`), and — when the run used the
-/// learned surrogate — its fit/prediction counts, probes saved, and
-/// mean absolute prediction error per objective.  Aggregates over the
+/// (`grid_size`, `budget`, `spent`), when the run used the
+/// learned surrogate its fit/prediction counts, probes saved, and
+/// mean absolute prediction error per objective, and — when the caller
+/// timed the run — the wall-clock seconds (`wall_s`) and computed
+/// probes per second (`probes_per_s`).  Aggregates over the
 /// whole run, identical on every row, so a CSV consumer can join cost
 /// onto any slice of the result set.  Computed counts are
 /// wall-clock-style diagnostics (see [`crate::dse::ProbeStats`]), not
@@ -497,6 +515,8 @@ pub fn front_csv(out: &ExploreOutcome, cost: Option<&SearchCost>) -> CsvWriter {
             "sur_mae_dsp",
             "sur_mae_lut",
             "sur_mae_latency_ns",
+            "wall_s",
+            "probes_per_s",
         ]);
     }
     header.extend(cfg_keys.iter().copied());
@@ -550,6 +570,15 @@ pub fn front_csv(out: &ExploreOutcome, cost: Option<&SearchCost>) -> CsvWriter {
                     }
                 }
                 None => row.extend(vec![String::new(); 7]),
+            }
+            // wall-clock columns: blank when the caller didn't time the
+            // run (wall_s is a diagnostic, never replay-comparable)
+            if c.wall_secs > 0.0 {
+                let computed = c.probes.train_computed + c.probes.hw_computed;
+                row.push(format!("{:.3}", c.wall_secs));
+                row.push(format!("{:.1}", computed as f64 / c.wall_secs));
+            } else {
+                row.extend([String::new(), String::new()]);
             }
         }
         for &key in &cfg_keys {
@@ -719,6 +748,7 @@ mod tests {
             budget: 12,
             spent: 12,
             surrogate: None,
+            wall_secs: 0.0,
         };
         let csv = front_csv(&ExploreOutcome { results, front }, Some(&cost)).render();
         let mut lines = csv.lines();
@@ -727,17 +757,43 @@ mod tests {
             "variant,accuracy,dsp,lut,latency_ns,power_w,on_front,\
              train_issued,train_computed,train_hit_rate,hw_issued,hw_computed,hw_hit_rate,\
              grid_size,budget,spent,sur_fits,sur_predictions,sur_probes_saved,\
-             sur_mae_accuracy,sur_mae_dsp,sur_mae_lut,sur_mae_latency_ns"
+             sur_mae_accuracy,sur_mae_dsp,sur_mae_lut,sur_mae_latency_ns,\
+             wall_s,probes_per_s"
         );
         // 75% of training probes were cache hits; no hardware hits;
-        // the surrogate columns are blank for a surrogate-less run
+        // the surrogate and wall-clock columns are blank for a
+        // surrogate-less, untimed run
         assert!(
             lines
                 .next()
                 .unwrap()
-                .ends_with(",1,40,10,0.7500,8,8,0.0000,16,12,12,,,,,,,"),
+                .ends_with(",1,40,10,0.7500,8,8,0.0000,16,12,12,,,,,,,,,"),
             "{csv}"
         );
+    }
+
+    #[test]
+    fn front_csv_fills_wall_clock_columns_when_timed() {
+        let results = vec![fake_result("a", vec![], 0.9)];
+        let front = front_of(&results).unwrap();
+        let cost = SearchCost {
+            probes: ProbeCounts {
+                train_issued: 40,
+                train_computed: 10,
+                hw_issued: 8,
+                hw_computed: 8,
+                ..Default::default()
+            },
+            grid_size: 16,
+            budget: 12,
+            spent: 12,
+            surrogate: None,
+            wall_secs: 2.0,
+        };
+        let csv = front_csv(&ExploreOutcome { results, front }, Some(&cost)).render();
+        let row = csv.lines().nth(1).unwrap();
+        // 18 computed probes over 2 s → 9.0 probes/s
+        assert!(row.ends_with(",2.000,9.0"), "{csv}");
     }
 
     #[test]
@@ -756,10 +812,11 @@ mod tests {
                 validated: 2,
                 mean_abs_error: vec![0.5, 1.0, 2.0, 4.0],
             }),
+            wall_secs: 0.0,
         };
         let csv = front_csv(&ExploreOutcome { results, front }, Some(&cost)).render();
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",24,24,24,3,20,13,0.5,1,2,4"), "{csv}");
+        assert!(row.ends_with(",24,24,24,3,20,13,0.5,1,2,4,,"), "{csv}");
     }
 
     #[test]

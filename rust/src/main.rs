@@ -527,6 +527,18 @@ fn cmd_explore(args: &[String]) -> Result<()> {
         out.probes.hw_computed,
         pct(out.probes.hw_issued, out.probes.hw_computed),
     );
+    let computed = out.probes.train_computed + out.probes.hw_computed;
+    println!(
+        "wall: {:.3} s ({:.1} probes/s)",
+        out.wall_secs,
+        computed as f64 / out.wall_secs.max(1e-9),
+    );
+    if out.probes.spec_submitted > 0 {
+        println!(
+            "speculation: {} submitted, {} committed, {} cancelled",
+            out.probes.spec_submitted, out.probes.spec_committed, out.probes.spec_cancelled,
+        );
+    }
     if let Some(s) = &out.surrogate {
         let mae = if s.mean_abs_error.is_empty() {
             "-".to_string()

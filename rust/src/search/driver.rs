@@ -40,12 +40,15 @@
 //! — the reported results and front contain **only truth**, never
 //! predictions.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
 
 use crate::config::FlowSpec;
-use crate::dse::{ProbeCounts, ProbeTiers};
-use crate::error::Result;
-use crate::flow::explore::{run_variants, ExploreOutcome, FlowVariant, VariantResult};
+use crate::dse::{submit_batch, ProbeCounts, ProbeService, ProbeTiers, SubmittedBatch};
+use crate::error::{Error, Result};
+use crate::flow::explore::{
+    run_one_variant, run_variants, ExploreOutcome, FlowVariant, VariantResult,
+};
 use crate::flow::registry::TaskRegistry;
 use crate::flow::session::Session;
 use crate::json::Value;
@@ -109,6 +112,18 @@ pub trait SearchStrategy: Send {
 
     /// Observe the evaluated batch, in proposal order.
     fn observe(&mut self, ctx: &SearchCtx<'_>, batch: &[Observation]);
+
+    /// Guess what the next [`Self::propose`] call will return,
+    /// **without consuming any strategy state** — no PRNG draws, no
+    /// archive mutation (clone whatever state the guess needs).  The
+    /// pipelined scheduler enqueues these on the persistent worker
+    /// pool while the current round is still being observed; a wrong
+    /// guess only warms the shared probe tiers (cache fodder), so
+    /// guesses can never alter the observed trace.  The default
+    /// guesses nothing (no speculation).
+    fn speculate(&self, _ctx: &SearchCtx<'_>) -> Vec<Candidate> {
+        Vec::new()
+    }
 }
 
 /// Everything one budgeted search produced.
@@ -129,6 +144,9 @@ pub struct SearchOutcome {
     pub probes: ProbeCounts,
     /// Surrogate accounting, when `search.surrogate` was enabled.
     pub surrogate: Option<SurrogateReport>,
+    /// Wall-clock seconds the whole search took (a diagnostic, never
+    /// replay-comparable).
+    pub wall_secs: f64,
 }
 
 /// The cost/efficiency bundle the explore summary and
@@ -140,6 +158,8 @@ pub struct SearchCost {
     pub budget: usize,
     pub spent: usize,
     pub surrogate: Option<SurrogateReport>,
+    /// Wall-clock seconds; `0.0` means "untimed" (blank CSV columns).
+    pub wall_secs: f64,
 }
 
 impl SearchOutcome {
@@ -155,6 +175,7 @@ impl SearchOutcome {
             budget: self.budget,
             spent: self.spent,
             surrogate: self.surrogate.clone(),
+            wall_secs: self.wall_secs,
         }
     }
 }
@@ -181,23 +202,151 @@ fn ranker_of<'a>(
     }
 }
 
-/// Run `fresh` variants and append their truth results/objectives.
-fn evaluate_fresh(
-    session: &Session,
-    registry: &TaskRegistry,
-    extra_cfg: &[(String, Value)],
+/// The driver's flow-execution seam: every truth evaluation goes
+/// through here, so the pipelined scheduler has one place to overlap
+/// flow runs with proposal/observation work.
+///
+/// Two modes, chosen once per search:
+///
+/// * **barrier** (`pipeline: false`, or `jobs == 1`): each batch runs
+///   through [`run_variants`] and the driver blocks until it is done —
+///   the pre-pipelining behavior, bit for bit.
+/// * **pipelined**: [`Self::speculate`] enqueues *guessed* next-round
+///   candidates on the persistent worker pool (via the
+///   [`ProbeService`] async seam) while the driver is still observing
+///   the current round; [`Self::eval`] then commits results **in
+///   proposal order** — a speculation hit is awaited where the
+///   proposal sits, a miss is submitted on the spot.  Mis-speculated
+///   runs are never observed: [`Self::finish`] waits them out so their
+///   probes land in the shared tiers as cache fodder (or cancels them
+///   before they start, mid-search, when the guess set moves on).
+///
+/// Because every flow run is a pure function of its variant and the
+/// observed trace commits strictly in proposal order, the candidate
+/// sequence, LOG streams, front, and surrogate accounting are
+/// bit-identical in both modes; only the `spec_*` wall-clock counters
+/// differ.
+struct FlowRunner<'a> {
+    session: &'a Session,
+    registry: &'a TaskRegistry,
+    extra_cfg: &'a [(String, Value)],
     jobs: usize,
-    shared: &ProbeTiers,
-    fresh: &[FlowVariant],
-    results: &mut Vec<VariantResult>,
-    objectives: &mut Vec<Vec<f64>>,
-) -> Result<()> {
-    let ran = run_variants(session, registry, fresh, extra_cfg, jobs, shared)?;
-    for r in ran {
-        objectives.push(r.min_objectives()?);
-        results.push(r);
+    shared: &'a ProbeTiers,
+    svc: &'a dyn ProbeService,
+    pipeline: bool,
+    /// In-flight speculative single-variant batches, keyed by
+    /// candidate.  Capacity-capped at `jobs`.
+    pending: HashMap<CandidateKey, SubmittedBatch<'a, VariantResult>>,
+}
+
+impl<'a> FlowRunner<'a> {
+    /// Submit one candidate's flow on the worker pool without waiting.
+    fn submit(&self, variant: FlowVariant) -> SubmittedBatch<'a, VariantResult> {
+        let (session, registry) = (self.session, self.registry);
+        let (extra_cfg, shared) = (self.extra_cfg, self.shared);
+        submit_batch(self.svc, 1, move |_| {
+            // inner_jobs = 1: pipelined variants already saturate the
+            // pool across each other, exactly like a full barrier batch
+            run_one_variant(session, registry, &variant, extra_cfg, 1, shared)
+        })
     }
-    Ok(())
+
+    /// Speculatively enqueue `guesses` (already filtered against the
+    /// evaluated memo).  Stale pending guesses that fell out of the
+    /// set are cancelled when they have not started; started ones stay
+    /// pending as cache fodder.  No-op in barrier mode.
+    fn speculate(&mut self, spec: &FlowSpec, space: &SearchSpace, guesses: &[Candidate]) {
+        if !self.pipeline || guesses.is_empty() {
+            return;
+        }
+        let keep: HashSet<CandidateKey> = guesses.iter().map(|c| space.key(c)).collect();
+        let stale: Vec<CandidateKey> =
+            self.pending.keys().filter(|k| !keep.contains(*k)).cloned().collect();
+        for key in stale {
+            let mut batch = self.pending.remove(&key).expect("stale key is pending");
+            if batch.try_cancel() {
+                self.shared.stats.note_speculation_cancelled();
+            } else {
+                // already running — let it finish into the tiers
+                self.pending.insert(key, batch);
+            }
+        }
+        for c in guesses {
+            if self.pending.len() >= self.jobs {
+                break;
+            }
+            let key = space.key(c);
+            if self.pending.contains_key(&key) {
+                continue;
+            }
+            // a candidate that cannot materialize would fail its real
+            // evaluation too — let that path report the error
+            let Ok(variant) = space.materialize(spec, c) else { continue };
+            self.shared.stats.note_speculation_submitted();
+            let batch = self.submit(variant);
+            self.pending.insert(key, batch);
+        }
+    }
+
+    /// Truth-evaluate `cands` (unique, never before evaluated) and
+    /// append their results/objectives in proposal order.
+    fn eval(
+        &mut self,
+        space: &SearchSpace,
+        spec: &FlowSpec,
+        cands: &[Candidate],
+        results: &mut Vec<VariantResult>,
+        objectives: &mut Vec<Vec<f64>>,
+    ) -> Result<()> {
+        if cands.is_empty() {
+            return Ok(());
+        }
+        if !self.pipeline {
+            let fresh: Vec<FlowVariant> =
+                cands.iter().map(|c| space.materialize(spec, c)).collect::<Result<_>>()?;
+            let ran = run_variants(
+                self.session, self.registry, &fresh, self.extra_cfg, self.jobs, self.shared,
+            )?;
+            for r in ran {
+                objectives.push(r.min_objectives()?);
+                results.push(r);
+            }
+            return Ok(());
+        }
+        // commit order = proposal order: hits are consumed in place,
+        // misses submitted up front so they overlap the hits' waits
+        let mut waits: Vec<SubmittedBatch<'a, VariantResult>> =
+            Vec::with_capacity(cands.len());
+        for c in cands {
+            let key = space.key(c);
+            match self.pending.remove(&key) {
+                Some(batch) => {
+                    self.shared.stats.note_speculation_committed();
+                    waits.push(batch);
+                }
+                None => waits.push(self.submit(space.materialize(spec, c)?)),
+            }
+        }
+        for batch in waits {
+            let mut ran = batch.wait()?;
+            let r = ran.pop().ok_or_else(|| {
+                Error::Flow("probe scheduler: empty single-variant batch".into())
+            })?;
+            objectives.push(r.min_objectives()?);
+            results.push(r);
+        }
+        Ok(())
+    }
+
+    /// Wait out every still-pending speculative run (never cancel:
+    /// deterministic cache contents for a deterministic guess stream)
+    /// so its probes land in the shared tiers before counters are
+    /// snapshotted.
+    fn finish(&mut self) {
+        for (_, batch) in self.pending.drain() {
+            drop(batch); // Drop waits
+        }
+    }
 }
 
 /// Truth-evaluate one deferred candidate: run the flow, move its key
@@ -207,12 +356,8 @@ fn evaluate_fresh(
 #[allow(clippy::too_many_arguments)]
 fn validate_deferred(
     idx: usize,
-    session: &Session,
-    registry: &TaskRegistry,
+    exec: &mut FlowRunner<'_>,
     spec: &FlowSpec,
-    extra_cfg: &[(String, Value)],
-    jobs: usize,
-    shared: &ProbeTiers,
     space: &SearchSpace,
     surrogate: &mut Surrogate,
     strategy: &mut dyn SearchStrategy,
@@ -225,8 +370,7 @@ fn validate_deferred(
     let candidate = deferred[idx].candidate.clone();
     let key = space.key(&candidate);
     let slot = results.len();
-    let fresh = vec![space.materialize(spec, &candidate)?];
-    evaluate_fresh(session, registry, extra_cfg, jobs, shared, &fresh, results, objectives)?;
+    exec.eval(space, spec, std::slice::from_ref(&candidate), results, objectives)?;
     deferred[idx].validated = true;
     deferred_index.remove(&key);
     index.insert(key, slot);
@@ -292,11 +436,15 @@ pub fn run_search_tiered(
     jobs: usize,
     tiers: &ProbeTiers,
 ) -> Result<SearchOutcome> {
+    let t_start = Instant::now();
     let space = SearchSpace::of(spec, &search.ranges)?;
     let grid_size = space.grid_size();
     let budget = search.budget.unwrap_or(grid_size).max(1);
     let mut strategy = make_strategy(search, &space)?;
     let shared = tiers.clone();
+    // declared before `exec` so the service outlives the batches that
+    // borrow it (drop order is reverse declaration order)
+    let svc: std::sync::Arc<dyn ProbeService> = shared.service(jobs);
     let prefilter = if search.prefilter {
         // heuristic accelerator: a session whose manifest can't model
         // the spec (no such variant) just runs without it
@@ -308,6 +456,18 @@ pub fn run_search_tiered(
         .surrogate
         .as_ref()
         .map(|s| Surrogate::new(&space, s, std::sync::Arc::clone(&shared.stats)));
+    let mut exec = FlowRunner {
+        session,
+        registry,
+        extra_cfg,
+        jobs,
+        shared: &shared,
+        svc: &*svc,
+        // jobs == 1 has nothing to overlap with — take the exact
+        // barrier path (and its inline fast paths)
+        pipeline: search.pipeline && jobs > 1,
+        pending: HashMap::new(),
+    };
 
     let mut results: Vec<VariantResult> = Vec::new();
     let mut objectives: Vec<Vec<f64>> = Vec::new();
@@ -339,12 +499,7 @@ pub fn run_search_tiered(
         }
         if !picks.is_empty() {
             spent += picks.len();
-            let fresh: Vec<FlowVariant> =
-                picks.iter().map(|c| space.materialize(spec, c)).collect::<Result<_>>()?;
-            evaluate_fresh(
-                session, registry, extra_cfg, jobs, &shared, &fresh, &mut results,
-                &mut objectives,
-            )?;
+            exec.eval(&space, spec, &picks, &mut results, &mut objectives)?;
             let observations: Vec<Observation> = picks
                 .iter()
                 .enumerate()
@@ -370,6 +525,32 @@ pub fn run_search_tiered(
     // ---- propose → gate → evaluate → observe -----------------------
     let mut rounds = 0usize;
     while spent < budget {
+        // pipelined: guess the upcoming batch *before* the real
+        // propose call (the strategy's PRNG sits at the same point the
+        // clone-based guess needs) and enqueue it on the worker pool;
+        // pending deferrals ride along since a re-validation may pick
+        // any of them next.  Wrong guesses only warm the tiers.
+        if exec.pipeline {
+            let mut guesses = {
+                // ranker withheld: guessing must not spend counted
+                // surrogate/prefilter queries
+                let ctx = SearchCtx {
+                    space: &space,
+                    evaluated: &index,
+                    deferred: &deferred_index,
+                    ranker: None,
+                };
+                strategy.speculate(&ctx)
+            };
+            guesses.retain(|c| {
+                let key = space.key(c);
+                !index.contains_key(&key) && !deferred_index.contains_key(&key)
+            });
+            for d in deferred.iter().filter(|d| !d.validated) {
+                guesses.push(d.candidate.clone());
+            }
+            exec.speculate(spec, &space, &guesses);
+        }
         let batch = {
             let ctx = SearchCtx {
                 space: &space,
@@ -396,7 +577,6 @@ pub fn run_search_tiered(
         }
         let prior = results.len();
         let mut slots: Vec<Slot> = Vec::with_capacity(batch.len());
-        let mut fresh: Vec<FlowVariant> = Vec::new();
         let mut fresh_cands: Vec<Candidate> = Vec::new();
         let mut band_preds: Vec<(usize, Vec<f64>)> = Vec::new();
         for c in batch {
@@ -426,17 +606,14 @@ pub fn run_search_tiered(
                 }
                 // predicted-front band: worth a real evaluation; keep
                 // the prediction to score the model once truth lands
-                band_preds.push((prior + fresh.len(), pred));
+                band_preds.push((prior + fresh_cands.len(), pred));
             }
-            let slot = prior + fresh.len();
+            let slot = prior + fresh_cands.len();
             index.insert(key, slot);
             fresh_cands.push(c.clone());
-            fresh.push(space.materialize(spec, c)?);
             slots.push(Slot::Truth { slot, repeat: false });
         }
-        evaluate_fresh(
-            session, registry, extra_cfg, jobs, &shared, &fresh, &mut results, &mut objectives,
-        )?;
+        exec.eval(&space, spec, &fresh_cands, &mut results, &mut objectives)?;
         if let Some(sur) = surrogate.as_mut() {
             for (slot, pred) in &band_preds {
                 sur.record_error(pred, &objectives[*slot], &objectives);
@@ -485,9 +662,8 @@ pub fn run_search_tiered(
             if sur.ready() && rounds % sur.every() == 0 {
                 if let Some(idx) = top_deferred(sur, &deferred) {
                     validate_deferred(
-                        idx, session, registry, spec, extra_cfg, jobs, &shared, &space, sur,
-                        strategy.as_mut(), &mut deferred, &mut deferred_index, &mut index,
-                        &mut results, &mut objectives,
+                        idx, &mut exec, spec, &space, sur, strategy.as_mut(), &mut deferred,
+                        &mut deferred_index, &mut index, &mut results, &mut objectives,
                     )?;
                 }
             }
@@ -501,6 +677,16 @@ pub fn run_search_tiered(
     // Every iteration shrinks the pending pool by one, so this
     // terminates; on a hostile space it degrades to evaluating all
     // deferrals — exhaustive behavior, never a wrong front.
+    if exec.pipeline && surrogate.is_some() {
+        // any pending deferral may be validated below — warm them all
+        // (capacity-capped) while the first re-prediction round runs
+        let guesses: Vec<Candidate> = deferred
+            .iter()
+            .filter(|d| !d.validated)
+            .map(|d| d.candidate.clone())
+            .collect();
+        exec.speculate(spec, &space, &guesses);
+    }
     while let Some(sur) = surrogate.as_mut() {
         let next = {
             let pending: Vec<usize> = deferred
@@ -523,13 +709,17 @@ pub fn run_search_tiered(
         };
         match next {
             Some(idx) => validate_deferred(
-                idx, session, registry, spec, extra_cfg, jobs, &shared, &space, sur,
-                strategy.as_mut(), &mut deferred, &mut deferred_index, &mut index, &mut results,
-                &mut objectives,
+                idx, &mut exec, spec, &space, sur, strategy.as_mut(), &mut deferred,
+                &mut deferred_index, &mut index, &mut results, &mut objectives,
             )?,
             None => break,
         }
     }
+
+    // drain mis-speculated runs into the tiers before the counters are
+    // snapshotted, so cache contents and probe totals are settled
+    exec.finish();
+    let wall_secs = t_start.elapsed().as_secs_f64();
 
     let front = pareto_front_min(&objectives);
     Ok(SearchOutcome {
@@ -540,5 +730,6 @@ pub fn run_search_tiered(
         spent,
         probes: shared.probe_counts(),
         surrogate: surrogate.as_ref().map(Surrogate::report),
+        wall_secs,
     })
 }

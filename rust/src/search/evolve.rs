@@ -238,6 +238,31 @@ impl SearchStrategy for Evolve {
         Ok(ordered.into_iter().take(want).collect())
     }
 
+    fn speculate(&self, ctx: &SearchCtx<'_>) -> Vec<Candidate> {
+        // Clone the PRNG and archive state and run a full-population
+        // propose on the clone: `observe` consumes no randomness, so
+        // the clone's generator sits exactly where the real `propose`
+        // will start — its guess *set* contains the real next batch
+        // whenever the real batch is at most a population wide (the
+        // real call may draw fewer offspring when the budget runs
+        // short, which only reorders the shared prefix).  The ranker
+        // is withheld (`ranker: None`): speculation must not spend
+        // counted prefilter/surrogate queries.
+        let mut probe = Evolve {
+            prng: self.prng.clone(),
+            population: self.population,
+            archive: self.archive.clone(),
+            archive_keys: self.archive_keys.clone(),
+        };
+        let ctx = SearchCtx {
+            space: ctx.space,
+            evaluated: ctx.evaluated,
+            deferred: ctx.deferred,
+            ranker: None,
+        };
+        probe.propose(&ctx, self.population).unwrap_or_default()
+    }
+
     fn observe(&mut self, ctx: &SearchCtx<'_>, batch: &[Observation]) {
         for obs in batch {
             let key = ctx.space.key(&obs.candidate);

@@ -100,6 +100,13 @@ pub struct SearchSpec {
     pub surrogate: Option<SurrogateSpec>,
     /// Numeric search dimensions (samplers only).
     pub ranges: Vec<(String, RangeDim)>,
+    /// Pipelined probe scheduling: overlap flow execution with
+    /// proposal/ranking by speculatively enqueuing likely next-round
+    /// work on the persistent worker pool.  On by default — results
+    /// are bit-identical either way (speculation only warms the probe
+    /// tiers); `false` forces the lock-step barrier scheduler
+    /// (benchmarked against in `benches/perf_runtime.rs`).
+    pub pipeline: bool,
 }
 
 impl Default for SearchSpec {
@@ -112,6 +119,7 @@ impl Default for SearchSpec {
             prefilter: false,
             surrogate: None,
             ranges: Vec::new(),
+            pipeline: true,
         }
     }
 }
@@ -163,6 +171,11 @@ impl SearchSpec {
                 "surrogate" => {
                     spec.surrogate = Some(SurrogateSpec::parse(val)?);
                 }
+                "pipeline" => {
+                    spec.pipeline = val.as_bool().ok_or_else(|| {
+                        Error::Config("search pipeline must be a bool".into())
+                    })?;
+                }
                 "range" => {
                     let Value::Object(ranges) = val else {
                         return Err(Error::Config(
@@ -176,7 +189,7 @@ impl SearchSpec {
                 other => {
                     return Err(Error::Config(format!(
                         "unknown search key {other:?} (valid: strategy, budget, seed, \
-                         population, prefilter, surrogate, range)"
+                         population, prefilter, surrogate, range, pipeline)"
                     )));
                 }
             }
@@ -247,6 +260,17 @@ mod tests {
         assert_eq!(s.seed, 0);
         assert!(!s.prefilter);
         assert!(s.surrogate.is_none());
+        assert!(s.pipeline);
+    }
+
+    #[test]
+    fn pipeline_parses_and_rejects_non_bools() {
+        let s = SearchSpec::parse(&json::parse(r#"{"pipeline": false}"#).unwrap()).unwrap();
+        assert!(!s.pipeline);
+        let bad = SearchSpec::parse(&json::parse(r#"{"pipeline": 3}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(bad.contains("bool"), "{bad}");
     }
 
     #[test]

@@ -592,6 +592,31 @@ impl Surrogate {
         }
     }
 
+    /// [`Self::predict`] without touching the prediction counters —
+    /// for *speculative* consumers (the pipelined scheduler's
+    /// guess-gating) whose queries must not perturb the replayable
+    /// `sur_predictions` accounting.
+    pub fn predict_quiet(&self, c: &Candidate) -> Vec<f64> {
+        let x = self.enc.encode(c);
+        match &self.fit {
+            Some(f) => f.predict(&x),
+            None => {
+                let m = self.obs_y.first().map_or(0, Vec::len);
+                let n = self.obs_y.len().max(1) as f64;
+                (0..m)
+                    .map(|o| self.obs_y.iter().map(|y| y[o]).sum::<f64>() / n)
+                    .collect()
+            }
+        }
+    }
+
+    /// Would the deferral policy sideline this candidate right now?
+    /// Uncounted ([`Self::predict_quiet`]) — a speculation-only probe
+    /// of the policy, never part of the observed trace.
+    pub fn would_defer(&self, c: &Candidate, truth: &[Vec<f64>]) -> bool {
+        self.ready() && self.defer(&self.predict_quiet(c), truth)
+    }
+
     /// Per-objective spread (max − min) over the truth observations.
     fn spreads(truth: &[Vec<f64>]) -> Vec<f64> {
         let m = truth.first().map_or(0, Vec::len);

@@ -1,0 +1,190 @@
+//! Pipelined probe scheduling semantics on the synthetic mini jet
+//! manifest.
+//!
+//! Pins the PR's headline contract: the pipelined scheduler (the
+//! `search.pipeline` default — speculative next-round candidates
+//! enqueued on the persistent worker pool, committed in proposal
+//! order) produces a trace **bit-identical** to the lock-step barrier
+//! scheduler, for every `--jobs` value — labels, LOG streams, metric
+//! bit patterns, front, budget accounting and surrogate accounting.
+//! Also pins what speculation is allowed to touch: mis-speculated
+//! probes never appear in the observed trace but DO land in the shared
+//! probe tiers as cache fodder.
+
+use metaml::bench_support::synthetic_jet_mini_manifest;
+use metaml::config::FlowSpec;
+use metaml::dse::ProbeTiers;
+use metaml::flow::{Session, TaskRegistry};
+use metaml::json::Value;
+use metaml::runtime::Runtime;
+use metaml::search::{run_search_tiered, SearchOutcome, SearchSpec};
+
+fn mini_session() -> Session {
+    Session::with_backend(Runtime::reference(), synthetic_jet_mini_manifest())
+}
+
+/// Run against fresh tiers (cold cache per call) and hand both back so
+/// tests can inspect what speculation left behind.
+fn run_tiered(
+    spec: &FlowSpec,
+    search: &SearchSpec,
+    jobs: usize,
+) -> (SearchOutcome, ProbeTiers) {
+    let session = mini_session();
+    let registry = TaskRegistry::builtin();
+    let tiers = ProbeTiers::new();
+    let extra = vec![("model".to_string(), Value::String("jet_mini".into()))];
+    let out =
+        run_search_tiered(&session, &registry, spec, search, &extra, jobs, &tiers).unwrap();
+    (out, tiers)
+}
+
+/// Bit-identity over everything the determinism contract covers:
+/// labels, front, every metric's bit pattern, every LOG event stream,
+/// budget spend and surrogate accounting.  Probe *counters* stay out —
+/// `*_computed` and `spec_*` are wall-clock diagnostics.
+fn assert_bit_identical(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_eq!(a.outcome.front, b.outcome.front, "{what}: front");
+    assert_eq!(a.outcome.results.len(), b.outcome.results.len(), "{what}");
+    for (x, y) in a.outcome.results.iter().zip(&b.outcome.results) {
+        assert_eq!(x.label, y.label, "{what}");
+        assert_eq!(x.events, y.events, "{what}: {} LOG", x.label);
+        for (k, v) in &x.metrics {
+            let w = y.metrics.get(k).copied().unwrap_or(f64::NAN);
+            assert_eq!(v.to_bits(), w.to_bits(), "{what}: {} {k}", x.label);
+        }
+    }
+    assert_eq!(a.spent, b.spent, "{what}: spent");
+    assert_eq!(a.grid_size, b.grid_size, "{what}: grid_size");
+    let sur = |o: &SearchOutcome| {
+        o.surrogate.as_ref().map(|s| {
+            let mae: Vec<u64> = s.mean_abs_error.iter().map(|e| e.to_bits()).collect();
+            (s.fits, s.predictions, s.deferred, s.validated, mae)
+        })
+    };
+    assert_eq!(sur(a), sur(b), "{what}: surrogate accounting");
+}
+
+/// The checked-in surrogate example spec (evolve + online surrogate
+/// over a six-clock grid), retargeted at the mini model so the whole
+/// flow runs on the reference interpreter.
+fn surrogate_jet_spec() -> FlowSpec {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/specs/surrogate_jet.json");
+    FlowSpec::parse(&std::fs::read_to_string(path).unwrap()).unwrap()
+}
+
+#[test]
+fn pipelined_traces_are_bit_identical_across_jobs_and_to_the_barrier() {
+    let spec = surrogate_jet_spec();
+    let search = spec.search.clone().expect("example spec declares a search section");
+    assert!(search.pipeline, "pipelining is the default");
+
+    let (golden, _) = run_tiered(&spec, &search, 1);
+    assert!(golden.spent > 0);
+
+    // the pipelined runs must match at every width — and actually
+    // speculate at jobs > 1 (the guess stream is deterministic, so
+    // submissions are too; only cancel/commit timing is not)
+    for jobs in [4usize, 16] {
+        let (out, _) = run_tiered(&spec, &search, jobs);
+        assert_bit_identical(&golden, &out, &format!("pipelined jobs={jobs}"));
+        assert!(out.probes.spec_submitted > 0, "jobs={jobs}: {:?}", out.probes);
+    }
+
+    // ... and the explicit barrier opt-out must match it bit for bit
+    // while never speculating
+    let barrier = SearchSpec { pipeline: false, ..search };
+    let (bar, _) = run_tiered(&spec, &barrier, 4);
+    assert_eq!(bar.probes.spec_submitted, 0, "{:?}", bar.probes);
+    assert_eq!(bar.probes.spec_committed, 0);
+    assert_bit_identical(&golden, &bar, "barrier jobs=4");
+}
+
+/// A scenario where one mis-speculation is *guaranteed*, not lucky:
+/// `evolve` with population 2 on a three-point grid, budget 1.  The
+/// speculation clone proposes the same shuffled two-candidate prefix
+/// the real propose draws from (same PRNG state, no ranker), but the
+/// budget truncates the real batch to one — so exactly two flows are
+/// speculated, the first commits, and the second is pure cache fodder
+/// that `finish()` drains into the tiers.
+fn speculation_spec() -> FlowSpec {
+    FlowSpec::parse(
+        r#"{
+  "name": "mini_speculation",
+  "cfg": {
+    "model": "jet_mini",
+    "gen.train_epochs": 1,
+    "prune.train_epochs": 1,
+    "prune.pruning_rate_thresh": 0.25,
+    "quantize.start_precision": "ap_fixed<8,4>",
+    "quantize.min_bits": 7,
+    "reuse.latency_budget_ns": 400.0
+  },
+  "tasks": [
+    {"id": "gen", "type": "KERAS-MODEL-GEN"},
+    {"id": "prune", "type": "PRUNING"},
+    {"id": "hls", "type": "HLS4ML"},
+    {"id": "quantize", "type": "QUANTIZATION"},
+    {"id": "reuse", "type": "REUSE_SEARCH"},
+    {"id": "synth", "type": "VIVADO-HLS"}
+  ],
+  "edges": [["gen", "prune"], ["prune", "hls"], ["hls", "quantize"],
+             ["quantize", "reuse"], ["reuse", "synth"]],
+  "explore": {
+    "cfg_grid": {"hls.clock_period": [5, 10, 20]}
+  },
+  "search": {"strategy": "evolve", "budget": 1, "seed": 0, "population": 2}
+}"#,
+    )
+    .unwrap()
+}
+
+#[test]
+fn misspeculated_probes_never_alter_the_trace_and_land_in_the_memo_tier() {
+    let spec = speculation_spec();
+    let search = spec.search.clone().unwrap();
+    let barrier = SearchSpec { pipeline: false, ..search.clone() };
+
+    let (bar, bar_tiers) = run_tiered(&spec, &barrier, 4);
+    let (pipe, pipe_tiers) = run_tiered(&spec, &search, 4);
+
+    // observed trace: identical, exactly one evaluation either way
+    assert_eq!(bar.evaluations(), 1);
+    assert_bit_identical(&bar, &pipe, "speculation vs barrier");
+
+    // speculation accounting is exact here for any seed: the guess
+    // pair is the real batch's superset, the budget commits one, and
+    // nothing is cancelled (the search ends before any guess goes
+    // stale, and finish() always waits)
+    assert_eq!(pipe.probes.spec_submitted, 2, "{:?}", pipe.probes);
+    assert_eq!(pipe.probes.spec_committed, 1, "{:?}", pipe.probes);
+    assert_eq!(pipe.probes.spec_cancelled, 0, "{:?}", pipe.probes);
+    assert_eq!(bar.probes.spec_submitted, 0, "{:?}", bar.probes);
+
+    // the mis-speculated flow ran a distinct clock period, so its
+    // hardware probes landed in the shared tiers as cache fodder —
+    // strictly more memo entries than the barrier run left behind
+    assert!(
+        pipe_tiers.hw.len() > bar_tiers.hw.len(),
+        "pipelined hw memo {} vs barrier {}",
+        pipe_tiers.hw.len(),
+        bar_tiers.hw.len()
+    );
+    // and the fodder is usable: rerunning the mis-speculated point on
+    // the warmed tiers computes no fresh hardware probes
+    let full = SearchSpec { budget: None, ..search };
+    let before = pipe_tiers.probe_counts();
+    let session = mini_session();
+    let registry = TaskRegistry::builtin();
+    let extra = vec![("model".to_string(), Value::String("jet_mini".into()))];
+    let all = run_search_tiered(
+        &session, &registry, &spec, &full, &extra, 4, &pipe_tiers,
+    )
+    .unwrap();
+    assert_eq!(all.evaluations(), 3);
+    let after = pipe_tiers.probe_counts();
+    assert!(
+        after.hw_computed - before.hw_computed < after.hw_issued - before.hw_issued,
+        "warmed tiers must serve some hardware probes from the memo: {after:?}"
+    );
+}
