@@ -28,6 +28,10 @@
 //!     the same evolve+surrogate search at 1 / 4 / max workers —
 //!     asserts bit-identical traces and that pipelining pays at
 //!     jobs=4 (>= 1.5x in full runs, no regression in smoke);
+//!   * observability overhead: the same cache-cold probe batch with
+//!     span recording off vs on (asserting <= 2% traced wall-clock
+//!     overhead in full runs) and the per-call cost of a disabled
+//!     span (~one atomic load);
 //!   * literal marshaling overhead (host→device→host round trip);
 //!   * flow-engine overhead (no-op task graph traversal).
 //!
@@ -36,10 +40,11 @@
 //! reproduce the numbers.  Writes bench_out/perf_runtime.csv and a
 //! machine-readable bench_out/perf_runtime.json.
 //!
-//! `--smoke` runs only the interpreter-kernel, surrogate-search and
-//! scheduler sections with tiny iteration counts / grids — a CI-sized
-//! functional check (sparse path engages, surrogate halves the probes,
-//! pipelined scheduling stays trace-identical), not a timing run.
+//! `--smoke` runs only the interpreter-kernel, surrogate-search,
+//! scheduler and obs sections with tiny iteration counts / grids — a
+//! CI-sized functional check (sparse path engages, surrogate halves
+//! the probes, pipelined scheduling stays trace-identical, tracing
+//! stays near-free), not a timing run.
 
 use std::time::Instant;
 
@@ -601,18 +606,137 @@ fn scheduler_section(rec: &mut Recorder, table: &mut Table, smoke: bool) -> meta
     Ok(())
 }
 
+/// Observability overhead: the same cache-cold probe batch with span
+/// recording off vs on (best of N, asserting the traced run stays
+/// within the acceptance overhead), plus the raw cost of a disabled
+/// span call (a single relaxed atomic load — the "near-zero when off"
+/// half of the obs contract).
+fn obs_section(rec: &mut Recorder, table: &mut Table, smoke: bool) -> metaml::Result<()> {
+    use metaml::obs::trace;
+    use metaml::runtime::{KernelMode, RefBackend};
+
+    let session = Session::with_backend(
+        Runtime::from_backend(Box::new(RefBackend::with_mode(KernelMode::Fast))),
+        synthetic_jet_manifest(),
+    );
+    let variant = session.manifest.variant("jet_dnn", 1.0)?.clone();
+    let exec = session.executable(&variant.tag)?;
+    let data = session.dataset("jet_dnn")?;
+    let trainer = Trainer::new(&session.runtime, &exec, &data);
+    let state = ModelState::init(&variant, 77);
+
+    let n_layers = state.n_weight_layers().max(1);
+    let n_probes = if smoke { n_layers } else { 4 * n_layers };
+    let requests: Vec<ProbeRequest> = (0..n_probes)
+        .map(|i| {
+            let mut cand = state.clone();
+            cand.precisions[i % n_layers] =
+                Precision::new(16 - 2 * (i / n_layers) as u32, 6);
+            ProbeRequest::new(i, cand)
+        })
+        .collect();
+
+    // fresh pool per run: every probe is cache-cold, so both sides
+    // measure real evaluation work, not memo lookups
+    let run = |enabled: bool| -> metaml::Result<f64> {
+        if enabled {
+            trace::enable();
+            trace::reset();
+        } else {
+            trace::disable();
+        }
+        let pool = ProbePool::new(1);
+        let t0 = Instant::now();
+        pool.evaluate_batch(&trainer, &requests)?;
+        let secs = t0.elapsed().as_secs_f64();
+        if enabled && trace::drain().is_empty() {
+            return Err(metaml::Error::other(
+                "obs: enabled tracing recorded no spans over a probe batch",
+            ));
+        }
+        trace::disable();
+        Ok(secs)
+    };
+    let reps = if smoke { 1 } else { 3 };
+    let best = |enabled: bool| -> metaml::Result<f64> {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            best = best.min(run(enabled)?);
+        }
+        Ok(best)
+    };
+    let off_secs = best(false)?;
+    let on_secs = best(true)?;
+    let off_ps = requests.len() as f64 / off_secs.max(1e-12);
+    let on_ps = requests.len() as f64 / on_secs.max(1e-12);
+    let overhead_pct = 100.0 * (on_secs / off_secs.max(1e-12) - 1.0);
+
+    // the disabled fast path: one span open/drop per iteration
+    let iters = if smoke { 100_000usize } else { 1_000_000 };
+    trace::disable();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _s = trace::span("bench", "obs.disabled");
+    }
+    let span_ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+
+    table.row_strs(&[
+        "obs probes/s (tracing off)",
+        "jet_dnn",
+        &format!("{:.1} probes/s", off_ps),
+    ]);
+    table.row_strs(&[
+        "obs probes/s (tracing on)",
+        "jet_dnn",
+        &format!("{:.1} probes/s ({:+.2}% wall)", on_ps, overhead_pct),
+    ]);
+    table.row_strs(&[
+        "obs disabled span",
+        "-",
+        &format!("{:.1} ns/call", span_ns),
+    ]);
+    rec.record("obs_probes_s_disabled", "jet_dnn", off_ps, "probes/s");
+    rec.record("obs_probes_s_enabled", "jet_dnn", on_ps, "probes/s");
+    rec.record("obs_traced_overhead_pct", "jet_dnn", overhead_pct, "%");
+    rec.record("obs_disabled_span_ns", "-", span_ns, "ns");
+
+    if span_ns > 1000.0 {
+        return Err(metaml::Error::other(format!(
+            "obs: disabled span costs {span_ns:.0} ns/call — not near-zero"
+        )));
+    }
+    if smoke {
+        // functional gate on millisecond-scale smoke batches: tracing
+        // must not halve throughput (absolute slack absorbs noise)
+        if on_secs > off_secs * 2.0 + 0.05 {
+            return Err(metaml::Error::other(format!(
+                "obs: traced batch {on_secs:.3}s vs untraced {off_secs:.3}s — \
+                 tracing halved probe throughput in smoke"
+            )));
+        }
+    } else if overhead_pct > 2.0 {
+        return Err(metaml::Error::other(format!(
+            "obs: {overhead_pct:.2}% traced overhead — above the 2% acceptance bar"
+        )));
+    }
+    Ok(())
+}
+
 fn main() -> metaml::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let mut rec = Recorder::new();
     let mut table = Table::new(&["metric", "model", "value"]);
 
-    // interpreter kernels + surrogate search + probe scheduler (the
-    // sections --smoke runs)
+    // interpreter kernels + surrogate search + probe scheduler +
+    // observability overhead (the sections --smoke runs)
     interp_section(&mut rec, &mut table, smoke)?;
     surrogate_section(&mut rec, &mut table, smoke)?;
     scheduler_section(&mut rec, &mut table, smoke)?;
+    obs_section(&mut rec, &mut table, smoke)?;
     if smoke {
-        println!("== §Perf: interpreter kernels + surrogate search + scheduler (smoke) ==");
+        println!(
+            "== §Perf: interpreter kernels + surrogate search + scheduler + obs (smoke) =="
+        );
         println!("{}", table.render());
         rec.save()?;
         return Ok(());

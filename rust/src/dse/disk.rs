@@ -232,6 +232,10 @@ impl ProbeTier<EvalKey, EvalResult> for DiskStore {
     fn put(&self, key: &EvalKey, value: &EvalResult) {
         self.put_train(key, value);
     }
+
+    fn tier_name(&self) -> &'static str {
+        "disk"
+    }
 }
 
 impl ProbeTier<HwKey, HwEval> for DiskStore {
@@ -241,6 +245,10 @@ impl ProbeTier<HwKey, HwEval> for DiskStore {
 
     fn put(&self, key: &HwKey, value: &HwEval) {
         self.put_hw(key, value);
+    }
+
+    fn tier_name(&self) -> &'static str {
+        "disk"
     }
 }
 

@@ -26,6 +26,7 @@ use crate::dse::hw::{HwCache, HwEval, HwKey, HwProbeRequest, HwProbeResult};
 use crate::dse::service::{ProbeTier, ProbeTiers};
 use crate::error::{Error, Result};
 use crate::model::ModelState;
+use crate::obs::{metrics, trace};
 use crate::synth::{self, FpgaDevice};
 use crate::train::{EvalResult, Trainer};
 
@@ -104,6 +105,16 @@ pub struct ProbeCounts {
     pub spec_committed: usize,
     /// Speculative flows cancelled before any work started.
     pub spec_cancelled: usize,
+}
+
+impl ProbeCounts {
+    /// The one cache-hit-rate definition shared by the explore summary
+    /// and the report CSV: `cached / issued` where
+    /// `cached = issued - computed`.  `None` when nothing was issued,
+    /// so both renderings show the same blank instead of a fake 0.
+    pub fn cache_hit_rate(issued: usize, computed: usize) -> Option<f64> {
+        (issued > 0).then(|| issued.saturating_sub(computed) as f64 / issued as f64)
+    }
 }
 
 impl ProbeStats {
@@ -277,10 +288,19 @@ impl ProbePool {
             // Fast path (n == 1 or jobs == 1, the common
             // surrogate-validation case): inline on the caller, no
             // queue hop, full `--jobs` budget lent into the probe.
+            // Emits the same probe.batch/wait/exec span structure as
+            // the pooled path so traces compare across worker counts.
             let intra = self.jobs.max(1);
-            return (0..n)
-                .map(|i| crate::runtime::kernels::with_intra_threads(intra, || f(i)))
+            let obs = trace::batch(n);
+            let out = (0..n)
+                .map(|i| {
+                    obs.probe_claimed(i);
+                    let _span = obs.probe_span(i);
+                    crate::runtime::kernels::with_intra_threads(intra, || f(i))
+                })
                 .collect();
+            obs.close();
+            return out;
         }
 
         let intra = (self.jobs / workers).max(1);
@@ -319,7 +339,7 @@ impl ProbePool {
         F: Fn(usize) -> Result<V> + Sync,
     {
         let tiers: [&dyn ProbeTier<K, V>; 1] = [cache];
-        self.tiered_batch(&tiers, keys, compute)
+        self.tiered_batch("adhoc", &tiers, keys, compute)
     }
 
     /// Memoized batch execution across a stack of cache tiers — the
@@ -338,8 +358,13 @@ impl ProbePool {
     /// pure per-candidate work fanned out via [`Self::run_batch`]
     /// (`compute(i)` computes request `i`).  Returns `(result, cached)`
     /// per request, in request order.
+    ///
+    /// `kind` labels the probe kind (`"train"`, `"hw"`, …) in the
+    /// per-tier observability it emits: `cache.{kind}.{tier}.{hit,miss,
+    /// write}` counters plus one `cache.lookup` span per tier per call.
     pub fn tiered_batch<K, V, F>(
         &self,
+        kind: &'static str,
         tiers: &[&dyn ProbeTier<K, V>],
         keys: &[K],
         compute: F,
@@ -349,18 +374,17 @@ impl ProbePool {
         V: Clone + Send,
         F: Fn(usize) -> Result<V> + Sync,
     {
+        let mut tally = CacheTally::new(tiers.len());
         // Single-request fast path (the common surrogate-validation
         // shape): one tier walk, no resolution map, and the compute —
         // if any — runs inline through `run_batch`'s n == 1 path.
         if let [key] = keys {
-            let hit = tiers
-                .iter()
-                .enumerate()
-                .find_map(|(depth, tier)| tier.get(key).map(|v| (depth, v)));
-            if let Some((depth, v)) = hit {
-                for upper in &tiers[..depth] {
+            if let Some((depth, v)) = tally.resolve(tiers, key) {
+                for (d, upper) in tiers[..depth].iter().enumerate() {
                     upper.put(key, &v);
+                    tally.wrote(d);
                 }
+                tally.publish(kind, tiers);
                 return Ok(vec![(v, true)]);
             }
             let fresh = self.run_batch(1, |_| compute(0))?;
@@ -368,9 +392,11 @@ impl ProbePool {
                 .into_iter()
                 .next()
                 .ok_or_else(|| Error::other("probe pool: worker dropped a job slot"))?;
-            for tier in tiers {
+            for (d, tier) in tiers.iter().enumerate() {
                 tier.put(key, &v);
+                tally.wrote(d);
             }
+            tally.publish(kind, tiers);
             return Ok(vec![(v, false)]);
         }
 
@@ -387,13 +413,10 @@ impl ProbePool {
         let mut compute_idx: Vec<usize> = Vec::new();
         let mut resolved: Vec<Resolution<V>> = Vec::with_capacity(keys.len());
         for (i, key) in keys.iter().enumerate() {
-            let hit = tiers
-                .iter()
-                .enumerate()
-                .find_map(|(depth, tier)| tier.get(key).map(|v| (depth, v)));
-            if let Some((depth, v)) = hit {
-                for upper in &tiers[..depth] {
+            if let Some((depth, v)) = tally.resolve(tiers, key) {
+                for (d, upper) in tiers[..depth].iter().enumerate() {
                     upper.put(key, &v);
+                    tally.wrote(d);
                 }
                 resolved.push(Resolution::Cached(v));
             } else if let Some(&slot) = first_compute.get(key) {
@@ -408,10 +431,12 @@ impl ProbePool {
         let fresh: Vec<V> =
             self.run_batch(compute_idx.len(), |slot| compute(compute_idx[slot]))?;
         for (slot, &i) in compute_idx.iter().enumerate() {
-            for tier in tiers {
+            for (d, tier) in tiers.iter().enumerate() {
                 tier.put(&keys[i], &fresh[slot]);
+                tally.wrote(d);
             }
         }
+        tally.publish(kind, tiers);
 
         Ok(resolved
             .into_iter()
@@ -442,7 +467,7 @@ impl ProbePool {
         if let Some(disk) = &self.disk {
             tiers.push(disk.as_ref());
         }
-        let out = self.tiered_batch(&tiers, &keys, |i| {
+        let out = self.tiered_batch("train", &tiers, &keys, |i| {
             trainer.evaluate(&requests[i].state)
         })?;
         self.stats.train_computed.fetch_add(
@@ -476,7 +501,7 @@ impl ProbePool {
         if let Some(disk) = &self.disk {
             tiers.push(disk.as_ref());
         }
-        let out = self.tiered_batch(&tiers, &keys, |i| {
+        let out = self.tiered_batch("hw", &tiers, &keys, |i| {
             synth::estimate(&requests[i].model, device, clock_mhz)
                 .map(|r| HwEval::from_report(&r))
         })?;
@@ -489,6 +514,58 @@ impl ProbePool {
             .zip(out)
             .map(|(req, (eval, cached))| HwProbeResult { id: req.id, eval, cached })
             .collect())
+    }
+}
+
+/// Per-call, per-tier cache accounting for [`ProbePool::tiered_batch`]:
+/// hit/miss tallies from the top-down resolution walk plus every
+/// write-through/back-fill put, published as `cache.{kind}.{tier}.*`
+/// counters and — when tracing — one `cache.lookup` span per tier (a
+/// constant per-call span structure, whatever the hit pattern).
+struct CacheTally {
+    /// `[hits, misses, writes]` per tier depth.
+    per_tier: Vec<[u64; 3]>,
+}
+
+impl CacheTally {
+    fn new(tiers: usize) -> Self {
+        CacheTally { per_tier: vec![[0; 3]; tiers] }
+    }
+
+    /// Walk the tier stack top-down for `key`, tallying a miss for
+    /// every tier consulted without an answer and a hit where found.
+    fn resolve<K, V>(
+        &mut self,
+        tiers: &[&dyn ProbeTier<K, V>],
+        key: &K,
+    ) -> Option<(usize, V)> {
+        for (depth, tier) in tiers.iter().enumerate() {
+            if let Some(v) = tier.get(key) {
+                self.per_tier[depth][0] += 1;
+                return Some((depth, v));
+            }
+            self.per_tier[depth][1] += 1;
+        }
+        None
+    }
+
+    fn wrote(&mut self, depth: usize) {
+        self.per_tier[depth][2] += 1;
+    }
+
+    fn publish<K, V>(&self, kind: &'static str, tiers: &[&dyn ProbeTier<K, V>]) {
+        for (depth, tier) in tiers.iter().enumerate() {
+            let [hits, misses, writes] = self.per_tier[depth];
+            let name = tier.tier_name();
+            metrics::counter_add(&format!("cache.{kind}.{name}.hit"), hits);
+            metrics::counter_add(&format!("cache.{kind}.{name}.miss"), misses);
+            metrics::counter_add(&format!("cache.{kind}.{name}.write"), writes);
+            let mut span = trace::span("cache", "cache.lookup");
+            span.arg("tier", name);
+            span.arg("kind", kind);
+            span.arg("hits", hits);
+            span.arg("misses", misses);
+        }
     }
 }
 

@@ -42,6 +42,7 @@ use crate::dse::hw::{HwCache, HwProbeRequest, HwProbeResult};
 use crate::dse::pool::{ProbeCounts, ProbePool, ProbeRequest, ProbeResult, ProbeStats};
 use crate::dse::workers::WorkerPool;
 use crate::error::{Error, Result};
+use crate::obs::trace;
 use crate::synth::FpgaDevice;
 use crate::train::Trainer;
 
@@ -198,10 +199,15 @@ impl ProbeService for ProbePool {
         if ProbePool::jobs(self) <= 1 {
             // jobs = 1 fast path: no queue, no ticket — run inline on
             // the caller thread exactly as the synchronous executor
-            // would.
+            // would, emitting the same batch span structure as the
+            // queued path.
+            let obs = trace::batch(n);
             for i in 0..n {
+                obs.probe_claimed(i);
+                let _span = obs.probe_span(i);
                 f(i);
             }
+            obs.close();
             return 0;
         }
         // SAFETY: forwarded verbatim from our caller's contract.
@@ -314,6 +320,13 @@ where
 pub trait ProbeTier<K, V>: Send + Sync {
     fn get(&self, key: &K) -> Option<V>;
     fn put(&self, key: &K, value: &V);
+
+    /// Stable name for per-tier observability (`cache.{kind}.{tier}.*`
+    /// counters, `cache.lookup` span attributes).  In-memory memos are
+    /// `"memo"`; the persistent [`DiskStore`] overrides to `"disk"`.
+    fn tier_name(&self) -> &'static str {
+        "memo"
+    }
 }
 
 impl<K, V> ProbeTier<K, V> for ProbeCache<K, V>

@@ -16,6 +16,13 @@
 //! (compare-and-swap of the claim cursor from 0 to n). A batch that
 //! any thread has started is left to finish — its results land in the
 //! probe tiers as cache fodder, never half-observed.
+//!
+//! When tracing is enabled (see [`crate::obs::trace`]), every batch
+//! carries a span envelope opened at submission on the submitting
+//! thread, and each slot records a `probe.wait` interval (enqueue →
+//! claim) plus a `probe.exec` span on whichever thread claims it —
+//! making queue-wait vs execute time visible without touching the
+//! execution order.
 
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
@@ -23,6 +30,8 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+use crate::obs::trace;
 
 /// Completion state of one batch, guarded by the batch mutex.
 struct Done {
@@ -42,16 +51,20 @@ struct Batch {
     next: AtomicUsize,
     done: Mutex<Done>,
     cond: Condvar,
+    /// Span envelope opened by the submitting thread; inert when
+    /// tracing is disabled.
+    obs: trace::BatchSpans,
 }
 
 impl Batch {
-    fn new(job: &'static (dyn Fn(usize) + Sync), n: usize) -> Self {
+    fn new(job: &'static (dyn Fn(usize) + Sync), n: usize, obs: trace::BatchSpans) -> Self {
         Batch {
             job,
             n,
             next: AtomicUsize::new(0),
             done: Mutex::new(Done { finished: 0, cancelled: false, panic: None }),
             cond: Condvar::new(),
+            obs,
         }
     }
 
@@ -64,7 +77,11 @@ impl Batch {
             if i >= self.n {
                 break;
             }
-            let outcome = catch_unwind(AssertUnwindSafe(|| (self.job)(i)));
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                self.obs.probe_claimed(i);
+                let _span = self.obs.probe_span(i);
+                (self.job)(i)
+            }));
             let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
             done.finished += 1;
             if let Err(p) = outcome {
@@ -87,8 +104,10 @@ impl Batch {
         while !done.cancelled && done.finished < self.n {
             done = self.cond.wait(done).unwrap_or_else(|e| e.into_inner());
         }
-        if let Some(p) = done.panic.take() {
-            drop(done);
+        let panic = done.panic.take();
+        drop(done);
+        self.obs.close();
+        if let Some(p) = panic {
             resume_unwind(p);
         }
     }
@@ -104,6 +123,8 @@ impl Batch {
             let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
             done.cancelled = true;
             self.cond.notify_all();
+            drop(done);
+            self.obs.close_cancelled();
             true
         } else {
             false
@@ -200,7 +221,9 @@ impl WorkerPool {
         // Lifetime erasure: validity until wait/cancel is the caller's
         // contract, stated above.
         let job: &'static (dyn Fn(usize) + Sync) = std::mem::transmute(job);
-        let batch = Arc::new(Batch::new(job, n));
+        // Span envelope is created here, on the submitting thread, so
+        // its logical parent is whatever span the submitter has open.
+        let batch = Arc::new(Batch::new(job, n, trace::batch(n)));
         let ticket = self.next_ticket.fetch_add(1, Ordering::SeqCst) + 1;
         self.tickets
             .lock()

@@ -30,6 +30,7 @@ use crate::flow::registry::TaskRegistry;
 use crate::flow::session::Session;
 use crate::flow::task::{TaskCtx, TaskOutcome};
 use crate::metamodel::{LogEvent, MetaModel};
+use crate::obs::trace;
 
 pub struct Engine<'a> {
     pub session: &'a Session,
@@ -91,6 +92,8 @@ impl<'a> Engine<'a> {
         self.check_multiplicity(graph, plan, !prefix.is_empty())?;
 
         let flow_name = format!("{prefix}{}", graph.name);
+        let mut flow_span = trace::span("flow", "flow.run");
+        flow_span.arg("flow", flow_name.as_str());
         meta.log.push(LogEvent::FlowStarted { flow: flow_name.clone() });
 
         let n = graph.nodes().len();
@@ -251,6 +254,12 @@ impl<'a> Engine<'a> {
         prefix: &str,
     ) -> Result<TaskOutcome> {
         meta.log.push(LogEvent::TaskStarted { task: instance.to_string() });
+        // opened before any probe work so pool batches nest under it
+        let mut task_span = trace::span("flow", "flow.task");
+        task_span.arg("instance", instance);
+        if let NodeKind::Task { task_type } = &node.kind {
+            task_span.arg("task", task_type.as_str());
+        }
         let t0 = Instant::now();
         let outcome = match &node.kind {
             NodeKind::Task { task_type } => {
@@ -340,6 +349,8 @@ impl<'a> Engine<'a> {
 /// artifact metrics by producer.  A missing metric is a hard error —
 /// guards over never-recorded metrics are spec bugs, not silent skips.
 fn eval_guard(meta: &MetaModel, prefix: &str, guard: &EdgeGuard) -> Result<f64> {
+    let mut edge_span = trace::span("flow", "flow.edge");
+    edge_span.arg("metric", guard.metric.as_str());
     let (task, name) = guard.metric.rsplit_once('.').ok_or_else(|| {
         Error::Flow(format!(
             "guard metric {:?} must be \"<task>.<metric>\"",
@@ -357,6 +368,9 @@ fn eval_guard(meta: &MetaModel, prefix: &str, guard: &EdgeGuard) -> Result<f64> 
         .or_else(|| meta.space.latest_metric(&prefixed, name))
         .or_else(|| if nested { meta.log.latest_metric(task, name) } else { None })
         .or_else(|| if nested { meta.space.latest_metric(task, name) } else { None });
+    if let Some(v) = value {
+        edge_span.arg("value", v);
+    }
     value.ok_or_else(|| {
         Error::Flow(format!(
             "guard metric {:?} not found (no LOG metric or model-space metric \

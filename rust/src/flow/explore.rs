@@ -478,7 +478,10 @@ pub fn front_table(out: &ExploreOutcome) -> Table {
 /// directly instead of only through the rendered label.
 ///
 /// With `cost` set, run-level accounting columns are appended per row:
-/// issued / computed / hit-rate per probe kind, the search shape
+/// issued / computed / cache hit rate per probe kind (the
+/// `*_cache_hit_rate` columns use the one shared definition,
+/// [`crate::dse::ProbeCounts::cache_hit_rate`] = cached / issued, and
+/// match the `explore` summary digit for digit), the search shape
 /// (`grid_size`, `budget`, `spent`), when the run used the
 /// learned surrogate its fit/prediction counts, probes saved, and
 /// mean absolute prediction error per objective, and — when the caller
@@ -501,10 +504,10 @@ pub fn front_csv(out: &ExploreOutcome, cost: Option<&SearchCost>) -> CsvWriter {
         header.extend([
             "train_issued",
             "train_computed",
-            "train_hit_rate",
+            "train_cache_hit_rate",
             "hw_issued",
             "hw_computed",
-            "hw_hit_rate",
+            "hw_cache_hit_rate",
             "grid_size",
             "budget",
             "spent",
@@ -521,11 +524,9 @@ pub fn front_csv(out: &ExploreOutcome, cost: Option<&SearchCost>) -> CsvWriter {
     }
     header.extend(cfg_keys.iter().copied());
     let hit_rate = |issued: usize, computed: usize| {
-        if issued == 0 {
-            String::new()
-        } else {
-            format!("{:.4}", issued.saturating_sub(computed) as f64 / issued as f64)
-        }
+        crate::dse::ProbeCounts::cache_hit_rate(issued, computed)
+            .map(|r| format!("{r:.4}"))
+            .unwrap_or_default()
     };
     let mut w = CsvWriter::new(&header);
     for (i, r) in out.results.iter().enumerate() {
@@ -755,7 +756,7 @@ mod tests {
         assert_eq!(
             lines.next().unwrap(),
             "variant,accuracy,dsp,lut,latency_ns,power_w,on_front,\
-             train_issued,train_computed,train_hit_rate,hw_issued,hw_computed,hw_hit_rate,\
+             train_issued,train_computed,train_cache_hit_rate,hw_issued,hw_computed,hw_cache_hit_rate,\
              grid_size,budget,spent,sur_fits,sur_predictions,sur_probes_saved,\
              sur_mae_accuracy,sur_mae_dsp,sur_mae_lut,sur_mae_latency_ns,\
              wall_s,probes_per_s"

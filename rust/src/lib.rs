@@ -55,6 +55,12 @@
 //! the joint (orders × grid × numeric ranges) space to evaluate under
 //! an explicit evaluation budget, reusing the same probe pools and
 //! shared memos so results stay deterministic and jobs-invariant.
+//!
+//! Every layer reports into the strictly side-band [obs] subsystem —
+//! structured spans (flow tasks/edges, search rounds, the probe
+//! lifecycle, cache tiers, opt-in kernels) plus an always-on metrics
+//! registry — exported as Chrome trace-event JSON / metric snapshots
+//! without perturbing any determinism contract.
 
 pub mod baselines;
 pub mod bench_support;
@@ -67,6 +73,7 @@ pub mod hls;
 pub mod json;
 pub mod metamodel;
 pub mod model;
+pub mod obs;
 pub mod prune;
 pub mod quant;
 pub mod report;

@@ -31,6 +31,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "run-flow" => cmd_run_flow(&args[1..]),
         "explore" => cmd_explore(&args[1..]),
         "cache" => cmd_cache(&args[1..]),
+        "trace" => cmd_trace(&args[1..]),
         "synth" => cmd_synth(&args[1..]),
         _ => {
             print_help();
@@ -56,6 +57,7 @@ COMMANDS:
   explore     --flow <spec.json> [--model <name>] [--jobs N] [--synthetic]
               [--strategy S] [--budget N] [--seed S] [--surrogate]
               [--warmup N] [--cache-dir DIR]
+              [--trace-out FILE] [--metrics-out FILE]
               [-c k=v]...       search the spec's variant space and print
                                 the (accuracy, DSP, LUT, latency) Pareto
                                 front; --strategy picks exhaustive |
@@ -73,9 +75,16 @@ COMMANDS:
                                 nothing; --synthetic uses the in-memory
                                 jet manifest (no artifacts needed); a CSV
                                 of the evaluated variants lands in
-                                report/
+                                report/; --trace-out writes a Chrome
+                                trace-event JSON of the run (flow tasks,
+                                search rounds, probe queue/execute,
+                                cache tiers), --metrics-out the metrics
+                                registry snapshot
   cache       stats|clear --cache-dir DIR   inspect or delete the
                                 persistent probe-result store
+  trace       summary <trace.json>   per-span-name table (count, total,
+                                mean) + cache-tier table for a trace
+                                written by --trace-out
   synth       --model <name> [--scale S] [--device D] [--clock NS]
               [--reuse RF]   HLS+RTL report with fit/utilization; --clock
                              sets the target period (ns), --reuse the
@@ -86,7 +95,9 @@ Artifacts are read from ./artifacts (build with `make artifacts`).
 The execution backend is selected by METAML_BACKEND: `reference`
 (default, pure-Rust interpreter) or `xla` (PJRT, needs --features xla).
 DSE probe workers: --jobs > METAML_JOBS > available parallelism; search
-results and flow LOGs are bit-identical for every worker count.",
+results and flow LOGs are bit-identical for every worker count.
+Tracing: METAML_TRACE=1 records spans (METAML_TRACE=kernels adds
+per-matmul spans); tracing is side-band and never changes results.",
         metaml::version()
     );
 }
@@ -402,14 +413,29 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             ("--surrogate", false),
             ("--warmup", true),
             ("--cache-dir", true),
+            ("--trace-out", true),
+            ("--metrics-out", true),
             ("-c", true),
         ],
     )?;
     use metaml::dse::{DiskStore, ProbeTiers};
     use metaml::flow::explore::{front_csv, front_table};
     use metaml::flow::TaskRegistry;
+    use metaml::obs::{metrics, trace};
     use metaml::search::{run_search_tiered, strategy_names};
     use std::sync::Arc;
+
+    // tracing is opt-in (env or --trace-out) and strictly side-band;
+    // the metrics registry is always on, cleared here so the exported
+    // snapshot covers exactly this run
+    trace::configure_from_env();
+    let trace_out = opt(args, "--trace-out");
+    let metrics_out = opt(args, "--metrics-out");
+    if trace_out.is_some() {
+        trace::enable();
+    }
+    trace::reset();
+    metrics::reset();
 
     let flow_arg = opt(args, "--flow").unwrap_or_else(|| "s_p_q".into());
     let spec = load_spec(&flow_arg)?;
@@ -510,33 +536,41 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             r.metric("lut").unwrap_or(0.0) as u64,
         );
     }
-    let pct = |issued: usize, computed: usize| -> String {
-        if issued == 0 {
-            "-".into()
-        } else {
-            format!("{}%", issued.saturating_sub(computed) * 100 / issued)
-        }
+    // hit rate is the one shared definition (cached / issued,
+    // ProbeCounts::cache_hit_rate) so the summary and the CSV's
+    // *_cache_hit_rate columns agree digit for digit
+    let rate = |issued: usize, computed: usize| -> String {
+        metaml::dse::ProbeCounts::cache_hit_rate(issued, computed)
+            .map(|r| format!("{r:.4}"))
+            .unwrap_or_else(|| "-".into())
     };
     println!(
-        "probes: {} training issued ({} computed, {} cached), \
-         {} hardware issued ({} computed, {} cached)",
+        "probes: {} training issued ({} computed, cache hit rate {}), \
+         {} hardware issued ({} computed, cache hit rate {})",
         out.probes.train_issued,
         out.probes.train_computed,
-        pct(out.probes.train_issued, out.probes.train_computed),
+        rate(out.probes.train_issued, out.probes.train_computed),
         out.probes.hw_issued,
         out.probes.hw_computed,
-        pct(out.probes.hw_issued, out.probes.hw_computed),
+        rate(out.probes.hw_issued, out.probes.hw_computed),
     );
+    // wall clock and speculation volumes come out of the metrics
+    // registry — the driver records them there instead of threading
+    // Instant readings through the call chain
+    let wall = metrics::gauge("search.wall_secs").unwrap_or(0.0);
     let computed = out.probes.train_computed + out.probes.hw_computed;
     println!(
         "wall: {:.3} s ({:.1} probes/s)",
-        out.wall_secs,
-        computed as f64 / out.wall_secs.max(1e-9),
+        wall,
+        computed as f64 / wall.max(1e-9),
     );
-    if out.probes.spec_submitted > 0 {
+    let spec_submitted = metrics::counter("probes.speculation.submitted");
+    if spec_submitted > 0 {
         println!(
             "speculation: {} submitted, {} committed, {} cancelled",
-            out.probes.spec_submitted, out.probes.spec_committed, out.probes.spec_cancelled,
+            spec_submitted,
+            metrics::counter("probes.speculation.committed"),
+            metrics::counter("probes.speculation.cancelled"),
         );
     }
     if let Some(s) = &out.surrogate {
@@ -564,7 +598,58 @@ fn cmd_explore(args: &[String]) -> Result<()> {
     let csv_path = report_dir().join(format!("explore_{}.csv", spec.graph.name));
     front_csv(&out.outcome, Some(&out.cost())).save(&csv_path)?;
     println!("\nwrote {}", csv_path.display());
+
+    if let Some(path) = &trace_out {
+        let doc = trace::chrome_trace(&trace::drain());
+        write_json(path, &doc)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = &metrics_out {
+        write_json(path, &metrics::snapshot())?;
+        println!("wrote {path}");
+    }
     Ok(())
+}
+
+/// Write a pretty-printed JSON document, creating parent directories.
+fn write_json(path: &str, doc: &Value) -> Result<()> {
+    let path = std::path::Path::new(path);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, metaml::json::to_string_pretty(doc))?;
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    use metaml::obs::trace;
+
+    let (action, rest) = match args.split_first() {
+        Some((a, rest)) if !a.starts_with('-') => (a.as_str(), rest),
+        _ => ("", args),
+    };
+    match action {
+        "summary" => {
+            let (file, rest) = rest.split_first().ok_or_else(|| {
+                metaml::Error::other("trace summary: a trace file is required")
+            })?;
+            check_flags("trace", rest, &[])?;
+            let text = std::fs::read_to_string(file)?;
+            let doc = metaml::json::parse(&text)?;
+            println!("spans in {file}:\n");
+            print!("{}", trace::summary_table(&doc)?.render());
+            if let Some(t) = trace::cache_table(&doc)? {
+                println!("\ncache tier lookups:\n");
+                print!("{}", t.render());
+            }
+            Ok(())
+        }
+        other => Err(metaml::Error::other(format!(
+            "trace: unknown action {other:?} (expected summary <trace.json>)"
+        ))),
+    }
 }
 
 fn cmd_cache(args: &[String]) -> Result<()> {
@@ -742,6 +827,8 @@ mod tests {
             ("--surrogate", false),
             ("--warmup", true),
             ("--cache-dir", true),
+            ("--trace-out", true),
+            ("--metrics-out", true),
             ("-c", true),
         ];
         let ok = s(&[
@@ -756,6 +843,10 @@ mod tests {
             "4",
             "--cache-dir",
             "/tmp/metaml-cache",
+            "--trace-out",
+            "/tmp/trace.json",
+            "--metrics-out",
+            "/tmp/metrics.json",
         ]);
         assert!(check_flags("explore", &ok, EXPLORE).is_ok());
         let err = check_flags("explore", &s(&["--buget", "8"]), EXPLORE)

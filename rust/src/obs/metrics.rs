@@ -1,0 +1,224 @@
+//! Process-global metrics registry: counters, gauges and log-bucketed
+//! histograms with a stable JSON snapshot schema.
+//!
+//! Unlike spans (see [`super::trace`]), the registry is always on — the
+//! series it keeps (wall clock, cache tier hit/miss, bridged probe
+//! totals) are coarse enough that a short critical section per update
+//! is negligible next to the work being measured.  Values never feed
+//! back into search decisions: the registry is the one place wall-clock
+//! accounting lives (`SearchCost.wall_secs` and the explore summary
+//! read it), keeping `Instant` plumbing out of the search driver.
+//!
+//! Snapshot schema (all maps sorted, all numbers JSON numbers):
+//!
+//! ```json
+//! {
+//!   "counters":   {"cache.train.memo.hit": 12, ...},
+//!   "gauges":     {"search.wall_secs": 1.25, ...},
+//!   "histograms": {"search.wall_secs.hist": {"count": 1, "sum": 1.25,
+//!                                            "buckets": [0, ...]}, ...}
+//! }
+//! ```
+//!
+//! Histogram buckets are powers of two over microseconds: bucket `b`
+//! counts observations in `[2^b, 2^(b+1))` µs (bucket 0 also absorbs
+//! sub-microsecond values); trailing empty buckets are trimmed.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::dse::ProbeCounts;
+use crate::json::Value;
+
+#[derive(Debug, Default, Clone)]
+struct Hist {
+    count: u64,
+    sum: f64,
+    buckets: Vec<u64>,
+}
+
+#[derive(Debug, Default)]
+struct Store {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+static STORE: Mutex<Option<Store>> = Mutex::new(None);
+
+fn lock() -> MutexGuard<'static, Option<Store>> {
+    STORE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn with_store<R>(f: impl FnOnce(&mut Store) -> R) -> R {
+    let mut guard = lock();
+    f(guard.get_or_insert_with(Store::default))
+}
+
+pub fn counter_add(name: &str, delta: u64) {
+    with_store(|s| *s.counters.entry(name.to_string()).or_insert(0) += delta);
+}
+
+/// Overwrite a counter with an externally accumulated total (used by
+/// the [`ProbeCounts`] bridge, whose atomics are the source of truth).
+pub fn counter_set(name: &str, value: u64) {
+    with_store(|s| {
+        s.counters.insert(name.to_string(), value);
+    });
+}
+
+pub fn counter(name: &str) -> u64 {
+    with_store(|s| s.counters.get(name).copied().unwrap_or(0))
+}
+
+pub fn gauge_set(name: &str, value: f64) {
+    with_store(|s| {
+        s.gauges.insert(name.to_string(), value);
+    });
+}
+
+pub fn gauge(name: &str) -> Option<f64> {
+    with_store(|s| s.gauges.get(name).copied())
+}
+
+/// Record one observation into the log-bucketed histogram `name`.
+pub fn observe_secs(name: &str, secs: f64) {
+    let us = (secs.max(0.0) * 1e6) as u64;
+    let bucket = (63 - us.max(1).leading_zeros()) as usize;
+    with_store(|s| {
+        let h = s.hists.entry(name.to_string()).or_default();
+        h.count += 1;
+        h.sum += secs;
+        if h.buckets.len() <= bucket {
+            h.buckets.resize(bucket + 1, 0);
+        }
+        h.buckets[bucket] += 1;
+    });
+}
+
+/// A named wall-clock timer.  [`Stopwatch::stop`] records the elapsed
+/// seconds into the registry (gauge `<name>` + histogram `<name>.hist`)
+/// and returns them, so the caller keeps a race-free local value while
+/// the registry carries the latest reading.
+#[derive(Debug)]
+pub struct Stopwatch {
+    name: String,
+    start: Instant,
+}
+
+pub fn start_timer(name: &str) -> Stopwatch {
+    Stopwatch { name: name.to_string(), start: Instant::now() }
+}
+
+impl Stopwatch {
+    pub fn stop(self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        gauge_set(&self.name, secs);
+        observe_secs(&format!("{}.hist", self.name), secs);
+        secs
+    }
+}
+
+/// Mirror a [`ProbeCounts`] snapshot into `probes.*` counters.  The
+/// shared `ProbeStats` atomics stay the one source of truth; the
+/// registry carries their latest totals for export.
+pub fn bridge_probe_counts(c: &ProbeCounts) {
+    counter_set("probes.train.issued", c.train_issued as u64);
+    counter_set("probes.train.computed", c.train_computed as u64);
+    counter_set("probes.hw.issued", c.hw_issued as u64);
+    counter_set("probes.hw.computed", c.hw_computed as u64);
+    counter_set("probes.surrogate.fits", c.sur_fits as u64);
+    counter_set("probes.surrogate.predictions", c.sur_predictions as u64);
+    counter_set("probes.speculation.submitted", c.spec_submitted as u64);
+    counter_set("probes.speculation.committed", c.spec_committed as u64);
+    counter_set("probes.speculation.cancelled", c.spec_cancelled as u64);
+}
+
+/// Stable JSON snapshot of every series.
+pub fn snapshot() -> Value {
+    with_store(|s| {
+        let mut counters = Value::object();
+        for (k, v) in &s.counters {
+            counters.set(k, *v);
+        }
+        let mut gauges = Value::object();
+        for (k, v) in &s.gauges {
+            gauges.set(k, *v);
+        }
+        let mut hists = Value::object();
+        for (k, h) in &s.hists {
+            let mut o = Value::object();
+            o.set("count", h.count);
+            o.set("sum", h.sum);
+            o.set(
+                "buckets",
+                Value::Array(h.buckets.iter().map(|b| Value::from(*b)).collect()),
+            );
+            hists.set(k, o);
+        }
+        let mut root = Value::object();
+        root.set("counters", counters);
+        root.set("gauges", gauges);
+        root.set("histograms", hists);
+        root
+    })
+}
+
+/// Clear every series (tests, and the CLI before an exported run).
+pub fn reset() {
+    with_store(|s| {
+        s.counters.clear();
+        s.gauges.clear();
+        s.hists.clear();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Series names here are test-unique: the registry is process-global
+    // and other lib tests run concurrently.
+    #[test]
+    fn counters_gauges_and_histograms_round_trip() {
+        counter_add("obs-test.counter", 2);
+        counter_add("obs-test.counter", 3);
+        assert_eq!(counter("obs-test.counter"), 5);
+        counter_set("obs-test.counter", 7);
+        assert_eq!(counter("obs-test.counter"), 7);
+
+        gauge_set("obs-test.gauge", 1.5);
+        assert_eq!(gauge("obs-test.gauge"), Some(1.5));
+        assert_eq!(gauge("obs-test.missing"), None);
+
+        observe_secs("obs-test.hist", 3e-6); // bucket 1: [2, 4) µs
+        observe_secs("obs-test.hist", 3e-6);
+        observe_secs("obs-test.hist", 0.0); // bucket 0
+        let snap = snapshot();
+        let h = snap.get("histograms").and_then(|v| v.get("obs-test.hist")).unwrap();
+        assert_eq!(h.get("count").and_then(Value::as_usize), Some(3));
+        let buckets = h.get("buckets").and_then(Value::as_array).unwrap();
+        assert_eq!(buckets[0].as_usize(), Some(1));
+        assert_eq!(buckets[1].as_usize(), Some(2));
+    }
+
+    #[test]
+    fn stopwatch_records_gauge_and_histogram() {
+        let sw = start_timer("obs-test.sw");
+        let secs = sw.stop();
+        assert!(secs >= 0.0);
+        assert_eq!(gauge("obs-test.sw"), Some(secs));
+        let snap = snapshot();
+        let h = snap.get("histograms").and_then(|v| v.get("obs-test.sw.hist")).unwrap();
+        assert!(h.get("count").and_then(Value::as_usize).unwrap_or(0) >= 1);
+    }
+
+    #[test]
+    fn probe_counts_bridge_sets_totals() {
+        let c = ProbeCounts { train_issued: 4, train_computed: 3, ..Default::default() };
+        bridge_probe_counts(&c);
+        assert_eq!(counter("probes.train.issued"), 4);
+        assert_eq!(counter("probes.train.computed"), 3);
+    }
+}

@@ -1,0 +1,24 @@
+//! Observability: structured tracing + metrics, strictly side-band.
+//!
+//! Two halves with different lifecycles:
+//!
+//! * [`trace`] — span recording, **off by default** (one `AtomicBool`
+//!   branch per would-be span when disabled).  Enabled by the CLI's
+//!   `--trace-out` flag or the `METAML_TRACE` environment variable.
+//! * [`metrics`] — counters / gauges / log-bucketed histograms,
+//!   **always on**: the registry is where wall-clock accounting lives
+//!   (`search.wall_secs`, per-tier `cache.*` counters, bridged
+//!   `probes.*` totals), exported by `--metrics-out`.
+//!
+//! Determinism contract: nothing in this module feeds back into flow
+//! execution, search decisions, `ExecLog` event streams, candidate
+//! sequences or fronts.  Span *structure* (ids, names, parentage) is
+//! deterministic — position-in-parent ids, caller-assigned slots for
+//! pooled work — while timestamps, durations and thread ordinals are
+//! wall-clock side-notes.  Probe/cache span *counts* track what was
+//! actually issued, which (like `ProbeCounts::train_issued`) scales
+//! with the worker configuration by design; flow/search-layer spans
+//! are jobs-invariant under barrier scheduling.
+
+pub mod metrics;
+pub mod trace;

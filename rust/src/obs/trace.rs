@@ -1,0 +1,803 @@
+//! Structured span tracing — strictly side-band.
+//!
+//! A process-global span recorder the whole stack reports into: flow
+//! task/edge execution, search rounds, surrogate fit/predict, the
+//! worker-pool probe lifecycle (queue-wait vs execute), cache-tier
+//! lookups, and (opt-in) interpreter kernels.  Three properties shape
+//! the design:
+//!
+//! * **Near-zero overhead when disabled.**  Every entry point starts
+//!   with one relaxed load of an `AtomicBool`; a disabled [`Span`] is
+//!   `None` all the way down — no clock read, no allocation, no lock.
+//! * **Deterministic identity, wall-clock side-notes.**  Span ids are
+//!   position-in-parent paths (`"0/2/1"` = second child of the third
+//!   child of root 0), assigned either from the opening thread's span
+//!   stack or — for work fanned out across the pool — from an explicit
+//!   logical slot the *submitter* chose ([`span_under`], [`BatchSpans`]).
+//!   Wall-clock values appear only in `start_us`/`dur_us`/`tid`, which
+//!   consumers strip when comparing structure.  Nothing here feeds back
+//!   into search decisions, `ExecLog`s, or candidate sequences: the
+//!   bit-identity contracts of the scheduler and cache layers hold with
+//!   tracing on or off.
+//! * **Thread-safe without a hot shared lock.**  Each thread appends to
+//!   its own buffer (registered once with the global registry); buffers
+//!   are merged and deterministically sorted at [`drain`] time.
+//!
+//! Export: [`chrome_trace`] renders the records as Chrome trace-event
+//! JSON (loadable in Perfetto / `chrome://tracing`); [`summary_table`]
+//! and [`cache_table`] aggregate a trace file back into per-stage /
+//! per-tier breakdowns for `metaml trace summary`.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::json::Value;
+use crate::report::Table;
+use crate::Result;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static KERNELS: AtomicBool = AtomicBool::new(false);
+
+/// Process-global recorder state: the timestamp epoch, every thread's
+/// buffer, and the root-span counter.
+struct Registry {
+    epoch: Option<Instant>,
+    buffers: Vec<Arc<Mutex<Vec<SpanRecord>>>>,
+    roots: usize,
+    next_tid: u64,
+}
+
+static REGISTRY: Mutex<Registry> = Mutex::new(Registry {
+    epoch: None,
+    buffers: Vec::new(),
+    roots: 0,
+    next_tid: 1,
+});
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One closed span.  `id`/`parent`/`name`/`cat`/`args` are the
+/// deterministic structure; `start_us`/`dur_us`/`tid` are wall-clock
+/// side-notes.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Position-in-parent path, e.g. `"0/2/1"`.
+    pub id: String,
+    /// Parent path (`""` for roots).
+    pub parent: String,
+    pub name: String,
+    /// Layer: `"flow"`, `"search"`, `"probe"`, `"cache"` or `"kernel"`.
+    pub cat: &'static str,
+    /// Microseconds since the recorder epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Ordinal of the recording thread (registration order).
+    pub tid: u64,
+    /// Rendered as a Chrome async begin/end pair instead of a complete
+    /// event — for intervals that overlap sibling work on the recording
+    /// thread (queue waits, batch envelopes).
+    pub detached: bool,
+    pub args: BTreeMap<String, Value>,
+}
+
+struct ThreadTrace {
+    buf: Option<Arc<Mutex<Vec<SpanRecord>>>>,
+    tid: u64,
+    epoch: Option<Instant>,
+    /// Open spans on this thread: (path, children allocated so far).
+    stack: Vec<(String, usize)>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<ThreadTrace> = const {
+        RefCell::new(ThreadTrace { buf: None, tid: 0, epoch: None, stack: Vec::new() })
+    };
+}
+
+fn with_local<R>(f: impl FnOnce(&mut ThreadTrace) -> R) -> R {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if l.buf.is_none() {
+            let mut reg = lock(&REGISTRY);
+            let buf = Arc::new(Mutex::new(Vec::new()));
+            reg.buffers.push(Arc::clone(&buf));
+            l.tid = reg.next_tid;
+            reg.next_tid += 1;
+            l.epoch = reg.epoch;
+            l.buf = Some(buf);
+        }
+        f(&mut l)
+    })
+}
+
+fn epoch_of(l: &mut ThreadTrace) -> Instant {
+    if let Some(e) = l.epoch {
+        return e;
+    }
+    let mut reg = lock(&REGISTRY);
+    let e = *reg.epoch.get_or_insert_with(Instant::now);
+    l.epoch = Some(e);
+    e
+}
+
+fn micros(epoch: Instant, t: Instant) -> u64 {
+    t.saturating_duration_since(epoch).as_micros() as u64
+}
+
+fn push_record(l: &mut ThreadTrace, rec: SpanRecord) {
+    if let Some(buf) = &l.buf {
+        lock(buf).push(rec);
+    }
+}
+
+/// Allocate the next child path under the innermost open span on this
+/// thread (or a fresh root path).
+fn alloc_path(l: &mut ThreadTrace) -> String {
+    match l.stack.last_mut() {
+        Some((parent, children)) => {
+            let p = format!("{parent}/{children}");
+            *children += 1;
+            p
+        }
+        None => {
+            let mut reg = lock(&REGISTRY);
+            let idx = reg.roots;
+            reg.roots += 1;
+            idx.to_string()
+        }
+    }
+}
+
+fn parent_of(path: &str) -> &str {
+    match path.rfind('/') {
+        Some(i) => &path[..i],
+        None => "",
+    }
+}
+
+/// Turn tracing on (the epoch is fixed on first enable).
+pub fn enable() {
+    let mut reg = lock(&REGISTRY);
+    if reg.epoch.is_none() {
+        reg.epoch = Some(Instant::now());
+    }
+    drop(reg);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Also record per-matmul kernel spans (high volume; opt-in via
+/// `METAML_TRACE=kernels`).
+pub fn enable_kernel_spans() {
+    KERNELS.store(true, Ordering::SeqCst);
+}
+
+#[inline]
+pub fn kernel_spans_enabled() -> bool {
+    enabled() && KERNELS.load(Ordering::Relaxed)
+}
+
+/// Honour `METAML_TRACE`: any non-empty value other than `0` turns
+/// tracing on; the value `kernels` additionally records kernel spans.
+pub fn configure_from_env() {
+    match std::env::var("METAML_TRACE") {
+        Ok(v) if v == "kernels" => {
+            enable();
+            enable_kernel_spans();
+        }
+        Ok(v) if !v.is_empty() && v != "0" => enable(),
+        _ => {}
+    }
+}
+
+/// Drop every recorded span and restart root numbering.  Callers reset
+/// *between* runs, never with spans still open.
+pub fn reset() {
+    let mut reg = lock(&REGISTRY);
+    reg.roots = 0;
+    if reg.epoch.is_none() {
+        reg.epoch = Some(Instant::now());
+    }
+    for buf in &reg.buffers {
+        lock(buf).clear();
+    }
+}
+
+/// RAII guard for an open span.  When tracing is disabled this is a
+/// single atomic load and an inert value.
+#[derive(Debug)]
+pub struct Span {
+    inner: Option<OpenSpan>,
+}
+
+#[derive(Debug)]
+struct OpenSpan {
+    path: String,
+    parent: String,
+    name: String,
+    cat: &'static str,
+    start: Instant,
+    args: BTreeMap<String, Value>,
+}
+
+impl Span {
+    const INERT: Span = Span { inner: None };
+
+    /// Attach an attribute (no-op when disabled).
+    pub fn arg(&mut self, key: &str, val: impl Into<Value>) {
+        if let Some(s) = &mut self.inner {
+            s.args.insert(key.to_string(), val.into());
+        }
+    }
+
+    /// Cloneable address of this span, for parenting work that runs on
+    /// other threads at caller-chosen logical slots.
+    pub fn handle(&self) -> SpanHandle {
+        match &self.inner {
+            Some(s) => SpanHandle { path: s.path.clone(), live: true },
+            None => SpanHandle::default(),
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(open) = self.inner.take() else { return };
+        let end = Instant::now();
+        with_local(|l| {
+            if l.stack.last().map(|(p, _)| p == &open.path).unwrap_or(false) {
+                l.stack.pop();
+            }
+            let epoch = epoch_of(l);
+            let rec = SpanRecord {
+                id: open.path,
+                parent: open.parent,
+                name: open.name,
+                cat: open.cat,
+                start_us: micros(epoch, open.start),
+                dur_us: end.saturating_duration_since(open.start).as_micros() as u64,
+                tid: l.tid,
+                detached: false,
+                args: open.args,
+            };
+            push_record(l, rec);
+        });
+    }
+}
+
+/// Open a span as a child of the innermost open span on this thread
+/// (or a new root).
+pub fn span(cat: &'static str, name: impl Into<String>) -> Span {
+    if !enabled() {
+        return Span::INERT;
+    }
+    let name = name.into();
+    with_local(|l| {
+        let path = alloc_path(l);
+        let parent = parent_of(&path).to_string();
+        l.stack.push((path.clone(), 0));
+        Span {
+            inner: Some(OpenSpan {
+                path,
+                parent,
+                name,
+                cat,
+                start: Instant::now(),
+                args: BTreeMap::new(),
+            }),
+        }
+    })
+}
+
+/// Open a `"kernel"`-layer span iff kernel spans are enabled (the
+/// high-volume opt-in, `METAML_TRACE=kernels`); inert otherwise.
+pub fn kernel_span(name: &'static str) -> Span {
+    if !kernel_spans_enabled() {
+        return Span::INERT;
+    }
+    span("kernel", name)
+}
+
+/// Addresses a span from another thread.  Inert handles (from a
+/// disabled recorder) make every child operation a no-op.
+#[derive(Debug, Clone, Default)]
+pub struct SpanHandle {
+    path: String,
+    live: bool,
+}
+
+impl SpanHandle {
+    pub fn live(&self) -> bool {
+        self.live && enabled()
+    }
+}
+
+/// Open a span at a fixed logical slot under `parent`.  The caller
+/// assigns `index`, so the id is identical no matter which worker
+/// thread runs the slot.  The span is pushed on the *current* thread's
+/// stack: anything opened inside parents under it.
+pub fn span_under(
+    parent: &SpanHandle,
+    index: usize,
+    cat: &'static str,
+    name: impl Into<String>,
+) -> Span {
+    if !parent.live() {
+        return Span::INERT;
+    }
+    let path = format!("{}/{index}", parent.path);
+    with_local(|l| {
+        l.stack.push((path.clone(), 0));
+        Span {
+            inner: Some(OpenSpan {
+                path,
+                parent: parent.path.clone(),
+                name: name.into(),
+                cat,
+                start: Instant::now(),
+                args: BTreeMap::new(),
+            }),
+        }
+    })
+}
+
+/// Record a closed interval at a fixed logical slot under `parent`
+/// without touching any thread stack — for intervals that overlap
+/// other spans on the recording thread (queue waits, cancel marks).
+pub fn record_between(
+    parent: &SpanHandle,
+    index: usize,
+    cat: &'static str,
+    name: &str,
+    from: Instant,
+    to: Instant,
+    args: &[(&str, Value)],
+) {
+    if !parent.live() {
+        return;
+    }
+    let path = format!("{}/{index}", parent.path);
+    with_local(|l| {
+        let epoch = epoch_of(l);
+        let rec = SpanRecord {
+            id: path,
+            parent: parent.path.clone(),
+            name: name.to_string(),
+            cat,
+            start_us: micros(epoch, from),
+            dur_us: to.saturating_duration_since(from).as_micros() as u64,
+            tid: l.tid,
+            detached: true,
+            args: args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        };
+        push_record(l, rec);
+    });
+}
+
+/// Logical spans for one submitted probe batch: a detached batch
+/// envelope opened on the submitting thread, plus per-slot children
+/// attached from whichever thread runs each slot — wait at `2·i`,
+/// execute at `2·i + 1`, so queue-wait and execute time are separate
+/// spans with deterministic ids.  Both the worker-pool path and the
+/// sequential inline path emit the same structure.
+#[derive(Debug, Default)]
+pub struct BatchSpans {
+    inner: Option<BatchInner>,
+}
+
+#[derive(Debug)]
+struct BatchInner {
+    path: String,
+    parent: String,
+    n: usize,
+    start: Instant,
+    closed: AtomicBool,
+}
+
+/// Open a batch envelope as a child of the calling thread's innermost
+/// span.  It is *not* pushed on the stack — children attach by slot.
+pub fn batch(n: usize) -> BatchSpans {
+    if !enabled() {
+        return BatchSpans { inner: None };
+    }
+    with_local(|l| {
+        let path = alloc_path(l);
+        let parent = parent_of(&path).to_string();
+        BatchSpans {
+            inner: Some(BatchInner {
+                path,
+                parent,
+                n,
+                start: Instant::now(),
+                closed: AtomicBool::new(false),
+            }),
+        }
+    })
+}
+
+impl BatchSpans {
+    pub fn handle(&self) -> SpanHandle {
+        match &self.inner {
+            Some(b) => SpanHandle { path: b.path.clone(), live: true },
+            None => SpanHandle::default(),
+        }
+    }
+
+    /// Slot `i` left the queue: record its wait interval (submit time →
+    /// now).
+    pub fn probe_claimed(&self, i: usize) {
+        let Some(b) = &self.inner else { return };
+        record_between(&self.handle(), 2 * i, "probe", "probe.wait", b.start, Instant::now(), &[]);
+    }
+
+    /// Guard span for slot `i`'s execution on the current thread.
+    pub fn probe_span(&self, i: usize) -> Span {
+        span_under(&self.handle(), 2 * i + 1, "probe", "probe.exec")
+    }
+
+    /// Emit the batch envelope record (idempotent; callable from any
+    /// thread).
+    pub fn close(&self) {
+        self.finish(false);
+    }
+
+    /// Close the envelope for a batch whose unclaimed slots were
+    /// cancelled.
+    pub fn close_cancelled(&self) {
+        self.finish(true);
+    }
+
+    fn finish(&self, cancelled: bool) {
+        let Some(b) = &self.inner else { return };
+        if !enabled() || b.closed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let end = Instant::now();
+        with_local(|l| {
+            let epoch = epoch_of(l);
+            let mut args = BTreeMap::new();
+            args.insert("n".to_string(), Value::from(b.n));
+            if cancelled {
+                args.insert("cancelled".to_string(), Value::Bool(true));
+            }
+            push_record(
+                l,
+                SpanRecord {
+                    id: b.path.clone(),
+                    parent: b.parent.clone(),
+                    name: "probe.batch".to_string(),
+                    cat: "probe",
+                    start_us: micros(epoch, b.start),
+                    dur_us: end.saturating_duration_since(b.start).as_micros() as u64,
+                    tid: l.tid,
+                    detached: true,
+                    args,
+                },
+            );
+        });
+    }
+}
+
+impl Drop for BatchSpans {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn sort_records(recs: &mut [SpanRecord]) {
+    recs.sort_by_cached_key(|r| {
+        let key: Vec<u64> = r.id.split('/').filter_map(|s| s.parse::<u64>().ok()).collect();
+        (key, r.name.clone())
+    });
+}
+
+/// Move every recorded span out of the per-thread buffers, sorted by
+/// id path (numeric segment order), then name.
+pub fn drain() -> Vec<SpanRecord> {
+    let reg = lock(&REGISTRY);
+    let mut out = Vec::new();
+    for buf in &reg.buffers {
+        out.append(&mut lock(buf));
+    }
+    drop(reg);
+    sort_records(&mut out);
+    out
+}
+
+/// Copy of the recorded spans without clearing them.
+pub fn snapshot() -> Vec<SpanRecord> {
+    let reg = lock(&REGISTRY);
+    let mut out = Vec::new();
+    for buf in &reg.buffers {
+        out.extend(lock(buf).iter().cloned());
+    }
+    drop(reg);
+    sort_records(&mut out);
+    out
+}
+
+/// Render spans as Chrome trace-event JSON (`chrome://tracing` and
+/// Perfetto both load it).  Stack-nested spans become complete (`"X"`)
+/// events on their recording thread; detached intervals become async
+/// (`"b"`/`"e"`) pairs keyed by span id, so overlapping queue waits do
+/// not fight the per-thread slice stack.  The logical id/parent ride in
+/// `args.span`/`args.parent`.
+pub fn chrome_trace(spans: &[SpanRecord]) -> Value {
+    let mut events = Vec::new();
+    for s in spans {
+        if s.detached {
+            events.push(chrome_event(s, "b", s.start_us, false));
+            events.push(chrome_event(s, "e", s.start_us + s.dur_us, false));
+        } else {
+            events.push(chrome_event(s, "X", s.start_us, true));
+        }
+    }
+    let mut root = Value::object();
+    root.set("traceEvents", Value::Array(events));
+    root.set("displayTimeUnit", "ms");
+    root
+}
+
+fn chrome_event(s: &SpanRecord, ph: &str, ts: u64, with_dur: bool) -> Value {
+    let mut e = Value::object();
+    e.set("name", s.name.as_str());
+    e.set("cat", s.cat);
+    e.set("ph", ph);
+    e.set("ts", ts as f64);
+    if with_dur {
+        e.set("dur", s.dur_us as f64);
+    }
+    e.set("pid", 1u64);
+    e.set("tid", s.tid);
+    if ph != "X" {
+        e.set("id", s.id.as_str());
+    }
+    let mut args = Value::object();
+    args.set("span", s.id.as_str());
+    args.set("parent", s.parent.as_str());
+    for (k, v) in &s.args {
+        args.set(k, v.clone());
+    }
+    e.set("args", args);
+    e
+}
+
+/// Aggregate a Chrome trace (as emitted by [`chrome_trace`]) into a
+/// per-span-name breakdown: count, total and mean wall time.  Async
+/// pairs are matched by `(name, id)`.
+pub fn summary_table(doc: &Value) -> Result<Table> {
+    let events = doc.req_array("traceEvents")?;
+    // name -> (cat, count, total_us)
+    let mut stages: BTreeMap<String, (String, u64, u64)> = BTreeMap::new();
+    let mut open: BTreeMap<(String, String), f64> = BTreeMap::new();
+    for e in events {
+        let name = e.req_str("name")?.to_string();
+        let cat = e.get("cat").and_then(Value::as_str).unwrap_or("").to_string();
+        let ph = e.req_str("ph")?;
+        let ts = e.req_f64("ts")?;
+        match ph {
+            "X" => {
+                let dur = e.get("dur").and_then(Value::as_f64).unwrap_or(0.0);
+                let entry = stages.entry(name).or_insert((cat, 0, 0));
+                entry.1 += 1;
+                entry.2 += dur.max(0.0) as u64;
+            }
+            "b" => {
+                if let Some(id) = e.get("id").and_then(Value::as_str) {
+                    open.insert((name, id.to_string()), ts);
+                }
+            }
+            "e" => {
+                if let Some(id) = e.get("id").and_then(Value::as_str) {
+                    if let Some(t0) = open.remove(&(name.clone(), id.to_string())) {
+                        let entry = stages.entry(name).or_insert((cat, 0, 0));
+                        entry.1 += 1;
+                        entry.2 += (ts - t0).max(0.0) as u64;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut table = Table::new(&["span", "layer", "count", "total ms", "mean ms"]);
+    for (name, (cat, count, total_us)) in &stages {
+        let total_ms = *total_us as f64 / 1000.0;
+        table.row(&[
+            name.clone(),
+            cat.clone(),
+            count.to_string(),
+            format!("{total_ms:.3}"),
+            format!("{:.3}", total_ms / (*count).max(1) as f64),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Aggregate the `cache.lookup` spans of a Chrome trace into a
+/// per-(probe kind, tier) hit/miss table, or `None` when the trace has
+/// no cache lookups.
+pub fn cache_table(doc: &Value) -> Result<Option<Table>> {
+    let events = doc.req_array("traceEvents")?;
+    let mut tiers: BTreeMap<(String, String), (u64, u64)> = BTreeMap::new();
+    for e in events {
+        if e.get("name").and_then(Value::as_str) != Some("cache.lookup")
+            || e.get("ph").and_then(Value::as_str) != Some("X")
+        {
+            continue;
+        }
+        let Some(args) = e.get("args") else { continue };
+        let tier = args.get("tier").and_then(Value::as_str).unwrap_or("?").to_string();
+        let kind = args.get("kind").and_then(Value::as_str).unwrap_or("?").to_string();
+        let hits = args.get("hits").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+        let misses = args.get("misses").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+        let entry = tiers.entry((kind, tier)).or_insert((0, 0));
+        entry.0 += hits;
+        entry.1 += misses;
+    }
+    if tiers.is_empty() {
+        return Ok(None);
+    }
+    let mut table = Table::new(&["probe kind", "tier", "hits", "misses", "hit rate"]);
+    for ((kind, tier), (hits, misses)) in &tiers {
+        let total = hits + misses;
+        let rate = if total == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.4}", *hits as f64 / total as f64)
+        };
+        table.row(&[kind.clone(), tier.clone(), hits.to_string(), misses.to_string(), rate]);
+    }
+    Ok(Some(table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global and other lib tests run
+    // concurrently in this process, so: serialize the tests that
+    // enable tracing on a gate, give each a uniquely named root, and
+    // assert only on that root's subtree (foreign spans recorded while
+    // the gate holder had tracing on are filtered out, not raced on).
+    static GATE: Mutex<()> = Mutex::new(());
+
+    /// Drain, keep the subtree under the (unique) `root_name` span, and
+    /// rewrite ids relative to that root (its id becomes "r").
+    fn subtree(root_name: &str) -> Vec<SpanRecord> {
+        let spans = drain();
+        let root_id = spans
+            .iter()
+            .find(|s| s.name == root_name)
+            .unwrap_or_else(|| panic!("root span {root_name} not recorded"))
+            .id
+            .clone();
+        let prefix = format!("{root_id}/");
+        spans
+            .into_iter()
+            .filter(|s| s.id == root_id || s.id.starts_with(&prefix))
+            .map(|mut s| {
+                s.id = format!("r{}", &s.id[root_id.len()..]);
+                s.parent = if s.parent.len() < root_id.len() {
+                    String::new()
+                } else {
+                    format!("r{}", &s.parent[root_id.len()..])
+                };
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        // no gate needed: nothing here turns tracing on, and inertness
+        // is visible on the values themselves
+        let mut s = Span::INERT;
+        s.arg("k", 1u64);
+        assert!(!s.handle().live());
+        let b = BatchSpans::default();
+        b.probe_claimed(0);
+        assert!(b.probe_span(0).inner.is_none());
+        assert!(!b.handle().live());
+        b.close();
+    }
+
+    #[test]
+    fn positional_ids_nest_and_sort() {
+        let _g = lock(&GATE);
+        enable();
+        {
+            let root = span("search", "obs-test-nest-root");
+            let h = root.handle();
+            {
+                let _a = span("search", "a");
+                let _leaf = span("search", "a0");
+            }
+            let _b = span_under(&h, 7, "probe", "slot7");
+        }
+        disable();
+        let ids: Vec<(String, String, String)> = subtree("obs-test-nest-root")
+            .iter()
+            .map(|s| (s.id.clone(), s.parent.clone(), s.name.clone()))
+            .collect();
+        assert_eq!(
+            ids,
+            vec![
+                ("r".into(), "".into(), "obs-test-nest-root".into()),
+                ("r/0".into(), "r".into(), "a".into()),
+                ("r/0/0".into(), "r/0".into(), "a0".into()),
+                ("r/7".into(), "r".into(), "slot7".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn batch_spans_emit_wait_exec_and_envelope() {
+        let _g = lock(&GATE);
+        enable();
+        let root = span("search", "obs-test-batch-root");
+        let b = batch(2);
+        b.probe_claimed(0);
+        drop(b.probe_span(0));
+        b.probe_claimed(1);
+        drop(b.probe_span(1));
+        b.close();
+        drop(root);
+        disable();
+        let spans = subtree("obs-test-batch-root");
+        let names: Vec<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "obs-test-batch-root",
+                "probe.batch",
+                "probe.wait",
+                "probe.exec",
+                "probe.wait",
+                "probe.exec"
+            ]
+        );
+        let envelope = &spans[1];
+        assert!(envelope.detached);
+        assert_eq!(envelope.args.get("n"), Some(&Value::from(2usize)));
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_summary() {
+        let _g = lock(&GATE);
+        enable();
+        {
+            let _root = span("search", "obs-test-chrome-root");
+            let b = batch(1);
+            b.probe_claimed(0);
+            drop(b.probe_span(0));
+            let mut c = span("cache", "cache.lookup");
+            c.arg("tier", "memo");
+            c.arg("kind", "train");
+            c.arg("hits", 3u64);
+            c.arg("misses", 1u64);
+        }
+        disable();
+        let doc = chrome_trace(&subtree("obs-test-chrome-root"));
+        let rendered = summary_table(&doc).unwrap().render();
+        assert!(rendered.contains("probe.wait"));
+        assert!(rendered.contains("probe.exec"));
+        assert!(rendered.contains("probe.batch"));
+        let cache = cache_table(&doc).unwrap().expect("cache rows");
+        let rendered = cache.render();
+        assert!(rendered.contains("memo"));
+        assert!(rendered.contains("0.7500"));
+    }
+}

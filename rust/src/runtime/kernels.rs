@@ -47,6 +47,7 @@ use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::error::{Error, Result};
+use crate::obs::trace;
 
 // ---------------------------------------------------------------------------
 // fake quantization (hoisted-constant form)
@@ -272,6 +273,10 @@ pub fn matmul(
     if m == 0 || n == 0 {
         return;
     }
+    let mut span = trace::kernel_span("kernel.matmul");
+    span.arg("m", m);
+    span.arg("k", k);
+    span.arg("n", n);
     pack_b(pack, b, k, n);
     let pack = &*pack;
     let panels = n.div_ceil(NR);
@@ -315,6 +320,10 @@ pub fn matmul_bt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: u
     if m == 0 || k == 0 {
         return;
     }
+    let mut span = trace::kernel_span("kernel.matmul_bt");
+    span.arg("m", m);
+    span.arg("n", n);
+    span.arg("k", k);
     const JR: usize = 4;
     for_row_panels(out, m, k, m * n * k, |row0, chunk| {
         let rows = chunk.len() / k;
@@ -372,6 +381,10 @@ pub fn matmul_at(
     if k == 0 || n == 0 {
         return;
     }
+    let mut span = trace::kernel_span("kernel.matmul_at");
+    span.arg("m", m);
+    span.arg("k", k);
+    span.arg("n", n);
     pack_b(pack, b, m, n);
     let pack = &*pack;
     let panels = n.div_ceil(NR);
@@ -512,6 +525,10 @@ pub fn matmul_masked(
     n: usize,
     pack: &mut Vec<f32>,
 ) {
+    let mut span = trace::kernel_span("kernel.matmul_masked");
+    span.arg("m", m);
+    span.arg("k", k);
+    span.arg("n", n);
     if let Some(sp) = &mw.sparse {
         if all_finite(a) {
             SPARSE_MATMULS.fetch_add(1, Ordering::Relaxed);
@@ -549,6 +566,10 @@ pub fn matmul_bt_masked(
     n: usize,
     k: usize,
 ) {
+    let mut span = trace::kernel_span("kernel.matmul_bt_masked");
+    span.arg("m", m);
+    span.arg("n", n);
+    span.arg("k", k);
     if let Some(sp) = &mw.sparse {
         if all_finite(g) {
             SPARSE_MATMULS.fetch_add(1, Ordering::Relaxed);

@@ -41,7 +41,6 @@
 //! predictions.
 
 use std::collections::{HashMap, HashSet};
-use std::time::Instant;
 
 use crate::config::FlowSpec;
 use crate::dse::{submit_batch, ProbeCounts, ProbeService, ProbeTiers, SubmittedBatch};
@@ -52,6 +51,7 @@ use crate::flow::explore::{
 use crate::flow::registry::TaskRegistry;
 use crate::flow::session::Session;
 use crate::json::Value;
+use crate::obs::{metrics, trace};
 use crate::search::pareto::{dominates_min, nsga_order, pareto_front_min};
 use crate::search::prefilter::HwPrefilter;
 use crate::search::space::{Candidate, CandidateKey, SearchSpace};
@@ -367,6 +367,8 @@ fn validate_deferred(
     results: &mut Vec<VariantResult>,
     objectives: &mut Vec<Vec<f64>>,
 ) -> Result<()> {
+    let mut span = trace::span("search", "search.validate");
+    span.arg("label", deferred[idx].label.as_str());
     let candidate = deferred[idx].candidate.clone();
     let key = space.key(&candidate);
     let slot = results.len();
@@ -436,11 +438,17 @@ pub fn run_search_tiered(
     jobs: usize,
     tiers: &ProbeTiers,
 ) -> Result<SearchOutcome> {
-    let t_start = Instant::now();
+    // wall clock lives in the metrics registry (satellite of the obs
+    // subsystem), not in driver-local Instant plumbing
+    let timer = metrics::start_timer("search.wall_secs");
     let space = SearchSpace::of(spec, &search.ranges)?;
     let grid_size = space.grid_size();
     let budget = search.budget.unwrap_or(grid_size).max(1);
     let mut strategy = make_strategy(search, &space)?;
+    let mut search_span = trace::span("search", "search.run");
+    search_span.arg("strategy", strategy.name());
+    search_span.arg("budget", budget);
+    search_span.arg("grid_size", grid_size);
     let shared = tiers.clone();
     // declared before `exec` so the service outlives the batches that
     // borrow it (drop order is reverse declaration order)
@@ -484,6 +492,7 @@ pub fn run_search_tiered(
     // PRNG forked off the search seed so the strategy's stream is
     // untouched.
     if let Some(sur) = surrogate.as_mut() {
+        let _warmup_span = trace::span("search", "search.warmup");
         let want = sur.warmup().min(budget);
         let mut prng = Prng::new(search.seed ^ WARMUP_SEED_SALT);
         let mut picks: Vec<Candidate> = Vec::new();
@@ -525,6 +534,8 @@ pub fn run_search_tiered(
     // ---- propose → gate → evaluate → observe -----------------------
     let mut rounds = 0usize;
     while spent < budget {
+        let mut round_span = trace::span("search", "search.round");
+        round_span.arg("round", rounds);
         // pipelined: guess the upcoming batch *before* the real
         // propose call (the strategy's PRNG sits at the same point the
         // clone-based guess needs) and enqueue it on the worker pool;
@@ -552,6 +563,7 @@ pub fn run_search_tiered(
             exec.speculate(spec, &space, &guesses);
         }
         let batch = {
+            let _span = trace::span("search", "search.propose");
             let ctx = SearchCtx {
                 space: &space,
                 evaluated: &index,
@@ -613,7 +625,11 @@ pub fn run_search_tiered(
             fresh_cands.push(c.clone());
             slots.push(Slot::Truth { slot, repeat: false });
         }
-        exec.eval(&space, spec, &fresh_cands, &mut results, &mut objectives)?;
+        {
+            let mut span = trace::span("search", "search.eval");
+            span.arg("fresh", fresh_cands.len());
+            exec.eval(&space, spec, &fresh_cands, &mut results, &mut objectives)?;
+        }
         if let Some(sur) = surrogate.as_mut() {
             for (slot, pred) in &band_preds {
                 sur.record_error(pred, &objectives[*slot], &objectives);
@@ -645,6 +661,7 @@ pub fn run_search_tiered(
             })
             .collect();
         {
+            let _span = trace::span("search", "search.observe");
             let ctx = SearchCtx {
                 space: &space,
                 evaluated: &index,
@@ -719,7 +736,9 @@ pub fn run_search_tiered(
     // drain mis-speculated runs into the tiers before the counters are
     // snapshotted, so cache contents and probe totals are settled
     exec.finish();
-    let wall_secs = t_start.elapsed().as_secs_f64();
+    let wall_secs = timer.stop();
+    let probes = shared.probe_counts();
+    metrics::bridge_probe_counts(&probes);
 
     let front = pareto_front_min(&objectives);
     Ok(SearchOutcome {
@@ -728,7 +747,7 @@ pub fn run_search_tiered(
         grid_size,
         budget,
         spent,
-        probes: shared.probe_counts(),
+        probes,
         surrogate: surrogate.as_ref().map(Surrogate::report),
         wall_secs,
     })

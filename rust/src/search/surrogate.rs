@@ -564,6 +564,8 @@ impl Surrogate {
             return;
         }
         self.dirty = false;
+        let mut span = crate::obs::trace::span("search", "surrogate.fit");
+        span.arg("observations", self.obs_x.len());
         if let Ok((mu, sigma, ybar, w)) =
             ridge_fit_raw(&self.obs_x, &self.obs_y, self.spec.ridge)
         {
@@ -577,6 +579,10 @@ impl Surrogate {
     /// when [`Self::ready`]; without a fit it returns the observation
     /// mean (never panics).
     pub fn predict(&self, c: &Candidate) -> Vec<f64> {
+        // counted predictions are part of the replayable trace, so the
+        // span structure is deterministic too; predict_quiet stays
+        // unspanned (speculative volume is wall-clock-dependent)
+        let _span = crate::obs::trace::span("search", "surrogate.predict");
         self.predictions.fetch_add(1, Ordering::Relaxed);
         self.stats.note_surrogate_prediction();
         let x = self.enc.encode(c);

@@ -1,0 +1,199 @@
+//! Observability contract tests: the span recorder and metrics
+//! registry are strictly side-band.
+//!
+//! Three pins over full searches of `examples/specs/surrogate_jet.json`
+//! on the synthetic jet manifest:
+//!
+//! - **Span-tree structure is jobs-invariant.**  The deterministic part
+//!   of every span (`id`/`parent`/`name` — position-in-parent paths,
+//!   never wall clock) is bit-identical between `--jobs 1` and
+//!   `--jobs 4` for the flow and search layers under the barrier
+//!   scheduler.  Probe-layer *volume* is allowed to differ (speculation
+//!   is jobs-dependent by design), but the spans that do appear use
+//!   caller-assigned slots, so the batch shapes match too.
+//! - **Cache-tier counters are exact.**  A cold run against a fresh
+//!   `--cache-dir` writes exactly `DiskStore::inspect` (= `metaml
+//!   cache stats`) entries through the disk tier; a warm run with
+//!   fresh memos resolves every probe at the disk tier (zero misses,
+//!   zero recomputes, zero new bytes).
+//! - **Disabled tracing records nothing and changes nothing.**  With
+//!   tracing off the snapshot is empty; enabling it leaves LOG event
+//!   streams, fronts and metrics bit-identical.
+//!
+//! The trace recorder and metrics registry are process-global, so every
+//! test here serializes on one gate and resets both before measuring.
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex};
+
+use metaml::bench_support::synthetic_jet_manifest;
+use metaml::config::FlowSpec;
+use metaml::dse::{DiskStore, ProbeTiers};
+use metaml::flow::{Session, TaskRegistry};
+use metaml::obs::{metrics, trace};
+use metaml::runtime::Runtime;
+use metaml::search::{run_search, run_search_tiered, SearchSpec};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn jet_session() -> Session {
+    Session::with_backend(Runtime::reference(), synthetic_jet_manifest())
+}
+
+/// The CI exemplar spec, pinned to the barrier scheduler: pipelined
+/// speculation volume is wall-clock-dependent, so only barrier-mode
+/// span structure is replay-comparable.
+fn jet_spec() -> (FlowSpec, SearchSpec) {
+    let spec = FlowSpec::load("examples/specs/surrogate_jet.json").unwrap();
+    let mut search = spec.search.clone().unwrap();
+    search.pipeline = false;
+    (spec, search)
+}
+
+/// The deterministic structure of a span list, restricted to the given
+/// layers: `(id, parent, name)` in drain order (paths sort
+/// numerically, so this is also deterministic).
+fn structure(spans: &[trace::SpanRecord], cats: &[&str]) -> Vec<(String, String, String)> {
+    spans
+        .iter()
+        .filter(|s| cats.contains(&s.cat))
+        .map(|s| (s.id.clone(), s.parent.clone(), s.name.clone()))
+        .collect()
+}
+
+#[test]
+fn span_tree_structure_is_jobs_invariant() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let (spec, search) = jet_spec();
+    let registry = TaskRegistry::builtin();
+
+    let mut runs = Vec::new();
+    for jobs in [1usize, 4] {
+        trace::enable();
+        trace::reset();
+        let session = jet_session();
+        let out = run_search(&session, &registry, &spec, &search, &[], jobs).unwrap();
+        assert_eq!(out.spent, 6);
+        runs.push(trace::drain());
+    }
+    trace::disable();
+
+    // flow + search layers: bit-identical ids whatever the worker count
+    let a = structure(&runs[0], &["flow", "search"]);
+    let b = structure(&runs[1], &["flow", "search"]);
+    assert!(!a.is_empty());
+    assert_eq!(a, b);
+
+    // every layer the tentpole promises is present, including distinct
+    // queue-wait vs execute intervals per probe
+    for spans in &runs {
+        let names: BTreeSet<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        for expected in [
+            "search.run",
+            "search.warmup",
+            "search.round",
+            "search.propose",
+            "search.eval",
+            "search.observe",
+            "surrogate.fit",
+            "surrogate.predict",
+            "flow.run",
+            "flow.task",
+            "probe.batch",
+            "probe.wait",
+            "probe.exec",
+            "cache.lookup",
+        ] {
+            assert!(names.contains(expected), "missing span {expected:?} in {names:?}");
+        }
+        // queue waits and executions land on caller-assigned even/odd
+        // slots under their batch envelope, so the two interval kinds
+        // stay distinguishable in any viewer
+        let wait = spans.iter().find(|s| s.name == "probe.wait").unwrap();
+        let exec = spans.iter().find(|s| s.name == "probe.exec").unwrap();
+        assert!(wait.detached, "queue waits render as async intervals");
+        assert!(!exec.detached, "executions render as nested complete spans");
+    }
+}
+
+#[test]
+fn disk_tier_counters_match_cache_stats() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = std::env::temp_dir().join(format!("metaml-obs-disk-{}", std::process::id()));
+    let _ = DiskStore::clear(&dir);
+    let (spec, search) = jet_spec();
+    let registry = TaskRegistry::builtin();
+
+    // cold: the disk tier misses everything; every fresh compute is
+    // written through exactly once, so the write counters equal what
+    // `metaml cache stats` reports for the store
+    metrics::reset();
+    let tiers = ProbeTiers::with_disk(Arc::new(DiskStore::open(&dir).unwrap()));
+    let session = jet_session();
+    let cold = run_search_tiered(&session, &registry, &spec, &search, &[], 1, &tiers).unwrap();
+    assert!(cold.probes.train_computed > 0);
+    let stats = DiskStore::inspect(&dir);
+    assert_eq!(metrics::counter("cache.train.disk.write"), stats.train_entries as u64);
+    assert_eq!(metrics::counter("cache.hw.disk.write"), stats.hw_entries as u64);
+    assert_eq!(metrics::counter("cache.train.disk.hit"), 0);
+    assert!(metrics::counter("cache.train.disk.miss") > 0);
+
+    // warm: fresh memos over the same store — every probe resolves at
+    // the disk tier, nothing recomputes, the store stays byte-stable
+    metrics::reset();
+    let tiers = ProbeTiers::with_disk(Arc::new(DiskStore::open(&dir).unwrap()));
+    let session = jet_session();
+    let warm = run_search_tiered(&session, &registry, &spec, &search, &[], 1, &tiers).unwrap();
+    assert_eq!(warm.probes.train_computed, 0);
+    assert_eq!(metrics::counter("cache.train.disk.miss"), 0);
+    assert!(metrics::counter("cache.train.disk.hit") > 0);
+    assert_eq!(metrics::counter("cache.train.disk.write"), 0);
+    let after = DiskStore::inspect(&dir);
+    assert_eq!(after.train_entries, stats.train_entries);
+    assert_eq!(after.hw_entries, stats.hw_entries);
+    assert_eq!(after.bytes, stats.bytes);
+
+    // tier resolution is top-down: every warm-run memo miss fell
+    // through to exactly one disk consult
+    assert_eq!(
+        metrics::counter("cache.train.memo.miss"),
+        metrics::counter("cache.train.disk.hit") + metrics::counter("cache.train.disk.miss"),
+    );
+
+    let _ = DiskStore::clear(&dir);
+}
+
+#[test]
+fn disabled_tracing_records_nothing_and_results_are_identical() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let (spec, search) = jet_spec();
+    let registry = TaskRegistry::builtin();
+
+    trace::disable();
+    trace::reset();
+    let session = jet_session();
+    let off = run_search(&session, &registry, &spec, &search, &[], 1).unwrap();
+    assert!(trace::snapshot().is_empty(), "disabled tracing must record nothing");
+
+    trace::enable();
+    trace::reset();
+    let session = jet_session();
+    let on = run_search(&session, &registry, &spec, &search, &[], 1).unwrap();
+    let spans = trace::drain();
+    trace::disable();
+    assert!(!spans.is_empty());
+
+    // tracing is strictly side-band: candidate sequence, LOG streams
+    // and every metric bit survive untouched
+    assert_eq!(off.spent, on.spent);
+    assert_eq!(off.outcome.front, on.outcome.front);
+    assert_eq!(off.outcome.results.len(), on.outcome.results.len());
+    for (x, y) in off.outcome.results.iter().zip(&on.outcome.results) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.events, y.events, "{}", x.label);
+        for (k, v) in &x.metrics {
+            let w = y.metrics.get(k).copied().unwrap_or(f64::NAN);
+            assert_eq!(v.to_bits(), w.to_bits(), "{}: {k}", x.label);
+        }
+    }
+}
